@@ -1,0 +1,56 @@
+//! DLRM iteration-time sweep (the Fig 17 workload as a library consumer
+//! would run it): partition each Table-10 model with the 3D strategy,
+//! price one training iteration on RAMP and the baselines, print the
+//! overhead/speed-up series.
+//!
+//! ```sh
+//! cargo run --release --example dlrm_iteration -- [--oversub 12]
+//! ```
+
+use ramp::cli::Args;
+use ramp::ddl::profiler::ComputeProfile;
+use ramp::ddl::training::dlrm_training;
+use ramp::ddl::{dlrm, dlrm::partition};
+use ramp::estimator::CollectiveEstimator;
+use ramp::table::Table;
+use ramp::topology::ramp::RampParams;
+use ramp::units::{fmt_bytes, fmt_count, fmt_time};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let oversub = args.get_f64("oversub", 12.0)?;
+    let prof = ComputeProfile::a100();
+    let ramp = CollectiveEstimator::ramp(&RampParams::max_scale());
+    let ft = CollectiveEstimator::fat_tree_hierarchical(oversub);
+
+    let mut t = Table::new(vec![
+        "#GPUs",
+        "params",
+        "partitioning",
+        "a2a msg",
+        "RAMP iter",
+        "RAMP ovh",
+        "FT iter",
+        "FT ovh",
+        "speed-up",
+    ]);
+    for cfg in dlrm::table10() {
+        let (tw, cw) = partition(cfg.n_tables, cfg.sparse_dim, cfg.n_gpus);
+        let r = dlrm_training(&cfg, &ramp, &prof);
+        let f = dlrm_training(&cfg, &ft, &prof);
+        t.row(vec![
+            fmt_count(cfg.n_gpus as u64),
+            format!("{:.2e}", cfg.params),
+            format!("table x{tw} col x{cw}"),
+            fmt_bytes(cfg.a2a_message_bytes()),
+            fmt_time(r.iteration_s()),
+            format!("{:.1}%", r.comm_fraction() * 100.0),
+            fmt_time(f.iteration_s()),
+            format!("{:.1}%", f.comm_fraction() * 100.0),
+            format!("{:.1}x", f.iteration_s() / r.iteration_s()),
+        ]);
+    }
+    println!("{t}");
+    println!("(paper band: 7.8-58x vs Fat-Tree/TopoOpt at matching scales)");
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! End-to-end validation driver: train a real transformer LM with
+//! data-parallel workers where **every layer of the stack is exercised**:
+//!
+//! * per-worker fwd/bwd/optimizer runs the AOT-compiled JAX+Pallas HLO
+//!   through PJRT (L2 + L1);
+//! * the gradient all-reduce moves the actual f32 gradients through the
+//!   RAMP-x subgroup algebra, the network transcoder and the timeslot
+//!   fabric (L3) — contention-verified every step;
+//! * the loss curve is logged, and the virtual network clock is compared
+//!   against the oversubscribed EPS fat-tree pricing of the same
+//!   collective.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example train_megatron -- \
+//!     --workers 4 --steps 200
+//! ```
+//!
+//! Substitution note (DESIGN.md): the paper trains Megatron/DLRM on
+//! A100 clusters; here a ~0.6M-param transformer (or ~19M with
+//! `--model large` after exporting with RAMP_AOT_LARGE=1) trains on
+//! CPU for a few hundred steps — same code path, laptop-scale workload.
+
+use ramp::cli::Args;
+use ramp::coordinator::{train, TrainConfig};
+use ramp::table::Table;
+use ramp::units::{fmt_bytes, fmt_count, fmt_time};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cfg = TrainConfig {
+        model: args.get_or("model", "tiny"),
+        n_workers: args.get_usize("workers", 4)?,
+        steps: args.get_usize("steps", 200)?,
+        lr: args.get_f64("lr", 0.05)? as f32,
+        momentum: args.get_f64("momentum", 0.9)? as f32,
+        seed: args.get_usize("seed", 42)? as u64,
+        artifacts: ramp::config::artifacts_dir(),
+        log_every: args.get_usize("log-every", 20)?,
+    };
+
+    println!(
+        "== RAMP end-to-end training: model={} workers={} steps={} ==",
+        cfg.model, cfg.n_workers, cfg.steps
+    );
+    let t0 = std::time::Instant::now();
+    let rep = train(&cfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(vec!["step", "loss", "compute/step", "network/step (virtual)"]);
+    for s in &rep.stats {
+        t.row(vec![
+            s.step.to_string(),
+            format!("{:.4}", s.loss),
+            fmt_time(s.compute_s),
+            fmt_time(s.comm_virtual_s),
+        ]);
+    }
+    println!("{t}");
+
+    println!(
+        "model: {} params | gradient message {} | loss {:.4} -> {:.4}",
+        fmt_count(rep.n_params as u64),
+        fmt_bytes((rep.n_params * 4) as u64),
+        rep.first_loss(),
+        rep.last_loss(),
+    );
+    println!(
+        "totals: wall {:.1}s | compute {:.1}s | RAMP network {} | EPS fat-tree network {}",
+        wall,
+        rep.total_compute_s,
+        fmt_time(rep.total_comm_virtual_s),
+        fmt_time(rep.baseline_comm_virtual_s),
+    );
+    println!(
+        "network-only speed-up {:.1}x | iteration speed-up at this compute {:.2}x",
+        rep.baseline_comm_virtual_s / rep.total_comm_virtual_s.max(1e-12),
+        rep.network_speedup(),
+    );
+    anyhow::ensure!(
+        rep.last_loss() < rep.first_loss() * 0.5,
+        "training did not converge: {} -> {}",
+        rep.first_loss(),
+        rep.last_loss()
+    );
+    println!("loss curve OK — full stack (PJRT compute + optical collectives) verified.");
+    Ok(())
+}

@@ -1,0 +1,114 @@
+"""AOT bridge: lower the L2/L1 graphs once to HLO **text** in artifacts/.
+
+HLO text — NOT serialized HloModuleProto — is the interchange format: the
+image's xla_extension 0.5.1 rejects jax ≥ 0.5 protos (64-bit instruction
+ids); the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Emits, per model variant:
+  artifacts/<name>_init.hlo.txt     seed(i32)                → params f32[P]
+  artifacts/<name>_step.hlo.txt     (params, x i32[B,T], y)  → (grads, loss)
+  artifacts/<name>_update.hlo.txt   (params, grads, mom, lr, µ) → (params', mom')
+  artifacts/<name>_eval.hlo.txt     (params, x, y)           → loss
+plus the standalone L1 kernels:
+  artifacts/reduce_xto1_<s>x<n>.hlo.txt    f32[s,n] → f32[n]
+and artifacts/manifest.txt describing every entry (shapes, param counts)
+in a line-based `key=value` format the Rust runtime parses.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile.kernels.reduce_xto1 import reduce_xto1  # noqa: E402
+from compile.model import FlatModel, large_config, quickstart_config  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def dump(out_dir: str, name: str, lowered, manifest: list) -> None:
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest.append(f"artifact.{name}.file={name}.hlo.txt")
+    print(f"  {name}: {len(text)} chars")
+
+
+def export_model(tag: str, cfg, out_dir: str, manifest: list) -> None:
+    model = FlatModel(cfg)
+    p = model.n_params
+    b, t = cfg.batch, cfg.seq
+    vec = jax.ShapeDtypeStruct((p,), jnp.float32)
+    tok = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    seed = jax.ShapeDtypeStruct((), jnp.int32)
+
+    dump(out_dir, f"{tag}_init", jax.jit(model.init_vector).lower(seed), manifest)
+    dump(out_dir, f"{tag}_step", jax.jit(model.grad_step).lower(vec, tok, tok), manifest)
+    dump(
+        out_dir,
+        f"{tag}_update",
+        jax.jit(model.apply_update).lower(vec, vec, vec, scalar, scalar),
+        manifest,
+    )
+    dump(out_dir, f"{tag}_eval", jax.jit(model.eval_loss).lower(vec, tok, tok), manifest)
+
+    manifest.extend(
+        [
+            f"model.{tag}.n_params={p}",
+            f"model.{tag}.vocab={cfg.vocab}",
+            f"model.{tag}.dim={cfg.dim}",
+            f"model.{tag}.layers={cfg.layers}",
+            f"model.{tag}.heads={cfg.heads}",
+            f"model.{tag}.seq={cfg.seq}",
+            f"model.{tag}.batch={cfg.batch}",
+        ]
+    )
+
+
+def export_kernels(out_dir: str, manifest: list) -> None:
+    # the coordinator's x-to-1 local-reduction kernel at the arities the
+    # RAMP-x steps produce on small fabrics, sized for the quickstart model
+    for s, n in [(4, 8192), (8, 8192), (16, 65536)]:
+        spec = jax.ShapeDtypeStruct((s, n), jnp.float32)
+        dump(out_dir, f"reduce_xto1_{s}x{n}", jax.jit(reduce_xto1).lower(spec), manifest)
+        manifest.append(f"kernel.reduce_xto1_{s}x{n}.shape={s},{n}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--large", action="store_true", help="also export the ~19M model")
+    args = ap.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest: list = ["format=1"]
+    print("exporting quickstart model (~0.6M params)")
+    export_model("tiny", quickstart_config(), out_dir, manifest)
+    if args.large or os.environ.get("RAMP_AOT_LARGE"):
+        print("exporting large model (~19M params)")
+        export_model("large", large_config(), out_dir, manifest)
+    print("exporting L1 kernels")
+    export_kernels(out_dir, manifest)
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {out_dir}/manifest.txt ({len(manifest)} entries)")
+
+
+if __name__ == "__main__":
+    main()

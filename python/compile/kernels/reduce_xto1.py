@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: fused x-to-1 reduction (§8.4.2, Fig 23).
+
+The RAMP-x collective receives from up to x−1 sources per algorithmic step
+and reduces them in ONE fused pass: read `s` input vectors once, write the
+sum once — (s+1)·m bytes moved for (s−1)·m/dtype flops, versus the 2-to-1
+chains of single-source algorithms that re-read partial sums every pass
+(3·m bytes × (s−1) passes). On TPU this maps the s-way add onto the VPU
+with the accumulator held in VMEM across grid steps; the `sources` axis is
+laid out contiguously per tile so each HBM→VMEM DMA streams one (s, TILE)
+block.
+
+`interpret=True` everywhere: the image's CPU PJRT plugin cannot execute
+Mosaic custom-calls; interpret-mode lowers to plain HLO so the Rust
+runtime can run it (numerics identical — see tests/test_kernels.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile width: a multiple of the TPU lane width (128) sized so an (S, TILE)
+# fp32 block for S ≤ 32 stays ≪ 16 MB VMEM: 32 × 4096 × 4 B = 512 KiB,
+# leaving room for double-buffering the input stream.
+TILE = 4096
+
+
+def _reduce_kernel(x_ref, o_ref):
+    # x_ref: (S, TILE) block in VMEM; o_ref: (TILE,) accumulator tile.
+    # The whole s-way tree-sum happens register/VMEM-resident.
+    o_ref[...] = jnp.sum(x_ref[...], axis=0)
+
+
+@jax.custom_vjp
+def reduce_xto1(stacked: jax.Array) -> jax.Array:
+    """Sum `stacked` of shape (s, n) over axis 0 in one fused pass.
+
+    n must be a multiple of TILE for the tiled fast path; smaller inputs
+    fall back to a single-block call. Reverse-mode AD uses the analytic
+    rule (broadcast) — interpret-mode `pallas_call` has no VJP.
+    """
+    return _reduce_xto1_impl(stacked)
+
+
+def _reduce_fwd(stacked):
+    return _reduce_xto1_impl(stacked), stacked.shape[0]
+
+
+def _reduce_bwd(s, g):
+    return (jnp.broadcast_to(g[None, :], (s,) + g.shape),)
+
+
+reduce_xto1.defvjp(_reduce_fwd, _reduce_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _reduce_xto1_impl(stacked: jax.Array) -> jax.Array:
+    s, n = stacked.shape
+    if n % TILE != 0:
+        # single block: still one fused pass, just untiled
+        return pl.pallas_call(
+            _reduce_kernel,
+            out_shape=jax.ShapeDtypeStruct((n,), stacked.dtype),
+            interpret=True,
+        )(stacked)
+    grid = (n // TILE,)
+    return pl.pallas_call(
+        _reduce_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((s, TILE), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), stacked.dtype),
+        interpret=True,
+    )(stacked)
+
+
+def reduce_xto1_mean(stacked: jax.Array) -> jax.Array:
+    """Fused mean over sources (gradient averaging flavour)."""
+    s = stacked.shape[0]
+    return reduce_xto1(stacked) / jnp.asarray(s, dtype=stacked.dtype)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth
+(pytest asserts allclose against these for every shape/dtype sweep)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def reduce_xto1_ref(stacked: jax.Array) -> jax.Array:
+    """Sum over the source axis."""
+    return jnp.sum(stacked, axis=0)
+
+
+def reduce_xto1_mean_ref(stacked: jax.Array) -> jax.Array:
+    return jnp.mean(stacked, axis=0)
+
+
+def matmul_bias_gelu_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ w + b)
+
+
+def mlp_shard_ref(x, w1, b1, w2):
+    return matmul_bias_gelu_ref(x, w1, b1) @ w2
+
+
+def chain_reduce_ref(stacked: jax.Array) -> jax.Array:
+    """The 2-to-1 chain the paper's baselines use (§8.4.2): sequential
+    pairwise adds — numerically a different summation order, same result
+    up to float associativity."""
+    acc = stacked[0]
+    for i in range(1, stacked.shape[0]):
+        acc = acc + stacked[i]
+    return acc

@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: fused tensor-parallel MLP block matmul.
+
+The Megatron shard's hot loop is `GELU(x @ W1 + b1) @ W2` (the
+column-/row-parallel MLP halves whose outputs the MP all-reduce combines).
+We fuse matmul + bias + GELU in one Pallas kernel so the intermediate
+activation never round-trips HBM.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): blocks are (128, 128) —
+MXU-shaped — with the K dimension streamed; the fp32 accumulator tile
+lives in VMEM across the K loop. `interpret=True` for CPU-PJRT
+executability (see reduce_xto1.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _matmul_bias_gelu_kernel(x_ref, w_ref, b_ref, o_ref):
+    # x: (BM, K), w: (K, BN), b: (1, BN) -> o: (BM, BN)
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...]
+    o_ref[...] = jax.nn.gelu(acc).astype(o_ref.dtype)
+
+
+@jax.custom_vjp
+def matmul_bias_gelu(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """`GELU(x @ w + b)` with MXU-shaped tiling when shapes allow.
+
+    Forward runs the fused Pallas kernel; reverse-mode AD recomputes the
+    pre-activation with jnp (interpret-mode `pallas_call` has no VJP) —
+    the same rematerialization trade the paper's activation checkpointing
+    makes (§7.3).
+    """
+    return _matmul_bias_gelu_impl(x, w, b)
+
+
+def _mbg_fwd(x, w, b):
+    return _matmul_bias_gelu_impl(x, w, b), (x, w, b)
+
+
+def _mbg_bwd(res, g):
+    x, w, b = res
+    _, vjp = jax.vjp(lambda xx, ww, bb: jax.nn.gelu(xx @ ww + bb), x, w, b)
+    return vjp(g)
+
+
+matmul_bias_gelu.defvjp(_mbg_fwd, _mbg_bwd)
+
+
+def _matmul_bias_gelu_impl(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    b2 = b.reshape(1, n)
+    if m % BLOCK_M != 0 or n % BLOCK_N != 0:
+        return pl.pallas_call(
+            _matmul_bias_gelu_kernel,
+            out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+            interpret=True,
+        )(x, w, b2)
+    grid = (m // BLOCK_M, n // BLOCK_N)
+    return pl.pallas_call(
+        _matmul_bias_gelu_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, BLOCK_N), lambda i, j: (0, j)),
+            pl.BlockSpec((1, BLOCK_N), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, BLOCK_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, b2)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def mlp_shard(x: jax.Array, w1: jax.Array, b1: jax.Array, w2: jax.Array) -> jax.Array:
+    """One tensor-parallel MLP shard: GELU(x@W1+b1)@W2 (row-parallel W2's
+    bias is added after the MP all-reduce, so it is not part of the shard).
+    """
+    h = matmul_bias_gelu(x, w1, b1)
+    return h @ w2

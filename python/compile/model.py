@@ -1,0 +1,151 @@
+"""L2: Megatron-style transformer LM (fwd/bwd/optimizer) in JAX.
+
+This is the per-worker compute graph of the paper's Fig 2 workload: a
+decoder-only transformer whose MLP hot loop calls the L1 Pallas kernels
+(`kernels.tp_block`). Parameters travel as ONE flat f32 vector — exactly
+the buffer the RAMP-x gradient all-reduce moves — so the Rust coordinator
+only ever handles `(params_vec, x_tokens, y_tokens) → (grad_vec, loss)`
+and `(params_vec, grad_vec, mom_vec) → (params_vec', mom_vec')`.
+
+Lowered once by `aot.py` to HLO text; never imported at runtime.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from compile.kernels.tp_block import mlp_shard
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 512
+    dim: int = 128
+    layers: int = 2
+    heads: int = 4
+    seq: int = 64
+    batch: int = 8
+    mlp_ratio: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.heads
+
+
+def init_params(key: jax.Array, cfg: ModelConfig):
+    """Initialize the parameter pytree (GPT-2-style scaling)."""
+    keys = jax.random.split(key, 2 + cfg.layers)
+    scale = 0.02
+    params = {
+        "embed": scale * jax.random.normal(keys[0], (cfg.vocab, cfg.dim), jnp.float32),
+        "pos": scale * jax.random.normal(keys[1], (cfg.seq, cfg.dim), jnp.float32),
+        "blocks": [],
+        "ln_f": {"g": jnp.ones(cfg.dim), "b": jnp.zeros(cfg.dim)},
+    }
+    for i in range(cfg.layers):
+        k = jax.random.split(keys[2 + i], 4)
+        d, h = cfg.dim, cfg.mlp_ratio * cfg.dim
+        params["blocks"].append(
+            {
+                "ln1": {"g": jnp.ones(d), "b": jnp.zeros(d)},
+                "qkv": scale * jax.random.normal(k[0], (d, 3 * d), jnp.float32),
+                "proj": scale / jnp.sqrt(2.0 * cfg.layers)
+                * jax.random.normal(k[1], (d, d), jnp.float32),
+                "ln2": {"g": jnp.ones(d), "b": jnp.zeros(d)},
+                "w1": scale * jax.random.normal(k[2], (d, h), jnp.float32),
+                "b1": jnp.zeros(h),
+                "w2": scale / jnp.sqrt(2.0 * cfg.layers)
+                * jax.random.normal(k[3], (h, d), jnp.float32),
+            }
+        )
+    return params
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention(x, qkv, proj, cfg: ModelConfig):
+    b, t, d = x.shape
+    qkv_out = x @ qkv  # (b, t, 3d)
+    q, k, v = jnp.split(qkv_out, 3, axis=-1)
+
+    def heads(z):
+        return z.reshape(b, t, cfg.heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(float(cfg.head_dim))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ proj
+
+
+def forward(params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Token ids (b, t) → logits (b, t, vocab)."""
+    x = params["embed"][tokens] + params["pos"][None, : tokens.shape[1]]
+    for blk in params["blocks"]:
+        h = _layer_norm(x, blk["ln1"]["g"], blk["ln1"]["b"])
+        x = x + _attention(h, blk["qkv"], blk["proj"], cfg)
+        h = _layer_norm(x, blk["ln2"]["g"], blk["ln2"]["b"])
+        bt = h.reshape(-1, cfg.dim)
+        # L1 Pallas kernel: fused matmul+bias+GELU MLP shard
+        x = x + mlp_shard(bt, blk["w1"], blk["b1"], blk["w2"]).reshape(x.shape)
+    x = _layer_norm(x, params["ln_f"]["g"], params["ln_f"]["b"])
+    return x @ params["embed"].T
+
+
+def loss_fn(params, x_tokens, y_tokens, cfg: ModelConfig) -> jax.Array:
+    logits = forward(params, x_tokens, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, y_tokens[..., None], axis=-1)
+    return -jnp.mean(ll)
+
+
+class FlatModel:
+    """The flat-vector view the Rust coordinator uses."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        tree = init_params(jax.random.key(0), cfg)
+        flat, self.unravel = ravel_pytree(tree)
+        self.n_params = int(flat.shape[0])
+
+    def init_vector(self, seed: jax.Array) -> jax.Array:
+        """seed (i32 scalar) → flat parameter vector."""
+        tree = init_params(jax.random.key(seed), self.cfg)
+        flat, _ = ravel_pytree(tree)
+        return flat
+
+    def grad_step(self, params_vec, x_tokens, y_tokens):
+        """(params, x, y) → (grad_vec, loss): the per-worker fwd/bwd."""
+
+        def f(vec):
+            return loss_fn(self.unravel(vec), x_tokens, y_tokens, self.cfg)
+
+        loss, grads = jax.value_and_grad(f)(params_vec)
+        return grads, loss
+
+    def apply_update(self, params_vec, grad_vec, mom_vec, lr, momentum):
+        """SGD with momentum over the flat vectors (runs after the
+        RAMP-x gradient all-reduce)."""
+        new_mom = momentum * mom_vec + grad_vec
+        return params_vec - lr * new_mom, new_mom
+
+    def eval_loss(self, params_vec, x_tokens, y_tokens):
+        return loss_fn(self.unravel(params_vec), x_tokens, y_tokens, self.cfg)
+
+
+def quickstart_config() -> ModelConfig:
+    """~0.6M params: fast enough for a few hundred CPU steps."""
+    return ModelConfig()
+
+
+def large_config() -> ModelConfig:
+    """~19M params (the `--large` e2e run)."""
+    return ModelConfig(vocab=2048, dim=384, layers=8, heads=8, seq=128, batch=8)

@@ -1,0 +1,34 @@
+//! Bench: optical-fabric execution/verification throughput
+//! (slot-transmissions per second).
+
+use ramp::benchutil::bench;
+use ramp::collectives::ramp_x::RampX;
+use ramp::collectives::MpiOp;
+use ramp::rng::Xoshiro256;
+use ramp::simulator::OpticalFabric;
+use ramp::topology::ramp::RampParams;
+use ramp::transcoder::transcode_plan;
+
+fn main() {
+    let mut r = Xoshiro256::seed_from(3);
+    for (label, p, elems) in [
+        ("small schedule (54 nodes)", RampParams::fig8_example(), 256),
+        ("large schedule (256 nodes)", RampParams::new(4, 4, 16, 1), 1024),
+        ("big messages (256 nodes, 1 MiB/node)", RampParams::new(4, 4, 16, 1), 65_536),
+    ] {
+        let n = p.n_nodes();
+        let len = ramp::collectives::ramp_x::padded_len(&p, elems * 4);
+        let mut bufs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| r.next_f32()).collect())
+            .collect();
+        let plan = RampX::new(&p).run(MpiOp::AllReduce, &mut bufs).unwrap();
+        let sched = transcode_plan(&p, &plan).unwrap();
+        let fabric = OpticalFabric::new(p.clone());
+        let slots = fabric.execute(&sched).slot_transmissions;
+        let res = bench(&format!("fabric execute {label}"), 400, || fabric.execute(&sched));
+        println!(
+            "    -> {:.2} M slot-transmissions/s verified ({slots} per schedule)",
+            res.throughput(slots as f64) / 1e6
+        );
+    }
+}

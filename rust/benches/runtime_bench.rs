@@ -1,0 +1,67 @@
+//! Bench: PJRT runtime — artifact load/compile and train-step execution
+//! latency (requires `make artifacts`). Also compares the compiled
+//! Pallas x-to-1 reduce kernel against the native Rust reduction the
+//! coordinator uses.
+
+use ramp::benchutil::bench;
+use ramp::rng::Xoshiro256;
+use ramp::runtime::{f32_vec, lit_f32_2d, Runtime};
+
+fn main() {
+    let rt = match Runtime::open(ramp::config::artifacts_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("skipping runtime bench (run `make artifacts`): {e:#}");
+            return;
+        }
+    };
+    println!("platform: {}", rt.platform());
+
+    bench("load+compile reduce_xto1_8x8192", 1500, || {
+        rt.load("reduce_xto1_8x8192").unwrap()
+    });
+
+    let exe = rt.load("reduce_xto1_8x8192").unwrap();
+    let mut r = Xoshiro256::seed_from(4);
+    let data: Vec<f32> = (0..8 * 8192).map(|_| r.next_f32()).collect();
+    let lit = lit_f32_2d(&data, 8, 8192).unwrap();
+    let res = bench("pjrt reduce_xto1 8x8192 (Pallas kernel)", 800, || {
+        exe.run(std::slice::from_ref(&lit)).unwrap()
+    });
+    println!(
+        "    -> {:.2} GB/s reduced through PJRT",
+        res.throughput((8 * 8192 * 4) as f64) / 1e9
+    );
+
+    // native Rust fused reduction (what the coordinator's executor does)
+    let res = bench("native rust 8-to-1 reduce 8x8192", 400, || {
+        let mut acc = vec![0f32; 8192];
+        for s in 0..8 {
+            for (a, v) in acc.iter_mut().zip(&data[s * 8192..(s + 1) * 8192]) {
+                *a += v;
+            }
+        }
+        acc
+    });
+    println!(
+        "    -> {:.2} GB/s native",
+        res.throughput((8 * 8192 * 4) as f64) / 1e9
+    );
+
+    // verify kernel output == native
+    let out = exe.run(std::slice::from_ref(&lit)).unwrap();
+    let kernel_sum = f32_vec(&out[0]).unwrap();
+    let mut native = vec![0f32; 8192];
+    for s in 0..8 {
+        for (a, v) in native.iter_mut().zip(&data[s * 8192..(s + 1) * 8192]) {
+            *a += v;
+        }
+    }
+    let max_err = kernel_sum
+        .iter()
+        .zip(&native)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    println!("kernel vs native max abs err: {max_err:.2e}");
+    assert!(max_err < 1e-4);
+}

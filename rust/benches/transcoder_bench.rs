@@ -1,0 +1,31 @@
+//! Bench: network transcoder throughput (NIC instructions/second) — the
+//! paper's system-level contribution must not be the bottleneck.
+
+use ramp::benchutil::bench;
+use ramp::collectives::ramp_x::RampX;
+use ramp::collectives::MpiOp;
+use ramp::rng::Xoshiro256;
+use ramp::topology::ramp::RampParams;
+use ramp::transcoder::transcode_plan;
+
+fn main() {
+    let mut r = Xoshiro256::seed_from(2);
+    for (label, p) in [
+        ("54-node fabric", RampParams::fig8_example()),
+        ("128-node fabric", RampParams::new(4, 4, 8, 1)),
+        ("256-node fabric", RampParams::new(4, 4, 16, 1)),
+    ] {
+        let n = p.n_nodes();
+        let mut bufs: Vec<Vec<f32>> =
+            (0..n).map(|_| (0..4 * n).map(|_| r.next_f32()).collect()).collect();
+        let plan = RampX::new(&p).run(MpiOp::AllReduce, &mut bufs).unwrap();
+        let n_instr = transcode_plan(&p, &plan).unwrap().instructions.len();
+        let res = bench(&format!("transcode all-reduce plan ({label})"), 400, || {
+            transcode_plan(&p, &plan).unwrap()
+        });
+        println!(
+            "    -> {:.2} M NIC instructions/s ({n_instr} per plan)",
+            res.throughput(n_instr as f64) / 1e6
+        );
+    }
+}

@@ -1,0 +1,62 @@
+//! Timing helper for the `harness = false` benches (no criterion
+//! offline): warmup + timed iterations with mean/min/p50 reporting.
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.mean_s
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<48} mean {:>12} | min {:>12} | p50 {:>12} ({} iters)",
+            self.name,
+            crate::units::fmt_time(self.mean_s),
+            crate::units::fmt_time(self.min_s),
+            crate::units::fmt_time(self.p50_s),
+            self.iters
+        )
+    }
+}
+
+/// Run `f` repeatedly for roughly `budget_ms` (after 2 warmup calls) and
+/// report statistics. Prints the result line.
+pub fn bench<T>(name: &str, budget_ms: u64, mut f: impl FnMut() -> T) -> BenchResult {
+    std::hint::black_box(f());
+    std::hint::black_box(f());
+    let budget = std::time::Duration::from_millis(budget_ms);
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 3 {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let res = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: samples.iter().sum::<f64>() / samples.len() as f64,
+        min_s: samples[0],
+        p50_s: samples[samples.len() / 2],
+    };
+    println!("{res}");
+    res
+}

@@ -1,0 +1,86 @@
+//! Minimal CLI argument helper (no clap offline): positional arguments
+//! plus `--key value` / `--flag` options.
+
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// Parsed command line: positionals and `--key [value]` options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping the binary name).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Self {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                    _ => String::from("true"),
+                };
+                out.options.insert(key.to_string(), val);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.options.get(key).map(|v| v != "false").unwrap_or(false)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects a number, got {v}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_positionals_and_options() {
+        let a = args("repro fig18 --nodes 4096 --verbose --msg 1024");
+        assert_eq!(a.positional, vec!["repro", "fig18"]);
+        assert_eq!(a.get_usize("nodes", 0).unwrap(), 4096);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_or("msg", "0"), "1024");
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_bad_numbers() {
+        assert!(args("--n abc").get_usize("n", 0).is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! Hierarchical ring strategies (Ueno & Yokota, §7.6): a two-level
+//! decomposition exploiting the fat-tree's fast intra-server tier. Groups
+//! of `g` nodes (one server / lowest tier) run intra-group rings on
+//! [`LinkClass::Local`] links; one leader per group runs the inter-group
+//! ring on [`LinkClass::Global`] links.
+
+use crate::collectives::ring::pipeline_chunks;
+use crate::collectives::{BaselinePhase, LinkClass, MpiOp};
+
+/// Closed-form phases for a hierarchical collective: `n` nodes in groups
+/// of `g` (`g ≥ 1`), message `m` bytes. Conventions as in
+/// [`super::ramp_x`].
+pub fn phases(op: MpiOp, n: usize, g: usize, m: u64, alpha: f64, beta: f64) -> Vec<BaselinePhase> {
+    assert!(n >= 1 && g >= 1);
+    let g = g.min(n);
+    let n_groups = n.div_ceil(g);
+    if n == 1 {
+        return vec![];
+    }
+    let (gu, ngu) = (g as u64, n_groups as u64);
+    let local = LinkClass::Local;
+    let global = LinkClass::Global;
+    match op {
+        // intra RS → inter RS on m/g
+        MpiOp::ReduceScatter => {
+            let mut v = Vec::new();
+            if g > 1 {
+                v.push(
+                    BaselinePhase::comm(gu - 1, m.div_ceil(gu), local)
+                        .with_reduce(2, m.div_ceil(gu)),
+                );
+            }
+            if n_groups > 1 {
+                let mg = m.div_ceil(gu);
+                v.push(
+                    BaselinePhase::comm(ngu - 1, mg.div_ceil(ngu), global)
+                        .with_reduce(2, mg.div_ceil(ngu)),
+                );
+            }
+            v
+        }
+        // inter AG (leaders exchange g contributions) → intra AG
+        MpiOp::AllGather => {
+            let mut v = Vec::new();
+            if g > 1 {
+                v.push(BaselinePhase::comm(gu - 1, m, local));
+            }
+            if n_groups > 1 {
+                v.push(BaselinePhase::comm(ngu - 1, m * gu, global));
+            }
+            v
+        }
+        // intra RS → inter AR → intra AG (the classic 3-phase hierarchy)
+        MpiOp::AllReduce => {
+            let mut v = Vec::new();
+            if g > 1 {
+                v.push(
+                    BaselinePhase::comm(gu - 1, m.div_ceil(gu), local)
+                        .with_reduce(2, m.div_ceil(gu)),
+                );
+            }
+            if n_groups > 1 {
+                let mg = m.div_ceil(gu);
+                v.push(
+                    BaselinePhase::comm(ngu - 1, mg.div_ceil(ngu), global)
+                        .with_reduce(2, mg.div_ceil(ngu)),
+                );
+                v.push(BaselinePhase::comm(ngu - 1, mg.div_ceil(ngu), global));
+            }
+            if g > 1 {
+                v.push(BaselinePhase::comm(gu - 1, m.div_ceil(gu), local));
+            }
+            v
+        }
+        // leader-based: members hand their out-of-group data to the
+        // leader, leaders exchange aggregated g·m blocks, leaders
+        // redistribute — all-to-all gains nothing from the hierarchy
+        // (§8.2: it is the op that needs full connectivity).
+        MpiOp::AllToAll => {
+            let mut v = Vec::new();
+            if g > 1 {
+                v.push(BaselinePhase::comm(gu - 1, m, local));
+            }
+            if n_groups > 1 {
+                v.push(BaselinePhase::comm(ngu - 1, (m * gu).div_ceil(ngu), global));
+            }
+            if g > 1 {
+                v.push(BaselinePhase::comm(gu - 1, m, local));
+            }
+            v
+        }
+        // root scatters to leaders, leaders scatter within groups
+        MpiOp::Scatter { .. } => {
+            let mut v = Vec::new();
+            if n_groups > 1 {
+                v.push(BaselinePhase::comm(ngu - 1, m.div_ceil(ngu), global));
+            }
+            if g > 1 {
+                let mg = m.div_ceil(ngu);
+                v.push(BaselinePhase::comm(gu - 1, mg.div_ceil(gu), local));
+            }
+            v
+        }
+        MpiOp::Gather { .. } => {
+            let mut v = Vec::new();
+            if g > 1 {
+                v.push(BaselinePhase::comm(gu - 1, m, local));
+            }
+            if n_groups > 1 {
+                v.push(BaselinePhase::comm(ngu - 1, m * gu, global));
+            }
+            v
+        }
+        MpiOp::Reduce { .. } => {
+            let mut v = phases(MpiOp::ReduceScatter, n, g, m, alpha, beta);
+            v.extend(phases(MpiOp::Gather { root: 0 }, n, g, m.div_ceil(n as u64), alpha, beta));
+            v
+        }
+        // pipelined tree: root → leaders (depth n_groups−1 ring) → intra
+        MpiOp::Broadcast { .. } => {
+            let mut v = Vec::new();
+            if n_groups > 1 {
+                let k = pipeline_chunks(m, ngu as f64 - 1.0, alpha, beta);
+                v.push(BaselinePhase::comm(k + ngu - 2, m.div_ceil(k), global));
+            }
+            if g > 1 {
+                let k = pipeline_chunks(m, gu as f64 - 1.0, alpha, beta);
+                v.push(BaselinePhase::comm(k + gu - 2, m.div_ceil(k), local));
+            }
+            v
+        }
+        MpiOp::Barrier => {
+            let mut v = Vec::new();
+            if g > 1 {
+                v.push(BaselinePhase::comm(gu - 1, 4, local));
+            }
+            if n_groups > 1 {
+                v.push(BaselinePhase::comm(2 * (ngu - 1), 4, global));
+            }
+            if g > 1 {
+                v.push(BaselinePhase::comm(gu - 1, 4, local));
+            }
+            v
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::total_rounds;
+
+    #[test]
+    fn far_fewer_global_rounds_than_flat_ring() {
+        // 65,536 nodes in servers of 8: flat ring needs 2(N−1) rounds; the
+        // hierarchy needs 2·7 local + 2·(8192−1) global.
+        let m = 1 << 30;
+        let ph = phases(MpiOp::AllReduce, 65_536, 8, m, 1e-6, 1e-12);
+        let global_rounds: u64 = ph
+            .iter()
+            .filter(|p| p.link == LinkClass::Global)
+            .map(|p| p.rounds)
+            .sum();
+        assert_eq!(global_rounds, 2 * 8191);
+        assert_eq!(total_rounds(&ph), 2 * 7 + 2 * 8191);
+    }
+
+    #[test]
+    fn degenerate_group_sizes() {
+        let m = 1 << 20;
+        // g = 1: pure inter-group ring
+        let ph = phases(MpiOp::AllReduce, 64, 1, m, 1e-6, 1e-12);
+        assert!(ph.iter().all(|p| p.link == LinkClass::Global));
+        assert_eq!(total_rounds(&ph), 2 * 63);
+        // g = n: pure intra ring
+        let ph = phases(MpiOp::AllReduce, 64, 64, m, 1e-6, 1e-12);
+        assert!(ph.iter().all(|p| p.link == LinkClass::Local));
+        // single node: nothing
+        assert!(phases(MpiOp::AllReduce, 1, 8, m, 1e-6, 1e-12).is_empty());
+    }
+
+    #[test]
+    fn reduce_scatter_shrinks_inter_message() {
+        let m = 1 << 24;
+        let ph = phases(MpiOp::ReduceScatter, 256, 8, m, 1e-6, 1e-12);
+        assert_eq!(ph.len(), 2);
+        assert_eq!(ph[0].bytes, m / 8);
+        assert_eq!(ph[1].bytes, m / 8 / 32);
+        assert!(ph.iter().all(|p| p.reduce_arity == 2));
+    }
+
+    #[test]
+    fn all_gather_grows_inter_message() {
+        let c = 1024u64;
+        let ph = phases(MpiOp::AllGather, 256, 8, c, 1e-6, 1e-12);
+        assert_eq!(ph[0].bytes, c);
+        assert_eq!(ph[1].bytes, c * 8);
+    }
+}

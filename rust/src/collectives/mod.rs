@@ -1,0 +1,133 @@
+//! MPI collective operations: the paper's RAMP-x strategies (§5–6) and the
+//! EPS baselines (§7.6).
+//!
+//! * [`subgroups`] — the step-1..4 parallel subgroup maps of §6.1.1
+//!   (Tables 5–6) and the information map / node rank of §6.1.2 (Table 7).
+//! * [`ops`] — `Buff_op`/`Loc_op` algebra and per-step message sizes
+//!   (Table 8, Alg. 1).
+//! * [`plan`] — transfer-level collective schedules: rounds of
+//!   (src → dsts, bytes) records consumed by the transcoder, the fabric
+//!   simulator and the estimator.
+//! * [`ramp_x`] — data-moving executors for every RAMP-x operation,
+//!   verified element-wise against naive references.
+//! * [`ring`], [`hierarchical`], [`torus_strategy`] — baseline strategies.
+//! * [`reference`] — naive single-process oracles for correctness tests.
+
+pub mod hierarchical;
+pub mod ops;
+pub mod plan;
+pub mod ramp_x;
+pub mod reference;
+pub mod ring;
+pub mod subgroups;
+pub mod torus_strategy;
+
+/// The MPI collective operations evaluated in the paper (Table 8 plus the
+/// composed reduce/all-reduce of §6.1.5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MpiOp {
+    ReduceScatter,
+    AllGather,
+    AllReduce,
+    AllToAll,
+    Scatter { root: usize },
+    Gather { root: usize },
+    Reduce { root: usize },
+    Broadcast { root: usize },
+    Barrier,
+}
+
+impl MpiOp {
+    /// All ops with default roots — handy for sweeps (Fig 18/19).
+    pub fn all() -> Vec<MpiOp> {
+        vec![
+            MpiOp::ReduceScatter,
+            MpiOp::AllGather,
+            MpiOp::AllReduce,
+            MpiOp::AllToAll,
+            MpiOp::Scatter { root: 0 },
+            MpiOp::Gather { root: 0 },
+            MpiOp::Reduce { root: 0 },
+            MpiOp::Broadcast { root: 0 },
+            MpiOp::Barrier,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MpiOp::ReduceScatter => "reduce-scatter",
+            MpiOp::AllGather => "all-gather",
+            MpiOp::AllReduce => "all-reduce",
+            MpiOp::AllToAll => "all-to-all",
+            MpiOp::Scatter { .. } => "scatter",
+            MpiOp::Gather { .. } => "gather",
+            MpiOp::Reduce { .. } => "reduce",
+            MpiOp::Broadcast { .. } => "broadcast",
+            MpiOp::Barrier => "barrier",
+        }
+    }
+}
+
+/// Collective strategies compared in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// The co-designed RAMP-x strategies (§5–6).
+    RampX,
+    /// Single logical ring (NCCL-style, Patarasuk-Yuan).
+    Ring,
+    /// 2D-torus strategy (rings per dimension).
+    Torus2D,
+    /// Hierarchical ring (Ueno-Yokota): intra-group ring + inter-group ring.
+    Hierarchical,
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::RampX => "RAMP-x",
+            Strategy::Ring => "Ring",
+            Strategy::Torus2D => "2D-Torus",
+            Strategy::Hierarchical => "Hierarchical",
+        }
+    }
+}
+
+/// Which class of links a baseline phase stresses; the estimator maps
+/// (topology, class) → an effective [`crate::topology::LinkProfile`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkClass {
+    /// Lowest-tier links (intra-server NVLink / first torus dimension).
+    Local,
+    /// The worst link the phase's communication pattern crosses.
+    Global,
+}
+
+/// One phase of a baseline collective strategy in closed form: `rounds`
+/// sequential communication rounds, each moving `bytes` per node over
+/// `link` links, followed by a local `reduce_arity`-to-1 reduction of
+/// `reduce_bytes` (0 = none).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BaselinePhase {
+    pub rounds: u64,
+    pub bytes: u64,
+    pub link: LinkClass,
+    pub reduce_arity: usize,
+    pub reduce_bytes: u64,
+}
+
+impl BaselinePhase {
+    pub fn comm(rounds: u64, bytes: u64, link: LinkClass) -> Self {
+        Self { rounds, bytes, link, reduce_arity: 0, reduce_bytes: 0 }
+    }
+
+    pub fn with_reduce(mut self, arity: usize, bytes: u64) -> Self {
+        self.reduce_arity = arity;
+        self.reduce_bytes = bytes;
+        self
+    }
+}
+
+/// Total algorithmic rounds of a phase list (Fig 15's step counts).
+pub fn total_rounds(phases: &[BaselinePhase]) -> u64 {
+    phases.iter().map(|p| p.rounds).sum()
+}

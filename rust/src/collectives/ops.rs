@@ -1,0 +1,523 @@
+//! Buffer/local operation algebra (§6.1.3–6.1.5, Table 8) and the
+//! closed-form per-step message sizes used by the estimator at scales too
+//! large to expand transfer-level plans.
+
+use crate::collectives::subgroups::Step;
+use crate::collectives::MpiOp;
+use crate::topology::ramp::RampParams;
+
+/// Transformation applied to the message *before* transmission (Table 8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BuffOp {
+    /// Divide the vector into `nodes` addressable contiguous segments.
+    Reshape,
+    /// Grow the buffer by `nodes` and place own data at the local-rank slot.
+    Copy,
+    /// No transformation.
+    Identity,
+}
+
+/// Transformation applied to received data *after* a communication step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LocOp {
+    /// Associative reduction (sum) across sources — the x-to-1 reduce whose
+    /// arithmetic-intensity advantage §8.4.2 quantifies.
+    Reduce,
+    /// All-to-all transpose of (source, rank) dimensions.
+    Reshape,
+    /// Barrier flag AND.
+    And,
+    /// No transformation.
+    Identity,
+}
+
+/// The (Buff_op, Loc_op) pair of Table 8 for a primitive operation.
+/// Reduce/All-Reduce are composed (Rabenseifner) and so have no single row.
+pub fn table8_ops(op: MpiOp) -> (BuffOp, LocOp) {
+    match op {
+        MpiOp::ReduceScatter => (BuffOp::Reshape, LocOp::Reduce),
+        MpiOp::AllGather => (BuffOp::Copy, LocOp::Identity),
+        MpiOp::Barrier => (BuffOp::Identity, LocOp::And),
+        MpiOp::AllToAll => (BuffOp::Reshape, LocOp::Reshape),
+        MpiOp::Scatter { .. } => (BuffOp::Reshape, LocOp::Identity),
+        MpiOp::Gather { .. } => (BuffOp::Copy, LocOp::Identity),
+        MpiOp::Broadcast { .. } => (BuffOp::Identity, LocOp::Identity),
+        MpiOp::AllReduce | MpiOp::Reduce { .. } => (BuffOp::Reshape, LocOp::Reduce),
+    }
+}
+
+/// One algorithmic phase of a RAMP-x collective in closed form, as the
+/// estimator consumes it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PhaseSpec {
+    /// Which of the four subgroup steps this phase runs over.
+    pub step: Step,
+    /// Subgroup size `s`.
+    pub size: usize,
+    /// Sequential communication rounds within the phase (1 for steps 1–3;
+    /// `s − 1` for the step-4 one-to-one exchange when `s > 2`; pipeline
+    /// stages for broadcast).
+    pub rounds: usize,
+    /// Bytes transmitted per peer per round.
+    pub per_peer_bytes: u64,
+    /// Concurrent peers per round.
+    pub peers: usize,
+    /// Local reduction arity after each round (`s`-to-1; 0/1 = none).
+    pub reduce_sources: usize,
+    /// Bytes reduced locally per round.
+    pub reduce_bytes: u64,
+    /// Transceiver groups striped per peer communication (Eqs 3–5).
+    pub q: usize,
+}
+
+/// Closed-form phase list for a RAMP-x collective with message size
+/// `m` bytes on `p` (Table 8 message-size rows, generalized to any
+/// parameter set). `m` is the MPI-semantics message size: the full vector
+/// for reduce-scatter/all-reduce/broadcast/scatter/all-to-all, the
+/// per-node contribution for all-gather/gather.
+///
+/// The returned phases are in execution order. Composed ops
+/// (all-reduce = reduce-scatter ∘ all-gather, reduce = reduce-scatter ∘
+/// gather — Rabenseifner, §6.1.5) simply concatenate their parts, giving
+/// the paper's "up to 4 (8 for reduce and all-reduce) algorithmic steps".
+pub fn ramp_phases(p: &RampParams, op: MpiOp, m: u64) -> Vec<PhaseSpec> {
+    let active = Step::active(p);
+    let n = p.n_nodes() as u64;
+    match op {
+        MpiOp::ReduceScatter => {
+            let mut cur = m;
+            active
+                .iter()
+                .map(|&step| {
+                    let s = step.size(p) as u64;
+                    let per = cur.div_ceil(s);
+                    cur = per;
+                    phase_all_exchange(p, step, per, true)
+                })
+                .collect()
+        }
+        MpiOp::AllGather => {
+            let mut cur = m; // per-node contribution grows
+            active
+                .iter()
+                .rev()
+                .map(|&step| {
+                    let s = step.size(p) as u64;
+                    let ph = phase_all_exchange(p, step, cur, false);
+                    cur *= s;
+                    ph
+                })
+                .collect()
+        }
+        MpiOp::AllReduce => {
+            let mut v = ramp_phases(p, MpiOp::ReduceScatter, m);
+            v.extend(ramp_phases(p, MpiOp::AllGather, m.div_ceil(n)));
+            v
+        }
+        MpiOp::AllToAll => active
+            .iter()
+            .map(|&step| {
+                let s = step.size(p) as u64;
+                // each node forwards m·(s−1)/s, i.e. m/s per peer
+                phase_all_exchange(p, step, m.div_ceil(s), false)
+            })
+            .collect(),
+        MpiOp::Scatter { .. } => {
+            let mut cur = m;
+            active
+                .iter()
+                .map(|&step| {
+                    let s = step.size(p) as u64;
+                    let per = cur.div_ceil(s);
+                    cur = per;
+                    // scatter is one-to-many inside the holder's subgroup:
+                    // same wire shape as the exchange, no reduction
+                    phase_all_exchange(p, step, per, false)
+                })
+                .collect()
+        }
+        MpiOp::Gather { .. } => {
+            let mut cur = m;
+            active
+                .iter()
+                .rev()
+                .map(|&step| {
+                    let s = step.size(p) as u64;
+                    let ph = phase_all_exchange(p, step, cur, false);
+                    cur *= s;
+                    ph
+                })
+                .collect()
+        }
+        MpiOp::Reduce { .. } => {
+            let mut v = ramp_phases(p, MpiOp::ReduceScatter, m);
+            v.extend(ramp_phases(p, MpiOp::Gather { root: 0 }, m.div_ceil(n)));
+            v
+        }
+        MpiOp::Broadcast { .. } => broadcast_phases(p, m),
+        MpiOp::Barrier => active
+            .iter()
+            .map(|&step| {
+                let mut ph = phase_all_exchange(p, step, 1, false);
+                ph.reduce_sources = step.size(p);
+                ph.reduce_bytes = step.size(p) as u64;
+                ph
+            })
+            .collect(),
+    }
+}
+
+/// Number of transceiver groups usable per peer communication at a step
+/// (Eqs 3–4 reworked for the rack-broadcast constraint; see
+/// `transcoder::trx_groups_per_peer` for the schedule that realizes it).
+pub fn trx_groups_per_peer(p: &RampParams, step: Step) -> usize {
+    let s = step.size(p);
+    if s <= 1 {
+        return p.x;
+    }
+    // Step 4 under Route & Select subnets: the AWGR + crossbar gives each
+    // rack pair its own wavelength space, so the one-to-one exchange can
+    // stripe across all x transceiver groups (§6.2.2 formula 1 —
+    // "the number of transceiver groups used per communication is x").
+    if step == Step::S4 && p.subnet_kind == crate::topology::ramp::SubnetKind::RouteSelect {
+        return p.x;
+    }
+    // Otherwise a (subnet, wavelength) carries one transmission and racks
+    // of a group pair share each subnet's wavelength space, so at most
+    // ⌊x/J⌋ parallel transceiver-group offsets exist per peer, and a
+    // node's x groups bound peers·q.
+    let by_peers = p.x / (s - 1).min(p.x);
+    let by_racks = (p.x / p.j).max(1);
+    by_peers.min(by_racks).max(1)
+}
+
+/// Effective unidirectional I/O bandwidth of a node during a step (Eq 5).
+/// Step 4 serializes into one-to-one rounds, so one peer is concurrent.
+pub fn effective_io_bandwidth(p: &RampParams, step: Step) -> f64 {
+    let s = step.size(p);
+    if s <= 1 {
+        return 0.0;
+    }
+    let q = trx_groups_per_peer(p, step);
+    let concurrent_peers = if step == Step::S4 || s == 2 {
+        1
+    } else {
+        (s - 1).min(p.x)
+    };
+    ((q * p.b * concurrent_peers) as f64 * p.line_rate).min(p.node_capacity())
+}
+
+fn phase_all_exchange(p: &RampParams, step: Step, per_peer: u64, reduce: bool) -> PhaseSpec {
+    let s = step.size(p);
+    phase_for_size(p, step, s, per_peer, reduce, trx_groups_per_peer(p, step))
+}
+
+/// Phase over an arbitrary subgroup size (full-network steps and
+/// job-subset steps share this shape).
+fn phase_for_size(
+    p: &RampParams,
+    step: Step,
+    s: usize,
+    per_peer: u64,
+    reduce: bool,
+    q: usize,
+) -> PhaseSpec {
+    // Steps 1–3 reach all s−1 peers concurrently on distinct transceiver
+    // groups; step 4 (and any subgroup larger than x+1) serializes into
+    // one-to-one rounds (§6.1.1: ring/recursive-halving for the 4th step).
+    let (rounds, peers) = if s == 2 {
+        (1, 1)
+    } else if step == Step::S4 || s - 1 > p.x {
+        (s - 1, 1)
+    } else {
+        (1, s - 1)
+    };
+    PhaseSpec {
+        step,
+        size: s,
+        rounds,
+        per_peer_bytes: per_peer,
+        peers,
+        reduce_sources: if reduce { s } else { 0 },
+        reduce_bytes: if reduce { per_peer * rounds as u64 } else { 0 },
+        q,
+    }
+}
+
+/// Step sizes for a job of `n` active nodes placed in network `p`
+/// (§7.4: "nodes selected such that the number of algorithmic steps is
+/// minimised"): greedy factors ≤ x, at most four.
+pub fn job_step_sizes(p: &RampParams, n: usize) -> Vec<usize> {
+    if n >= p.n_nodes() {
+        return Step::active(p).iter().map(|s| s.size(p)).collect();
+    }
+    let mut sizes = Vec::new();
+    let mut rem = n;
+    while rem > 1 {
+        let f = rem.min(p.x);
+        sizes.push(f);
+        rem = rem.div_ceil(f);
+    }
+    sizes
+}
+
+/// Transceiver groups per peer for a *job-subset* subgroup of size `s`:
+/// a single job has the network's subnets to itself, so striping is
+/// bounded only by the node's x groups over s−1 concurrent peers (and by
+/// the rack-broadcast constraint under B&S).
+pub fn job_trx_groups(p: &RampParams, s: usize, last_pairwise: bool) -> usize {
+    if s <= 1 {
+        return p.x;
+    }
+    let generous = if last_pairwise && s == 2 {
+        p.x
+    } else {
+        (p.x / (s - 1).min(p.x)).max(1)
+    };
+    match p.subnet_kind {
+        crate::topology::ramp::SubnetKind::RouteSelect => generous,
+        crate::topology::ramp::SubnetKind::BroadcastSelect => {
+            generous.min((p.x / p.j).max(1))
+        }
+    }
+}
+
+/// Closed-form phase list for a RAMP-x collective over a *job* of `n`
+/// active nodes inside network `p` — the estimator's workhorse for
+/// arbitrary job sizes (Figs 16–21).
+pub fn job_phases(p: &RampParams, op: MpiOp, m: u64, n: usize) -> Vec<PhaseSpec> {
+    let sizes = job_step_sizes(p, n);
+    if sizes.is_empty() {
+        return vec![];
+    }
+    let nn = sizes.iter().product::<usize>() as u64;
+    let step_of = |i: usize| Step::ALL[i.min(3)];
+    let mk = |i: usize, s: usize, per: u64, reduce: bool| {
+        let last = i + 1 == sizes.len();
+        phase_for_size(p, step_of(i), s, per, reduce, job_trx_groups(p, s, last))
+    };
+    match op {
+        MpiOp::ReduceScatter => {
+            let mut cur = m;
+            sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| {
+                    cur = cur.div_ceil(s as u64);
+                    mk(i, s, cur, true)
+                })
+                .collect()
+        }
+        MpiOp::AllGather => {
+            let mut cur = m;
+            sizes
+                .iter()
+                .enumerate()
+                .rev()
+                .map(|(i, &s)| {
+                    let ph = mk(i, s, cur, false);
+                    cur *= s as u64;
+                    ph
+                })
+                .collect()
+        }
+        MpiOp::AllReduce => {
+            let mut v = job_phases(p, MpiOp::ReduceScatter, m, n);
+            v.extend(job_phases(p, MpiOp::AllGather, m.div_ceil(nn), n));
+            v
+        }
+        MpiOp::AllToAll => sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| mk(i, s, m.div_ceil(s as u64), false))
+            .collect(),
+        MpiOp::Scatter { .. } => {
+            let mut cur = m;
+            sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| {
+                    cur = cur.div_ceil(s as u64);
+                    mk(i, s, cur, false)
+                })
+                .collect()
+        }
+        MpiOp::Gather { .. } => {
+            let mut cur = m;
+            sizes
+                .iter()
+                .enumerate()
+                .rev()
+                .map(|(i, &s)| {
+                    let ph = mk(i, s, cur, false);
+                    cur *= s as u64;
+                    ph
+                })
+                .collect()
+        }
+        MpiOp::Reduce { .. } => {
+            let mut v = job_phases(p, MpiOp::ReduceScatter, m, n);
+            v.extend(job_phases(p, MpiOp::Gather { root: 0 }, m.div_ceil(nn), n));
+            v
+        }
+        MpiOp::Broadcast { .. } => broadcast_phases(p, m),
+        MpiOp::Barrier => sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| {
+                let mut ph = mk(i, s, 1, false);
+                ph.reduce_sources = s;
+                ph.reduce_bytes = s as u64;
+                ph
+            })
+            .collect(),
+    }
+}
+
+/// Pipelined SOA-multicast broadcast tree (§6.1.5, Eq 1): a diameter-3
+/// logical tree (root → Λ−1 relays ∪ first tier → everyone), pipelined in
+/// `k` chunks. Number of stages `k = sqrt(m(s−2)β/α)` clamped to ≥ 1;
+/// total rounds `k + s − 2`.
+pub fn broadcast_phases(p: &RampParams, m: u64) -> Vec<PhaseSpec> {
+    let s = 3usize; // tree diameter at full generality (root, relays, leaves)
+    let alpha = p.propagation + p.io_latency; // setup latency α
+    let beta = 1.0 / p.node_capacity(); // inverse node capacity β
+    let kf = ((m as f64 * 8.0 * (s as f64 - 2.0) * beta) / alpha).sqrt();
+    let k = (kf.round() as usize).max(1);
+    let rounds = k + s - 2;
+    vec![PhaseSpec {
+        step: Step::S1, // label only; broadcast uses its own tree schedule
+        size: p.n_nodes(),
+        rounds,
+        per_peer_bytes: m.div_ceil(k as u64),
+        peers: 1, // multicast: one optical transmission per stage hop
+        reduce_sources: 0,
+        reduce_bytes: 0,
+        q: p.x, // Eq 1's β is the inverse of full node capacity
+    }]
+}
+
+/// Total bytes a single node transmits across a whole collective (sanity
+/// metric; Table 8 row sums).
+pub fn node_tx_bytes(phases: &[PhaseSpec]) -> u64 {
+    phases
+        .iter()
+        .map(|ph| ph.per_peer_bytes * ph.peers as u64 * ph.rounds as u64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::GB;
+
+    #[test]
+    fn reduce_scatter_sizes_match_table8() {
+        // Table 8 row RedScatter: m/x, m/x², m/(Jx²), m/(JΛx)
+        let p = RampParams::max_scale();
+        let m = GB;
+        let ph = ramp_phases(&p, MpiOp::ReduceScatter, m);
+        assert_eq!(ph.len(), 4);
+        assert_eq!(ph[0].per_peer_bytes, m.div_ceil(32));
+        assert_eq!(ph[1].per_peer_bytes, m.div_ceil(32).div_ceil(32));
+        assert_eq!(ph[2].per_peer_bytes, m.div_ceil(32).div_ceil(32).div_ceil(32));
+        // step 4: /(Λ/x)=2 more
+        assert_eq!(
+            ph[3].per_peer_bytes,
+            m.div_ceil(32).div_ceil(32).div_ceil(32).div_ceil(2)
+        );
+        assert!(ph.iter().take(3).all(|s| s.rounds == 1 && s.peers == 31));
+        assert_eq!(ph[3].rounds, 1); // pairwise exchange at DG=2
+        assert!(ph.iter().all(|s| s.reduce_sources == s.size));
+    }
+
+    #[test]
+    fn all_gather_reverses_and_grows() {
+        let p = RampParams::fig8_example(); // x=J=3, Λ=6, N=54
+        let m = 1000u64; // per-node contribution
+        let ph = ramp_phases(&p, MpiOp::AllGather, m);
+        assert_eq!(ph.len(), 4);
+        // executes S4 (size 2) first sending m, then S3 sending 2m, ...
+        assert_eq!(ph[0].size, 2);
+        assert_eq!(ph[0].per_peer_bytes, 1000);
+        assert_eq!(ph[1].size, 3);
+        assert_eq!(ph[1].per_peer_bytes, 2000);
+        assert_eq!(ph[2].per_peer_bytes, 6000);
+        assert_eq!(ph[3].per_peer_bytes, 18000);
+    }
+
+    #[test]
+    fn all_reduce_is_8_steps_at_max_scale() {
+        let p = RampParams::max_scale();
+        let ph = ramp_phases(&p, MpiOp::AllReduce, GB);
+        assert_eq!(ph.len(), 8, "paper: up to 8 steps for all-reduce");
+    }
+
+    #[test]
+    fn all_to_all_sizes_match_table8() {
+        // Table 8 row All-to-All: m/x, m/x, m/J, m·x/Λ
+        let p = RampParams::max_scale();
+        let m = GB;
+        let ph = ramp_phases(&p, MpiOp::AllToAll, m);
+        assert_eq!(ph[0].per_peer_bytes, m.div_ceil(32));
+        assert_eq!(ph[1].per_peer_bytes, m.div_ceil(32));
+        assert_eq!(ph[2].per_peer_bytes, m.div_ceil(32)); // J = 32
+        assert_eq!(ph[3].per_peer_bytes, m.div_ceil(2)); // m·x/Λ = m/2
+    }
+
+    #[test]
+    fn broadcast_pipeline_stages() {
+        let p = RampParams::max_scale();
+        let ph = broadcast_phases(&p, GB);
+        assert_eq!(ph.len(), 1);
+        let k = ph[0].rounds - 1;
+        assert!(k >= 1);
+        // Eq 1 with m=1GB: k = sqrt(m·β/α); chunk ≈ m/k
+        assert_eq!(ph[0].per_peer_bytes, (GB as u64).div_ceil(k as u64));
+        // more pipeline stages for bigger messages
+        let ph2 = broadcast_phases(&p, 100 * GB);
+        assert!(ph2[0].rounds > ph[0].rounds);
+    }
+
+    #[test]
+    fn trx_groups_follow_rack_constraint() {
+        let p = RampParams::max_scale(); // J = x, Route & Select default
+        assert_eq!(trx_groups_per_peer(&p, Step::S1), 1);
+        // §6.2.2 formula 1: full-capacity step 4 under R&S
+        assert_eq!(trx_groups_per_peer(&p, Step::S4), 32);
+        // Broadcast & Select shares wavelengths across racks: q = x/J = 1
+        let bs = RampParams::max_scale().with_broadcast_select();
+        assert_eq!(trx_groups_per_peer(&bs, Step::S4), 1);
+        // J < x frees parallel offsets
+        let p2 = RampParams::new(8, 2, 16, 1).with_broadcast_select();
+        assert_eq!(trx_groups_per_peer(&p2, Step::S4), 4); // min(8/1, 8/2)=4
+        assert_eq!(trx_groups_per_peer(&p2, Step::S3), 4); // min(8/1, 8/2)=4 (J=2 ⇒ 1 peer)
+    }
+
+    #[test]
+    fn effective_bw_never_exceeds_node_capacity() {
+        for p in [
+            RampParams::max_scale(),
+            RampParams::fig8_example(),
+            RampParams::new(8, 2, 16, 1),
+            RampParams::new(4, 4, 16, 2),
+        ] {
+            for step in Step::ALL {
+                let bw = effective_io_bandwidth(&p, step);
+                assert!(
+                    bw <= p.node_capacity() + 1.0,
+                    "step {step:?} bw {bw} exceeds {} for {p:?}",
+                    p.node_capacity()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn barrier_moves_almost_nothing() {
+        let p = RampParams::max_scale();
+        let ph = ramp_phases(&p, MpiOp::Barrier, 0);
+        assert!(node_tx_bytes(&ph) <= 4 * 32 * 4);
+        assert_eq!(ph.len(), 4);
+    }
+}

@@ -1,0 +1,145 @@
+//! Transfer-level collective schedules.
+//!
+//! A [`CollectivePlan`] is the bridge between the MPI Engine (which decides
+//! *who* sends *what* to *whom* at each algorithmic step) and the network
+//! transcoder / fabric simulator / estimator (which decide *how*: subnet,
+//! wavelength, timeslot, and how long it takes).
+//!
+//! Plans are organized as `steps → rounds → transfers`:
+//! * an **algorithmic step** is one of the (up to four) RAMP-x steps, or
+//!   one ring iteration group for baseline strategies;
+//! * a **round** is a set of transfers that happen concurrently — every
+//!   node transmits at most once per (round, peer) and the transcoder must
+//!   schedule the whole round contention-free;
+//! * a **transfer** is `src → dsts` (multiple dsts = optical multicast,
+//!   used by RAMP-broadcast's SOA-gated tree) carrying `bytes`.
+
+use crate::topology::ramp::NodeCoord;
+
+/// A single transmission. `dsts.len() > 1` means optical multicast (one
+/// wavelength, many receivers tuned to it — §6.1.5 broadcast).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Transfer {
+    pub src: NodeCoord,
+    pub dsts: Vec<NodeCoord>,
+    pub bytes: u64,
+}
+
+impl Transfer {
+    pub fn unicast(src: NodeCoord, dst: NodeCoord, bytes: u64) -> Self {
+        Self { src, dsts: vec![dst], bytes }
+    }
+}
+
+/// Transfers that occur concurrently.
+#[derive(Clone, Debug, Default)]
+pub struct Round {
+    pub transfers: Vec<Transfer>,
+}
+
+impl Round {
+    /// Total bytes any single node transmits in this round (for effective
+    /// bandwidth accounting).
+    pub fn max_tx_bytes_per_node(&self) -> u64 {
+        use std::collections::HashMap;
+        let mut per: HashMap<NodeCoord, u64> = HashMap::new();
+        for t in &self.transfers {
+            *per.entry(t.src).or_default() += t.bytes;
+        }
+        per.values().copied().max().unwrap_or(0)
+    }
+
+    /// Largest single transfer in the round.
+    pub fn max_transfer_bytes(&self) -> u64 {
+        self.transfers.iter().map(|t| t.bytes).max().unwrap_or(0)
+    }
+}
+
+/// One algorithmic step: rounds plus local-compute metadata for the
+/// estimator's roofline model.
+#[derive(Clone, Debug, Default)]
+pub struct PlanStep {
+    pub label: String,
+    pub rounds: Vec<Round>,
+    /// Arity of the local reduction performed after each round
+    /// (`s`-to-1 sum; 0 / 1 = no reduction — §8.4.2).
+    pub reduce_sources: usize,
+    /// Bytes reduced per node after each round.
+    pub reduce_bytes: u64,
+    /// Transceiver groups usable per peer communication (Eqs 3–4;
+    /// 0 means 1). The transcoder stripes each transfer across this many
+    /// parallel subnets.
+    pub trx_q: usize,
+    /// Which RAMP-x subgroup step produced this plan step, if any. The
+    /// transcoder picks the transceiver-group formula per step (step 3
+    /// needs the `(g_src + j_dst) mod x` variant — see transcoder docs).
+    pub step: Option<crate::collectives::subgroups::Step>,
+}
+
+/// A fully-expanded collective schedule for one operation on one job.
+#[derive(Clone, Debug, Default)]
+pub struct CollectivePlan {
+    pub steps: Vec<PlanStep>,
+}
+
+impl CollectivePlan {
+    /// Total number of communication rounds (the paper's "algorithmic
+    /// steps" for step-count comparisons counts rounds, since each round
+    /// pays one H2H latency — Fig 15).
+    pub fn n_rounds(&self) -> usize {
+        self.steps.iter().map(|s| s.rounds.len()).sum()
+    }
+
+    /// Total bytes on the wire across all transfers (multicast counted
+    /// once, as one optical transmission).
+    pub fn total_wire_bytes(&self) -> u64 {
+        self.steps
+            .iter()
+            .flat_map(|s| &s.rounds)
+            .flat_map(|r| &r.transfers)
+            .map(|t| t.bytes)
+            .sum()
+    }
+
+    /// Total transfers in the plan.
+    pub fn n_transfers(&self) -> usize {
+        self.steps.iter().flat_map(|s| &s.rounds).map(|r| r.transfers.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nc(g: usize, j: usize, l: usize) -> NodeCoord {
+        NodeCoord::new(g, j, l)
+    }
+
+    #[test]
+    fn round_accounting() {
+        let mut r = Round::default();
+        r.transfers.push(Transfer::unicast(nc(0, 0, 0), nc(1, 0, 0), 100));
+        r.transfers.push(Transfer::unicast(nc(0, 0, 0), nc(2, 0, 0), 50));
+        r.transfers.push(Transfer::unicast(nc(1, 0, 0), nc(0, 0, 0), 120));
+        assert_eq!(r.max_tx_bytes_per_node(), 150);
+        assert_eq!(r.max_transfer_bytes(), 120);
+    }
+
+    #[test]
+    fn plan_totals() {
+        let mut plan = CollectivePlan::default();
+        let mut s = PlanStep::default();
+        let mut r = Round::default();
+        r.transfers.push(Transfer {
+            src: nc(0, 0, 0),
+            dsts: vec![nc(1, 0, 0), nc(2, 0, 0)],
+            bytes: 10,
+        });
+        s.rounds.push(r.clone());
+        s.rounds.push(r);
+        plan.steps.push(s);
+        assert_eq!(plan.n_rounds(), 2);
+        assert_eq!(plan.total_wire_bytes(), 20); // multicast counted once
+        assert_eq!(plan.n_transfers(), 2);
+    }
+}

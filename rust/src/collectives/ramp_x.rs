@@ -1,0 +1,710 @@
+//! RAMP-x collective executors (§5–6, Alg. 1).
+//!
+//! Each executor *actually moves data* between per-node buffers following
+//! the RAMP-x algorithm — the same transfers a real deployment would put on
+//! the optical fabric — and emits the transfer-level [`CollectivePlan`]
+//! that the network transcoder turns into NIC instructions. Executors are
+//! verified element-wise against [`super::reference`] and their plans are
+//! verified contention-free on the fabric simulator.
+//!
+//! Buffers are indexed by **MPI rank** (the information-map rank of
+//! §6.1.2), not by flat node id; [`subgroups::node_rank`] /
+//! [`subgroups::node_of_rank`] convert. All message sizes must be
+//! divisible by the relevant subgroup-size products; [`padded_len`] gives
+//! the canonical padding.
+
+use crate::collectives::plan::{CollectivePlan, PlanStep, Round, Transfer};
+use crate::collectives::subgroups::{
+    member_index, members, node_of_rank, node_rank, rank_digit, Step,
+};
+use crate::collectives::MpiOp;
+use crate::topology::ramp::{NodeCoord, RampParams};
+use anyhow::{bail, ensure, Result};
+
+/// RAMP-x executor over a parameterized network.
+pub struct RampX<'a> {
+    pub p: &'a RampParams,
+}
+
+impl<'a> RampX<'a> {
+    pub fn new(p: &'a RampParams) -> Self {
+        Self { p }
+    }
+
+    /// Dispatch an operation on rank-indexed buffers. Returns the emitted
+    /// transfer plan. Buffer semantics match [`super::reference`].
+    pub fn run(&self, op: MpiOp, bufs: &mut Vec<Vec<f32>>) -> Result<CollectivePlan> {
+        match op {
+            MpiOp::ReduceScatter => self.reduce_scatter(bufs),
+            MpiOp::AllGather => self.all_gather(bufs),
+            MpiOp::AllReduce => self.all_reduce(bufs),
+            MpiOp::AllToAll => self.all_to_all(bufs),
+            MpiOp::Scatter { root } => self.scatter(bufs, root),
+            MpiOp::Gather { root } => self.gather(bufs, root),
+            MpiOp::Reduce { root } => self.reduce(bufs, root),
+            MpiOp::Broadcast { root } => self.broadcast(bufs, root),
+            MpiOp::Barrier => self.barrier(bufs),
+        }
+    }
+
+    /// Reduce-scatter: every node ends with its rank's `1/N` slice of the
+    /// global sum. 3–4 algorithmic steps (Fig 8's worked example).
+    pub fn reduce_scatter(&self, bufs: &mut Vec<Vec<f32>>) -> Result<CollectivePlan> {
+        let p = self.p;
+        let n = p.n_nodes();
+        ensure!(bufs.len() == n, "need {n} buffers, got {}", bufs.len());
+        let m = bufs[0].len();
+        ensure!(bufs.iter().all(|b| b.len() == m), "unequal buffer lengths");
+        ensure!(m % n == 0, "message length {m} not divisible by N={n} (pad with padded_len)");
+
+        let mut plan = CollectivePlan::default();
+        for step in Step::active(p) {
+            let groups = subgroup_list(p, step);
+            let s = step.size(p);
+            let cur = bufs[0].len();
+            let chunk = cur / s;
+            let mut newb: Vec<Vec<f32>> = vec![Vec::new(); n];
+            for g in &groups {
+                for (i, mem) in g.iter().enumerate() {
+                    let mut acc = vec![0f32; chunk];
+                    for peer in g.iter() {
+                        let src = &bufs[node_rank(p, *peer)];
+                        for (a, v) in acc.iter_mut().zip(&src[i * chunk..(i + 1) * chunk]) {
+                            *a += v;
+                        }
+                    }
+                    newb[node_rank(p, *mem)] = acc;
+                }
+            }
+            plan.steps.push(exchange_plan_step(
+                p,
+                step,
+                &groups,
+                (chunk * 4) as u64,
+                s,
+                (chunk * 4) as u64,
+            ));
+            *bufs = newb;
+        }
+        Ok(plan)
+    }
+
+    /// All-gather: node `r` contributes `bufs[r]`; everyone ends with the
+    /// rank-ordered concatenation. Steps run 4 → 1 (§5).
+    pub fn all_gather(&self, bufs: &mut Vec<Vec<f32>>) -> Result<CollectivePlan> {
+        let p = self.p;
+        let n = p.n_nodes();
+        ensure!(bufs.len() == n, "need {n} buffers, got {}", bufs.len());
+        let c = bufs[0].len();
+        ensure!(bufs.iter().all(|b| b.len() == c), "unequal contribution lengths");
+
+        let mut plan = CollectivePlan::default();
+        for step in Step::active(p).into_iter().rev() {
+            let groups = subgroup_list(p, step);
+            let s = step.size(p);
+            let cur = bufs[0].len();
+            let mut newb: Vec<Vec<f32>> = Vec::with_capacity(n);
+            newb.resize_with(n, || Vec::with_capacity(cur * s));
+            for g in &groups {
+                // build the concatenation once per subgroup …
+                let first = node_rank(p, g[0]);
+                {
+                    let (head, rest) = (&g[0], &g[1..]);
+                    let mut cat = std::mem::take(&mut newb[first]);
+                    cat.extend_from_slice(&bufs[node_rank(p, *head)]);
+                    for mem in rest {
+                        cat.extend_from_slice(&bufs[node_rank(p, *mem)]);
+                    }
+                    newb[first] = cat;
+                }
+                // … then bulk-copy it to the other members
+                for mem in &g[1..] {
+                    let r = node_rank(p, *mem);
+                    let mut dst = std::mem::take(&mut newb[r]);
+                    dst.extend_from_slice(&newb[first]);
+                    newb[r] = dst;
+                }
+            }
+            plan.steps.push(exchange_plan_step(p, step, &groups, (cur * 4) as u64, 0, 0));
+            *bufs = newb;
+        }
+        Ok(plan)
+    }
+
+    /// All-reduce = reduce-scatter ∘ all-gather (Rabenseifner, §6.1.5) —
+    /// "up to 8 algorithmic steps".
+    pub fn all_reduce(&self, bufs: &mut Vec<Vec<f32>>) -> Result<CollectivePlan> {
+        let mut plan = self.reduce_scatter(bufs)?;
+        let tail = self.all_gather(bufs)?;
+        plan.steps.extend(tail.steps);
+        Ok(plan)
+    }
+
+    /// All-to-all: node `s`'s buffer is `N` chunks, chunk `d` destined to
+    /// rank `d`. Digit routing over the four steps (the per-step sizes of
+    /// Table 8 row All-to-All).
+    pub fn all_to_all(&self, bufs: &mut Vec<Vec<f32>>) -> Result<CollectivePlan> {
+        let p = self.p;
+        let n = p.n_nodes();
+        ensure!(bufs.len() == n, "need {n} buffers, got {}", bufs.len());
+        let m = bufs[0].len();
+        ensure!(bufs.iter().all(|b| b.len() == m), "unequal buffer lengths");
+        ensure!(m % n == 0, "message length {m} not divisible by N={n}");
+        let c = m / n;
+
+        // chunk lists per rank: (src_rank, dst_rank, payload)
+        let mut chunks: Vec<Vec<(usize, usize, Vec<f32>)>> = (0..n)
+            .map(|r| {
+                (0..n)
+                    .map(|d| (r, d, bufs[r][d * c..(d + 1) * c].to_vec()))
+                    .collect()
+            })
+            .collect();
+
+        let mut plan = CollectivePlan::default();
+        for step in Step::active(p) {
+            let groups = subgroup_list(p, step);
+            let s = step.size(p);
+            let rounds_pairs = exchange_rounds(s, step);
+            let mut pstep = PlanStep {
+                label: step_label(step),
+                rounds: Vec::new(),
+                reduce_sources: 0,
+                reduce_bytes: 0,
+                trx_q: crate::collectives::ops::trx_groups_per_peer(p, step),
+                step: Some(step),
+            };
+            // outgoing[i][k] for each group: chunks moving i -> k this step
+            let mut moved: Vec<Vec<(usize, usize, Vec<f32>)>> = vec![Vec::new(); n];
+            let mut sent_bytes: Vec<Vec<Vec<u64>>> = Vec::with_capacity(groups.len());
+            for g in &groups {
+                let mut mat = vec![vec![0u64; s]; s];
+                for (i, mem) in g.iter().enumerate() {
+                    let r = node_rank(p, *mem);
+                    for (src, dst, data) in std::mem::take(&mut chunks[r]) {
+                        let k = rank_digit(p, step, dst);
+                        if k != i {
+                            mat[i][k] += (data.len() * 4) as u64;
+                        }
+                        moved[node_rank(p, g[k])].push((src, dst, data));
+                    }
+                }
+                sent_bytes.push(mat);
+            }
+            chunks = moved;
+            for pairs in &rounds_pairs {
+                let mut round = Round::default();
+                for (gi, g) in groups.iter().enumerate() {
+                    for &(from, to) in pairs {
+                        let bytes = sent_bytes[gi][from][to];
+                        if bytes > 0 {
+                            round.transfers.push(Transfer::unicast(g[from], g[to], bytes));
+                        }
+                    }
+                }
+                pstep.rounds.push(round);
+            }
+            plan.steps.push(pstep);
+        }
+
+        for (r, buf) in bufs.iter_mut().enumerate() {
+            let mut cs = std::mem::take(&mut chunks[r]);
+            for (_, dst, _) in &cs {
+                debug_assert_eq!(*dst, r, "chunk routed to wrong rank");
+            }
+            cs.sort_by_key(|(src, _, _)| *src);
+            *buf = cs.into_iter().flat_map(|(_, _, d)| d).collect();
+        }
+        Ok(plan)
+    }
+
+    /// Scatter: root's buffer is `N` chunks; rank `r` ends with chunk `r`.
+    pub fn scatter(&self, bufs: &mut Vec<Vec<f32>>, root: usize) -> Result<CollectivePlan> {
+        let p = self.p;
+        let n = p.n_nodes();
+        ensure!(bufs.len() == n && root < n, "bad buffers/root");
+        let m = bufs[root].len();
+        ensure!(m % n == 0, "message length {m} not divisible by N={n}");
+        let c = m / n;
+
+        // chunk lists: (dst_rank, payload); only holders have any
+        let mut chunks: Vec<Vec<(usize, Vec<f32>)>> = vec![Vec::new(); n];
+        chunks[root] = (0..n).map(|d| (d, bufs[root][d * c..(d + 1) * c].to_vec())).collect();
+
+        let mut plan = CollectivePlan::default();
+        for step in Step::active(p) {
+            let groups = subgroup_list(p, step);
+            let s = step.size(p);
+            // one-to-many within the same communication group (step 4)
+            // is transmitter-bound: serialize into peer-offset rounds
+            let n_rounds = if step == Step::S4 && s > 2 { s - 1 } else { 1 };
+            let mut pstep = PlanStep {
+                label: step_label(step),
+                rounds: vec![Round::default(); n_rounds],
+                reduce_sources: 0,
+                reduce_bytes: 0,
+                trx_q: crate::collectives::ops::trx_groups_per_peer(p, step),
+                step: Some(step),
+            };
+            let mut moved: Vec<Vec<(usize, Vec<f32>)>> = vec![Vec::new(); n];
+            for g in &groups {
+                for (i, mem) in g.iter().enumerate() {
+                    let r = node_rank(p, *mem);
+                    if chunks[r].is_empty() {
+                        continue;
+                    }
+                    let mut out_bytes = vec![0u64; s];
+                    for (dst, data) in std::mem::take(&mut chunks[r]) {
+                        let k = rank_digit(p, step, dst);
+                        if k != i {
+                            out_bytes[k] += (data.len() * 4) as u64;
+                        }
+                        moved[node_rank(p, g[k])].push((dst, data));
+                    }
+                    for (k, &bytes) in out_bytes.iter().enumerate() {
+                        if bytes > 0 {
+                            let ri = if n_rounds > 1 { (k + s - i) % s - 1 } else { 0 };
+                            pstep.rounds[ri]
+                                .transfers
+                                .push(Transfer::unicast(*mem, g[k], bytes));
+                        }
+                    }
+                }
+            }
+            chunks = moved;
+            plan.steps.push(pstep);
+        }
+
+        for (r, buf) in bufs.iter_mut().enumerate() {
+            let cs = std::mem::take(&mut chunks[r]);
+            ensure!(cs.len() == 1 && cs[0].0 == r, "scatter routing failed at rank {r}");
+            *buf = cs.into_iter().next().unwrap().1;
+        }
+        Ok(plan)
+    }
+
+    /// Gather: root ends with the rank-ordered concatenation. Runs steps
+    /// 1 → 4: moving within a step-`k` subgroup preserves the already-fixed
+    /// digits ρ₁..ρ₋₁ (the §5 invariance is one-directional), so holders
+    /// converge as {n : ρ₁..ρₖ = root's} and land exactly on the root.
+    pub fn gather(&self, bufs: &mut Vec<Vec<f32>>, root: usize) -> Result<CollectivePlan> {
+        let p = self.p;
+        let n = p.n_nodes();
+        ensure!(bufs.len() == n && root < n, "bad buffers/root");
+        let root_node = node_of_rank(p, root);
+
+        let mut chunks: Vec<Vec<(usize, Vec<f32>)>> = (0..n)
+            .map(|r| vec![(r, std::mem::take(&mut bufs[r]))])
+            .collect();
+
+        let mut plan = CollectivePlan::default();
+        for step in Step::active(p) {
+            let groups = subgroup_list(p, step);
+            let target = member_index(p, step, root_node);
+            let s = step.size(p);
+            // many-to-one within the same group (step 4) is receiver-bound
+            // (one wavelength): serialize into source-offset rounds
+            let n_rounds = if step == Step::S4 && s > 2 { s - 1 } else { 1 };
+            let mut pstep = PlanStep {
+                label: step_label(step),
+                rounds: vec![Round::default(); n_rounds],
+                reduce_sources: 0,
+                reduce_bytes: 0,
+                trx_q: crate::collectives::ops::trx_groups_per_peer(p, step),
+                step: Some(step),
+            };
+            let mut moved: Vec<Vec<(usize, Vec<f32>)>> = vec![Vec::new(); n];
+            for g in &groups {
+                let sink = g[target];
+                let sink_rank = node_rank(p, sink);
+                for (i, mem) in g.iter().enumerate() {
+                    let r = node_rank(p, *mem);
+                    if chunks[r].is_empty() {
+                        continue;
+                    }
+                    let bytes: u64 = chunks[r].iter().map(|(_, d)| (d.len() * 4) as u64).sum();
+                    if i != target && bytes > 0 {
+                        let ri = if n_rounds > 1 { (i + s - target) % s - 1 } else { 0 };
+                        pstep.rounds[ri].transfers.push(Transfer::unicast(*mem, sink, bytes));
+                    }
+                    moved[sink_rank].append(&mut chunks[r]);
+                }
+            }
+            chunks = moved;
+            plan.steps.push(pstep);
+        }
+
+        let mut cs = std::mem::take(&mut chunks[root]);
+        cs.sort_by_key(|(src, _)| *src);
+        bufs[root] = cs.into_iter().flat_map(|(_, d)| d).collect();
+        Ok(plan)
+    }
+
+    /// Reduce = reduce-scatter ∘ gather (§6.1.5).
+    pub fn reduce(&self, bufs: &mut Vec<Vec<f32>>, root: usize) -> Result<CollectivePlan> {
+        let mut plan = self.reduce_scatter(bufs)?;
+        let tail = self.gather(bufs, root)?;
+        plan.steps.extend(tail.steps);
+        Ok(plan)
+    }
+
+    /// Broadcast over the pipelined SOA-multicast tree (§6.1.5, Eq 1):
+    /// stage 1 reaches all nodes sharing the root's wavelength via `x`
+    /// simultaneous multicasts; stage 2 re-broadcasts on the remaining
+    /// `Λ−1` wavelengths from relay nodes. Pipelined in `k` chunks.
+    pub fn broadcast(&self, bufs: &mut Vec<Vec<f32>>, root: usize) -> Result<CollectivePlan> {
+        let p = self.p;
+        let n = p.n_nodes();
+        ensure!(bufs.len() == n && root < n, "bad buffers/root");
+        let root_node = node_of_rank(p, root);
+        let m_bytes = (bufs[root].len() * 4) as u64;
+
+        // tier 1: every node on the root's wavelength (reachable in one
+        // multicast slot per destination group, x groups in parallel)
+        let tier1: Vec<NodeCoord> = (0..p.x)
+            .flat_map(|g| (0..p.j).map(move |j| NodeCoord::new(g, j, root_node.lambda)))
+            .filter(|nd| *nd != root_node)
+            .collect();
+        // relays cover the other Λ−1 wavelengths, round-robin over tier 1
+        let other_wavelengths: Vec<usize> =
+            (0..p.lambda).filter(|w| *w != root_node.lambda).collect();
+        ensure!(!tier1.is_empty(), "broadcast needs at least two groups or racks");
+        let relay_waves = other_wavelengths.len().div_ceil(tier1.len());
+
+        // Eq 1: pipeline stage count
+        let s = 3.0; // tree diameter
+        let alpha = p.propagation + p.io_latency;
+        let beta = 1.0 / p.node_capacity();
+        let k = (((m_bytes as f64 * 8.0 * (s - 2.0) * beta) / alpha).sqrt().round() as usize)
+            .max(1);
+        let chunk_bytes = m_bytes.div_ceil(k as u64);
+
+        let mut plan = CollectivePlan::default();
+        let mut pstep = PlanStep {
+            label: "bcast-tree".into(),
+            rounds: Vec::new(),
+            reduce_sources: 0,
+            reduce_bytes: 0,
+            trx_q: 1,
+            step: None,
+        };
+        // round r: root multicasts chunk r (if r < k); relays re-multicast
+        // chunk r-1 (if 1 <= r).
+        for r in 0..(k + 1 + relay_waves.saturating_sub(1)) {
+            let mut round = Round::default();
+            if r < k {
+                for g in 0..p.x {
+                    let dsts: Vec<NodeCoord> = tier1.iter().copied().filter(|d| d.g == g).collect();
+                    if !dsts.is_empty() {
+                        round.transfers.push(Transfer {
+                            src: root_node,
+                            dsts,
+                            bytes: chunk_bytes,
+                        });
+                    }
+                }
+            }
+            if r >= 1 {
+                // chunk r-1 (clamped) from each relay on its wavelength(s)
+                let chunk_idx = (r - 1).min(k - 1);
+                let _ = chunk_idx;
+                for (wi, &w) in other_wavelengths.iter().enumerate() {
+                    // wave scheduling: relay wi%|tier1| sends wavelength w in
+                    // round 1 + wi/|tier1| .. that round + k - 1
+                    let start = 1 + wi / tier1.len();
+                    if r < start || r >= start + k {
+                        continue;
+                    }
+                    let relay = tier1[wi % tier1.len()];
+                    for g in 0..p.x {
+                        let dsts: Vec<NodeCoord> =
+                            (0..p.j).map(|j| NodeCoord::new(g, j, w)).collect();
+                        round.transfers.push(Transfer {
+                            src: relay,
+                            dsts,
+                            bytes: chunk_bytes,
+                        });
+                    }
+                }
+            }
+            if !round.transfers.is_empty() {
+                pstep.rounds.push(round);
+            }
+        }
+        plan.steps.push(pstep);
+
+        let data = bufs[root].clone();
+        for b in bufs.iter_mut() {
+            *b = data.clone();
+        }
+        Ok(plan)
+    }
+
+    /// Barrier: four-step flag AND (modelled as a 1-element all-reduce).
+    pub fn barrier(&self, bufs: &mut Vec<Vec<f32>>) -> Result<CollectivePlan> {
+        let p = self.p;
+        let n = p.n_nodes();
+        ensure!(bufs.len() == n, "need {n} buffers");
+        // each node contributes a presence flag; padded to N elements so the
+        // recursive structure applies; result: everyone learns the count
+        let mut flags: Vec<Vec<f32>> = (0..n).map(|_| vec![1.0f32; n]).collect();
+        let plan = self.all_reduce(&mut flags)?;
+        let ok = flags.iter().all(|f| f.iter().all(|&v| (v - n as f32).abs() < 0.5));
+        if !ok {
+            bail!("barrier flag reduction failed");
+        }
+        for b in bufs.iter_mut() {
+            *b = vec![n as f32];
+        }
+        Ok(plan)
+    }
+}
+
+/// Smallest length ≥ `len` divisible by `N` (canonical padding for
+/// reduce-scatter/all-reduce/all-to-all).
+pub fn padded_len(p: &RampParams, len: usize) -> usize {
+    let n = p.n_nodes();
+    len.div_ceil(n) * n
+}
+
+fn step_label(step: Step) -> String {
+    format!("step-{}", step.index() + 1)
+}
+
+/// All subgroups of a step, each ordered by information index.
+pub fn subgroup_list(p: &RampParams, step: Step) -> Vec<Vec<NodeCoord>> {
+    p.nodes()
+        .filter(|n| member_index(p, step, *n) == 0)
+        .map(|n| members(p, step, n))
+        .collect()
+}
+
+/// Pairwise exchange rounds within a subgroup of size `s`:
+/// * steps 1–3 (and any pair): every member reaches all `s−1` peers
+///   concurrently on distinct transceiver groups — one round;
+/// * step 4 (`s > 2`): one-to-one rounds at offsets γ = 1..s−1 (the
+///   rack-broadcast constraint allows one transceiver group per rack —
+///   §6.2.2, deviation note in DESIGN.md).
+fn exchange_rounds(s: usize, step: Step) -> Vec<Vec<(usize, usize)>> {
+    if s == 2 {
+        return vec![vec![(0, 1), (1, 0)]];
+    }
+    if step == Step::S4 {
+        (1..s)
+            .map(|gamma| (0..s).map(|i| (i, (i + gamma) % s)).collect())
+            .collect()
+    } else {
+        vec![(0..s)
+            .flat_map(|i| (0..s).filter(move |k| *k != i).map(move |k| (i, k)))
+            .collect()]
+    }
+}
+
+/// Plan step for a full intra-subgroup exchange (reduce-scatter /
+/// all-gather shape): every member sends `bytes` to every peer.
+fn exchange_plan_step(
+    p: &RampParams,
+    step: Step,
+    groups: &[Vec<NodeCoord>],
+    bytes: u64,
+    reduce_sources: usize,
+    reduce_bytes: u64,
+) -> PlanStep {
+    let s = step.size(p);
+    let mut pstep = PlanStep {
+        label: step_label(step),
+        rounds: Vec::new(),
+        reduce_sources,
+        reduce_bytes,
+        trx_q: crate::collectives::ops::trx_groups_per_peer(p, step),
+        step: Some(step),
+    };
+    for pairs in exchange_rounds(s, step) {
+        let mut round = Round::default();
+        for g in groups {
+            for &(from, to) in &pairs {
+                round.transfers.push(Transfer::unicast(g[from], g[to], bytes));
+            }
+        }
+        pstep.rounds.push(round);
+    }
+    pstep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::reference as oracle;
+    use crate::rng::Xoshiro256;
+
+    fn params_under_test() -> Vec<RampParams> {
+        vec![
+            RampParams::new(2, 2, 4, 1),  // N=16, DG=2
+            RampParams::fig8_example(),   // N=54, DG=2
+            RampParams::new(4, 2, 4, 1),  // N=32, step 4 inactive
+            RampParams::new(3, 1, 3, 1),  // N=9, steps 3+4 inactive
+            RampParams::new(2, 2, 8, 1),  // N=32, DG=4 (multi-round step 4)
+        ]
+    }
+
+    fn random_inputs(p: &RampParams, elems_per_node: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut r = Xoshiro256::seed_from(seed);
+        (0..p.n_nodes())
+            .map(|_| (0..elems_per_node).map(|_| (r.next_below(1000) as f32) - 500.0).collect())
+            .collect()
+    }
+
+    #[test]
+    fn reduce_scatter_matches_oracle() {
+        for p in params_under_test() {
+            let n = p.n_nodes();
+            let mut bufs = random_inputs(&p, 2 * n, 1);
+            let expect = oracle::reduce_scatter(&bufs);
+            let plan = RampX::new(&p).reduce_scatter(&mut bufs).unwrap();
+            assert_eq!(bufs, expect, "reduce-scatter mismatch for {p:?}");
+            assert_eq!(plan.steps.len(), Step::active(&p).len());
+        }
+    }
+
+    #[test]
+    fn all_gather_matches_oracle() {
+        for p in params_under_test() {
+            let mut bufs = random_inputs(&p, 3, 2);
+            let expect = oracle::all_gather(&bufs);
+            RampX::new(&p).all_gather(&mut bufs).unwrap();
+            assert_eq!(bufs, expect, "all-gather mismatch for {p:?}");
+        }
+    }
+
+    #[test]
+    fn all_reduce_matches_oracle() {
+        for p in params_under_test() {
+            let n = p.n_nodes();
+            let mut bufs = random_inputs(&p, n, 3);
+            let expect = oracle::all_reduce(&bufs);
+            let plan = RampX::new(&p).all_reduce(&mut bufs).unwrap();
+            assert_eq!(bufs, expect, "all-reduce mismatch for {p:?}");
+            // paper: ≤ 8 algorithmic steps
+            assert!(plan.steps.len() <= 8);
+        }
+    }
+
+    #[test]
+    fn all_to_all_matches_oracle() {
+        for p in params_under_test() {
+            let n = p.n_nodes();
+            let mut bufs = random_inputs(&p, 2 * n, 4);
+            let expect = oracle::all_to_all(&bufs);
+            RampX::new(&p).all_to_all(&mut bufs).unwrap();
+            assert_eq!(bufs, expect, "all-to-all mismatch for {p:?}");
+        }
+    }
+
+    #[test]
+    fn scatter_matches_oracle_any_root() {
+        for p in params_under_test() {
+            let n = p.n_nodes();
+            for root in [0, n / 2, n - 1] {
+                let mut bufs = random_inputs(&p, n, 5);
+                let expect = oracle::scatter(&bufs, root);
+                RampX::new(&p).scatter(&mut bufs, root).unwrap();
+                assert_eq!(bufs, expect, "scatter mismatch root {root} for {p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_matches_oracle_any_root() {
+        for p in params_under_test() {
+            let n = p.n_nodes();
+            for root in [0, 1, n - 1] {
+                let mut bufs = random_inputs(&p, 2, 6);
+                let expect = oracle::gather(&bufs, root);
+                RampX::new(&p).gather(&mut bufs, root).unwrap();
+                assert_eq!(bufs, expect, "gather mismatch root {root} for {p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_matches_oracle() {
+        for p in params_under_test() {
+            let n = p.n_nodes();
+            let root = n - 1;
+            let mut bufs = random_inputs(&p, n, 7);
+            let expect = oracle::reduce(&bufs, root);
+            RampX::new(&p).reduce(&mut bufs, root).unwrap();
+            assert_eq!(bufs, expect, "reduce mismatch for {p:?}");
+        }
+    }
+
+    #[test]
+    fn broadcast_matches_oracle() {
+        for p in params_under_test() {
+            let n = p.n_nodes();
+            for root in [0, n / 3] {
+                let mut bufs = random_inputs(&p, 64, 8);
+                let expect = oracle::broadcast(&bufs, root);
+                let plan = RampX::new(&p).broadcast(&mut bufs, root).unwrap();
+                assert_eq!(bufs, expect, "broadcast mismatch for {p:?}");
+                // multicast transfers present whenever racks share a
+                // wavelength (J > 1)
+                if p.j > 1 {
+                    assert!(plan
+                        .steps
+                        .iter()
+                        .flat_map(|s| &s.rounds)
+                        .flat_map(|r| &r.transfers)
+                        .any(|t| t.dsts.len() > 1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn barrier_completes() {
+        for p in params_under_test() {
+            let mut bufs = vec![vec![0.0f32]; p.n_nodes()];
+            let plan = RampX::new(&p).barrier(&mut bufs).unwrap();
+            assert!(plan.n_rounds() >= Step::active(&p).len());
+            assert!(bufs.iter().all(|b| b[0] as usize == p.n_nodes()));
+        }
+    }
+
+    #[test]
+    fn plan_wire_bytes_match_table8_reduce_scatter() {
+        // step k per-peer size = m / Π s_i (Table 8)
+        let p = RampParams::fig8_example();
+        let n = p.n_nodes();
+        let m_elems = 2 * n; // per node
+        let mut bufs = random_inputs(&p, m_elems, 9);
+        let plan = RampX::new(&p).reduce_scatter(&mut bufs).unwrap();
+        let m_bytes = (m_elems * 4) as u64;
+        let mut denom = 1u64;
+        for (step, pstep) in Step::active(&p).iter().zip(&plan.steps) {
+            denom *= step.size(&p) as u64;
+            let per_peer = m_bytes / denom;
+            for t in pstep.rounds.iter().flat_map(|r| &r.transfers) {
+                assert_eq!(t.bytes, per_peer, "wrong per-peer bytes at {step:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn step4_multi_round_when_dg_large() {
+        let p = RampParams::new(2, 2, 8, 1); // DG = 4
+        let n = p.n_nodes();
+        let mut bufs = random_inputs(&p, n, 10);
+        let plan = RampX::new(&p).reduce_scatter(&mut bufs).unwrap();
+        let s4 = plan.steps.last().unwrap();
+        assert_eq!(s4.rounds.len(), 3, "DG=4 ⇒ 3 one-to-one rounds");
+    }
+
+    #[test]
+    fn padded_len_divisibility() {
+        let p = RampParams::fig8_example();
+        assert_eq!(padded_len(&p, 1), 54);
+        assert_eq!(padded_len(&p, 54), 54);
+        assert_eq!(padded_len(&p, 55), 108);
+    }
+}

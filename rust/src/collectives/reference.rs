@@ -1,0 +1,155 @@
+//! Naive single-process oracles for every MPI operation — the ground truth
+//! the distributed executors ([`super::ramp_x`], [`super::ring`], …) are
+//! verified against element-wise.
+//!
+//! Inputs/outputs follow MPI semantics over per-node `Vec<f32>` buffers:
+//! node `r`'s input is `inputs[r]`; the returned vector holds node `r`'s
+//! expected output at index `r`.
+
+/// Reduce-scatter: each node ends with its `1/N` slice of the global sum.
+/// Requires all inputs equal length `m` with `N | m`.
+pub fn reduce_scatter(inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let n = inputs.len();
+    let m = inputs[0].len();
+    assert!(inputs.iter().all(|v| v.len() == m), "unequal input lengths");
+    assert_eq!(m % n, 0, "message not divisible by node count");
+    let total = global_sum(inputs);
+    let c = m / n;
+    (0..n).map(|r| total[r * c..(r + 1) * c].to_vec()).collect()
+}
+
+/// All-gather: node `r` contributes `inputs[r]`; everyone ends with the
+/// concatenation in rank order.
+pub fn all_gather(inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let cat: Vec<f32> = inputs.iter().flat_map(|v| v.iter().copied()).collect();
+    vec![cat; inputs.len()]
+}
+
+/// All-reduce: everyone ends with the element-wise global sum.
+pub fn all_reduce(inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let total = global_sum(inputs);
+    vec![total; inputs.len()]
+}
+
+/// All-to-all: input of node `s` is `N` equal chunks, chunk `d` destined to
+/// node `d`; output of node `d` is the concatenation over sources `s` of
+/// chunk `d` of `inputs[s]`.
+pub fn all_to_all(inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let n = inputs.len();
+    let m = inputs[0].len();
+    assert_eq!(m % n, 0);
+    let c = m / n;
+    (0..n)
+        .map(|d| {
+            (0..n)
+                .flat_map(|s| inputs[s][d * c..(d + 1) * c].iter().copied())
+                .collect()
+        })
+        .collect()
+}
+
+/// Scatter: root's buffer is `N` chunks; node `r` receives chunk `r`.
+pub fn scatter(inputs: &[Vec<f32>], root: usize) -> Vec<Vec<f32>> {
+    let n = inputs.len();
+    let m = inputs[root].len();
+    assert_eq!(m % n, 0);
+    let c = m / n;
+    (0..n).map(|r| inputs[root][r * c..(r + 1) * c].to_vec()).collect()
+}
+
+/// Gather: root ends with the rank-ordered concatenation; others keep
+/// nothing (empty).
+pub fn gather(inputs: &[Vec<f32>], root: usize) -> Vec<Vec<f32>> {
+    let n = inputs.len();
+    let cat: Vec<f32> = inputs.iter().flat_map(|v| v.iter().copied()).collect();
+    (0..n).map(|r| if r == root { cat.clone() } else { vec![] }).collect()
+}
+
+/// Reduce: root ends with the global sum; others keep nothing.
+pub fn reduce(inputs: &[Vec<f32>], root: usize) -> Vec<Vec<f32>> {
+    let n = inputs.len();
+    let total = global_sum(inputs);
+    (0..n).map(|r| if r == root { total.clone() } else { vec![] }).collect()
+}
+
+/// Broadcast: everyone ends with root's buffer.
+pub fn broadcast(inputs: &[Vec<f32>], root: usize) -> Vec<Vec<f32>> {
+    vec![inputs[root].clone(); inputs.len()]
+}
+
+fn global_sum(inputs: &[Vec<f32>]) -> Vec<f32> {
+    let m = inputs[0].len();
+    let mut total = vec![0f32; m];
+    for v in inputs {
+        assert_eq!(v.len(), m);
+        for (t, x) in total.iter_mut().zip(v) {
+            *t += x;
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Vec<Vec<f32>> {
+        vec![
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![10.0, 20.0, 30.0, 40.0],
+            vec![100.0, 200.0, 300.0, 400.0],
+            vec![1000.0, 2000.0, 3000.0, 4000.0],
+        ]
+    }
+
+    #[test]
+    fn reduce_scatter_slices_sum() {
+        let out = reduce_scatter(&toy());
+        assert_eq!(out[0], vec![1111.0]);
+        assert_eq!(out[1], vec![2222.0]);
+        assert_eq!(out[3], vec![4444.0]);
+    }
+
+    #[test]
+    fn all_gather_concatenates() {
+        let out = all_gather(&toy());
+        assert_eq!(out[2].len(), 16);
+        assert_eq!(out[2][0], 1.0);
+        assert_eq!(out[2][4], 10.0);
+        assert_eq!(out[0], out[3]);
+    }
+
+    #[test]
+    fn all_reduce_is_rs_then_ag() {
+        let ins = toy();
+        let rs = reduce_scatter(&ins);
+        let ag = all_gather(&rs);
+        assert_eq!(ag, all_reduce(&ins));
+    }
+
+    #[test]
+    fn all_to_all_transpose() {
+        let out = all_to_all(&toy());
+        // node 0 gets chunk 0 of every source
+        assert_eq!(out[0], vec![1.0, 10.0, 100.0, 1000.0]);
+        assert_eq!(out[3], vec![4.0, 40.0, 400.0, 4000.0]);
+        // all-to-all twice (with N chunks) is NOT identity, but sizes hold
+        assert!(out.iter().all(|v| v.len() == 4));
+    }
+
+    #[test]
+    fn rooted_ops() {
+        let ins = toy();
+        let sc = scatter(&ins, 1);
+        assert_eq!(sc[0], vec![10.0]);
+        assert_eq!(sc[3], vec![40.0]);
+        let ga = gather(&ins, 2);
+        assert_eq!(ga[2].len(), 16);
+        assert!(ga[0].is_empty());
+        let rd = reduce(&ins, 0);
+        assert_eq!(rd[0], vec![1111.0, 2222.0, 3333.0, 4444.0]);
+        assert!(rd[1].is_empty());
+        let bc = broadcast(&ins, 3);
+        assert!(bc.iter().all(|v| *v == ins[3]));
+    }
+}

@@ -1,0 +1,221 @@
+//! Single logical ring strategies (§7.6) — the NCCL default the paper
+//! compares against (Patarasuk & Yuan bandwidth-optimal ring all-reduce,
+//! generalized to all MPI operations).
+//!
+//! Provides both closed-form [`BaselinePhase`] lists for the estimator and
+//! a data-moving executor (used to cross-validate the oracles and to run
+//! baseline collectives in the coordinator).
+
+use crate::collectives::{BaselinePhase, LinkClass, MpiOp};
+use anyhow::{ensure, Result};
+
+/// Closed-form phases of a ring collective over `n` nodes with message
+/// size `m` bytes (MPI conventions as in [`super::ramp_x`]: `m` is the
+/// full vector except for all-gather/gather where it is the per-node
+/// contribution). `alpha`/`beta` parameterize the pipelined broadcast
+/// chunking (setup latency and inverse bandwidth, Eq 1's framework).
+pub fn phases(op: MpiOp, n: usize, m: u64, alpha: f64, beta: f64) -> Vec<BaselinePhase> {
+    phases_ext(op, n, m, alpha, beta, false)
+}
+
+/// [`phases`] with topology semantics: `neighbor_only = true` models
+/// circuit topologies (TopoOpt rings) where every message must
+/// store-and-forward through intermediate hops — all-to-all then carries
+/// ~m/2 of relay traffic per link per round instead of m/N direct sends.
+pub fn phases_ext(
+    op: MpiOp,
+    n: usize,
+    m: u64,
+    alpha: f64,
+    beta: f64,
+    neighbor_only: bool,
+) -> Vec<BaselinePhase> {
+    assert!(n >= 1);
+    if n == 1 {
+        return vec![];
+    }
+    let nu = n as u64;
+    let g = LinkClass::Global;
+    match op {
+        MpiOp::ReduceScatter => vec![
+            BaselinePhase::comm(nu - 1, m.div_ceil(nu), g).with_reduce(2, m.div_ceil(nu))
+        ],
+        MpiOp::AllGather => vec![BaselinePhase::comm(nu - 1, m, g)],
+        MpiOp::AllReduce => {
+            let mut v = phases_ext(MpiOp::ReduceScatter, n, m, alpha, beta, neighbor_only);
+            v.extend(phases_ext(MpiOp::AllGather, n, m.div_ceil(nu), alpha, beta, neighbor_only));
+            v
+        }
+        // EPS: N−1 rounds of direct sends (the ring is the schedule, not
+        // the path). Circuit rings: every link relays ~m(N−1)/2 total
+        // bytes of pass-through traffic → m/2 per round.
+        MpiOp::AllToAll => {
+            let bytes = if neighbor_only { m.div_ceil(2) } else { m.div_ceil(nu) };
+            vec![BaselinePhase::comm(nu - 1, bytes, g)]
+        }
+        // pipelined ring scatter: root pushes the furthest chunk first
+        MpiOp::Scatter { .. } => vec![BaselinePhase::comm(nu - 1, m.div_ceil(nu), g)],
+        // gather convention matches ramp_x: m is the per-node contribution
+        MpiOp::Gather { .. } => vec![BaselinePhase::comm(nu - 1, m, g)],
+        MpiOp::Reduce { .. } => {
+            let mut v = phases_ext(MpiOp::ReduceScatter, n, m, alpha, beta, neighbor_only);
+            v.extend(phases_ext(MpiOp::Gather { root: 0 }, n, m, alpha, beta, neighbor_only));
+            v
+        }
+        // pipelined ring broadcast (diameter n−1), chunking per Eq 1
+        MpiOp::Broadcast { .. } => {
+            let k = pipeline_chunks(m, n as f64 - 1.0, alpha, beta);
+            vec![BaselinePhase::comm(k + nu - 2, m.div_ceil(k), g)]
+        }
+        MpiOp::Barrier => vec![BaselinePhase::comm(2 * (nu - 1), 4, g)],
+    }
+}
+
+/// Optimal pipeline chunk count for a depth-`s` pipeline (the same
+/// trade-off as the paper's Eq 1): k = sqrt(m·(s−1)·β/α), clamped ≥ 1.
+pub fn pipeline_chunks(m: u64, depth: f64, alpha: f64, beta: f64) -> u64 {
+    if alpha <= 0.0 {
+        return 1;
+    }
+    (((m as f64 * 8.0 * depth.max(0.0) * beta) / alpha).sqrt().round() as u64).max(1)
+}
+
+/// Data-moving ring executor over rank-indexed buffers (cross-validation
+/// substrate; also used by the coordinator's baseline mode).
+pub struct RingExecutor {
+    pub n: usize,
+}
+
+impl RingExecutor {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        Self { n }
+    }
+
+    /// Ring reduce-scatter (Patarasuk-Yuan): N−1 steps; node `i` ends with
+    /// chunk `i` of the global sum. At step `t`, node `i` forwards chunk
+    /// `(i − 1 − t) mod N` (the chunk it accumulated last step) to `i+1`.
+    pub fn reduce_scatter(&self, bufs: &mut Vec<Vec<f32>>) -> Result<()> {
+        let n = self.n;
+        ensure!(bufs.len() == n, "need {n} buffers");
+        let m = bufs[0].len();
+        ensure!(m % n == 0, "message length {m} not divisible by {n}");
+        if n == 1 {
+            return Ok(());
+        }
+        let c = m / n;
+        for t in 0..n - 1 {
+            let snapshot: Vec<Vec<f32>> = bufs.clone();
+            for i in 0..n {
+                let dst = (i + 1) % n;
+                let k = (i + 2 * n - 1 - t) % n;
+                for e in 0..c {
+                    bufs[dst][k * c + e] = snapshot[dst][k * c + e] + snapshot[i][k * c + e];
+                }
+            }
+        }
+        let out: Vec<Vec<f32>> = (0..n).map(|i| bufs[i][i * c..(i + 1) * c].to_vec()).collect();
+        *bufs = out;
+        Ok(())
+    }
+
+    /// Ring all-gather: N−1 forwarding steps. At step `t`, node `i` sends
+    /// chunk `(i − t) mod N` to `i+1`.
+    pub fn all_gather(&self, bufs: &mut Vec<Vec<f32>>) -> Result<()> {
+        let n = self.n;
+        ensure!(bufs.len() == n, "need {n} buffers");
+        let c = bufs[0].len();
+        ensure!(bufs.iter().all(|b| b.len() == c), "unequal contributions");
+        let mut out: Vec<Vec<f32>> = vec![vec![0.0; c * n]; n];
+        for (i, b) in bufs.iter().enumerate() {
+            out[i][i * c..(i + 1) * c].copy_from_slice(b);
+        }
+        for t in 0..n.saturating_sub(1) {
+            let snapshot = out.clone();
+            for i in 0..n {
+                let dst = (i + 1) % n;
+                let k = (i + n - t % n) % n;
+                let (a, b) = (k * c, (k + 1) * c);
+                let chunk = snapshot[i][a..b].to_vec();
+                out[dst][a..b].copy_from_slice(&chunk);
+            }
+        }
+        *bufs = out;
+        Ok(())
+    }
+
+    /// Ring all-reduce = reduce-scatter ∘ all-gather.
+    pub fn all_reduce(&self, bufs: &mut Vec<Vec<f32>>) -> Result<()> {
+        self.reduce_scatter(bufs)?;
+        self.all_gather(bufs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::reference as oracle;
+    use crate::collectives::total_rounds;
+    use crate::rng::Xoshiro256;
+
+    fn random_inputs(n: usize, c: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut r = Xoshiro256::seed_from(seed);
+        (0..n)
+            .map(|_| (0..c).map(|_| (r.next_below(100) as f32) + 1.0).collect())
+            .collect()
+    }
+
+    #[test]
+    fn ring_reduce_scatter_matches_oracle() {
+        for n in [2, 3, 4, 8, 16] {
+            let mut bufs = random_inputs(n, 2 * n, 21);
+            let expect = oracle::reduce_scatter(&bufs);
+            RingExecutor::new(n).reduce_scatter(&mut bufs).unwrap();
+            assert_eq!(bufs, expect, "ring RS mismatch n={n}");
+        }
+    }
+
+    #[test]
+    fn ring_all_gather_matches_oracle() {
+        for n in [2, 3, 5, 8] {
+            let mut bufs = random_inputs(n, 3, 22);
+            let expect = oracle::all_gather(&bufs);
+            RingExecutor::new(n).all_gather(&mut bufs).unwrap();
+            assert_eq!(bufs, expect, "ring AG mismatch n={n}");
+        }
+    }
+
+    #[test]
+    fn ring_all_reduce_matches_oracle() {
+        for n in [2, 4, 9] {
+            let mut bufs = random_inputs(n, n, 23);
+            let expect = oracle::all_reduce(&bufs);
+            RingExecutor::new(n).all_reduce(&mut bufs).unwrap();
+            assert_eq!(bufs, expect, "ring AR mismatch n={n}");
+        }
+    }
+
+    #[test]
+    fn step_counts_scale_linearly() {
+        // Fig 15: ring steps grow ~N while RAMP stays ≤ 8.
+        let m = 1 << 30;
+        for n in [16usize, 256, 4096] {
+            let rs = phases(MpiOp::ReduceScatter, n, m, 1e-6, 1e-12);
+            assert_eq!(total_rounds(&rs), n as u64 - 1);
+            let ar = phases(MpiOp::AllReduce, n, m, 1e-6, 1e-12);
+            assert_eq!(total_rounds(&ar), 2 * (n as u64 - 1));
+        }
+    }
+
+    #[test]
+    fn broadcast_pipeline_grows_with_message() {
+        let small = phases(MpiOp::Broadcast { root: 0 }, 64, 1 << 20, 1e-6, 1e-12);
+        let large = phases(MpiOp::Broadcast { root: 0 }, 64, 1 << 30, 1e-6, 1e-12);
+        assert!(total_rounds(&large) > total_rounds(&small));
+    }
+
+    #[test]
+    fn single_node_is_free() {
+        assert!(phases(MpiOp::AllReduce, 1, 1 << 20, 1e-6, 1e-12).is_empty());
+    }
+}

@@ -1,0 +1,376 @@
+//! Parallel communication subgroups (§6.1.1, Tables 5–6) and the
+//! information map / node rank (§6.1.2, Table 7).
+//!
+//! A RAMP-x collective runs in (up to) four *algorithmic steps*. At each
+//! step the node set is partitioned into parallel subgroups, each of which
+//! performs a partial collective:
+//!
+//! | Step | size | varies | fixed |
+//! |---|---|---|---|
+//! | 1 | `x`   | communication group `g`            | `(j, λ)` |
+//! | 2 | `x`   | `(g, d)` diagonally (`d−g` const)   | `(j, dg)` |
+//! | 3 | `J`   | `(g, j)` diagonally (`g−j` const)   | `λ` |
+//! | 4 | `Λ/x` | device group `dg`                   | `(g, j, d)` |
+//!
+//! with `d = λ mod x` (device number) and `dg = ⌊λ/x⌋` (device group).
+//! The step-2/3 *diagonal* structure is the co-design: it spreads each
+//! subgroup's traffic across distinct (source-group, dest-group) subnet
+//! pairs so the transcoder can schedule every parallel subgroup
+//! contention-free (verified mechanically in `rust/tests/contention.rs`).
+//!
+//! ## Information map
+//!
+//! §5: *"the subgroups [of later steps] are selected such that they include
+//! only nodes with the same information portion combinations"*. The portion
+//! a node owns at step `k` is its **information index** ρₖ, which must be
+//! (a) a bijection over each step-`k` subgroup, and (b) constant over every
+//! *later* step's subgroups. The published Table 7 is partially corrupted
+//! by OCR; we re-derived indices satisfying (a)+(b) exactly:
+//!
+//! * ρ₁ = (g − d − j) mod x   (paper: (g − λ − j − ⌊λ/x⌋j) mod x; λ ≡ d)
+//! * ρ₂ = (g − j) mod x       (paper: (g − j − ⌊λ/x⌋j) mod x)
+//! * ρ₃ = j                   (paper: j)
+//! * ρ₄ = ⌊λ/x⌋               (paper: ⌊λ/x⌋)
+//!
+//! The composed digits `(ρ₁ ρ₂ ρ₃ ρ₄)`, read as a mixed-radix number with
+//! radices `(x, x, J, Λ/x)`, are the node's **rank** (Table 7's "decimal
+//! representation of the information value at all algorithmic steps") — a
+//! bijection onto `[0, N)`, which is exactly what lands every node on its
+//! own `1/N` portion after a recursive reduce-scatter.
+
+use crate::topology::ramp::{NodeCoord, RampParams};
+
+/// One of the four algorithmic steps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Step {
+    S1,
+    S2,
+    S3,
+    S4,
+}
+
+impl Step {
+    pub const ALL: [Step; 4] = [Step::S1, Step::S2, Step::S3, Step::S4];
+
+    pub fn index(&self) -> usize {
+        match self {
+            Step::S1 => 0,
+            Step::S2 => 1,
+            Step::S3 => 2,
+            Step::S4 => 3,
+        }
+    }
+
+    /// Subgroup size at this step (Table 5 "#NS").
+    pub fn size(&self, p: &RampParams) -> usize {
+        match self {
+            Step::S1 => p.x,
+            Step::S2 => p.x,
+            Step::S3 => p.j,
+            Step::S4 => p.device_groups(),
+        }
+    }
+
+    /// Number of parallel subgroups at this step (Table 5 "#SG").
+    pub fn n_subgroups(&self, p: &RampParams) -> usize {
+        p.n_nodes() / self.size(p)
+    }
+
+    /// Steps that actually involve communication (size > 1), in order.
+    /// The paper: "the active steps … will have a number of nodes > 1".
+    pub fn active(p: &RampParams) -> Vec<Step> {
+        Step::ALL.into_iter().filter(|s| s.size(p) > 1).collect()
+    }
+}
+
+/// Subgroup ID of `n` at `step` — nodes share an ID iff they are in the
+/// same subgroup (Table 5).
+pub fn subgroup_id(p: &RampParams, step: Step, n: NodeCoord) -> usize {
+    let x = p.x;
+    let d = n.lambda % x;
+    let dg = n.lambda / x;
+    match step {
+        // key (j, λ)
+        Step::S1 => n.lambda + p.lambda * n.j,
+        // key (j, dg, δ = (d − g) mod x)
+        Step::S2 => {
+            let delta = (d + x - n.g % x) % x;
+            delta + x * (dg + p.device_groups() * n.j)
+        }
+        // key (λ, ε = (g − j) mod x)
+        Step::S3 => {
+            let eps = (n.g + x - n.j % x) % x;
+            eps + x * n.lambda
+        }
+        // key (g, j, d)
+        Step::S4 => d + x * (n.j + p.j * n.g),
+    }
+}
+
+/// Information index ρ of `n` within its `step` subgroup, in
+/// `[0, step.size(p))` — the portion of the message this node owns at this
+/// step (§6.1.2). Bijective over each subgroup and invariant over every
+/// later step's subgroups.
+pub fn member_index(p: &RampParams, step: Step, n: NodeCoord) -> usize {
+    let x = p.x;
+    let d = n.lambda % x;
+    match step {
+        Step::S1 => (n.g + 2 * x - d - n.j % x) % x,
+        Step::S2 => (n.g + x - n.j % x) % x,
+        Step::S3 => n.j,
+        Step::S4 => n.lambda / x,
+    }
+}
+
+/// All members of `n`'s subgroup at `step`, ordered by information index
+/// (Table 6). `members(..)[member_index(.., n)] == n`.
+pub fn members(p: &RampParams, step: Step, n: NodeCoord) -> Vec<NodeCoord> {
+    let x = p.x;
+    let d = n.lambda % x;
+    let dg = n.lambda / x;
+    match step {
+        // vary g; fixed (j, λ). Member with ρ₁ = i has g = (i + d + j) mod x.
+        Step::S1 => (0..x)
+            .map(|i| NodeCoord::new((i + d + n.j) % x, n.j, n.lambda))
+            .collect(),
+        // vary the (g, d) diagonal; fixed (j, dg). Member with ρ₂ = i has
+        // g' = (i + j) mod x and d' = (g' + δ) mod x, δ = (d − g) mod x.
+        Step::S2 => {
+            let delta = (d + x - n.g % x) % x;
+            (0..x)
+                .map(|i| {
+                    let gp = (i + n.j) % x;
+                    NodeCoord::new(gp, n.j, x * dg + (gp + delta) % x)
+                })
+                .collect()
+        }
+        // vary the (g, j) diagonal; fixed λ. Member with ρ₃ = j' has
+        // g' = (j' + ε) mod x, ε = (g − j) mod x.
+        Step::S3 => {
+            let eps = (n.g + x - n.j % x) % x;
+            (0..p.j)
+                .map(|jp| NodeCoord::new((jp + eps) % x, jp, n.lambda))
+                .collect()
+        }
+        // vary dg; fixed (g, j, d)
+        Step::S4 => (0..p.device_groups())
+            .map(|dgp| NodeCoord::new(n.g, n.j, x * dgp + d))
+            .collect(),
+    }
+}
+
+/// Node rank in the collective: mixed-radix composition of the information
+/// indices, most significant digit = step 1. Bijective onto `[0, N)`.
+pub fn node_rank(p: &RampParams, n: NodeCoord) -> usize {
+    let (i1, i2, i3, i4) = (
+        member_index(p, Step::S1, n),
+        member_index(p, Step::S2, n),
+        member_index(p, Step::S3, n),
+        member_index(p, Step::S4, n),
+    );
+    ((i1 * p.x + i2) * p.j + i3) * p.device_groups() + i4
+}
+
+/// Inverse of [`node_rank`].
+pub fn node_of_rank(p: &RampParams, rank: usize) -> NodeCoord {
+    let x = p.x;
+    let dgs = p.device_groups();
+    let i4 = rank % dgs;
+    let rest = rank / dgs;
+    let i3 = rest % p.j;
+    let rest = rest / p.j;
+    let i2 = rest % x;
+    let i1 = rest / x;
+    assert!(i1 < x, "rank {rank} out of range");
+    let j = i3;
+    let dg = i4;
+    let g = (i2 + j) % x;
+    let d = (g + 2 * x - j % x - i1) % x;
+    NodeCoord::new(g, j, x * dg + d)
+}
+
+/// Extract the step-`k` digit of a rank (used by all-to-all / scatter
+/// digit routing).
+pub fn rank_digit(p: &RampParams, step: Step, rank: usize) -> usize {
+    let dgs = p.device_groups();
+    match step {
+        Step::S4 => rank % dgs,
+        Step::S3 => (rank / dgs) % p.j,
+        Step::S2 => (rank / (dgs * p.j)) % p.x,
+        Step::S1 => rank / (dgs * p.j * p.x),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn all_params() -> Vec<RampParams> {
+        vec![
+            RampParams::fig8_example(),  // x=3 J=3 Λ=6
+            RampParams::new(2, 2, 4, 1), // minimum with DG=2
+            RampParams::new(4, 4, 8, 1), // 128 nodes
+            RampParams::new(4, 2, 4, 1), // J < x, DG=1 (step 4 inactive)
+            RampParams::new(3, 1, 3, 1), // J=1 (step 3 inactive), DG=1
+            RampParams::new(4, 4, 16, 2), // DG=4, b=2
+        ]
+    }
+
+    #[test]
+    fn subgroups_partition_nodes_every_step() {
+        for p in all_params() {
+            for step in Step::ALL {
+                let mut by_id: HashMap<usize, Vec<NodeCoord>> = HashMap::new();
+                for n in p.nodes() {
+                    by_id.entry(subgroup_id(&p, step, n)).or_default().push(n);
+                }
+                assert_eq!(
+                    by_id.len(),
+                    step.n_subgroups(&p),
+                    "#subgroups mismatch at {step:?} for {p:?}"
+                );
+                for (id, nodes) in &by_id {
+                    assert_eq!(
+                        nodes.len(),
+                        step.size(&p),
+                        "subgroup {id} wrong size at {step:?} for {p:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn members_agree_with_subgroup_id_and_index() {
+        for p in all_params() {
+            for step in Step::ALL {
+                for n in p.nodes() {
+                    let ms = members(&p, step, n);
+                    assert_eq!(ms.len(), step.size(&p));
+                    let id = subgroup_id(&p, step, n);
+                    for (i, m) in ms.iter().enumerate() {
+                        assert_eq!(
+                            subgroup_id(&p, step, *m),
+                            id,
+                            "{m} not in same subgroup as {n} at {step:?}"
+                        );
+                        assert_eq!(
+                            member_index(&p, step, *m),
+                            i,
+                            "member index mismatch for {m} at {step:?}"
+                        );
+                    }
+                    assert_eq!(ms[member_index(&p, step, n)], n);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn info_index_constant_over_later_steps() {
+        // The §5 invariant: ρ_k is constant over every later step's
+        // subgroups ("subgroups include only nodes with the same
+        // information portion combinations").
+        for p in all_params() {
+            for (ki, earlier) in Step::ALL.iter().enumerate() {
+                for later in &Step::ALL[ki + 1..] {
+                    for n in p.nodes() {
+                        let rho = member_index(&p, *earlier, n);
+                        for m in members(&p, *later, n) {
+                            assert_eq!(
+                                member_index(&p, *earlier, m),
+                                rho,
+                                "ρ{} not constant over {later:?} subgroup of {n} (member {m}) in {p:?}",
+                                ki + 1
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rank_is_bijection() {
+        for p in all_params() {
+            let mut seen = vec![false; p.n_nodes()];
+            for n in p.nodes() {
+                let r = node_rank(&p, n);
+                assert!(r < p.n_nodes(), "rank {r} out of range for {p:?}");
+                assert!(!seen[r], "duplicate rank {r} for {p:?}");
+                seen[r] = true;
+                assert_eq!(node_of_rank(&p, r), n, "rank roundtrip for {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn rank_digits_match_member_indices() {
+        for p in all_params() {
+            for n in p.nodes() {
+                let r = node_rank(&p, n);
+                for step in Step::ALL {
+                    assert_eq!(rank_digit(&p, step, r), member_index(&p, step, n));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn active_steps_match_paper_examples() {
+        // Fig 8 example (x=J=3, Λ=6): all four steps active.
+        let p = RampParams::fig8_example();
+        assert_eq!(Step::active(&p).len(), 4);
+        // Max scale: all four active; "number of steps ≈ log_x(N) = 4".
+        let p = RampParams::max_scale();
+        assert_eq!(Step::active(&p).len(), 4);
+        // DG=1 kills step 4; J=1 kills step 3.
+        let p = RampParams::new(4, 2, 4, 1);
+        assert_eq!(Step::active(&p), vec![Step::S1, Step::S2, Step::S3]);
+        let p = RampParams::new(3, 1, 3, 1);
+        assert_eq!(Step::active(&p), vec![Step::S1, Step::S2]);
+    }
+
+    #[test]
+    fn step2_subgroups_span_all_comm_group_pairs() {
+        // The co-design property: a step-2 subgroup touches every
+        // communication group exactly once (so its traffic spreads over
+        // distinct inter-group subnets), and every device number once.
+        let p = RampParams::fig8_example();
+        for n in p.nodes() {
+            let ms = members(&p, Step::S2, n);
+            let mut gs: Vec<usize> = ms.iter().map(|m| m.g).collect();
+            gs.sort_unstable();
+            assert_eq!(gs, (0..p.x).collect::<Vec<_>>());
+            let mut ds: Vec<usize> = ms.iter().map(|m| m.lambda % p.x).collect();
+            ds.sort_unstable();
+            assert_eq!(ds, (0..p.x).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn step3_subgroups_are_rack_diagonals() {
+        let p = RampParams::fig8_example();
+        for n in p.nodes() {
+            let eps = (n.g + p.x - n.j % p.x) % p.x;
+            for m in members(&p, Step::S3, n) {
+                assert_eq!(m.lambda, n.lambda);
+                assert_eq!((m.g + p.x - m.j % p.x) % p.x, eps);
+            }
+        }
+    }
+
+    #[test]
+    fn max_scale_subgroup_counts_match_table5() {
+        let p = RampParams::max_scale(); // x=J=32, Λ=64
+        assert_eq!(Step::S1.n_subgroups(&p), 64 * 32); // ΛJ
+        assert_eq!(Step::S2.n_subgroups(&p), 64 * 32); // ΛJ
+        assert_eq!(Step::S3.n_subgroups(&p), 64 * 32); // Λx
+        assert_eq!(Step::S4.n_subgroups(&p), 32 * 32 * 32); // Jx²
+        assert_eq!(Step::S1.size(&p), 32);
+        assert_eq!(Step::S2.size(&p), 32);
+        assert_eq!(Step::S3.size(&p), 32);
+        assert_eq!(Step::S4.size(&p), 2);
+    }
+}

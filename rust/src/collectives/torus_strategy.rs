@@ -1,0 +1,156 @@
+//! 2D-Torus collective strategies (Mikami et al., §7.6): per-dimension
+//! rings. Dimension 0 is the high-bandwidth placement direction
+//! ([`LinkClass::Local`]); dimension 1 is [`LinkClass::Global`].
+
+use crate::collectives::ring::pipeline_chunks;
+use crate::collectives::{BaselinePhase, LinkClass, MpiOp};
+
+/// Closed-form phases for a torus collective over a `d0 × d1` job with
+/// message `m` bytes.
+pub fn phases(op: MpiOp, d0: usize, d1: usize, m: u64, alpha: f64, beta: f64) -> Vec<BaselinePhase> {
+    assert!(d0 >= 1 && d1 >= 1);
+    let n = d0 * d1;
+    if n == 1 {
+        return vec![];
+    }
+    let (a, b) = (d0 as u64, d1 as u64);
+    let local = LinkClass::Local;
+    let global = LinkClass::Global;
+    match op {
+        // RS along dim0, then RS along dim1 on m/d0
+        MpiOp::ReduceScatter => {
+            let mut v = Vec::new();
+            if d0 > 1 {
+                v.push(BaselinePhase::comm(a - 1, m.div_ceil(a), local).with_reduce(2, m.div_ceil(a)));
+            }
+            if d1 > 1 {
+                let md = m.div_ceil(a);
+                v.push(BaselinePhase::comm(b - 1, md.div_ceil(b), global).with_reduce(2, md.div_ceil(b)));
+            }
+            v
+        }
+        MpiOp::AllGather => {
+            let mut v = Vec::new();
+            if d1 > 1 {
+                v.push(BaselinePhase::comm(b - 1, m, global));
+            }
+            if d0 > 1 {
+                v.push(BaselinePhase::comm(a - 1, m * b, local));
+            }
+            v
+        }
+        // RS dim0 → AR dim1 → AG dim0 (the 2D-torus all-reduce of [47])
+        MpiOp::AllReduce => {
+            let mut v = Vec::new();
+            if d0 > 1 {
+                v.push(BaselinePhase::comm(a - 1, m.div_ceil(a), local).with_reduce(2, m.div_ceil(a)));
+            }
+            if d1 > 1 {
+                let md = m.div_ceil(a);
+                v.push(BaselinePhase::comm(b - 1, md.div_ceil(b), global).with_reduce(2, md.div_ceil(b)));
+                v.push(BaselinePhase::comm(b - 1, md.div_ceil(b), global));
+            }
+            if d0 > 1 {
+                v.push(BaselinePhase::comm(a - 1, m.div_ceil(a), local));
+            }
+            v
+        }
+        // neighbour rings: every dimension pass relays ~m/2 per round
+        // (store-and-forward — the torus has no direct paths)
+        MpiOp::AllToAll => {
+            let mut v = Vec::new();
+            if d1 > 1 {
+                v.push(BaselinePhase::comm(b - 1, m.div_ceil(2), global));
+            }
+            if d0 > 1 {
+                v.push(BaselinePhase::comm(a - 1, m.div_ceil(2), local));
+            }
+            v
+        }
+        MpiOp::Scatter { .. } => {
+            let mut v = Vec::new();
+            if d1 > 1 {
+                v.push(BaselinePhase::comm(b - 1, m.div_ceil(b), global));
+            }
+            if d0 > 1 {
+                let md = m.div_ceil(b);
+                v.push(BaselinePhase::comm(a - 1, md.div_ceil(a), local));
+            }
+            v
+        }
+        MpiOp::Gather { .. } => {
+            let mut v = Vec::new();
+            if d0 > 1 {
+                v.push(BaselinePhase::comm(a - 1, m, local));
+            }
+            if d1 > 1 {
+                v.push(BaselinePhase::comm(b - 1, m * a, global));
+            }
+            v
+        }
+        MpiOp::Reduce { .. } => {
+            let mut v = phases(MpiOp::ReduceScatter, d0, d1, m, alpha, beta);
+            v.extend(phases(
+                MpiOp::Gather { root: 0 },
+                d0,
+                d1,
+                m.div_ceil(n as u64),
+                alpha,
+                beta,
+            ));
+            v
+        }
+        MpiOp::Broadcast { .. } => {
+            let mut v = Vec::new();
+            if d1 > 1 {
+                let k = pipeline_chunks(m, b as f64 - 1.0, alpha, beta);
+                v.push(BaselinePhase::comm(k + b - 2, m.div_ceil(k), global));
+            }
+            if d0 > 1 {
+                let k = pipeline_chunks(m, a as f64 - 1.0, alpha, beta);
+                v.push(BaselinePhase::comm(k + a - 2, m.div_ceil(k), local));
+            }
+            v
+        }
+        MpiOp::Barrier => {
+            let mut v = Vec::new();
+            if d0 > 1 {
+                v.push(BaselinePhase::comm(2 * (a - 1), 4, local));
+            }
+            if d1 > 1 {
+                v.push(BaselinePhase::comm(2 * (b - 1), 4, global));
+            }
+            v
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::total_rounds;
+
+    #[test]
+    fn torus_steps_scale_with_dims_not_n() {
+        let m = 1 << 30;
+        let ph = phases(MpiOp::AllReduce, 128, 128, m, 1e-6, 1e-12);
+        // (128−1) + 2(128−1) + (128−1) = 508 vs ring's 2·16383
+        assert_eq!(total_rounds(&ph), 4 * 127);
+    }
+
+    #[test]
+    fn one_dimensional_degenerates_to_ring() {
+        let m = 1 << 20;
+        let ph = phases(MpiOp::AllReduce, 64, 1, m, 1e-6, 1e-12);
+        assert_eq!(total_rounds(&ph), 2 * 63);
+        assert!(ph.iter().all(|p| p.link == LinkClass::Local));
+    }
+
+    #[test]
+    fn reduce_scatter_message_shrinks_per_dim() {
+        let m = 1 << 20;
+        let ph = phases(MpiOp::ReduceScatter, 16, 8, m, 1e-6, 1e-12);
+        assert_eq!(ph[0].bytes, m / 16);
+        assert_eq!(ph[1].bytes, m / 16 / 8);
+    }
+}

@@ -1,0 +1,31 @@
+//! Run-wide configuration defaults shared by the CLI, examples and bench
+//! harness.
+
+use std::path::PathBuf;
+
+/// Default artifacts directory (relative to the workspace root).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("RAMP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Message sizes swept by the comparison harness (Fig 20–22).
+pub const SWEEP_MESSAGES: [u64; 4] = [
+    10 * crate::units::MB,
+    100 * crate::units::MB,
+    crate::units::GB,
+    10 * crate::units::GB,
+];
+
+/// Node counts swept by the scale harness (Fig 15, 21, 22).
+pub const SWEEP_NODES: [usize; 7] = [16, 64, 256, 1024, 4096, 16_384, 65_536];
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn defaults_sane() {
+        assert!(super::SWEEP_NODES.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(super::artifacts_dir().to_str().unwrap(), "artifacts");
+    }
+}

@@ -1,0 +1,154 @@
+//! DLRM NN partitioner (§7.2.2, Table 10): 3D parallelism [49] —
+//! table-wise first, column-wise when a table exceeds worker memory, data
+//! parallelism for the dense MLPs. Embedding exchange is all-to-all in
+//! both passes; dense gradients take a DP all-reduce.
+
+/// One row of Table 10 — a DLRM workload.
+#[derive(Clone, Debug)]
+pub struct DlrmConfig {
+    pub n_gpus: usize,
+    pub n_tables: usize,
+    /// Rows per embedding table.
+    pub rows: f64,
+    /// Full sparse feature (embedding) dimension.
+    pub sparse_dim: usize,
+    /// Column-partitioned sparse feature dimension per worker.
+    pub part_sparse_dim: usize,
+    pub batch_per_gpu: u64,
+    pub global_batch: u64,
+    pub dense_dim: usize,
+    pub mlp_hidden: usize,
+    pub top_mlp_layers: usize,
+    pub bottom_mlp_layers: usize,
+    /// Total parameters.
+    pub params: f64,
+    /// Parameters resident per GPU.
+    pub part_params: f64,
+}
+
+/// The five Table 10 workloads (328B → 41.9T parameters).
+pub fn table10() -> Vec<DlrmConfig> {
+    let rows: [(usize, usize, f64, usize, usize, u64, f64, f64); 5] = [
+        // gpus, tables, rows, sparse, part_sparse, batch/gpu, params, part
+        (256, 8, 8e7, 4096, 128, 8192, 328e9, 1.3e9),
+        (1024, 16, 1.6e8, 8192, 128, 4096, 1.3e12, 1.3e9),
+        (4096, 32, 3.2e8, 16_384, 128, 3072, 5.2e12, 1.3e9),
+        (16_384, 128, 1.28e9, 16_384, 128, 512, 21e12, 1.3e9),
+        (65_536, 256, 2.56e9, 16_384, 64, 256, 41.9e12, 0.7e9),
+    ];
+    rows.iter()
+        .map(|&(g, t, r, s, ps, b, p, pp)| DlrmConfig {
+            n_gpus: g,
+            n_tables: t,
+            rows: r,
+            sparse_dim: s,
+            part_sparse_dim: ps,
+            batch_per_gpu: b,
+            global_batch: 65_536,
+            dense_dim: 16,
+            mlp_hidden: 1024,
+            top_mlp_layers: 5,
+            bottom_mlp_layers: 4,
+            params: p,
+            part_params: pp,
+        })
+        .collect()
+}
+
+impl DlrmConfig {
+    /// Bytes of one all-to-all per training step per worker: the full
+    /// embedding activations its local batch needs from every table shard
+    /// (half precision) — `batch/GPU × #tables × sparse_dim × 2`. The
+    /// message is dictated by "the hidden dimension, local batch size and
+    /// parallelism level" (§7.2.2).
+    pub fn a2a_message_bytes(&self) -> u64 {
+        2 * self.batch_per_gpu * self.n_tables as u64 * self.sparse_dim as u64
+    }
+
+    /// All-to-alls per step: forward activations + backward gradients.
+    pub fn a2a_per_step(&self) -> u64 {
+        2
+    }
+
+    /// DP all-reduce of the dense MLP gradients (fp16).
+    pub fn dense_allreduce_bytes(&self) -> u64 {
+        let bottom = self.dense_dim * self.mlp_hidden
+            + (self.bottom_mlp_layers - 1) * self.mlp_hidden * self.mlp_hidden;
+        let top = self.top_mlp_layers * self.mlp_hidden * self.mlp_hidden;
+        (2 * (bottom + top)) as u64
+    }
+
+    /// FLOPs per step per GPU: dense MLP fwd+bwd over the local batch plus
+    /// the (memory-bound, counted via bytes in the profiler) embedding
+    /// lookups.
+    pub fn flops_per_step_per_gpu(&self) -> f64 {
+        let mlp_params = self.dense_allreduce_bytes() as f64 / 2.0;
+        6.0 * mlp_params * self.batch_per_gpu as f64
+    }
+
+    /// Bytes of embedding traffic through HBM per step per GPU (lookups
+    /// forward + gradient scatter backward over the received activations).
+    pub fn embedding_bytes_per_gpu(&self) -> f64 {
+        2.0 * self.a2a_message_bytes() as f64
+    }
+}
+
+/// §7.2.2 partitioning heuristic: table-wise while tables ≥ workers, then
+/// column-wise splits. Returns (table_parallel, column_parallel).
+pub fn partition(n_tables: usize, sparse_dim: usize, n_gpus: usize) -> (usize, usize) {
+    if n_tables >= n_gpus {
+        return (n_gpus, 1);
+    }
+    let col = (n_gpus / n_tables).min(sparse_dim).max(1);
+    (n_tables, col)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table10_self_consistent() {
+        let t = table10();
+        assert_eq!(t.len(), 5);
+        for c in &t {
+            // params per GPU ≤ 1.3–0.7B as in the table
+            assert!(c.part_params <= 1.4e9);
+            // batch × gpus covers the global batch (with table-parallel
+            // replication the per-GPU batch shrinks as gpus grow)
+            assert!(c.batch_per_gpu as usize * c.n_gpus >= c.global_batch as usize);
+        }
+        for w in t.windows(2) {
+            assert!(w[1].params > w[0].params);
+            assert!(w[1].n_gpus > w[0].n_gpus);
+        }
+    }
+
+    #[test]
+    fn a2a_dominates_dense_allreduce() {
+        // the paper: DLRM data transfer is all-to-all dominated
+        for c in table10() {
+            assert!(
+                c.a2a_per_step() * c.a2a_message_bytes() > c.dense_allreduce_bytes(),
+                "{} GPUs",
+                c.n_gpus
+            );
+        }
+    }
+
+    #[test]
+    fn column_partitioning_kicks_in_when_tables_scarce() {
+        assert_eq!(partition(256, 16_384, 256), (256, 1));
+        assert_eq!(partition(8, 4096, 256), (8, 32));
+        assert_eq!(partition(16, 8192, 1024), (16, 64));
+    }
+
+    #[test]
+    fn message_sizes_reasonable() {
+        // per-worker embedding activation exchange: hundreds of MB to ~2 GB
+        for c in table10() {
+            let mb = c.a2a_message_bytes() as f64 / 1e6;
+            assert!((100.0..5000.0).contains(&mb), "{} GPUs: {mb} MB", c.n_gpus);
+        }
+    }
+}

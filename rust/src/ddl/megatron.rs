@@ -1,0 +1,212 @@
+//! Megatron NN partitioner (§7.2.1, Table 9).
+//!
+//! Given a target cross-entropy loss, OpenAI scaling laws [38] determine
+//! the model size, critical batch size and training-step count; the
+//! partitioner then picks the tensor-model-parallel (MP) level so each
+//! GPU holds ≤ 1.6B parameters [69] and fills the rest of the worker
+//! budget with data parallelism (DP). The partitioned model's collective
+//! operations (Megatron: per-layer MP all-reduces; DP gradient
+//! all-reduce) are emitted for the MPI estimator.
+
+/// One row of Table 9 — a target-loss workload.
+#[derive(Clone, Debug)]
+pub struct MegatronConfig {
+    /// Target cross-entropy loss.
+    pub ce: f64,
+    pub embed_dim: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    /// Training steps to the target loss.
+    pub steps: u64,
+    /// Global batch size, sequences.
+    pub global_batch: u64,
+    /// Total parameters.
+    pub params: f64,
+    /// Data-parallel level.
+    pub dp: usize,
+    /// Tensor-model-parallel level.
+    pub mp: usize,
+}
+
+/// Sequence length used for every profiled model (§7.3).
+pub const SEQ_LEN: usize = 1024;
+/// Parameter capacity of one A100 worker (§7.2.1, ZeRO-offload [69]).
+pub const PARAMS_PER_GPU_CAP: f64 = 1.6e9;
+
+impl MegatronConfig {
+    pub fn n_gpus(&self) -> usize {
+        self.dp * self.mp
+    }
+
+    pub fn params_per_gpu(&self) -> f64 {
+        self.params / self.mp as f64
+    }
+
+    /// Local batch (sequences per data-parallel worker).
+    pub fn local_batch(&self) -> u64 {
+        (self.global_batch / self.dp as u64).max(1)
+    }
+
+    /// Bytes of one MP (tensor-parallel) all-reduce: a half-precision
+    /// activation tensor of `local_batch × seq × hidden` (Table 9 "MP").
+    pub fn mp_message_bytes(&self) -> u64 {
+        2 * self.local_batch() * SEQ_LEN as u64 * self.embed_dim as u64
+    }
+
+    /// MP all-reduces per training step: 2 per layer forward + 2 backward
+    /// (Megatron [71]). The activation-recomputation forward pass repeats
+    /// its all-reduces too, but those overlap with the backward compute of
+    /// deeper layers and are not on the critical path.
+    pub fn mp_allreduces_per_step(&self) -> u64 {
+        4 * self.n_layers as u64
+    }
+
+    /// Bytes of the DP gradient all-reduce (half-precision gradients of
+    /// the local shard — Table 9 "DP").
+    pub fn dp_message_bytes(&self) -> u64 {
+        (2.0 * self.params_per_gpu()) as u64
+    }
+
+    /// Training FLOPs per step per GPU: ≈ 8 · params/GPU · tokens_local
+    /// (fwd + bwd + recompute ≈ 8 vs 6 without checkpointing).
+    pub fn flops_per_step_per_gpu(&self) -> f64 {
+        8.0 * self.params_per_gpu() * (self.local_batch() * SEQ_LEN as u64) as f64
+    }
+}
+
+/// The ten Table 9 workloads (CE 2.5 → 1.0).
+pub fn table9() -> Vec<MegatronConfig> {
+    let rows: [(f64, usize, usize, usize, u64, u64, f64, usize, usize); 10] = [
+        (2.5, 1152, 12, 36, 65_600, 2480, 574e6, 16, 1),
+        (2.4, 1536, 16, 40, 70_500, 3424, 1.13e9, 32, 1),
+        (2.2, 2304, 24, 56, 78_900, 4896, 3.57e9, 32, 4),
+        (2.0, 4096, 32, 50, 87_500, 7168, 10.1e9, 64, 8),
+        (1.8, 6144, 64, 71, 98_100, 10_880, 32.2e9, 64, 32),
+        (1.7, 8192, 128, 128, 111_000, 16_896, 103.1e9, 256, 128),
+        (1.5, 16_384, 512, 132, 191_000, 14_080, 425.2e9, 128, 512),
+        (1.3, 32_768, 2048, 160, 3_700_000, 1024, 2.06e12, 32, 2048),
+        (1.2, 131_072, 8192, 52, 68_000_000, 64, 10.7e12, 8, 8192),
+        (1.0, 262_144, 65_536, 90, 2_490_000_000, 4, 74.2e12, 1, 65_536),
+    ];
+    rows.iter()
+        .map(|&(ce, d, h, l, s, b, p, dp, mp)| MegatronConfig {
+            ce,
+            embed_dim: d,
+            n_heads: h,
+            n_layers: l,
+            steps: s,
+            global_batch: b,
+            params: p,
+            dp,
+            mp,
+        })
+        .collect()
+}
+
+/// Kaplan scaling laws [38] used by the partitioner front-end: parameters,
+/// critical batch size and optimization steps for a target loss.
+pub mod scaling_laws {
+    /// N(L) = N_c · L^(−1/α_N), α_N = 0.076, N_c = 8.8e13.
+    pub fn params_for_loss(loss: f64) -> f64 {
+        8.8e13 * loss.powf(-1.0 / 0.076)
+    }
+
+    /// B_crit(L) = B* · L^(−1/α_B) tokens, B* = 2e8, α_B = 0.21.
+    pub fn critical_batch_tokens(loss: f64) -> f64 {
+        2e8 * loss.powf(-1.0 / 0.21)
+    }
+
+    /// Loss for a parameter count (inverse of `params_for_loss`).
+    pub fn loss_for_params(params: f64) -> f64 {
+        (8.8e13 / params).powf(0.076)
+    }
+}
+
+/// Partition a model of `params` parameters over at most `max_workers`:
+/// MP level = power-of-two covering the 1.6B/GPU cap, DP fills the rest
+/// (§7.2.1's memory-maximizing heuristic).
+pub fn partition(params: f64, max_workers: usize) -> (usize, usize) {
+    let mut mp = 1usize;
+    while params / mp as f64 > PARAMS_PER_GPU_CAP && mp < max_workers {
+        mp *= 2;
+    }
+    let dp = (max_workers / mp).max(1);
+    (dp, mp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table9_self_consistent() {
+        let t = table9();
+        assert_eq!(t.len(), 10);
+        for c in &t {
+            assert!(c.n_gpus() <= 65_536);
+            // params per GPU stay within ~1.6B (Table 9 column)
+            assert!(
+                c.params_per_gpu() < 1.7e9,
+                "CE {}: {} params/GPU",
+                c.ce,
+                c.params_per_gpu()
+            );
+            assert!(c.local_batch() >= 1);
+        }
+        // monotone: lower CE ⇒ more params
+        for w in t.windows(2) {
+            assert!(w[1].params > w[0].params);
+        }
+    }
+
+    #[test]
+    fn mp_messages_match_table9_band() {
+        // Table 9 MP row: 150MB (CE 2.2) … 3.69GB (CE 1.5), 2.15GB tail
+        let t = table9();
+        // rows whose Table 9 "MP" cell decodes exactly as
+        // local_batch × seq × hidden × 2 bytes:
+        let ce15 = t.iter().find(|c| c.ce == 1.5).unwrap();
+        let gb = ce15.mp_message_bytes() as f64 / 1e9;
+        assert!((gb / 3.69 - 1.0).abs() < 0.05, "CE 1.5 MP msg {gb} GB");
+        let ce17 = t.iter().find(|c| c.ce == 1.7).unwrap();
+        let gb = ce17.mp_message_bytes() as f64 / 1e9;
+        assert!((gb / 1.11 - 1.0).abs() < 0.05, "CE 1.7 MP msg {gb} GB");
+        let ce13 = t.iter().find(|c| c.ce == 1.3).unwrap();
+        let gb = ce13.mp_message_bytes() as f64 / 1e9;
+        assert!((gb / 2.15 - 1.0).abs() < 0.05, "CE 1.3 MP msg {gb} GB");
+        // DP gradients ≈ 2 bytes/param of the shard: 1.14–2.7 GB band
+        for c in &t {
+            if c.dp > 1 {
+                let dp_gb = c.dp_message_bytes() as f64 / 1e9;
+                assert!((0.8..6.0).contains(&dp_gb), "CE {} DP msg {dp_gb} GB", c.ce);
+            }
+        }
+    }
+
+    #[test]
+    fn scaling_laws_reproduce_table9_magnitudes() {
+        use scaling_laws::*;
+        // params within ~2× of the table at both ends
+        let p25 = params_for_loss(2.5);
+        assert!((p25 / 574e6).ln().abs() < f64::ln(2.5), "{p25}");
+        let p13 = params_for_loss(1.3);
+        assert!((p13 / 2.06e12).ln().abs() < f64::ln(2.5), "{p13}");
+        // critical batch at CE 2.5 ≈ 2480 sequences of 1024 tokens
+        let b = critical_batch_tokens(2.5) / SEQ_LEN as f64;
+        assert!((b / 2480.0 - 1.0).abs() < 0.5, "{b}");
+        // inverse law round-trips
+        let l = loss_for_params(params_for_loss(1.8));
+        assert!((l - 1.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partitioner_respects_memory_cap() {
+        for c in table9() {
+            let (dp, mp) = partition(c.params, 65_536);
+            assert!(c.params / mp as f64 <= PARAMS_PER_GPU_CAP * 1.01 || mp == 65_536);
+            assert!(dp * mp <= 65_536);
+        }
+        // small model: no MP needed
+        assert_eq!(partition(5e8, 1024).1, 1);
+    }
+}

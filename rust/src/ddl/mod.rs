@@ -1,0 +1,9 @@
+//! The DDL training simulator (§7.1, Fig 11): NN partitioners for
+//! Megatron and DLRM (§7.2), the compute-time profiler (§7.3), and the
+//! training-time estimator that combines them with the MPI estimator
+//! (Figs 16–17, Tables 9–10).
+
+pub mod dlrm;
+pub mod megatron;
+pub mod profiler;
+pub mod training;

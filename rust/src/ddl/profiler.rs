@@ -1,0 +1,106 @@
+//! NN compute-time profiler (§7.3).
+//!
+//! The paper profiles each partitioned shard for ≥150 iterations on a
+//! real A100; without that hardware we model the step with the same
+//! roofline the paper itself uses for collective arithmetic (§7.4.1,
+//! [81]), with a calibrated MFU (model-FLOPs-utilization) for dense
+//! transformer blocks. A `measured` override lets the end-to-end example
+//! substitute real PJRT step timings (see `examples/train_megatron.rs`).
+
+use crate::ddl::dlrm::DlrmConfig;
+use crate::ddl::megatron::MegatronConfig;
+use crate::estimator::roofline::RooflineDevice;
+
+/// Per-iteration framework/optimizer floor for DLRM (sparse SGD scatter,
+/// kernel launches) observed in real PyTorch profiles (§7.3).
+pub const DLRM_FRAMEWORK_FLOOR_S: f64 = 2e-3;
+
+/// Compute-time source: modelled roofline or measured seconds per step.
+#[derive(Clone, Debug)]
+pub enum ComputeProfile {
+    Roofline { device: RooflineDevice, mfu: f64 },
+    Measured { step_seconds: f64 },
+}
+
+impl ComputeProfile {
+    /// Mixed-precision A100 at the MFU that extreme tensor-parallel
+    /// shards reach with activation checkpointing + ZeRO offloading
+    /// (§7.3's profiled setup): ~12% — consistent with published
+    /// Megatron-LM utilization at MP ≫ 8.
+    pub fn a100() -> Self {
+        ComputeProfile::Roofline { device: RooflineDevice::a100(), mfu: 0.12 }
+    }
+
+    /// Seconds of compute per training step for a Megatron shard.
+    pub fn megatron_step(&self, cfg: &MegatronConfig) -> f64 {
+        match self {
+            ComputeProfile::Measured { step_seconds } => *step_seconds,
+            ComputeProfile::Roofline { device, mfu } => {
+                cfg.flops_per_step_per_gpu() / (device.peak_flops * mfu)
+            }
+        }
+    }
+
+    /// Seconds of compute per training step for a DLRM shard: dense MLP
+    /// flops plus memory-bound embedding traffic.
+    pub fn dlrm_step(&self, cfg: &DlrmConfig) -> f64 {
+        match self {
+            ComputeProfile::Measured { step_seconds } => *step_seconds,
+            ComputeProfile::Roofline { device, mfu } => {
+                let mlp = cfg.flops_per_step_per_gpu() / (device.peak_flops * mfu);
+                let emb = cfg.embedding_bytes_per_gpu() / device.mem_bw;
+                // feature-interaction layer (pairwise dots over F feature
+                // vectors of sparse_dim) + a per-iteration framework /
+                // sparse-optimizer floor the roofline cannot see (§7.3's
+                // real PyTorch profile includes it)
+                let f = (cfg.n_tables + 1) as f64;
+                let interaction = cfg.batch_per_gpu as f64 * f * f
+                    * cfg.sparse_dim as f64
+                    / (device.peak_flops * mfu);
+                mlp + emb + interaction + DLRM_FRAMEWORK_FLOOR_S
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ddl::{dlrm, megatron};
+
+    #[test]
+    fn megatron_steps_in_seconds_range() {
+        // large-batch shards on A100 take O(0.1–100 s) per step
+        let prof = ComputeProfile::a100();
+        for cfg in megatron::table9() {
+            let t = prof.megatron_step(&cfg);
+            assert!((1e-3..1e3).contains(&t), "CE {}: {t}s", cfg.ce);
+        }
+    }
+
+    #[test]
+    fn dlrm_steps_reasonable() {
+        let prof = ComputeProfile::a100();
+        for cfg in dlrm::table10() {
+            let t = prof.dlrm_step(&cfg);
+            assert!((1e-5..10.0).contains(&t), "{} GPUs: {t}s", cfg.n_gpus);
+        }
+    }
+
+    #[test]
+    fn measured_overrides() {
+        let prof = ComputeProfile::Measured { step_seconds: 0.123 };
+        let cfg = &megatron::table9()[0];
+        assert_eq!(prof.megatron_step(cfg), 0.123);
+    }
+
+    #[test]
+    fn compute_scales_with_local_batch() {
+        let prof = ComputeProfile::a100();
+        let mut cfg = megatron::table9()[0].clone();
+        let t1 = prof.megatron_step(&cfg);
+        cfg.dp *= 2; // halves local batch
+        let t2 = prof.megatron_step(&cfg);
+        assert!(t2 < t1);
+    }
+}

@@ -1,0 +1,395 @@
+//! Collective completion-time estimation for all systems and strategies
+//! (§7.4–7.6): the engine behind Figs 15 and 18–23.
+//!
+//! Completion time of a collective = Σ over communication rounds of
+//! `H2H + H2T + compute` where H2H is the round's head-to-head latency
+//! (propagation + switching + node I/O of the critical path), H2T the
+//! data-transfer time at the round's effective bandwidth, and compute the
+//! roofline time of the local reduction (§7.4.1). Rounds are synchronous;
+//! the critical path is the worst link the round's pattern crosses.
+
+use crate::collectives::ops::job_phases;
+use crate::collectives::{hierarchical, ring, torus_strategy};
+use crate::collectives::{BaselinePhase, LinkClass, MpiOp, Strategy};
+use crate::estimator::roofline::RooflineDevice;
+use crate::topology::fat_tree::FatTree;
+use crate::topology::ramp::RampParams;
+use crate::topology::topoopt::TopoOpt;
+use crate::topology::torus::Torus2D;
+use crate::topology::LinkProfile;
+
+/// Completion-time decomposition (Fig 20's three components).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CollectiveTime {
+    /// Head-to-head latency total, s.
+    pub h2h: f64,
+    /// Head-to-tail (data transfer) total, s.
+    pub h2t: f64,
+    /// Local reduction compute total, s.
+    pub compute: f64,
+}
+
+impl CollectiveTime {
+    pub fn total(&self) -> f64 {
+        self.h2h + self.h2t + self.compute
+    }
+
+    /// H2T / H2H ratio (Fig 22): > 10 ⇒ data-transfer limited.
+    pub fn h2t_h2h_ratio(&self) -> f64 {
+        if self.h2h == 0.0 {
+            f64::INFINITY
+        } else {
+            self.h2t / self.h2h
+        }
+    }
+
+    fn add(&mut self, h2h: f64, h2t: f64, compute: f64) {
+        self.h2h += h2h;
+        self.h2t += h2t;
+        self.compute += compute;
+    }
+}
+
+/// A (topology, strategy) pair under estimation.
+#[derive(Clone, Debug)]
+pub enum System {
+    /// RAMP with the co-designed RAMP-x strategies.
+    Ramp(RampParams),
+    /// EPS fat-tree running a ring or hierarchical strategy.
+    FatTree { ft: FatTree, strategy: Strategy, group: usize },
+    /// 2D torus running the per-dimension ring strategy.
+    Torus(Torus2D),
+    /// TopoOpt-like static OCS running ring strategies (§7.6: the only
+    /// applicable family given >10 ms circuit reconfiguration).
+    TopoOpt(TopoOpt),
+}
+
+impl System {
+    pub fn name(&self) -> String {
+        match self {
+            System::Ramp(_) => "RAMP".into(),
+            System::FatTree { strategy, .. } => format!("Fat-Tree/{}", strategy.name()),
+            System::Torus(_) => "2D-Torus".into(),
+            System::TopoOpt(_) => "TopoOpt/Ring".into(),
+        }
+    }
+}
+
+/// The estimator: a system plus the compute-node roofline.
+#[derive(Clone, Debug)]
+pub struct CollectiveEstimator {
+    pub system: System,
+    pub device: RooflineDevice,
+}
+
+impl CollectiveEstimator {
+    pub fn ramp(p: &RampParams) -> Self {
+        Self { system: System::Ramp(p.clone()), device: RooflineDevice::a100() }
+    }
+
+    /// SuperPod fat-tree with ring strategy; `oversub` = σ.
+    pub fn fat_tree_ring(oversub: f64) -> Self {
+        Self {
+            system: System::FatTree {
+                ft: FatTree::superpod(oversub),
+                strategy: Strategy::Ring,
+                group: 8,
+            },
+            device: RooflineDevice::a100(),
+        }
+    }
+
+    /// SuperPod fat-tree with workers spread one-per-server (the common
+    /// placement for small DP jobs inside a big cluster): every hop
+    /// crosses the InfiniBand tiers.
+    pub fn fat_tree_spread(oversub: f64) -> Self {
+        let mut ft = FatTree::superpod(oversub);
+        ft.tiers[0].radix = 1; // one worker per server ⇒ no NVLink locality
+        Self {
+            system: System::FatTree { ft, strategy: Strategy::Ring, group: 1 },
+            device: RooflineDevice::a100(),
+        }
+    }
+
+    /// SuperPod fat-tree with the hierarchical (intra-server + inter) ring.
+    pub fn fat_tree_hierarchical(oversub: f64) -> Self {
+        Self {
+            system: System::FatTree {
+                ft: FatTree::superpod(oversub),
+                strategy: Strategy::Hierarchical,
+                group: 8,
+            },
+            device: RooflineDevice::a100(),
+        }
+    }
+
+    /// 2D torus sized for `n` nodes with the 2D strategy.
+    pub fn torus(n: usize) -> Self {
+        Self { system: System::Torus(Torus2D::sized_for(n)), device: RooflineDevice::a100() }
+    }
+
+    pub fn topoopt() -> Self {
+        Self { system: System::TopoOpt(TopoOpt::paper()), device: RooflineDevice::a100() }
+    }
+
+    pub fn name(&self) -> String {
+        self.system.name()
+    }
+
+    /// Completion-time decomposition of `op` with message `m` bytes over
+    /// `n` active nodes.
+    pub fn completion_time(&self, op: MpiOp, m: u64, n: usize) -> CollectiveTime {
+        if n <= 1 {
+            return CollectiveTime::default();
+        }
+        match &self.system {
+            System::Ramp(p) => self.ramp_time(p, op, m, n),
+            System::FatTree { ft, strategy, group } => {
+                let worst = ft.worst_profile(n.min(ft.capacity_nodes()));
+                let local = ft.link_profile(0);
+                let (alpha, beta) = (worst.latency, 1.0 / worst.bandwidth);
+                let phases = match strategy {
+                    Strategy::Hierarchical => {
+                        hierarchical::phases(op, n, *group, m, alpha, beta)
+                    }
+                    _ => ring::phases(op, n, m, alpha, beta),
+                };
+                self.baseline_time(&phases, local, worst)
+            }
+            System::Torus(t) => {
+                let [d0, d1] = t.ring_dims_for(n.min(t.n_nodes()));
+                let hop = t.hop_profile();
+                let dim = LinkProfile::new(t.dim_bandwidth(), hop.latency);
+                let phases =
+                    torus_strategy::phases(op, d0, d1, m, hop.latency, 1.0 / dim.bandwidth);
+                self.baseline_time(&phases, dim, dim)
+            }
+            System::TopoOpt(t) => {
+                // neighbour-only circuits: all-to-all store-and-forwards
+                let hop = t.hop_profile();
+                let phases =
+                    ring::phases_ext(op, n, m, hop.latency, 1.0 / hop.bandwidth, true);
+                self.baseline_time(&phases, hop, hop)
+            }
+        }
+    }
+
+    /// Number of algorithmic rounds (Fig 15): each pays one H2H.
+    pub fn n_steps(&self, op: MpiOp, m: u64, n: usize) -> u64 {
+        if n <= 1 {
+            return 0;
+        }
+        match &self.system {
+            System::Ramp(p) => {
+                job_phases(p, op, m, n).iter().map(|ph| ph.rounds as u64).sum()
+            }
+            System::FatTree { strategy, group, ft } => {
+                let worst = ft.worst_profile(n.min(ft.capacity_nodes()));
+                let phases = match strategy {
+                    Strategy::Hierarchical => hierarchical::phases(
+                        op,
+                        n,
+                        *group,
+                        m,
+                        worst.latency,
+                        1.0 / worst.bandwidth,
+                    ),
+                    _ => ring::phases(op, n, m, worst.latency, 1.0 / worst.bandwidth),
+                };
+                crate::collectives::total_rounds(&phases)
+            }
+            System::Torus(t) => {
+                let [d0, d1] = t.ring_dims_for(n.min(t.n_nodes()));
+                let hop = t.hop_profile();
+                crate::collectives::total_rounds(&torus_strategy::phases(
+                    op,
+                    d0,
+                    d1,
+                    m,
+                    hop.latency,
+                    1.0 / hop.bandwidth,
+                ))
+            }
+            System::TopoOpt(t) => {
+                let hop = t.hop_profile();
+                crate::collectives::total_rounds(&ring::phases_ext(
+                    op,
+                    n,
+                    m,
+                    hop.latency,
+                    1.0 / hop.bandwidth,
+                    true,
+                ))
+            }
+        }
+    }
+
+    fn ramp_time(&self, p: &RampParams, op: MpiOp, m: u64, n: usize) -> CollectiveTime {
+        let h2h_per_round = p.propagation + p.io_latency;
+        let mut t = CollectiveTime::default();
+        for ph in job_phases(p, op, m, n) {
+            let rate = if matches!(op, MpiOp::Broadcast { .. }) {
+                // Eq 1's β: chunks move at full node capacity per stage
+                p.node_capacity() * p.slot_efficiency()
+            } else {
+                (ph.q * p.b) as f64 * p.line_rate * p.slot_efficiency()
+            };
+            let wire = ph.per_peer_bytes as f64 * 8.0 / rate;
+            let compute = self.device.reduce_pass(ph.reduce_sources, ph.reduce_bytes as f64);
+            t.add(
+                ph.rounds as f64 * h2h_per_round,
+                ph.rounds as f64 * wire,
+                ph.rounds as f64 * compute,
+            );
+        }
+        t
+    }
+
+    fn baseline_time(
+        &self,
+        phases: &[BaselinePhase],
+        local: LinkProfile,
+        global: LinkProfile,
+    ) -> CollectiveTime {
+        let mut t = CollectiveTime::default();
+        for ph in phases {
+            let link = match ph.link {
+                LinkClass::Local => local,
+                LinkClass::Global => global,
+            };
+            let wire = ph.bytes as f64 * 8.0 / link.bandwidth;
+            let compute = self.device.reduce_pass(ph.reduce_arity, ph.reduce_bytes as f64);
+            t.add(
+                ph.rounds as f64 * link.latency,
+                ph.rounds as f64 * wire,
+                ph.rounds as f64 * compute,
+            );
+        }
+        t
+    }
+}
+
+/// The best-performing baseline for an operation — Fig 18's comparison
+/// basis ("best strategy on the best EPS and OCS topologies").
+pub fn best_baseline(
+    op: MpiOp,
+    m: u64,
+    n: usize,
+    oversub: f64,
+) -> (String, CollectiveTime) {
+    let candidates = vec![
+        CollectiveEstimator::fat_tree_ring(oversub),
+        CollectiveEstimator::fat_tree_hierarchical(oversub),
+        CollectiveEstimator::torus(n),
+        CollectiveEstimator::topoopt(),
+    ];
+    candidates
+        .into_iter()
+        .map(|e| (e.name(), e.completion_time(op, m, n)))
+        .min_by(|a, b| a.1.total().partial_cmp(&b.1.total()).unwrap())
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::{GB, MB};
+
+    #[test]
+    fn ramp_flat_in_scale_baselines_grow() {
+        // Fig 21's qualitative shape: RAMP all-reduce nearly flat with N,
+        // ring grows linearly.
+        let m = 1 * GB;
+        let ramp = CollectiveEstimator::ramp(&RampParams::max_scale());
+        let r_small = ramp.completion_time(MpiOp::AllReduce, m, 128).total();
+        let r_big = ramp.completion_time(MpiOp::AllReduce, m, 65_536).total();
+        assert!(r_big / r_small < 10.0, "RAMP should stay near-flat: {r_small} → {r_big}");
+
+        let ring = CollectiveEstimator::fat_tree_ring(1.0);
+        let g_small = ring.completion_time(MpiOp::AllReduce, m, 128).total();
+        let g_big = ring.completion_time(MpiOp::AllReduce, m, 65_536).total();
+        assert!(g_big / g_small > 20.0, "ring should blow up: {g_small} → {g_big}");
+    }
+
+    #[test]
+    fn fig18_speedups_in_paper_band() {
+        // 7.6× (reduce-scatter) to 171× (all-to-all) at max scale, 1 GB,
+        // vs the realistic (oversubscribed) baselines. Accept a generous
+        // band: the substrate is a model, the *shape* must hold.
+        let p = RampParams::max_scale();
+        let n = p.n_nodes();
+        let m = 1 * GB;
+        let ramp = CollectiveEstimator::ramp(&p);
+        let rs_speedup = best_baseline(MpiOp::ReduceScatter, m, n, 12.0).1.total()
+            / ramp.completion_time(MpiOp::ReduceScatter, m, n).total();
+        let a2a_speedup = best_baseline(MpiOp::AllToAll, m, n, 12.0).1.total()
+            / ramp.completion_time(MpiOp::AllToAll, m, n).total();
+        assert!(rs_speedup > 2.0 && rs_speedup < 60.0, "reduce-scatter {rs_speedup}");
+        assert!(a2a_speedup > 50.0, "all-to-all {a2a_speedup}");
+        assert!(a2a_speedup > rs_speedup, "a2a gains most (constant msg per step)");
+    }
+
+    #[test]
+    fn breakdown_components_positive_and_consistent() {
+        let ramp = CollectiveEstimator::ramp(&RampParams::max_scale());
+        for op in MpiOp::all() {
+            let t = ramp.completion_time(op, 100 * MB, 65_536);
+            assert!(t.h2h > 0.0, "{}", op.name());
+            assert!(t.total() >= t.h2t);
+            if matches!(op, MpiOp::ReduceScatter | MpiOp::AllReduce | MpiOp::Reduce { .. }) {
+                assert!(t.compute > 0.0, "{}", op.name());
+            }
+        }
+    }
+
+    #[test]
+    fn h2t_h2h_ratio_shapes_fig22() {
+        // bigger messages ⇒ larger ratio; more nodes (ring) ⇒ smaller
+        let ring = CollectiveEstimator::fat_tree_ring(1.0);
+        let small = ring.completion_time(MpiOp::AllReduce, 10 * MB, 4096);
+        let big = ring.completion_time(MpiOp::AllReduce, 10 * GB, 4096);
+        assert!(big.h2t_h2h_ratio() > small.h2t_h2h_ratio());
+        let ramp = CollectiveEstimator::ramp(&RampParams::max_scale());
+        let r1 = ramp.completion_time(MpiOp::AllReduce, 1 * GB, 1024);
+        let r2 = ramp.completion_time(MpiOp::AllReduce, 1 * GB, 65_536);
+        // RAMP's ratio approximately scale-independent (few steps)
+        let ratio = r1.h2t_h2h_ratio() / r2.h2t_h2h_ratio();
+        assert!((0.2..5.0).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn fig15_step_counts() {
+        let m = 1 * GB;
+        let ramp = CollectiveEstimator::ramp(&RampParams::max_scale());
+        assert!(ramp.n_steps(MpiOp::ReduceScatter, m, 65_536) <= 5);
+        assert!(ramp.n_steps(MpiOp::AllReduce, m, 65_536) <= 10);
+        let ring = CollectiveEstimator::fat_tree_ring(1.0);
+        assert_eq!(ring.n_steps(MpiOp::ReduceScatter, m, 4096), 4095);
+        let hier = CollectiveEstimator::fat_tree_hierarchical(1.0);
+        assert_eq!(hier.n_steps(MpiOp::ReduceScatter, m, 4096), 7 + 511);
+        let torus = CollectiveEstimator::torus(16_384);
+        assert_eq!(torus.n_steps(MpiOp::ReduceScatter, m, 16_384), 127 + 127);
+    }
+
+    #[test]
+    fn oversubscription_hurts_all_to_all_most() {
+        // §8.2: all-to-all keeps message size constant per step ⇒ hit
+        // hardest by oversubscription; reduce-scatter shrinks per step.
+        let m = 1 * GB;
+        let n = 65_536;
+        let matched = CollectiveEstimator::fat_tree_hierarchical(1.0);
+        let oversub = CollectiveEstimator::fat_tree_hierarchical(12.0);
+        let a2a_pen = oversub.completion_time(MpiOp::AllToAll, m, n).total()
+            / matched.completion_time(MpiOp::AllToAll, m, n).total();
+        let rs_pen = oversub.completion_time(MpiOp::ReduceScatter, m, n).total()
+            / matched.completion_time(MpiOp::ReduceScatter, m, n).total();
+        assert!(a2a_pen >= rs_pen, "a2a {a2a_pen} vs rs {rs_pen}");
+    }
+
+    #[test]
+    fn single_node_free() {
+        let ramp = CollectiveEstimator::ramp(&RampParams::max_scale());
+        assert_eq!(ramp.completion_time(MpiOp::AllReduce, GB, 1).total(), 0.0);
+        assert_eq!(ramp.n_steps(MpiOp::AllReduce, GB, 1), 0);
+    }
+}

@@ -1,0 +1,11 @@
+//! The MPI Estimator (§7.4): collective completion times on RAMP and on
+//! the EPS/OCS baselines, decomposed into head-to-head latency (H2H),
+//! data-transfer time (H2T) and local compute — the methodology of
+//! Fig 14, validated in the paper against NCCL on a real GPU cluster and
+//! reproduced here against the timeslot fabric simulator.
+
+pub mod collective_time;
+pub mod roofline;
+
+pub use collective_time::{CollectiveEstimator, CollectiveTime, System};
+pub use roofline::RooflineDevice;

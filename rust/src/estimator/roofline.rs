@@ -1,0 +1,130 @@
+//! Roofline compute model (§7.4.1, §8.4.2, Fig 23).
+//!
+//! The collective-step computation (the reduction) is modelled with the
+//! roofline of the compute node [81]: time = max(bytes moved / memory
+//! bandwidth, flops / peak). Reductions are strongly memory-bound, which
+//! is why the RAMP x-to-1 fused reduction (read `s` inputs once, write
+//! once → (s+1)·m bytes for (s−1)·m/2 flops) beats the 2-to-1 chains of
+//! single-source algorithms (3·m bytes per pass, (s−1) passes) by up to
+//! ~2.8× at x = 32 — the paper's Fig 23.
+
+/// A compute device's roofline parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct RooflineDevice {
+    pub name: &'static str,
+    /// Peak half-precision throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// Memory (HBM) bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Element size for collective arithmetic, bytes (paper: fp16).
+    pub dtype_bytes: f64,
+}
+
+impl RooflineDevice {
+    /// NVIDIA A100-SXM4 (§7.5): 312 TFLOPS fp16 tensor, 2.039 TB/s HBM2e.
+    pub fn a100() -> Self {
+        Self {
+            name: "A100",
+            peak_flops: 312e12,
+            mem_bw: 2.039e12,
+            dtype_bytes: 2.0,
+        }
+    }
+
+    /// A generic CPU core (used when validating against local execution).
+    pub fn cpu() -> Self {
+        Self {
+            name: "cpu",
+            peak_flops: 100e9,
+            mem_bw: 20e9,
+            dtype_bytes: 4.0,
+        }
+    }
+
+    /// Time of ONE fused `s`-to-1 reduction pass producing `bytes_out`
+    /// bytes: reads `s` inputs, writes one output.
+    pub fn reduce_pass(&self, sources: usize, bytes_out: f64) -> f64 {
+        if sources <= 1 || bytes_out <= 0.0 {
+            return 0.0;
+        }
+        let moved = (sources as f64 + 1.0) * bytes_out;
+        let elems = bytes_out / self.dtype_bytes;
+        let flops = (sources as f64 - 1.0) * elems;
+        (moved / self.mem_bw).max(flops / self.peak_flops)
+    }
+
+    /// Total reduction compute time for summing a message of `m` bytes
+    /// scattered over `n` workers with a single-source (2-to-1 chain)
+    /// algorithm — each worker performs `n−1` sequential passes over its
+    /// `m/n` chunk (the ring reduce-scatter compute shape; Fig 23 left).
+    pub fn chain_reduce_total(&self, n: usize, m: f64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let chunk = m / n as f64;
+        (n - 1) as f64 * self.reduce_pass(2, chunk)
+    }
+
+    /// Total reduction compute time for the RAMP x-to-1 strategy: one
+    /// fused pass per algorithmic step, message shrinking by the subgroup
+    /// size each time (Fig 23 right).
+    pub fn ramp_reduce_total(&self, step_sizes: &[usize], m: f64) -> f64 {
+        let mut cur = m;
+        let mut t = 0.0;
+        for &s in step_sizes {
+            if s <= 1 {
+                continue;
+            }
+            cur /= s as f64;
+            t += self.reduce_pass(s, cur);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reductions_are_memory_bound_on_a100() {
+        let d = RooflineDevice::a100();
+        let m = 1e9;
+        // bytes-bound time dominates flops time for any arity
+        for s in [2usize, 8, 32] {
+            let t = d.reduce_pass(s, m);
+            let mem_t = (s as f64 + 1.0) * m / d.mem_bw;
+            assert!((t - mem_t).abs() / mem_t < 1e-9, "arity {s}");
+        }
+    }
+
+    #[test]
+    fn fig23_speedup_near_2_8x_at_x32() {
+        // paper §8.4.2: up to 2.8× compute speed-up at maximum scale
+        let d = RooflineDevice::a100();
+        let m = 1e9;
+        let n = 65_536;
+        let chain = d.chain_reduce_total(n, m);
+        let ramp = d.ramp_reduce_total(&[32, 32, 32, 2], m);
+        let ratio = chain / ramp;
+        assert!((2.0..3.5).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn chain_time_saturates_with_n() {
+        // ring compute ≈ 3·m/BW·(n−1)/n → flat in n
+        let d = RooflineDevice::a100();
+        let t1k = d.chain_reduce_total(1024, 1e9);
+        let t64k = d.chain_reduce_total(65_536, 1e9);
+        assert!((t64k / t1k - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn degenerate_cases_zero() {
+        let d = RooflineDevice::a100();
+        assert_eq!(d.reduce_pass(1, 1e6), 0.0);
+        assert_eq!(d.reduce_pass(4, 0.0), 0.0);
+        assert_eq!(d.chain_reduce_total(1, 1e9), 0.0);
+        assert_eq!(d.ramp_reduce_total(&[1, 1], 1e9), 0.0);
+    }
+}

@@ -1,0 +1,58 @@
+//! # RAMP — flat nanosecond optical network + MPI operations for DDL
+//!
+//! Full-system reproduction of *"RAMP: A Flat Nanosecond Optical Network and
+//! MPI Operations for Distributed Deep Learning Systems"* (Ottino, Benjamin,
+//! Zervas; UCL 2022).
+//!
+//! The crate is the **Layer-3 Rust coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the compute
+//!   hot-spots (x-to-1 fused reduction, tensor-parallel matmul blocks).
+//! * **L2** — JAX model (`python/compile/model.py`): Megatron-style
+//!   tensor-parallel transformer shard fwd/bwd/optimizer, AOT-lowered once
+//!   to HLO text in `artifacts/`.
+//! * **L3** — this crate: the paper's system contribution. The [`engine`]
+//!   (MPI Engine + Network Transcoder), the timeslot-accurate optical
+//!   [`fabric`](simulator) that executes transcoded schedules, the analytic
+//!   [`estimator`] that regenerates every figure/table of the paper's
+//!   evaluation, the [`ddl`] training simulator (Megatron + DLRM
+//!   partitioners), the [`optics`] cost/power/scalability models, baseline
+//!   [`topology`]s and collective strategies, and a threaded
+//!   [`coordinator`] that drives *real* distributed training through PJRT.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the JAX
+//! graphs once, and [`runtime`] loads them through the PJRT C API.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use ramp::topology::ramp::RampParams;
+//! use ramp::collectives::{MpiOp, Strategy};
+//! use ramp::estimator::CollectiveEstimator;
+//!
+//! // The paper's maximum-scale configuration: 65,536 nodes, 12.8 Tbps.
+//! let params = RampParams::max_scale();
+//! let est = CollectiveEstimator::ramp(&params);
+//! let t = est.completion_time(MpiOp::AllReduce, 1 << 30, params.n_nodes());
+//! println!("all-reduce 1GiB @ 65,536 nodes: {:.3} ms", t.total() * 1e3);
+//! ```
+
+pub mod benchutil;
+pub mod cli;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod ddl;
+pub mod engine;
+pub mod estimator;
+pub mod metrics;
+pub mod optics;
+pub mod repro;
+pub mod rng;
+pub mod runtime;
+pub mod simulator;
+pub mod table;
+pub mod testutil;
+pub mod topology;
+pub mod transcoder;
+pub mod units;

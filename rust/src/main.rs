@@ -1,0 +1,185 @@
+//! `ramp` — the leader CLI.
+//!
+//! ```text
+//! ramp info                         architecture summary (Table 2)
+//! ramp repro <figN|tableN|all>      regenerate a paper table/figure
+//! ramp train [--workers N] [--steps N] [--model tiny] [--lr X]
+//!                                   real DDP training through the fabric
+//! ramp collective <op> [--nodes N] [--mb M] [--oversub S]
+//!                                   completion-time comparison for one op
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use ramp::cli::Args;
+use ramp::collectives::MpiOp;
+use ramp::coordinator::{train, TrainConfig};
+use ramp::estimator::collective_time::best_baseline;
+use ramp::estimator::CollectiveEstimator;
+use ramp::table::Table;
+use ramp::topology::ramp::RampParams;
+use ramp::units::{fmt_bw, fmt_count, fmt_time, MB};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(String::as_str) {
+        Some("info") => info(),
+        Some("repro") => {
+            let which = args
+                .positional
+                .get(1)
+                .map(String::as_str)
+                .unwrap_or("all");
+            ramp::repro::run(which);
+            Ok(())
+        }
+        Some("train") => cmd_train(&args),
+        Some("collective") => cmd_collective(&args),
+        _ => {
+            println!(
+                "RAMP — flat nanosecond optical network + MPI operations for DDL\n\n\
+                 usage:\n  ramp info\n  ramp repro <fig6|fig7|table3|table4|fig15..fig23|all>\n  \
+                 ramp train [--workers N] [--steps N] [--model tiny] [--lr X] [--momentum X]\n  \
+                 ramp collective <op> [--nodes N] [--mb M] [--oversub S]\n\n\
+                 ops: reduce-scatter all-gather all-reduce all-to-all scatter gather reduce broadcast"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn info() -> Result<()> {
+    let p = RampParams::max_scale();
+    let mut t = Table::new(vec!["property", "value"]);
+    t.row(vec!["communication groups (x)".to_string(), p.x.to_string()]);
+    t.row(vec!["racks per group (J)".to_string(), p.j.to_string()]);
+    t.row(vec!["wavelengths / nodes per rack (Λ)".to_string(), p.lambda.to_string()]);
+    t.row(vec!["transceivers per group (b)".to_string(), p.b.to_string()]);
+    t.row(vec!["nodes".to_string(), fmt_count(p.n_nodes() as u64)]);
+    t.row(vec!["node capacity".to_string(), fmt_bw(p.node_capacity())]);
+    t.row(vec![
+        "system capacity".to_string(),
+        format!("{:.2} Ebps", p.node_capacity() * p.n_nodes() as f64 / 1e18),
+    ]);
+    t.row(vec!["passive subnets".to_string(), fmt_count(p.n_subnets() as u64)]);
+    t.row(vec!["bisection bandwidth".to_string(), fmt_bw(p.bisection_bandwidth())]);
+    t.row(vec!["slot payload".to_string(), format!("{} B", p.slot_payload_bytes())]);
+    t.row(vec!["reconfiguration".to_string(), fmt_time(p.reconfig_time)]);
+    println!("{t}");
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = TrainConfig {
+        model: args.get_or("model", "tiny"),
+        n_workers: args.get_usize("workers", 4)?,
+        steps: args.get_usize("steps", 100)?,
+        lr: args.get_f64("lr", 0.05)? as f32,
+        momentum: args.get_f64("momentum", 0.9)? as f32,
+        seed: args.get_usize("seed", 42)? as u64,
+        artifacts: ramp::config::artifacts_dir(),
+        log_every: args.get_usize("log-every", 10)?,
+    };
+    println!(
+        "training {} with {} workers for {} steps (lr {}, momentum {})",
+        cfg.model, cfg.n_workers, cfg.steps, cfg.lr, cfg.momentum
+    );
+    let rep = train(&cfg)?;
+    let mut t = Table::new(vec!["step", "loss", "compute", "network (virtual)"]);
+    for s in &rep.stats {
+        t.row(vec![
+            s.step.to_string(),
+            format!("{:.4}", s.loss),
+            fmt_time(s.compute_s),
+            fmt_time(s.comm_virtual_s),
+        ]);
+    }
+    println!("{t}");
+    println!(
+        "loss {:.4} → {:.4} over {} steps; {} params, gradient all-reduce of {} per step",
+        rep.first_loss(),
+        rep.last_loss(),
+        cfg.steps,
+        fmt_count(rep.n_params as u64),
+        ramp::units::fmt_bytes((rep.n_params * 4) as u64),
+    );
+    println!(
+        "network time/step: RAMP {} vs EPS fat-tree {} — iteration speed-up {:.2}x",
+        fmt_time(rep.total_comm_virtual_s / cfg.steps as f64),
+        fmt_time(rep.baseline_comm_virtual_s / cfg.steps as f64),
+        rep.network_speedup()
+    );
+    Ok(())
+}
+
+fn cmd_collective(args: &Args) -> Result<()> {
+    let op_name = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: ramp collective <op>"))?;
+    let op = parse_op(op_name)?;
+    let n = args.get_usize("nodes", 65_536)?;
+    let m = args.get_usize("mb", 1024)? as u64 * MB;
+    let oversub = args.get_f64("oversub", 12.0)?;
+    let ramp = CollectiveEstimator::ramp(&RampParams::max_scale());
+    let r = ramp.completion_time(op, m, n);
+    let mut t = Table::new(vec!["system", "H2H", "H2T", "compute", "total", "vs RAMP"]);
+    t.row(vec![
+        "RAMP".to_string(),
+        fmt_time(r.h2h),
+        fmt_time(r.h2t),
+        fmt_time(r.compute),
+        fmt_time(r.total()),
+        "1.0x".to_string(),
+    ]);
+    for est in [
+        CollectiveEstimator::fat_tree_ring(oversub),
+        CollectiveEstimator::fat_tree_hierarchical(oversub),
+        CollectiveEstimator::torus(n),
+        CollectiveEstimator::topoopt(),
+    ] {
+        let c = est.completion_time(op, m, n);
+        t.row(vec![
+            est.name(),
+            fmt_time(c.h2h),
+            fmt_time(c.h2t),
+            fmt_time(c.compute),
+            fmt_time(c.total()),
+            format!("{:.1}x", c.total() / r.total()),
+        ]);
+    }
+    println!("{t}");
+    let (bname, b) = best_baseline(op, m, n, oversub);
+    println!(
+        "{} of {} over {} nodes: RAMP {} vs best baseline {} ({}) — {:.1}x",
+        op.name(),
+        ramp::units::fmt_bytes(m),
+        fmt_count(n as u64),
+        fmt_time(r.total()),
+        fmt_time(b.total()),
+        bname,
+        b.total() / r.total()
+    );
+    Ok(())
+}
+
+fn parse_op(s: &str) -> Result<MpiOp> {
+    Ok(match s {
+        "reduce-scatter" => MpiOp::ReduceScatter,
+        "all-gather" => MpiOp::AllGather,
+        "all-reduce" => MpiOp::AllReduce,
+        "all-to-all" => MpiOp::AllToAll,
+        "scatter" => MpiOp::Scatter { root: 0 },
+        "gather" => MpiOp::Gather { root: 0 },
+        "reduce" => MpiOp::Reduce { root: 0 },
+        "broadcast" => MpiOp::Broadcast { root: 0 },
+        "barrier" => MpiOp::Barrier,
+        _ => bail!("unknown op: {s}"),
+    })
+}

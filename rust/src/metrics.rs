@@ -1,0 +1,73 @@
+//! Lightweight metrics: stopwatches and counters for the coordinator and
+//! the bench harness (no external metrics crates offline).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Accumulating timer/counter registry.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    timings: BTreeMap<String, (f64, u64)>, // total seconds, samples
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_default() += by;
+    }
+
+    pub fn record(&mut self, name: &str, seconds: f64) {
+        let e = self.timings.entry(name.to_string()).or_default();
+        e.0 += seconds;
+        e.1 += 1;
+    }
+
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn mean_seconds(&self, name: &str) -> Option<f64> {
+        self.timings.get(name).map(|(t, n)| t / (*n).max(1) as f64)
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.counters {
+            s.push_str(&format!("{k}: {v}\n"));
+        }
+        for (k, (t, n)) in &self.timings {
+            s.push_str(&format!("{k}: {:.3} ms avg over {n}\n", t / (*n).max(1) as f64 * 1e3));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_timers() {
+        let mut m = Metrics::new();
+        m.inc("steps", 3);
+        m.inc("steps", 2);
+        assert_eq!(m.counter("steps"), 5);
+        let v = m.time("work", || 42);
+        assert_eq!(v, 42);
+        m.record("work", 0.5);
+        assert!(m.mean_seconds("work").unwrap() > 0.0);
+        assert!(m.report().contains("steps: 5"));
+        assert_eq!(m.counter("missing"), 0);
+    }
+}

@@ -1,0 +1,118 @@
+//! Optical/opto-electronic component library (§4.1).
+//!
+//! Loss, gain, power draw and cost figures follow the paper's cited
+//! technology: time-interleaved tunable lasers with gated SOAs (<1 ns
+//! switching, 122-channel span), SOH modulators at 400 Gbps, SOA gates
+//! with sub-ns switching usable as amplifiers, passive star couplers
+//! shown to 1024 ports (cascadable), and AWGRs to hundreds of ports.
+
+/// A component in the optical path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Component {
+    pub name: &'static str,
+    /// Gain (positive) or insertion loss (negative) in dB. For splitters/
+    /// couplers this is computed from the port count.
+    pub gain_db: f64,
+    /// Electrical power draw in watts (0 for passive parts).
+    pub power_w: f64,
+}
+
+/// Wavelength-tunable source: time-interleaved tunable lasers + SOA gate
+/// (<1 ns switching [76]); +13.5 dBm launch power.
+pub fn tunable_laser() -> Component {
+    Component { name: "tunable laser (WTS)", gain_db: 13.5, power_w: 1.5 }
+}
+
+/// Silicon-organic hybrid modulator at 400 Gbps [83]; ~6 dB insertion loss.
+pub fn soh_modulator() -> Component {
+    Component { name: "SOH modulator", gain_db: -6.0, power_w: 0.4 }
+}
+
+/// SOA gate used for space switching and amplification [29, 66]:
+/// sub-nanosecond switching, ~0.88 W, up to 25 dB fibre-to-fibre gain.
+pub fn soa_gate(gain_db: f64) -> Component {
+    assert!((0.0..=25.0).contains(&gain_db), "SOA gain out of range");
+    Component { name: "SOA gate/amp", gain_db, power_w: 0.88 }
+}
+
+/// Passive 1:n power splitter: 10·log10(n) splitting loss + 0.5 dB excess.
+pub fn splitter(n: usize) -> Component {
+    Component {
+        name: "1:x splitter",
+        gain_db: -(10.0 * (n as f64).log10() + 0.5),
+        power_w: 0.0,
+    }
+}
+
+/// Passive n:1 combiner (same loss physics as the splitter).
+pub fn combiner(n: usize) -> Component {
+    Component {
+        name: "x:1 combiner",
+        gain_db: -(10.0 * (n as f64).log10() + 0.5),
+        power_w: 0.0,
+    }
+}
+
+/// Passive n×n star coupler [31]: broadcast loss 10·log10(n) plus
+/// 1 dB excess (cascaded construction above 1024 ports).
+pub fn star_coupler(n_ports: usize) -> Component {
+    let excess = if n_ports > 1024 { 1.5 } else { 1.0 };
+    Component {
+        name: "star coupler",
+        gain_db: -(10.0 * (n_ports as f64).log10() + excess),
+        power_w: 0.0,
+    }
+}
+
+/// Arrayed waveguide grating router [13]: low, port-count-insensitive loss.
+pub fn awgr() -> Component {
+    Component { name: "AWGR", gain_db: -4.5, power_w: 0.0 }
+}
+
+/// Fixed-wavelength filter before the receiver (B&S fixed-receiver mode).
+pub fn wavelength_filter() -> Component {
+    Component { name: "λ filter", gain_db: -2.0, power_w: 0.0 }
+}
+
+/// APD receiver operating point (§4.2): minimum optical power −15 dBm at
+/// the photodetector, −20 dBm anywhere along the path.
+pub const RX_SENSITIVITY_DBM: f64 = -15.0;
+pub const PATH_MIN_DBM: f64 = -20.0;
+
+/// Integrated transceiver power draw, W (laser + modulator + SOAs + APD
+/// ROSA + electronics; fixed vs tunable receiver bound) — Table 4 quotes
+/// 3.4–3.8 W at 400 Gbps.
+pub const TRX_POWER_W: (f64, f64) = (3.4, 3.8);
+
+/// Integrated OCS transceiver cost, $ — "1.5–3× of EPS transceivers",
+/// i.e. 600–1200 $ at 400 Gbps and 1 $/Gbps EPS pricing (Table 3).
+pub const TRX_COST_USD: (f64, f64) = (600.0, 1200.0);
+
+/// Passive coupler subnet cost, $ (Table 3, estimated from [12]).
+pub const COUPLER_COST_USD: f64 = 3000.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitting_losses_scale_logarithmically() {
+        assert!((splitter(2).gain_db - (-3.51)).abs() < 0.02);
+        assert!((splitter(32).gain_db - (-15.55)).abs() < 0.02);
+        assert!((star_coupler(1024).gain_db - (-31.1)).abs() < 0.05);
+        assert!((star_coupler(2048).gain_db - (-34.6)).abs() < 0.05);
+    }
+
+    #[test]
+    fn passives_draw_no_power() {
+        for c in [splitter(8), combiner(8), star_coupler(64), awgr(), wavelength_filter()] {
+            assert_eq!(c.power_w, 0.0, "{}", c.name);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "SOA gain")]
+    fn soa_gain_bounded() {
+        soa_gate(40.0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Network cost model (§4.3, Table 3): RAMP vs EPS HPC (SuperPod) and
+//! EPS DCN (Fat-Tree) at matched scale (65,536 nodes) and matched node
+//! bandwidth (12.8 Tbps), for intra-to-inter oversubscription σ ∈
+//! {1:1, 10:1, 64:1}.
+//!
+//! Counting rules (validated against the paper's own item counts):
+//! * a `t`-tier fat-tree with `P` node ports has `P` links per tier and 2
+//!   transceivers per link → `2·t·P` transceivers;
+//! * switches: `P/(k/2)` per lower tier + `P/k` at the top (radix `k`);
+//! * RAMP: `b·x·N` node transceivers + `b·x³` passive couplers; no
+//!   switches.
+
+use crate::optics::components::{COUPLER_COST_USD, TRX_COST_USD};
+use crate::topology::ramp::RampParams;
+
+/// Cost breakdown of one network build-out.
+#[derive(Clone, Debug)]
+pub struct CostBreakdown {
+    pub name: String,
+    pub n_transceivers: u64,
+    pub n_switches: u64,
+    pub n_couplers: u64,
+    pub transceiver_cost: f64,
+    pub switch_cost: f64,
+    /// Total network cost, USD.
+    pub total: f64,
+    /// Normalized cost in $/Gbps of delivered inter-node bandwidth.
+    pub per_gbps: f64,
+}
+
+impl CostBreakdown {
+    /// transceiver : switch cost ratio as percentages.
+    pub fn ratio(&self) -> (f64, f64) {
+        let t = self.transceiver_cost + self.switch_cost;
+        if t == 0.0 {
+            return (0.0, 0.0);
+        }
+        (self.transceiver_cost / t * 100.0, self.switch_cost / t * 100.0)
+    }
+}
+
+/// EPS HPC (SuperPod-like): 200 Gbps HDR ports at $200 ($1/Gbps), 40-port
+/// QM8790 switches at $23.7k, 3 tiers of InfiniBand fat-tree, `64/σ`
+/// ports per GPU (σ=64 ⇒ the real 1-port SuperPod).
+pub fn superpod_cost(nodes: u64, oversub: u64) -> CostBreakdown {
+    let ports_per_node = 64 / oversub.min(64);
+    fat_tree_cost("HPC SuperPod", nodes, ports_per_node, 200.0, 40, 23_700.0, 200.0)
+}
+
+/// EPS DCN fat-tree: 100 Gbps ports at $100, 64-port switches at $44k,
+/// `128/σ` ports per node.
+pub fn dcn_cost(nodes: u64, oversub: u64) -> CostBreakdown {
+    let ports_per_node = (128 / oversub.min(128)).max(1);
+    fat_tree_cost("DCN Fat-Tree", nodes, ports_per_node, 100.0, 64, 44_000.0, 100.0)
+}
+
+fn fat_tree_cost(
+    name: &str,
+    nodes: u64,
+    ports_per_node: u64,
+    port_gbps: f64,
+    radix: u64,
+    switch_cost: f64,
+    trx_cost: f64,
+) -> CostBreakdown {
+    let tiers = 3u64;
+    let ports = nodes * ports_per_node;
+    let n_transceivers = 2 * tiers * ports;
+    let n_switches = (tiers - 1) * ports.div_ceil(radix / 2) + ports.div_ceil(radix);
+    let transceiver_cost = n_transceivers as f64 * trx_cost;
+    let sw_cost = n_switches as f64 * switch_cost;
+    let total = transceiver_cost + sw_cost;
+    let delivered_gbps = (ports as f64) * port_gbps;
+    CostBreakdown {
+        name: name.into(),
+        n_transceivers,
+        n_switches,
+        n_couplers: 0,
+        transceiver_cost,
+        switch_cost: sw_cost,
+        total,
+        per_gbps: total / delivered_gbps,
+    }
+}
+
+/// RAMP cost at a configuration: transceivers (integrated OCS, low/high
+/// price bound) + passive couplers; no switches.
+pub fn ramp_cost(p: &RampParams, high_price: bool) -> CostBreakdown {
+    let n_transceivers = p.n_transceivers() as u64;
+    let n_couplers = p.n_subnets() as u64;
+    let trx_cost = if high_price { TRX_COST_USD.1 } else { TRX_COST_USD.0 };
+    let transceiver_cost = n_transceivers as f64 * trx_cost;
+    let coupler_cost = n_couplers as f64 * COUPLER_COST_USD;
+    let total = transceiver_cost + coupler_cost;
+    let delivered_gbps = p.node_capacity() / 1e9 * p.n_nodes() as f64;
+    CostBreakdown {
+        name: format!("RAMP ({})", if high_price { "high" } else { "low" }),
+        n_transceivers,
+        n_switches: 0,
+        n_couplers,
+        transceiver_cost,
+        switch_cost: coupler_cost, // "switching" column = passive couplers
+        total,
+        per_gbps: total / delivered_gbps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn item_counts_match_table3() {
+        // HPC 1:1 — paper: 25.2M transceivers, 530k switches
+        let hpc = superpod_cost(65_536, 1);
+        assert!((hpc.n_transceivers as f64 / 25.2e6 - 1.0).abs() < 0.01, "{}", hpc.n_transceivers);
+        assert!((hpc.n_switches as f64 / 530e3 - 1.0).abs() < 0.02, "{}", hpc.n_switches);
+        // DCN 1:1 — paper: 50.3M transceivers, 655k switches
+        let dcn = dcn_cost(65_536, 1);
+        assert!((dcn.n_transceivers as f64 / 50.3e6 - 1.0).abs() < 0.01);
+        assert!((dcn.n_switches as f64 / 655e3 - 1.0).abs() < 0.02);
+        // RAMP — paper: 2.1M transceivers, 32.8k couplers
+        let ramp = ramp_cost(&RampParams::max_scale(), false);
+        assert!((ramp.n_transceivers as f64 / 2.1e6 - 1.0).abs() < 0.01);
+        assert_eq!(ramp.n_couplers, 32_768);
+    }
+
+    #[test]
+    fn totals_match_table3_within_tolerance() {
+        // paper: HPC 1:1 $16.8B, DCN 1:1 $35.5B, RAMP $1.35–2.61B
+        let hpc = superpod_cost(65_536, 1);
+        assert!((hpc.total / 16.8e9 - 1.0).abs() < 0.15, "HPC total {}", hpc.total);
+        let dcn = dcn_cost(65_536, 1);
+        assert!((dcn.total / 35.5e9 - 1.0).abs() < 0.15, "DCN total {}", dcn.total);
+        let lo = ramp_cost(&RampParams::max_scale(), false);
+        let hi = ramp_cost(&RampParams::max_scale(), true);
+        assert!((lo.total / 1.35e9 - 1.0).abs() < 0.1, "RAMP low {}", lo.total);
+        assert!((hi.total / 2.61e9 - 1.0).abs() < 0.1, "RAMP high {}", hi.total);
+    }
+
+    #[test]
+    fn normalized_cost_improvement_6x_to_26x() {
+        // paper headline: 6.4–26.5× reduction in $/Gbps
+        let lo = ramp_cost(&RampParams::max_scale(), false);
+        let hi = ramp_cost(&RampParams::max_scale(), true);
+        let hpc = superpod_cost(65_536, 1);
+        let dcn = dcn_cost(65_536, 1);
+        let worst = dcn.per_gbps / lo.per_gbps;
+        let best = hpc.per_gbps / hi.per_gbps;
+        assert!(best > 5.0, "best ratio {best}");
+        assert!(worst < 30.0 && worst > 10.0, "worst ratio {worst}");
+        // RAMP normalized cost in the paper's 1.62–3.12 $/Gbps window
+        assert!(lo.per_gbps > 1.3 && hi.per_gbps < 3.5, "{} {}", lo.per_gbps, hi.per_gbps);
+    }
+
+    #[test]
+    fn cost_ratio_flips_between_eps_and_ocs() {
+        // paper: EPS is switch-dominated (≈25:75 / 19:81), RAMP is
+        // transceiver-dominated (≈93:7 – 96:4)
+        let (t, s) = superpod_cost(65_536, 1).ratio();
+        assert!(s > 60.0, "HPC switch share {s}, trx {t}");
+        let (t, s) = ramp_cost(&RampParams::max_scale(), false).ratio();
+        assert!(t > 90.0, "RAMP trx share {t}, couplers {s}");
+    }
+
+    #[test]
+    fn oversubscription_scales_down_cost() {
+        let full = superpod_cost(65_536, 1);
+        let ten = superpod_cost(65_536, 10);
+        let sixty4 = superpod_cost(65_536, 64);
+        assert!(full.total > ten.total && ten.total > sixty4.total);
+        // paper: 10:1 HPC ≈ $1.57B — similar to RAMP for 10× less bandwidth
+        assert!((ten.total / 1.57e9 - 1.0).abs() < 0.3, "{}", ten.total);
+    }
+}

@@ -1,0 +1,10 @@
+//! Optical technologies and system-level models (§4): the component
+//! library (§4.1), the worst-path power budget and scalability solver
+//! (§4.2, Fig 6–7) and the cost / power-consumption comparisons against
+//! EPS systems (§4.3, Tables 3–4).
+
+pub mod components;
+pub mod cost;
+pub mod power;
+pub mod power_budget;
+pub mod scalability;

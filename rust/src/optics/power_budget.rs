@@ -1,0 +1,124 @@
+//! Worst-case optical power budget along a B&S path (§4.2, Fig 6).
+//!
+//! The lossiest RAMP configuration is Broadcast & Select: the signal
+//! traverses laser → modulator → 1:x splitter → SOA gate → (JΛ):(JΛ)
+//! star-coupler subnet → λ filter → SOA gate → x:1 combiner → PD.
+//! Scale feasibility requires ≥ −20 dBm everywhere on the path and
+//! ≥ −15 dBm at the photodetector. At the paper's maximum configuration
+//! (x = J = 32, Λ = 64 → 65,536 nodes) the budget closes with ≈0.4 dB
+//! margin — which is exactly why 65,536 *is* the maximum.
+
+use crate::optics::components::{self as comp, Component, PATH_MIN_DBM, RX_SENSITIVITY_DBM};
+use crate::topology::ramp::RampParams;
+
+/// One point of the Fig 6 curve: power after a component.
+#[derive(Clone, Debug)]
+pub struct BudgetPoint {
+    pub component: &'static str,
+    pub power_dbm: f64,
+}
+
+/// The full power-budget trace for the worst-case B&S path of a
+/// (x, J, Λ) configuration. Dimension-based so the Fig 7 sweep can probe
+/// configurations outside the collective-algebra constraint Λ ≡ 0 (mod x)
+/// — the optics don't care about device groups.
+pub fn budget_chain_dims(x: usize, j: usize, lambda: usize) -> Vec<BudgetPoint> {
+    let subnet_ports = j * lambda;
+    let chain: Vec<Component> = vec![
+        comp::tunable_laser(),
+        comp::soh_modulator(),
+        comp::splitter(x),
+        comp::soa_gate(25.0),
+        comp::star_coupler(subnet_ports),
+        comp::wavelength_filter(),
+        comp::soa_gate(25.0),
+        comp::combiner(x),
+    ];
+    let mut power = 0.0;
+    let mut out = Vec::with_capacity(chain.len());
+    for c in chain {
+        power += c.gain_db;
+        out.push(BudgetPoint { component: c.name, power_dbm: power });
+    }
+    out
+}
+
+/// The full power-budget trace for the worst-case B&S path of `p`.
+pub fn budget_chain(p: &RampParams) -> Vec<BudgetPoint> {
+    budget_chain_dims(p.x, p.j, p.lambda)
+}
+
+/// Feasibility summary of a configuration.
+#[derive(Clone, Debug)]
+pub struct BudgetCheck {
+    pub min_on_path_dbm: f64,
+    pub at_receiver_dbm: f64,
+    pub feasible: bool,
+}
+
+/// Check the §4.2 constraints for a raw (x, J, Λ) configuration.
+pub fn check_dims(x: usize, j: usize, lambda: usize) -> BudgetCheck {
+    let chain = budget_chain_dims(x, j, lambda);
+    finish_check(chain)
+}
+
+/// Check the §4.2 constraints for `p`.
+pub fn check(p: &RampParams) -> BudgetCheck {
+    let chain = budget_chain(p);
+    finish_check(chain)
+}
+
+fn finish_check(chain: Vec<BudgetPoint>) -> BudgetCheck {
+    let min_on_path = chain.iter().map(|b| b.power_dbm).fold(f64::INFINITY, f64::min);
+    let at_rx = chain.last().map(|b| b.power_dbm).unwrap_or(f64::NEG_INFINITY);
+    BudgetCheck {
+        min_on_path_dbm: min_on_path,
+        at_receiver_dbm: at_rx,
+        feasible: min_on_path >= PATH_MIN_DBM && at_rx >= RX_SENSITIVITY_DBM,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_scale_closes_the_budget() {
+        let p = RampParams::max_scale();
+        let c = check(&p);
+        assert!(c.feasible, "{c:?}");
+        // the budget is tight: within 2 dB of the path floor (that is what
+        // caps the architecture at 65,536 nodes)
+        assert!(c.min_on_path_dbm < PATH_MIN_DBM + 2.0, "{c:?}");
+    }
+
+    #[test]
+    fn doubling_lambda_breaks_the_budget() {
+        // 131,072 nodes (Λ=128) must NOT close: 65,536 is the max scale.
+        let p = RampParams::new(32, 32, 128, 1);
+        assert!(!check(&p).feasible);
+    }
+
+    #[test]
+    fn small_systems_have_margin() {
+        let p = RampParams::fig8_example();
+        let c = check(&p);
+        assert!(c.feasible);
+        assert!(c.min_on_path_dbm > check(&RampParams::max_scale()).min_on_path_dbm);
+    }
+
+    #[test]
+    fn chain_shape_matches_fig6() {
+        let chain = budget_chain(&RampParams::max_scale());
+        assert_eq!(chain.len(), 8);
+        assert_eq!(chain[0].component, "tunable laser (WTS)");
+        assert_eq!(chain[4].component, "star coupler");
+        // the deepest dip is right after the star coupler or the filter
+        let min = chain
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.power_dbm.partial_cmp(&b.1.power_dbm).unwrap())
+            .unwrap();
+        assert!(min.0 == 4 || min.0 == 5, "dip at {}", min.0);
+    }
+}

@@ -1,0 +1,198 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Python is build-time only; after `make artifacts` the Rust binary is
+//! self-contained: `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `client.compile` → `execute` (the /opt/xla-example/load_hlo pattern).
+//! HLO *text* is the interchange format — serialized jax ≥ 0.5 protos are
+//! rejected by xla_extension 0.5.1 (64-bit instruction ids).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A parsed `artifacts/manifest.txt` (line-based `key=value`).
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    entries: HashMap<String, String>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = HashMap::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("manifest line {}: missing '=': {line}", i + 1))?;
+            entries.insert(k.to_string(), v.to_string());
+        }
+        if entries.get("format").map(String::as_str) != Some("1") {
+            bail!("unsupported manifest format: {:?}", entries.get("format"));
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Result<&str> {
+        self.entries
+            .get(key)
+            .map(String::as_str)
+            .ok_or_else(|| anyhow!("manifest key missing: {key}"))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.get(key)?
+            .parse()
+            .with_context(|| format!("manifest key {key} is not an integer"))
+    }
+
+    /// Artifact names (the `artifact.<name>.file` keys).
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .entries
+            .keys()
+            .filter_map(|k| {
+                k.strip_prefix("artifact.")
+                    .and_then(|rest| rest.strip_suffix(".file"))
+                    .map(str::to_string)
+            })
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+/// The PJRT runtime: one CPU client, a manifest, and a compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (default `artifacts/`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+        Ok(Self { client, dir, manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact by manifest name (e.g. `tiny_step`).
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        let file = self.manifest.get(&format!("artifact.{name}.file"))?;
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(wrap_xla)
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(wrap_xla)?;
+        Ok(Executable { exe, name: name.to_string() })
+    }
+}
+
+/// A compiled model-variant entry point.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened output tuple
+    /// (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self.exe.execute::<xla::Literal>(inputs).map_err(wrap_xla)?;
+        let lit = out
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("{}: empty execution result", self.name))?
+            .to_literal_sync()
+            .map_err(wrap_xla)?;
+        lit.to_tuple().map_err(wrap_xla)
+    }
+}
+
+/// f32 slice → rank-1 literal.
+pub fn lit_f32(xs: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(xs)
+}
+
+/// i32 matrix (row-major) → rank-2 literal.
+pub fn lit_i32_2d(xs: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    assert_eq!(xs.len(), rows * cols);
+    xla::Literal::vec1(xs)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(wrap_xla)
+}
+
+/// f32 matrix (row-major) → rank-2 literal.
+pub fn lit_f32_2d(xs: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    assert_eq!(xs.len(), rows * cols);
+    xla::Literal::vec1(xs)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(wrap_xla)
+}
+
+/// scalar f32 literal.
+pub fn lit_scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// scalar i32 literal.
+pub fn lit_scalar_i32(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// literal → Vec<f32>.
+pub fn f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(wrap_xla)
+}
+
+/// literal → f32 scalar (first element).
+pub fn f32_scalar(lit: &xla::Literal) -> Result<f32> {
+    let v = f32_vec(lit)?;
+    v.first().copied().ok_or_else(|| anyhow!("empty literal"))
+}
+
+fn wrap_xla(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let m = Manifest::parse(
+            "format=1\nartifact.tiny_step.file=tiny_step.hlo.txt\nmodel.tiny.n_params=42\n",
+        )
+        .unwrap();
+        assert_eq!(m.get("artifact.tiny_step.file").unwrap(), "tiny_step.hlo.txt");
+        assert_eq!(m.get_usize("model.tiny.n_params").unwrap(), 42);
+        assert_eq!(m.artifact_names(), vec!["tiny_step"]);
+        assert!(m.get("missing").is_err());
+    }
+
+    #[test]
+    fn manifest_rejects_bad_format() {
+        assert!(Manifest::parse("format=9\n").is_err());
+        assert!(Manifest::parse("format=1\nbroken-line\n").is_err());
+    }
+}

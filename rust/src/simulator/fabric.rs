@@ -1,0 +1,408 @@
+//! The optical fabric: executes transcoded NIC instruction streams against
+//! the physical resource model and detects violations the transcoder's
+//! occupancy maps might have missed (defence in depth for the paper's
+//! "contention-less" claim), plus utilization statistics used by the
+//! §Perf analysis and the benchmark harness.
+//!
+//! Physical rules enforced (§3.1, §4.1):
+//! 1. one transmission per (subnet, wavelength, slot) — racks of a group
+//!    pair are broadcast-coupled;
+//! 2. a transmitter group carries one transmission per slot;
+//! 3. a receiver group gates a single source communication group per slot
+//!    and its filter passes only the node's own wavelength;
+//! 4. wavelengths/groups must be in range, sources distinct from
+//!    destinations, and destination filters must match the transmitted
+//!    wavelength (fixed-receiver B&S);
+//! 5. a transmission's payload cannot exceed slots × slot payload.
+
+use crate::topology::ramp::RampParams;
+use crate::transcoder::{group_slot_payload, NicInstruction, Schedule};
+
+
+/// A physical violation detected while executing a schedule.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Violation {
+    SubnetWavelengthCollision { detail: String },
+    TransmitterBusy { detail: String },
+    ReceiverBusy { detail: String },
+    WavelengthFilterMismatch { detail: String },
+    OutOfRange { detail: String },
+    PayloadOverrun { detail: String },
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let (k, d) = match self {
+            Violation::SubnetWavelengthCollision { detail } => ("subnet/λ collision", detail),
+            Violation::TransmitterBusy { detail } => ("transmitter busy", detail),
+            Violation::ReceiverBusy { detail } => ("receiver busy", detail),
+            Violation::WavelengthFilterMismatch { detail } => ("filter mismatch", detail),
+            Violation::OutOfRange { detail } => ("out of range", detail),
+            Violation::PayloadOverrun { detail } => ("payload overrun", detail),
+        };
+        write!(f, "{k}: {d}")
+    }
+}
+
+/// Wire-level statistics of one executed schedule.
+#[derive(Clone, Debug, Default)]
+pub struct FabricReport {
+    pub violations: Vec<Violation>,
+    /// Total timeslots spanned (makespan).
+    pub makespan_slots: u64,
+    /// Individual optical transmissions executed.
+    pub transmissions: u64,
+    /// Sum of payload bytes (multicast counted once — one optical signal).
+    pub wire_bytes: u64,
+    /// Sum over transmissions of slots used.
+    pub slot_transmissions: u64,
+    /// Distinct subnets touched.
+    pub subnets_used: usize,
+    /// Mean occupied fraction of the touched subnets over the makespan.
+    pub subnet_utilization: f64,
+    /// Virtual-clock completion time: slots × slot time + per-round H2H.
+    pub completion_time: f64,
+}
+
+impl FabricReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// The fabric executor. Stateless between runs; `execute` is a pure
+/// function of (params, schedule).
+pub struct OpticalFabric {
+    pub p: RampParams,
+}
+
+impl OpticalFabric {
+    pub fn new(p: RampParams) -> Self {
+        Self { p }
+    }
+
+    /// Execute a schedule: check every physical rule, compute statistics.
+    /// Interval-based (no per-slot grid) so million-slot schedules are
+    /// cheap — see `rust/benches/fabric_bench.rs`.
+    pub fn execute(&self, sched: &Schedule) -> FabricReport {
+        let p = &self.p;
+        let mut report = FabricReport::default();
+        let payload = group_slot_payload(p);
+
+        // flat interval lists per resource class: (encoded key, start,
+        // end, instruction) — one sort per class replaces per-key maps
+        // (hot path: see rust/benches/fabric_bench.rs). Subnet wavelength
+        // space is keyed by rack under Route & Select (per-rack AWGR
+        // inputs / crossbar outputs) and globally under Broadcast & Select.
+        let shared = self.p.subnet_kind == crate::topology::ramp::SubnetKind::BroadcastSelect;
+        const SHARED_RACK: usize = usize::MAX;
+        let n_ins = sched.instructions.len();
+        // key encodings (fields comfortably within the bit budgets:
+        // groups/trx ≤ x ≤ 2^10, λ ≤ 2^12, racks ≤ 2^12, flat ids ≤ 2^32)
+        #[inline]
+        fn subnet_key(a: usize, b: usize, t: usize, w: usize, rack: usize) -> u64 {
+            let rack = if rack == usize::MAX { 0xFFF } else { rack as u64 };
+            ((a as u64) << 54) | ((b as u64) << 44) | ((t as u64) << 34)
+                | ((w as u64) << 12)
+                | rack
+        }
+        #[inline]
+        fn endpoint_key(flat: usize, t: usize) -> u64 {
+            ((flat as u64) << 12) | t as u64
+        }
+        let mut subnet_in: Vec<(u64, u64, u64, u32)> = Vec::with_capacity(n_ins);
+        let mut subnet_out: Vec<(u64, u64, u64, u32)> = Vec::with_capacity(n_ins);
+        let mut tx: Vec<(u64, u64, u64, u32)> = Vec::with_capacity(n_ins);
+        let mut rx: Vec<(u64, u64, u64, u32)> = Vec::with_capacity(n_ins);
+
+        for (idx, ins) in sched.instructions.iter().enumerate() {
+            self.check_ranges(ins, &mut report);
+            let (s, e) = (ins.slot, ins.slot + ins.n_slots);
+            report.makespan_slots = report.makespan_slots.max(e);
+            report.transmissions += 1;
+            report.wire_bytes += ins.bytes;
+            report.slot_transmissions += ins.n_slots;
+            if ins.bytes > ins.n_slots * payload {
+                report.violations.push(Violation::PayloadOverrun {
+                    detail: format!(
+                        "instruction #{idx}: {} B in {} slots ({} B capacity)",
+                        ins.bytes,
+                        ins.n_slots,
+                        ins.n_slots * payload
+                    ),
+                });
+            }
+            let sb = (ins.subnet.src_group, ins.subnet.dst_group, ins.subnet.trx);
+            let in_rack = if shared { SHARED_RACK } else { ins.src.j };
+            subnet_in.push((subnet_key(sb.0, sb.1, sb.2, ins.wavelength, in_rack), s, e, idx as u32));
+            if shared {
+                subnet_out.push((subnet_key(sb.0, sb.1, sb.2, ins.wavelength, SHARED_RACK), s, e, idx as u32));
+            } else if let [d] = ins.dsts.as_slice() {
+                // unicast fast path: no rack-dedup allocation
+                subnet_out.push((subnet_key(sb.0, sb.1, sb.2, ins.wavelength, d.j), s, e, idx as u32));
+            } else {
+                let mut out_racks: Vec<usize> = ins.dsts.iter().map(|d| d.j).collect();
+                out_racks.sort_unstable();
+                out_racks.dedup();
+                for r in out_racks {
+                    subnet_out.push((subnet_key(sb.0, sb.1, sb.2, ins.wavelength, r), s, e, idx as u32));
+                }
+            }
+            tx.push((endpoint_key(ins.src.flat(p), ins.trx), s, e, idx as u32));
+            for d in &ins.dsts {
+                rx.push((endpoint_key(d.flat(p), ins.trx), s, e, idx as u32));
+            }
+        }
+
+        check_overlaps(&mut subnet_in, |a, b| Violation::SubnetWavelengthCollision {
+            detail: format!("instructions #{a} and #{b} share a (subnet, λ, src rack, slot)"),
+        })
+        .into_iter()
+        .for_each(|v| report.violations.push(v));
+        check_overlaps(&mut subnet_out, |a, b| Violation::SubnetWavelengthCollision {
+            detail: format!("instructions #{a} and #{b} share a (subnet, λ, dst rack, slot)"),
+        })
+        .into_iter()
+        .for_each(|v| report.violations.push(v));
+        check_overlaps(&mut tx, |a, b| Violation::TransmitterBusy {
+            detail: format!("instructions #{a} and #{b} share a transmitter slot"),
+        })
+        .into_iter()
+        .for_each(|v| report.violations.push(v));
+        check_overlaps(&mut rx, |a, b| Violation::ReceiverBusy {
+            detail: format!("instructions #{a} and #{b} share a receiver slot"),
+        })
+        .into_iter()
+        .for_each(|v| report.violations.push(v));
+
+        // subnet_in is sorted by key after check_overlaps; distinct
+        // subnets = distinct key >> 24 (dropping λ and rack bits)
+        report.subnets_used = {
+            let mut c = 0usize;
+            let mut last = u64::MAX;
+            for (k, _, _, _) in &subnet_in {
+                let sk = k >> 24;
+                if sk != last {
+                    c += 1;
+                    last = sk;
+                }
+            }
+            c
+        };
+        if report.makespan_slots > 0 && report.subnets_used > 0 {
+            // fraction of the touched (subnet × wavelength × slot) capacity
+            // actually carrying payload
+            report.subnet_utilization = report.slot_transmissions as f64
+                / (report.makespan_slots as f64
+                    * report.subnets_used as f64
+                    * p.lambda as f64);
+        }
+
+        // virtual clock: every round boundary pays one H2H (propagation +
+        // node I/O) — the estimator's convention (§7.4.1)
+        let rounds = sched.round_ends.len() as f64;
+        report.completion_time = report.makespan_slots as f64 * p.slot_time
+            + rounds * (p.propagation + p.io_latency);
+        report
+    }
+
+    fn check_ranges(&self, ins: &NicInstruction, report: &mut FabricReport) {
+        let p = &self.p;
+        fn bad_into(report: &mut FabricReport, detail: String) {
+            report.violations.push(Violation::OutOfRange { detail });
+        }
+        macro_rules! bad {
+            ($($arg:tt)*) => { bad_into(report, format!($($arg)*)) };
+        }
+        if ins.wavelength >= p.lambda {
+            bad!("wavelength {} ≥ Λ={}", ins.wavelength, p.lambda);
+        }
+        if ins.trx >= p.x {
+            bad!("transceiver group {} ≥ x={}", ins.trx, p.x);
+        }
+        if ins.subnet.src_group >= p.x || ins.subnet.dst_group >= p.x {
+            bad!("subnet groups {:?} out of range", ins.subnet);
+        }
+        if ins.subnet.src_group != ins.src.g {
+            bad!("subnet source group {} ≠ src {}", ins.subnet.src_group, ins.src);
+        }
+        for d in &ins.dsts {
+            if *d == ins.src {
+                bad!("self-transmission at {}", ins.src);
+            }
+            if d.g != ins.subnet.dst_group {
+                bad!("dst {} not in subnet group {}", d, ins.subnet.dst_group);
+            }
+            if d.lambda != ins.wavelength {
+                report.violations.push(Violation::WavelengthFilterMismatch {
+                    detail: format!(
+                        "dst {} filters λ{} but transmission is λ{}",
+                        d, d.lambda, ins.wavelength
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Sort one resource class's flat interval list by (key, start) and
+/// report overlapping same-key pairs. Single sort, zero per-key allocs.
+fn check_overlaps(
+    intervals: &mut [(u64, u64, u64, u32)],
+    mk: impl Fn(usize, usize) -> Violation,
+) -> Vec<Violation> {
+    intervals.sort_unstable();
+    let mut out = Vec::new();
+    for w in intervals.windows(2) {
+        let (k0, _, e0, i0) = w[0];
+        let (k1, s1, _, i1) = w[1];
+        if k0 == k1 && s1 < e0 {
+            out.push(mk(i0 as usize, i1 as usize));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::ramp_x::RampX;
+    use crate::collectives::MpiOp;
+    use crate::rng::Xoshiro256;
+    use crate::topology::ramp::NodeCoord;
+    use crate::transcoder::{transcode_plan, SubnetId};
+
+    fn random_inputs(n: usize, c: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut r = Xoshiro256::seed_from(seed);
+        (0..n).map(|_| (0..c).map(|_| r.next_f32()).collect()).collect()
+    }
+
+    #[test]
+    fn every_op_executes_clean_on_fabric() {
+        for p in [
+            ram(2, 2, 4),
+            RampParams::fig8_example(),
+            ram(4, 4, 8),
+            ram(2, 2, 8),
+        ] {
+            let fabric = OpticalFabric::new(p.clone());
+            let n = p.n_nodes();
+            for op in MpiOp::all() {
+                let elems = match op {
+                    MpiOp::AllGather | MpiOp::Gather { .. } => 4,
+                    _ => 2 * n,
+                };
+                let mut bufs = random_inputs(n, elems, 11);
+                let plan = RampX::new(&p).run(op, &mut bufs).unwrap();
+                let sched = transcode_plan(&p, &plan).unwrap();
+                let report = fabric.execute(&sched);
+                assert!(
+                    report.ok(),
+                    "{} on {p:?}: {:?}",
+                    op.name(),
+                    report.violations
+                );
+                if !matches!(op, MpiOp::Barrier) {
+                    assert!(report.wire_bytes > 0);
+                }
+                assert!(report.completion_time > 0.0);
+            }
+        }
+    }
+
+    fn ram(x: usize, j: usize, l: usize) -> RampParams {
+        RampParams::new(x, j, l, 1)
+    }
+
+    fn mk_ins(
+        src: NodeCoord,
+        dst: NodeCoord,
+        trx: usize,
+        w: usize,
+        slot: u64,
+        n_slots: u64,
+    ) -> NicInstruction {
+        NicInstruction {
+            src,
+            dsts: vec![dst],
+            trx,
+            subnet: SubnetId { src_group: src.g, dst_group: dst.g, trx },
+            wavelength: w,
+            slot,
+            n_slots,
+            bytes: 100,
+        }
+    }
+
+    #[test]
+    fn detects_subnet_wavelength_collision() {
+        // B&S shares the wavelength space across racks — two racks on the
+        // same (subnet, λ) collide (legal under R&S, which routes racks).
+        let p = RampParams::fig8_example().with_broadcast_select();
+        let fabric = OpticalFabric::new(p);
+        let a = mk_ins(NodeCoord::new(0, 0, 1), NodeCoord::new(1, 0, 4), 1, 4, 0, 2);
+        let b = mk_ins(NodeCoord::new(0, 1, 2), NodeCoord::new(1, 1, 4), 1, 4, 1, 2);
+        let sched = Schedule { instructions: vec![a, b], total_slots: 3, round_ends: vec![3] };
+        let report = fabric.execute(&sched);
+        assert!(report
+            .violations
+            .iter()
+            .any(|v| matches!(v, Violation::SubnetWavelengthCollision { .. })));
+    }
+
+    #[test]
+    fn detects_transmitter_conflict() {
+        let p = RampParams::fig8_example();
+        let fabric = OpticalFabric::new(p);
+        let src = NodeCoord::new(0, 0, 0);
+        let a = mk_ins(src, NodeCoord::new(1, 0, 4), 1, 4, 0, 3);
+        let b = mk_ins(src, NodeCoord::new(1, 0, 5), 1, 5, 2, 2);
+        let sched = Schedule { instructions: vec![a, b], total_slots: 5, round_ends: vec![5] };
+        let report = fabric.execute(&sched);
+        assert!(report
+            .violations
+            .iter()
+            .any(|v| matches!(v, Violation::TransmitterBusy { .. })));
+    }
+
+    #[test]
+    fn detects_filter_mismatch_and_ranges() {
+        let p = RampParams::fig8_example();
+        let fabric = OpticalFabric::new(p);
+        // transmission on λ3 to a node filtering λ4
+        let bad = mk_ins(NodeCoord::new(0, 0, 0), NodeCoord::new(1, 0, 4), 1, 3, 0, 1);
+        let sched = Schedule { instructions: vec![bad], total_slots: 1, round_ends: vec![1] };
+        let report = fabric.execute(&sched);
+        assert!(report
+            .violations
+            .iter()
+            .any(|v| matches!(v, Violation::WavelengthFilterMismatch { .. })));
+    }
+
+    #[test]
+    fn detects_payload_overrun() {
+        let p = RampParams::fig8_example();
+        let fabric = OpticalFabric::new(p.clone());
+        let mut ins = mk_ins(NodeCoord::new(0, 0, 0), NodeCoord::new(1, 0, 4), 1, 4, 0, 1);
+        ins.bytes = group_slot_payload(&p) * 5;
+        let sched = Schedule { instructions: vec![ins], total_slots: 1, round_ends: vec![1] };
+        let report = fabric.execute(&sched);
+        assert!(report
+            .violations
+            .iter()
+            .any(|v| matches!(v, Violation::PayloadOverrun { .. })));
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let p = RampParams::fig8_example();
+        let fabric = OpticalFabric::new(p.clone());
+        let n = p.n_nodes();
+        let mut bufs = random_inputs(n, 64 * n, 13);
+        let plan = RampX::new(&p).all_reduce(&mut bufs).unwrap();
+        let sched = transcode_plan(&p, &plan).unwrap();
+        let report = fabric.execute(&sched);
+        assert!(report.subnet_utilization > 0.0 && report.subnet_utilization <= 1.0 + 1e-9);
+        assert!(report.subnets_used <= p.n_subnets());
+    }
+}

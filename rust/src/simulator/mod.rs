@@ -1,0 +1,12 @@
+//! Timeslot-accurate optical fabric simulator.
+//!
+//! The transcoder *claims* its schedules are contention-free; the fabric
+//! is the independent referee. It executes a NIC instruction stream
+//! against a physical model of the RAMP data plane (§3.1) — `b·x³`
+//! passive subnets × `Λ` wavelengths, per-node transmitter/receiver
+//! gates — and reports any physical violation plus wire-level statistics
+//! and the virtual-clock completion time.
+
+pub mod fabric;
+
+pub use fabric::{FabricReport, OpticalFabric, Violation};

@@ -1,0 +1,102 @@
+//! In-house property-testing harness (the offline registry has no
+//! proptest): seeded random-case sweeps with failure-case reporting.
+//!
+//! ```no_run
+//! use ramp::testutil::prop;
+//! prop::check(100, 42, |g| {
+//!     let n = g.usize_in(1, 100);
+//!     assert!(n >= 1 && n < 100);
+//! });
+//! ```
+
+pub mod prop {
+    use crate::rng::Xoshiro256;
+
+    /// A per-case generator handed to the property closure.
+    pub struct Gen {
+        pub rng: Xoshiro256,
+        pub case: usize,
+    }
+
+    impl Gen {
+        pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+            self.rng.range(lo, hi)
+        }
+
+        pub fn f32_unit(&mut self) -> f32 {
+            self.rng.next_f32()
+        }
+
+        pub fn f32_signed(&mut self, scale: f32) -> f32 {
+            (self.rng.next_f32() - 0.5) * 2.0 * scale
+        }
+
+        pub fn vec_f32(&mut self, n: usize, scale: f32) -> Vec<f32> {
+            (0..n).map(|_| self.f32_signed(scale)).collect()
+        }
+
+        pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+            &xs[self.rng.range(0, xs.len())]
+        }
+
+        pub fn bool(&mut self) -> bool {
+            self.rng.next_u64() & 1 == 1
+        }
+    }
+
+    /// Run `cases` random cases of `property`, deterministic in `seed`.
+    /// Panics (with the failing case number) if any case panics.
+    pub fn check<F: FnMut(&mut Gen)>(cases: usize, seed: u64, mut property: F) {
+        for case in 0..cases {
+            let mut g = Gen {
+                rng: Xoshiro256::seed_from(seed.wrapping_add(case as u64 * 0x9E37_79B9)),
+                case,
+            };
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                property(&mut g);
+            }));
+            let _ = &g;
+            if let Err(e) = result {
+                let msg = e
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                panic!("property failed at case {case} (seed {seed}): {msg}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::prop;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut seen = 0usize;
+        prop::check(50, 7, |g| {
+            let n = g.usize_in(1, 10);
+            assert!((1..10).contains(&n));
+            seen += 1;
+        });
+        assert_eq!(seen, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn check_reports_failing_case() {
+        prop::check(500, 1, |g| {
+            assert!(g.usize_in(0, 100) < 95, "unlucky draw");
+        });
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let mut a = Vec::new();
+        prop::check(5, 99, |g| a.push(g.usize_in(0, 1000)));
+        let mut b = Vec::new();
+        prop::check(5, 99, |g| b.push(g.usize_in(0, 1000)));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,209 @@
+//! EPS Fat-Tree / DGX-SuperPod baseline (§7.5).
+//!
+//! The paper's EPS baseline is a DGX-A100 SuperPod scaled to 65,536 GPUs as
+//! a 4-tier fat-tree: tier 0 is the intra-server NVSwitch domain (8 GPUs at
+//! 2.4 Tbps unidirectional each, 100 ns switch, 20 ns propagation), tiers
+//! 1–3 are InfiniBand (200 Gbps/GPU, QM8790 350 ns switch) with inter-tier
+//! propagation 10 ns / 50 ns / 1.25 µs. The intra:inter oversubscription σ
+//! is 12:1 in the real SuperPod; the algorithmic comparisons of §8.4 use a
+//! 1:1 (bandwidth-matched) variant.
+
+use crate::topology::LinkProfile;
+use crate::units::{GBPS, NS, TBPS, US};
+
+/// One tier of the fat-tree hierarchy (tier 0 = intra-server).
+#[derive(Clone, Debug)]
+pub struct Tier {
+    /// Fan-out: how many units of the tier below this tier aggregates.
+    pub radix: usize,
+    /// Unidirectional bandwidth available to one node through this tier,
+    /// bit/s (post-oversubscription).
+    pub bw_per_node: f64,
+    /// Per-switch forwarding latency at this tier, s.
+    pub switch_latency: f64,
+    /// One-way propagation latency of links at this tier, s.
+    pub propagation: f64,
+}
+
+/// A multi-tier fat-tree (SuperPod-like when `superpod()` is used).
+#[derive(Clone, Debug)]
+pub struct FatTree {
+    pub tiers: Vec<Tier>,
+    /// Node in-out latency (memory → transceiver), s.
+    pub io_latency: f64,
+}
+
+impl FatTree {
+    /// The paper's scaled SuperPod: 8 GPUs/server × 20-up/20-down QM8790
+    /// tiers reaching 65,536 GPUs with 4 tiers. `oversub` is σ (1 = matched
+    /// bandwidth, 12 = real SuperPod 2.4 Tbps : 0.2 Tbps).
+    pub fn superpod(oversub: f64) -> Self {
+        assert!(oversub >= 1.0);
+        let inter_bw = 2.4 * TBPS / oversub;
+        FatTree {
+            tiers: vec![
+                Tier {
+                    radix: 8,
+                    bw_per_node: 2.4 * TBPS,
+                    switch_latency: 100.0 * NS, // NVSwitch
+                    propagation: 20.0 * NS,
+                },
+                Tier {
+                    radix: 20,
+                    bw_per_node: inter_bw,
+                    switch_latency: 350.0 * NS, // QM8790
+                    propagation: 10.0 * NS,
+                },
+                Tier {
+                    radix: 20,
+                    bw_per_node: inter_bw,
+                    switch_latency: 350.0 * NS,
+                    propagation: 50.0 * NS,
+                },
+                Tier {
+                    radix: 21, // 8*20*20*21 = 67,200 ≥ 65,536
+                    bw_per_node: inter_bw,
+                    switch_latency: 350.0 * NS,
+                    propagation: 1.25 * US,
+                },
+            ],
+            io_latency: 100.0 * NS,
+        }
+    }
+
+    /// A generic DCN fat-tree of 100 Gbps ports (Arista 7170-based, Table 3
+    /// cost/power analysis), `copies` parallel planes.
+    pub fn dcn(oversub: f64, copies: usize) -> Self {
+        let bw = 100.0 * GBPS * copies as f64 / oversub;
+        FatTree {
+            tiers: (0..3)
+                .map(|t| Tier {
+                    radix: if t == 0 { 32 } else { 32 },
+                    bw_per_node: bw,
+                    switch_latency: 450.0 * NS,
+                    propagation: if t == 0 { 10.0 * NS } else { 500.0 * NS },
+                })
+                .collect(),
+            io_latency: 100.0 * NS,
+        }
+    }
+
+    /// Total nodes the tree supports.
+    pub fn capacity_nodes(&self) -> usize {
+        self.tiers.iter().map(|t| t.radix).product()
+    }
+
+    /// Number of nodes under one subtree rooted at `tier` (tier 0 subtree =
+    /// one server).
+    pub fn nodes_under(&self, tier: usize) -> usize {
+        self.tiers[..=tier].iter().map(|t| t.radix).product()
+    }
+
+    /// The lowest tier whose subtree contains both nodes (0-based; node ids
+    /// are assigned depth-first, so greedy placement = contiguous ids).
+    pub fn lowest_common_tier(&self, a: usize, b: usize) -> usize {
+        for tier in 0..self.tiers.len() {
+            let span = self.nodes_under(tier);
+            if a / span == b / span {
+                return tier;
+            }
+        }
+        self.tiers.len() - 1
+    }
+
+    /// Effective per-node link profile for a node pair whose lowest common
+    /// tier is `tier`: bandwidth of the narrowest tier crossed and the
+    /// summed up-and-down switching + propagation latency.
+    pub fn link_profile(&self, tier: usize) -> LinkProfile {
+        let tier = tier.min(self.tiers.len() - 1);
+        let bw = self.tiers[..=tier]
+            .iter()
+            .map(|t| t.bw_per_node)
+            .fold(f64::INFINITY, f64::min);
+        // Path through tier k: traverse one switch at each tier 0..=k going
+        // up and each tier k-1..0 going down (2k+1 switches), plus the link
+        // propagation at each level both ways.
+        let mut latency = 0.0;
+        for (i, t) in self.tiers[..=tier].iter().enumerate() {
+            let hops = if i == tier { 1.0 } else { 2.0 };
+            latency += hops * t.switch_latency + 2.0 * t.propagation;
+        }
+        LinkProfile::new(bw, latency + self.io_latency)
+    }
+
+    /// Link profile for the worst pair among the first `n` (greedily
+    /// placed) nodes.
+    pub fn worst_profile(&self, n: usize) -> LinkProfile {
+        assert!(n >= 1);
+        if n == 1 {
+            return self.link_profile(0);
+        }
+        self.link_profile(self.lowest_common_tier(0, n - 1))
+    }
+
+    /// Highest tier index used by a job of `n` greedily-placed nodes.
+    pub fn top_tier_for(&self, n: usize) -> usize {
+        if n <= 1 {
+            0
+        } else {
+            self.lowest_common_tier(0, n - 1)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn superpod_scales_past_65536() {
+        let ft = FatTree::superpod(12.0);
+        assert!(ft.capacity_nodes() >= 65_536, "{}", ft.capacity_nodes());
+        assert_eq!(ft.nodes_under(0), 8);
+        assert_eq!(ft.nodes_under(1), 160);
+    }
+
+    #[test]
+    fn lca_tiers() {
+        let ft = FatTree::superpod(1.0);
+        assert_eq!(ft.lowest_common_tier(0, 7), 0); // same server
+        assert_eq!(ft.lowest_common_tier(0, 8), 1); // adjacent servers
+        assert_eq!(ft.lowest_common_tier(0, 159), 1);
+        assert_eq!(ft.lowest_common_tier(0, 160), 2);
+        assert_eq!(ft.lowest_common_tier(0, 3200), 3);
+    }
+
+    #[test]
+    fn oversubscription_cuts_bandwidth() {
+        let matched = FatTree::superpod(1.0);
+        let real = FatTree::superpod(12.0);
+        let pm = matched.link_profile(2);
+        let pr = real.link_profile(2);
+        assert!((pm.bandwidth - 2.4 * TBPS).abs() < 1e6);
+        assert!((pr.bandwidth - 0.2 * TBPS).abs() < 1e6);
+        // latency is oversub-independent
+        assert!((pm.latency - pr.latency).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_monotone_in_tier() {
+        let ft = FatTree::superpod(1.0);
+        let mut last = 0.0;
+        for t in 0..ft.tiers.len() {
+            let p = ft.link_profile(t);
+            assert!(p.latency > last, "tier {t}");
+            last = p.latency;
+        }
+        // intra-server: 1 NVSwitch + 2×20ns prop + 100ns IO
+        let p0 = ft.link_profile(0);
+        assert!((p0.latency - (100.0 + 40.0 + 100.0) * NS).abs() < 1e-12);
+    }
+
+    #[test]
+    fn worst_profile_tracks_job_size() {
+        let ft = FatTree::superpod(12.0);
+        assert_eq!(ft.worst_profile(8).bandwidth, 2.4 * TBPS);
+        assert_eq!(ft.worst_profile(9).bandwidth, 0.2 * TBPS);
+        assert_eq!(ft.top_tier_for(65_536), 3);
+    }
+}

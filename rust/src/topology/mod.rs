@@ -1,0 +1,28 @@
+//! Physical network topologies.
+//!
+//! [`ramp`] is the paper's contribution; [`fat_tree`], [`torus`] and
+//! [`topoopt`] are the EPS/OCS baselines of §7.5 used by the estimator and
+//! the benchmark harness.
+
+pub mod fat_tree;
+pub mod ramp;
+pub mod topoopt;
+pub mod torus;
+
+/// A link (or link class) in a topology's critical path, as consumed by the
+/// MPI estimator (§7.4.1): effective unidirectional bandwidth and one-way
+/// latency components.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkProfile {
+    /// Effective unidirectional bandwidth available to one node across this
+    /// link class, in bit/s (after oversubscription/load sharing).
+    pub bandwidth: f64,
+    /// One-way propagation + switching latency through this link class, s.
+    pub latency: f64,
+}
+
+impl LinkProfile {
+    pub fn new(bandwidth: f64, latency: f64) -> Self {
+        Self { bandwidth, latency }
+    }
+}

@@ -1,0 +1,294 @@
+//! The RAMP data plane (§3.1): parameters, node coordinates, and the
+//! architecture-level formulae of Table 2.
+//!
+//! A RAMP network has `x` communication groups of `J ≤ x` racks, each rack
+//! holding `Λ` nodes (one per wavelength channel). Every node carries `x`
+//! transceiver groups of `b` transceivers at line rate `B`. Node
+//! coordinates are `(g, j, λ)` with `0 ≤ g < x`, `0 ≤ j < J`, `0 ≤ λ < Λ`.
+//!
+//! Subnets: one per (source group, destination group, transceiver group,
+//! plane) — `b·x³` passive couplers in total. The `i`-th transmitter of any
+//! node reaches the `i`-th receiver of every node (port-level all-to-all).
+
+use crate::units::{GBPS, NS, US};
+
+/// Subnet implementation choice (§3.1): a plain star coupler (Broadcast &
+/// Select — lossiest, racks of a group pair share the wavelength space) or
+/// AWGR + SOA crossbar (Route & Select — rack-to-rack routing, so each
+/// rack pair gets its own wavelength space; enables the full-capacity
+/// pairwise step 4 of §6.2.2 formula 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubnetKind {
+    BroadcastSelect,
+    RouteSelect,
+}
+
+/// Static parameters of a RAMP deployment (Table 2 + §4.1 technology).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RampParams {
+    /// Number of communication groups (`x`); also transceiver groups/node.
+    pub x: usize,
+    /// Racks per communication group (`J ≤ x`).
+    pub j: usize,
+    /// Nodes per rack = number of wavelength channels (`Λ`).
+    pub lambda: usize,
+    /// Transceivers per transceiver group (`b`).
+    pub b: usize,
+    /// Effective line rate per transceiver, bit/s (`B`; paper: 400 Gbps).
+    pub line_rate: f64,
+    /// Hardware circuit reconfiguration time (paper: < 1 ns wavelength
+    /// switching, sub-ns SOA gating; budgeted at 1 ns).
+    pub reconfig_time: f64,
+    /// Timeslot duration. Chosen so reconfiguration overhead ≤ 5%
+    /// (paper: minimum 20 ns data-transfer slot).
+    pub slot_time: f64,
+    /// Worst-case propagation latency between any node pair (paper: 1.3 µs
+    /// for the system analysis).
+    pub propagation: f64,
+    /// Minimum node in-out (intra-GPU/memory-to-transceiver) latency
+    /// (paper: 100 ns for every architecture).
+    pub io_latency: f64,
+    /// Subnet implementation (§3.1). Performance analyses use
+    /// Route & Select (the paper's §6.2.2 formula-1 step 4 needs it);
+    /// the §4.2 power budget uses Broadcast & Select as worst case.
+    pub subnet_kind: SubnetKind,
+}
+
+impl RampParams {
+    /// The paper's maximum-scale configuration (§4.2): `Λ=64, x=J=32, b=1,
+    /// B=400 Gbps` → 65,536 nodes × 12.8 Tbps.
+    pub fn max_scale() -> Self {
+        Self::new(32, 32, 64, 1)
+    }
+
+    /// A RAMP network with the paper's §4.1 technology constants.
+    pub fn new(x: usize, j: usize, lambda: usize, b: usize) -> Self {
+        assert!(x >= 2, "need at least two communication groups");
+        assert!(j >= 1 && j <= x, "paper requires J <= x (J={j}, x={x})");
+        assert!(
+            lambda >= x && lambda % x == 0,
+            "Λ must be a positive multiple of x for device-group mapping (Λ={lambda}, x={x})"
+        );
+        assert!(b >= 1);
+        Self {
+            x,
+            j,
+            lambda,
+            b,
+            line_rate: 400.0 * GBPS,
+            reconfig_time: 1.0 * NS,
+            slot_time: 20.0 * NS,
+            propagation: 1.3 * US,
+            io_latency: 100.0 * NS,
+            subnet_kind: SubnetKind::RouteSelect,
+        }
+    }
+
+    /// Same parameters with Broadcast & Select subnets (the lossiest
+    /// configuration of §4.2; racks share each subnet's wavelength space).
+    pub fn with_broadcast_select(mut self) -> Self {
+        self.subnet_kind = SubnetKind::BroadcastSelect;
+        self
+    }
+
+    /// Small lab-scale instance used across tests/examples (54 nodes in the
+    /// paper's Fig. 8 uses x=J=3, Λ=6).
+    pub fn fig8_example() -> Self {
+        Self::new(3, 3, 6, 1)
+    }
+
+    /// Smallest max-scale-shaped configuration (J = x, Λ = 2x, capped at
+    /// the paper's x = 32 / Λ = 64 technology limits) that fits `n` nodes.
+    /// Used by the estimator to model jobs of arbitrary size.
+    pub fn sized_for(n: usize) -> Self {
+        assert!(n >= 1);
+        for x in 2..=32usize {
+            if 2 * x * x * x >= n {
+                return Self::new(x, x, 2 * x, 1);
+            }
+        }
+        let p = Self::max_scale();
+        assert!(
+            n <= p.n_nodes(),
+            "{n} nodes exceed the maximum RAMP scale of {}",
+            p.n_nodes()
+        );
+        p
+    }
+
+    /// Total number of nodes `N = x · J · Λ`.
+    pub fn n_nodes(&self) -> usize {
+        self.x * self.j * self.lambda
+    }
+
+    /// Device groups per rack (`Λ / x`), the granularity of step 4.
+    pub fn device_groups(&self) -> usize {
+        self.lambda / self.x
+    }
+
+    /// Unidirectional node I/O capacity: `b · x · B` (12.8 Tbps at max
+    /// scale).
+    pub fn node_capacity(&self) -> f64 {
+        (self.b * self.x) as f64 * self.line_rate
+    }
+
+    /// Total system capacity `b · B · Λ · J · x` (0.84 Ebps at max scale
+    /// — the paper quotes `bBΛx²` for the J = x case).
+    pub fn system_capacity(&self) -> f64 {
+        self.node_capacity() * self.n_nodes() as f64 / self.x as f64 * self.x as f64
+    }
+
+    /// Number of passive subnets `b · x³` (a coupler per source-group ×
+    /// dest-group × transceiver-group triple, times b planes).
+    pub fn n_subnets(&self) -> usize {
+        self.b * self.x * self.x * self.x
+    }
+
+    /// Total transceivers in the system: `b · x · N = b·x²·J·Λ`.
+    pub fn n_transceivers(&self) -> usize {
+        self.b * self.x * self.n_nodes()
+    }
+
+    /// Total fibres `2 · b · J · x³` (Table 2).
+    pub fn n_fibres(&self) -> usize {
+        2 * self.b * self.j * self.x * self.x * self.x
+    }
+
+    /// Bisection bandwidth in bit/s: full bisection, i.e. `N/2` node
+    /// capacities.
+    pub fn bisection_bandwidth(&self) -> f64 {
+        self.n_nodes() as f64 / 2.0 * self.node_capacity()
+    }
+
+    /// Per-timeslot payload bytes for one transceiver (minimum message
+    /// granularity; paper: 950 B at 400 Gbps / 19 ns payload).
+    pub fn slot_payload_bytes(&self) -> u64 {
+        let payload_time = self.slot_time - self.reconfig_time;
+        ((payload_time * self.line_rate) / 8.0).floor() as u64
+    }
+
+    /// Fraction of a timeslot usable for payload (≥ 0.95 by construction).
+    pub fn slot_efficiency(&self) -> f64 {
+        (self.slot_time - self.reconfig_time) / self.slot_time
+    }
+
+    /// Iterate over all node coordinates in rank order.
+    pub fn nodes(&self) -> impl Iterator<Item = NodeCoord> + '_ {
+        let (x, j, l) = (self.x, self.j, self.lambda);
+        (0..x).flat_map(move |g| {
+            (0..j).flat_map(move |r| (0..l).map(move |w| NodeCoord::new(g, r, w)))
+        })
+    }
+}
+
+/// Coordinate of a node in a RAMP network: communication group `g`,
+/// rack `j`, device/wavelength `λ`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeCoord {
+    pub g: usize,
+    pub j: usize,
+    pub lambda: usize,
+}
+
+impl NodeCoord {
+    pub fn new(g: usize, j: usize, lambda: usize) -> Self {
+        Self { g, j, lambda }
+    }
+
+    /// Flat node id: `λ + Λ·j + Λ·J·g` (rack-major within group).
+    pub fn flat(&self, p: &RampParams) -> usize {
+        self.lambda + p.lambda * (self.j + p.j * self.g)
+    }
+
+    /// Inverse of [`NodeCoord::flat`].
+    pub fn from_flat(id: usize, p: &RampParams) -> Self {
+        let lambda = id % p.lambda;
+        let rest = id / p.lambda;
+        let j = rest % p.j;
+        let g = rest / p.j;
+        assert!(g < p.x, "node id {id} out of range for {p:?}");
+        Self { g, j, lambda }
+    }
+
+    /// Device number within the device group (`λ mod x`).
+    pub fn device(&self, p: &RampParams) -> usize {
+        self.lambda % p.x
+    }
+
+    /// Device-group index within the rack (`⌊λ/x⌋`).
+    pub fn device_group(&self, p: &RampParams) -> usize {
+        self.lambda / p.x
+    }
+}
+
+impl std::fmt::Display for NodeCoord {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "(g{},j{},λ{})", self.g, self.j, self.lambda)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::TBPS;
+
+    #[test]
+    fn max_scale_matches_paper() {
+        let p = RampParams::max_scale();
+        assert_eq!(p.n_nodes(), 65_536);
+        assert!((p.node_capacity() - 12.8 * TBPS).abs() < 1e6);
+        // 0.84 Ebps system capacity
+        let sys = p.node_capacity() * p.n_nodes() as f64;
+        assert!((sys / 1e18 - 0.8388).abs() < 0.01, "{}", sys / 1e18);
+        assert_eq!(p.n_subnets(), 32 * 32 * 32);
+        assert_eq!(p.n_transceivers(), 32 * 65_536);
+        assert_eq!(p.device_groups(), 2);
+    }
+
+    #[test]
+    fn slot_payload_is_950b() {
+        let p = RampParams::max_scale();
+        assert_eq!(p.slot_payload_bytes(), 950);
+        assert!(p.slot_efficiency() >= 0.95);
+    }
+
+    #[test]
+    fn fig8_example_dims() {
+        let p = RampParams::fig8_example();
+        assert_eq!(p.n_nodes(), 54);
+        assert_eq!(p.device_groups(), 2);
+    }
+
+    #[test]
+    fn flat_roundtrip_all_nodes() {
+        let p = RampParams::fig8_example();
+        let mut seen = vec![false; p.n_nodes()];
+        for n in p.nodes() {
+            let id = n.flat(&p);
+            assert!(!seen[id], "duplicate flat id {id}");
+            seen[id] = true;
+            assert_eq!(NodeCoord::from_flat(id, &p), n);
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn device_group_math() {
+        let p = RampParams::fig8_example(); // x=3, Λ=6
+        let n = NodeCoord::new(1, 2, 5);
+        assert_eq!(n.device(&p), 2);
+        assert_eq!(n.device_group(&p), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "J <= x")]
+    fn rejects_j_above_x() {
+        RampParams::new(2, 3, 4, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of x")]
+    fn rejects_bad_lambda() {
+        RampParams::new(4, 4, 6, 1);
+    }
+}

@@ -1,0 +1,114 @@
+//! 2D-Torus baseline (§7.5): limited-connectivity EPS topology (TPU-pod
+//! style). The paper assumes 2.4 Tbps total node capacity split across the
+//! four directional links, 128 or 512 nodes per dimension, and worst-case
+//! per-hop propagation latency of 156 ns / 520 ns respectively.
+
+use crate::topology::LinkProfile;
+use crate::units::{NS, TBPS};
+
+/// A 2D torus of `dims[0] × dims[1]` nodes.
+#[derive(Clone, Debug)]
+pub struct Torus2D {
+    /// Ring length in each dimension.
+    pub dims: [usize; 2],
+    /// Total unidirectional node capacity across all links, bit/s.
+    pub node_capacity: f64,
+    /// One-hop neighbour latency (propagation + forwarding), s.
+    pub hop_latency: f64,
+    /// Node in-out latency, s.
+    pub io_latency: f64,
+}
+
+impl Torus2D {
+    /// The paper's small torus: 128 × 128 (16,384 nodes), 156 ns hops.
+    pub fn paper_128() -> Self {
+        Self {
+            dims: [128, 128],
+            node_capacity: 2.4 * TBPS,
+            hop_latency: 156.0 * NS,
+            io_latency: 100.0 * NS,
+        }
+    }
+
+    /// The paper's large torus: 512 × 128 (65,536 nodes), 520 ns hops.
+    pub fn paper_512() -> Self {
+        Self {
+            dims: [512, 128],
+            node_capacity: 2.4 * TBPS,
+            hop_latency: 520.0 * NS,
+            io_latency: 100.0 * NS,
+        }
+    }
+
+    /// Pick the paper torus sized for `n` nodes.
+    pub fn sized_for(n: usize) -> Self {
+        if n <= 128 * 128 {
+            Self::paper_128()
+        } else {
+            Self::paper_512()
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.dims[0] * self.dims[1]
+    }
+
+    /// Unidirectional bandwidth of a single directional link (4 links/node:
+    /// ±dim0, ±dim1).
+    pub fn link_bandwidth(&self) -> f64 {
+        self.node_capacity / 4.0
+    }
+
+    /// Bandwidth a node can put into one *dimension* when both directions
+    /// are usable (bidirectional rings — the NCCL 2D-torus strategy).
+    pub fn dim_bandwidth(&self) -> f64 {
+        self.node_capacity / 2.0
+    }
+
+    /// Ring sizes for a job of `n` greedily-placed nodes: fill dimension 0
+    /// first (highest-bandwidth placement per §7.4's node selection), then
+    /// tile dimension 1.
+    pub fn ring_dims_for(&self, n: usize) -> [usize; 2] {
+        assert!(n >= 1 && n <= self.n_nodes());
+        if n <= self.dims[0] {
+            [n, 1]
+        } else {
+            let d1 = n.div_ceil(self.dims[0]);
+            [self.dims[0], d1]
+        }
+    }
+
+    /// Link profile of one neighbour hop.
+    pub fn hop_profile(&self) -> LinkProfile {
+        LinkProfile::new(self.link_bandwidth(), self.hop_latency + self.io_latency)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_sizes() {
+        assert_eq!(Torus2D::paper_128().n_nodes(), 16_384);
+        assert_eq!(Torus2D::paper_512().n_nodes(), 65_536);
+        assert_eq!(Torus2D::sized_for(65_536).dims, [512, 128]);
+        assert_eq!(Torus2D::sized_for(1000).dims, [128, 128]);
+    }
+
+    #[test]
+    fn bandwidth_split() {
+        let t = Torus2D::paper_128();
+        assert!((t.link_bandwidth() - 0.6 * TBPS).abs() < 1.0);
+        assert!((t.dim_bandwidth() - 1.2 * TBPS).abs() < 1.0);
+    }
+
+    #[test]
+    fn ring_dims_grow_with_job() {
+        let t = Torus2D::paper_128();
+        assert_eq!(t.ring_dims_for(64), [64, 1]);
+        assert_eq!(t.ring_dims_for(128), [128, 1]);
+        assert_eq!(t.ring_dims_for(256), [128, 2]);
+        assert_eq!(t.ring_dims_for(16_384), [128, 128]);
+    }
+}

@@ -1,0 +1,463 @@
+//! The Network Transcoder (§6.2): translates MPI-Engine transfer plans
+//! into per-transceiver NIC instructions — subnet (path), wavelength and
+//! timeslots — with **no runtime scheduler**: every assignment is a pure
+//! function of the plan and the topology ("schedule-less"), and the
+//! resulting schedule is contention-free by construction (verified
+//! mechanically by the fabric simulator over every operation — the paper's
+//! "contention-less" claim).
+//!
+//! Resource model (one `b`-plane shown; planes are identical):
+//! * a **subnet** is the passive coupler connecting transmitter group `t`
+//!   of source communication group `g_src` to receiver group `t` of
+//!   destination group `g_dst` — `x³` of them;
+//! * within a subnet, each of the `Λ` wavelengths carries at most one
+//!   transmission per timeslot (signals of all racks of the pair are
+//!   broadcast-coupled — §3.1 "rack selection has not been performed");
+//! * a transmitter group sends at most one (wavelength, subnet) per slot;
+//! * a receiver group gates at most one source communication group per
+//!   slot (the filtered SOA-gated `x:1` combiner).
+//!
+//! Transceiver-group selection follows Eq 2, `Trx = (g_src + g_dst +
+//! j_src) mod x`, with the Eq 3–4 "additional transceiver groups" realized
+//! as offsets in multiples of `J` (the offsets that cannot alias another
+//! rack's base assignment).
+
+use crate::collectives::plan::{CollectivePlan, Round};
+use crate::topology::ramp::{NodeCoord, RampParams};
+use anyhow::{ensure, Result};
+use rustc_hash::FxHashMap as HashMap;
+
+/// Identity of a passive subnet: (source group, destination group,
+/// transceiver group). `b` planes share instruction streams (§3.1), so the
+/// plane index is implicit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SubnetId {
+    pub src_group: usize,
+    pub dst_group: usize,
+    pub trx: usize,
+}
+
+/// One NIC instruction: transceiver group `trx` of `src` transmits on
+/// `wavelength` through `subnet` during slots `[slot, slot + n_slots)`.
+#[derive(Clone, Debug)]
+pub struct NicInstruction {
+    pub src: NodeCoord,
+    pub dsts: Vec<NodeCoord>,
+    pub trx: usize,
+    pub subnet: SubnetId,
+    pub wavelength: usize,
+    pub slot: u64,
+    pub n_slots: u64,
+    pub bytes: u64,
+}
+
+/// A transcoded schedule: the full NIC instruction stream plus makespan.
+#[derive(Clone, Debug, Default)]
+pub struct Schedule {
+    pub instructions: Vec<NicInstruction>,
+    /// Total timeslots from first transmission to completion.
+    pub total_slots: u64,
+    /// Slot boundaries of each plan round (exclusive end), for latency
+    /// accounting per algorithmic step.
+    pub round_ends: Vec<u64>,
+}
+
+impl Schedule {
+    /// Wall-clock duration of the schedule on `p` (slots × slot time); the
+    /// estimator adds per-round propagation/H2H on top.
+    pub fn wire_time(&self, p: &RampParams) -> f64 {
+        self.total_slots as f64 * p.slot_time
+    }
+}
+
+/// Base transceiver-group for a source→destination pair (Eq 2).
+pub fn base_trx(p: &RampParams, src: NodeCoord, dst: NodeCoord) -> usize {
+    (src.g + dst.g + src.j) % p.x
+}
+
+/// Step-3 variant: `Trx = (g_src + j_dst) mod x`. Step 3's rack diagonals
+/// alias under Eq 2 when `x` is even (`2j ≡ 2j' (mod x)` has two
+/// solutions), putting two source groups on one receiver gate in the same
+/// slot. The variant stays injective per transmitter (distinct `j_dst`),
+/// per receiver (distinct `g_src`), and per (subnet, wavelength): a subnet
+/// `(g_src, g_dst, t)` decodes uniquely to `j_dst = t − g_src`,
+/// `ε = g_dst − j_dst`, `j_src = g_src − ε`.
+pub fn base_trx_step3(p: &RampParams, src: NodeCoord, dst: NodeCoord) -> usize {
+    (src.g + dst.j) % p.x
+}
+
+/// Base transceiver group given the producing subgroup step.
+pub fn base_trx_for(
+    p: &RampParams,
+    step: Option<crate::collectives::subgroups::Step>,
+    src: NodeCoord,
+    dst: NodeCoord,
+) -> usize {
+    match step {
+        Some(crate::collectives::subgroups::Step::S3) => base_trx_step3(p, src, dst),
+        _ => base_trx(p, src, dst),
+    }
+}
+
+/// The transceiver groups a transfer may stripe across: the base group
+/// plus `q−1` offsets in multiples of `J` (Eqs 3–4 under the
+/// rack-broadcast constraint), or all `x` groups for a Route & Select
+/// step-4 pairwise exchange (§6.2.2 formula 1).
+pub fn trx_groups(p: &RampParams, src: NodeCoord, dst: NodeCoord, q: usize) -> Vec<usize> {
+    trx_groups_from_base(p, base_trx(p, src, dst), q, false)
+}
+
+fn trx_groups_from_base(p: &RampParams, base: usize, q: usize, dense: bool) -> Vec<usize> {
+    if dense {
+        // R&S step 4: consecutive offsets, up to all x groups
+        let q = q.max(1).min(p.x);
+        return (0..q).map(|k| (base + k) % p.x).collect();
+    }
+    let q = q.max(1).min((p.x / p.j).max(1));
+    (0..q).map(|k| (base + k * p.j) % p.x).collect()
+}
+
+/// The receive wavelength of a node — fixed-receiver B&S: node `λ` of any
+/// rack listens on channel `λ` (§4.1).
+pub fn rx_wavelength(dst: NodeCoord) -> usize {
+    dst.lambda
+}
+
+/// Payload bytes one transceiver *group* moves per timeslot (`b` planes in
+/// parallel).
+pub fn group_slot_payload(p: &RampParams) -> u64 {
+    p.slot_payload_bytes() * p.b as u64
+}
+
+/// The transcoder: owns slot-occupancy state while transcoding one plan.
+///
+/// Wavelength-space granularity depends on the subnet kind (§3.1):
+/// * **Broadcast & Select** — all racks of a group pair share the
+///   subnet's wavelengths: occupancy key (subnet, λ);
+/// * **Route & Select** — per-rack AWGRs + J×J crossbar: the AWGR input
+///   constrains (subnet, λ, source rack) and the crossbar output
+///   (subnet, λ, destination rack).
+pub struct Transcoder<'a> {
+    p: &'a RampParams,
+    /// (subnet, wavelength, src rack or SHARED) → next free slot
+    subnet_in_free: HashMap<(SubnetId, usize, usize), u64>,
+    /// (subnet, wavelength, dst rack or SHARED) → next free slot
+    subnet_out_free: HashMap<(SubnetId, usize, usize), u64>,
+    /// (src flat id, trx) → next free slot
+    tx_free: HashMap<(usize, usize), u64>,
+    /// (dst flat id, trx) → next free slot (receiver gates one source
+    /// group per slot)
+    rx_free: HashMap<(usize, usize), u64>,
+}
+
+/// Rack key used when the subnet kind shares wavelengths across racks.
+const SHARED_RACK: usize = usize::MAX;
+
+fn rack_keys(p: &RampParams, src: NodeCoord, dst_rack: usize) -> (usize, usize) {
+    match p.subnet_kind {
+        crate::topology::ramp::SubnetKind::BroadcastSelect => (SHARED_RACK, SHARED_RACK),
+        crate::topology::ramp::SubnetKind::RouteSelect => (src.j, dst_rack),
+    }
+}
+
+impl<'a> Transcoder<'a> {
+    pub fn new(p: &'a RampParams) -> Self {
+        Self {
+            p,
+            subnet_in_free: HashMap::default(),
+            subnet_out_free: HashMap::default(),
+            tx_free: HashMap::default(),
+            rx_free: HashMap::default(),
+        }
+    }
+
+    /// Transcode a full collective plan into a NIC schedule. Rounds are
+    /// synchronous: round `r+1` starts after round `r` completes.
+    pub fn transcode(&mut self, plan: &CollectivePlan) -> Result<Schedule> {
+        let mut sched = Schedule::default();
+        let mut clock = 0u64;
+        for step in &plan.steps {
+            let q = step.trx_q.max(1);
+            for round in &step.rounds {
+                clock = self.transcode_round(round, q, step.step, clock, &mut sched)?;
+                sched.round_ends.push(clock);
+            }
+        }
+        sched.total_slots = clock;
+        Ok(sched)
+    }
+
+    /// Transcode one synchronous round starting at `start`; returns the
+    /// round's completion slot.
+    fn transcode_round(
+        &mut self,
+        round: &Round,
+        q: usize,
+        step: Option<crate::collectives::subgroups::Step>,
+        start: u64,
+        sched: &mut Schedule,
+    ) -> Result<u64> {
+        let p = self.p;
+        let mut end = start;
+        for t in &round.transfers {
+            ensure!(!t.dsts.is_empty(), "transfer without destinations");
+            ensure!(
+                t.dsts.iter().all(|d| *d != t.src),
+                "self-transfer from {}",
+                t.src
+            );
+            // a multicast shares one wavelength: all dsts must be tuned to
+            // the same channel and live in the same destination group
+            let w = rx_wavelength(t.dsts[0]);
+            let dg = t.dsts[0].g;
+            ensure!(
+                t.dsts.iter().all(|d| rx_wavelength(*d) == w && d.g == dg),
+                "multicast destinations must share wavelength and group"
+            );
+            let dense = step == Some(crate::collectives::subgroups::Step::S4)
+                && p.subnet_kind == crate::topology::ramp::SubnetKind::RouteSelect;
+            let groups =
+                trx_groups_from_base(p, base_trx_for(p, step, t.src, t.dsts[0]), q, dense);
+            let stripes = split_bytes(t.bytes, groups.len() as u64);
+            for (trx, bytes) in groups.iter().zip(stripes) {
+                if bytes == 0 {
+                    continue;
+                }
+                let n_slots = bytes.div_ceil(group_slot_payload(p)).max(1);
+                let subnet = SubnetId {
+                    src_group: t.src.g,
+                    dst_group: dg,
+                    trx: *trx,
+                };
+                // earliest slot ≥ start where the subnet wavelength space,
+                // the transmitter and every receiver are free
+                let mut slot = start;
+                slot = slot.max(*self.tx_free.get(&(t.src.flat(p), *trx)).unwrap_or(&0));
+                for d in &t.dsts {
+                    let (in_k, out_k) = rack_keys(p, t.src, d.j);
+                    slot = slot.max(*self.subnet_in_free.get(&(subnet, w, in_k)).unwrap_or(&0));
+                    slot = slot.max(*self.subnet_out_free.get(&(subnet, w, out_k)).unwrap_or(&0));
+                    slot = slot.max(*self.rx_free.get(&(d.flat(p), *trx)).unwrap_or(&0));
+                }
+                let done = slot + n_slots;
+                self.tx_free.insert((t.src.flat(p), *trx), done);
+                for d in &t.dsts {
+                    let (in_k, out_k) = rack_keys(p, t.src, d.j);
+                    self.subnet_in_free.insert((subnet, w, in_k), done);
+                    self.subnet_out_free.insert((subnet, w, out_k), done);
+                    self.rx_free.insert((d.flat(p), *trx), done);
+                }
+                end = end.max(done);
+                sched.instructions.push(NicInstruction {
+                    src: t.src,
+                    dsts: t.dsts.clone(),
+                    trx: *trx,
+                    subnet,
+                    wavelength: w,
+                    slot,
+                    n_slots,
+                    bytes,
+                });
+            }
+        }
+        Ok(end)
+    }
+}
+
+/// Split `bytes` as evenly as possible into `n` stripes.
+fn split_bytes(bytes: u64, n: u64) -> Vec<u64> {
+    let base = bytes / n;
+    let rem = bytes % n;
+    (0..n).map(|i| base + u64::from(i < rem)).collect()
+}
+
+/// Convenience: transcode a plan with a fresh transcoder.
+pub fn transcode_plan(p: &RampParams, plan: &CollectivePlan) -> Result<Schedule> {
+    Transcoder::new(p).transcode(plan)
+}
+
+/// Effective number of stripes a transfer of a given plan step gets.
+pub fn effective_stripes(
+    p: &RampParams,
+    step: Option<crate::collectives::subgroups::Step>,
+    q: usize,
+) -> u64 {
+    let dense = step == Some(crate::collectives::subgroups::Step::S4)
+        && p.subnet_kind == crate::topology::ramp::SubnetKind::RouteSelect;
+    if dense {
+        q.max(1).min(p.x) as u64
+    } else {
+        q.max(1).min((p.x / p.j).max(1)) as u64
+    }
+}
+
+/// Verify the paper's **schedule-less** property for a plan: the makespan
+/// of each round equals the slots of its largest single transfer — i.e.
+/// the deterministic assignment never had to serialize anything.
+pub fn is_contention_free(p: &RampParams, plan: &CollectivePlan) -> Result<bool> {
+    let sched = transcode_plan(p, plan)?;
+    let mut prev_end = 0u64;
+    let mut i = 0usize;
+    for step in &plan.steps {
+        let q = effective_stripes(p, step.step, step.trx_q);
+        for round in &step.rounds {
+            let round_end = sched.round_ends[i];
+            i += 1;
+            let biggest = round.max_transfer_bytes();
+            if biggest == 0 {
+                prev_end = round_end;
+                continue;
+            }
+            let per_stripe = biggest.div_ceil(q);
+            let ideal = per_stripe.div_ceil(group_slot_payload(p)).max(1);
+            if round_end - prev_end > ideal {
+                return Ok(false);
+            }
+            prev_end = round_end;
+        }
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::ramp_x::RampX;
+    use crate::collectives::MpiOp;
+    use crate::rng::Xoshiro256;
+
+    fn random_inputs(n: usize, c: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut r = Xoshiro256::seed_from(seed);
+        (0..n)
+            .map(|_| (0..c).map(|_| r.next_f32()).collect())
+            .collect()
+    }
+
+    fn check_no_double_booking(p: &RampParams, s: &Schedule) {
+        // the fabric simulator is the subnet-kind-aware referee
+        let report = crate::simulator::OpticalFabric::new(p.clone()).execute(s);
+        assert!(report.ok(), "physical violations: {:?}", report.violations);
+    }
+
+    #[test]
+    fn eq2_trx_selection() {
+        let p = RampParams::fig8_example();
+        let a = NodeCoord::new(1, 2, 3);
+        let b = NodeCoord::new(2, 0, 5);
+        assert_eq!(base_trx(&p, a, b), (1 + 2 + 2) % 3);
+        // q clamped by x/J = 1 at J = x
+        assert_eq!(trx_groups(&p, a, b, 5), vec![(1 + 2 + 2) % 3]);
+        // J < x frees offsets in multiples of J
+        let p2 = RampParams::new(8, 2, 16, 1);
+        let a2 = NodeCoord::new(0, 1, 0);
+        let b2 = NodeCoord::new(3, 0, 7);
+        assert_eq!(trx_groups(&p2, a2, b2, 3), vec![4, 6, 0]);
+    }
+
+    #[test]
+    fn every_ramp_x_plan_is_contention_free() {
+        // The headline §6 claim, checked mechanically per-op.
+        for p in [
+            RampParams::new(2, 2, 4, 1),
+            RampParams::fig8_example(),
+            RampParams::new(4, 2, 4, 1),
+            RampParams::new(2, 2, 8, 1), // DG=4 multi-round step 4
+            RampParams::new(4, 4, 8, 1), // even x with J = x (step-3 aliasing regression)
+            RampParams::new(4, 4, 4, 1), // DG=1
+        ] {
+            let n = p.n_nodes();
+            for op in MpiOp::all() {
+                let elems = match op {
+                    MpiOp::AllGather | MpiOp::Gather { .. } => 4,
+                    _ => 2 * n,
+                };
+                let mut bufs = random_inputs(n, elems, 42);
+                let plan = RampX::new(&p).run(op, &mut bufs).unwrap();
+                let sched = transcode_plan(&p, &plan).unwrap();
+                check_no_double_booking(&p, &sched);
+                assert!(
+                    is_contention_free(&p, &plan).unwrap(),
+                    "{} serialized on {p:?}",
+                    op.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn slot_counts_follow_payload() {
+        let p = RampParams::fig8_example();
+        let n = p.n_nodes();
+        // big message: slots per round = ceil(bytes / 950·b)
+        let elems = 4096 * n;
+        let mut bufs = random_inputs(n, elems, 7);
+        let plan = RampX::new(&p).reduce_scatter(&mut bufs).unwrap();
+        let sched = transcode_plan(&p, &plan).unwrap();
+        let payload = group_slot_payload(&p);
+        let mut expect = 0u64;
+        for step in &plan.steps {
+            let q = effective_stripes(&p, step.step, step.trx_q);
+            for round in &step.rounds {
+                expect += round
+                    .max_transfer_bytes()
+                    .div_ceil(q)
+                    .div_ceil(payload)
+                    .max(1);
+            }
+        }
+        assert_eq!(sched.total_slots, expect);
+    }
+
+    #[test]
+    fn wire_time_reflects_slots() {
+        let p = RampParams::fig8_example();
+        let mut bufs = random_inputs(p.n_nodes(), p.n_nodes(), 3);
+        let plan = RampX::new(&p).all_reduce(&mut bufs).unwrap();
+        let sched = transcode_plan(&p, &plan).unwrap();
+        assert!((sched.wire_time(&p) - sched.total_slots as f64 * p.slot_time).abs() < 1e-15);
+        assert!(sched.total_slots > 0);
+    }
+
+    #[test]
+    fn rejects_mixed_wavelength_multicast() {
+        use crate::collectives::plan::{CollectivePlan, PlanStep, Round, Transfer};
+        let p = RampParams::fig8_example();
+        let mut plan = CollectivePlan::default();
+        let mut st = PlanStep::default();
+        let mut r = Round::default();
+        r.transfers.push(Transfer {
+            src: NodeCoord::new(0, 0, 0),
+            dsts: vec![NodeCoord::new(1, 0, 1), NodeCoord::new(1, 0, 2)],
+            bytes: 100,
+        });
+        st.rounds.push(r);
+        plan.steps.push(st);
+        assert!(transcode_plan(&p, &plan).is_err());
+    }
+
+    #[test]
+    fn serialization_detected_when_forced() {
+        // Two same-subnet same-wavelength transfers in one round must
+        // serialize — is_contention_free reports it.
+        use crate::collectives::plan::{CollectivePlan, PlanStep, Round, Transfer};
+        let p = RampParams::fig8_example();
+        let mut plan = CollectivePlan::default();
+        let mut st = PlanStep::default();
+        let mut r = Round::default();
+        // srcs (0,0,1) and (0,0,2): same rack ⇒ same base trx toward group
+        // 1; both send to a λ=4 node ⇒ same subnet, same wavelength.
+        r.transfers.push(Transfer::unicast(
+            NodeCoord::new(0, 0, 1),
+            NodeCoord::new(1, 0, 4),
+            100,
+        ));
+        r.transfers.push(Transfer::unicast(
+            NodeCoord::new(0, 0, 2),
+            NodeCoord::new(1, 1, 4),
+            100,
+        ));
+        st.rounds.push(r);
+        plan.steps.push(st);
+        assert!(!is_contention_free(&p, &plan).unwrap());
+    }
+}

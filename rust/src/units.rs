@@ -1,0 +1,135 @@
+//! Physical units and constants used throughout the models.
+//!
+//! Conventions: time in **seconds** (f64), bandwidth in **bits/second**,
+//! message sizes in **bytes**, optical power in **dBm**, electrical power in
+//! **watts**, cost in **USD**. Helper constructors keep call sites legible
+//! (`400.0 * GBPS`, `1.3 * US`).
+
+/// 1 gigabit per second, in bit/s.
+pub const GBPS: f64 = 1e9;
+/// 1 terabit per second, in bit/s.
+pub const TBPS: f64 = 1e12;
+/// 1 nanosecond, in seconds.
+pub const NS: f64 = 1e-9;
+/// 1 microsecond, in seconds.
+pub const US: f64 = 1e-6;
+/// 1 millisecond, in seconds.
+pub const MS: f64 = 1e-3;
+/// 1 kibibyte.
+pub const KIB: u64 = 1 << 10;
+/// 1 mebibyte.
+pub const MIB: u64 = 1 << 20;
+/// 1 gibibyte.
+pub const GIB: u64 = 1 << 30;
+/// Decimal megabyte (the paper's "MB" is decimal in message-size sweeps).
+pub const MB: u64 = 1_000_000;
+/// Decimal gigabyte.
+pub const GB: u64 = 1_000_000_000;
+
+/// Convert a per-second rate in bit/s and a size in bytes to seconds.
+#[inline]
+pub fn transfer_time(bytes: u64, bits_per_sec: f64) -> f64 {
+    (bytes as f64 * 8.0) / bits_per_sec
+}
+
+/// dBm -> milliwatts.
+#[inline]
+pub fn dbm_to_mw(dbm: f64) -> f64 {
+    10f64.powf(dbm / 10.0)
+}
+
+/// milliwatts -> dBm.
+#[inline]
+pub fn mw_to_dbm(mw: f64) -> f64 {
+    10.0 * mw.log10()
+}
+
+/// Pretty-print seconds with an adaptive unit (ns/µs/ms/s).
+pub fn fmt_time(secs: f64) -> String {
+    let a = secs.abs();
+    if a < 1e-6 {
+        format!("{:.2} ns", secs * 1e9)
+    } else if a < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if a < 1.0 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if a < 120.0 {
+        format!("{:.3} s", secs)
+    } else if a < 7200.0 {
+        format!("{:.2} min", secs / 60.0)
+    } else if a < 48.0 * 3600.0 {
+        format!("{:.2} h", secs / 3600.0)
+    } else {
+        format!("{:.2} days", secs / 86400.0)
+    }
+}
+
+/// Pretty-print a byte count (KiB/MiB/GiB adaptive).
+pub fn fmt_bytes(bytes: u64) -> String {
+    let b = bytes as f64;
+    if bytes < KIB {
+        format!("{bytes} B")
+    } else if bytes < MIB {
+        format!("{:.1} KiB", b / KIB as f64)
+    } else if bytes < GIB {
+        format!("{:.1} MiB", b / MIB as f64)
+    } else {
+        format!("{:.2} GiB", b / GIB as f64)
+    }
+}
+
+/// Pretty-print a bandwidth in bit/s (Gbps/Tbps adaptive).
+pub fn fmt_bw(bps: f64) -> String {
+    if bps < TBPS {
+        format!("{:.1} Gbps", bps / GBPS)
+    } else {
+        format!("{:.2} Tbps", bps / TBPS)
+    }
+}
+
+/// Pretty-print a large count with thousands separators.
+pub fn fmt_count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_basic() {
+        // 1 GiB over 400 Gbps = 8 * 2^30 / 4e11 s ≈ 21.47 ms
+        let t = transfer_time(GIB, 400.0 * GBPS);
+        assert!((t - 0.02147).abs() < 1e-4, "{t}");
+    }
+
+    #[test]
+    fn dbm_roundtrip() {
+        for dbm in [-20.0, -3.0, 0.0, 10.0, 17.0] {
+            let mw = dbm_to_mw(dbm);
+            assert!((mw_to_dbm(mw) - dbm).abs() < 1e-9);
+        }
+        assert!((dbm_to_mw(0.0) - 1.0).abs() < 1e-12);
+        assert!((dbm_to_mw(10.0) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_time(5e-9), "5.00 ns");
+        assert_eq!(fmt_time(2.5e-4), "250.00 µs");
+        assert_eq!(fmt_time(0.0215), "21.500 ms");
+        assert_eq!(fmt_bytes(1024), "1.0 KiB");
+        assert_eq!(fmt_bw(400e9), "400.0 Gbps");
+        assert_eq!(fmt_bw(12.8e12), "12.80 Tbps");
+        assert_eq!(fmt_count(65536), "65,536");
+        assert_eq!(fmt_count(1_234_567), "1,234,567");
+    }
+}

@@ -1,0 +1,142 @@
+//! Integration property tests: the paper's §6 "schedule-less and
+//! contention-less" claim, checked mechanically over randomized
+//! parameters, operations, roots and message sizes — every plan the MPI
+//! Engine emits must transcode with zero serialization and execute on
+//! the fabric with zero physical violations.
+
+use ramp::collectives::ramp_x::{padded_len, RampX};
+use ramp::collectives::reference as oracle;
+use ramp::collectives::MpiOp;
+use ramp::rng::Xoshiro256;
+use ramp::simulator::OpticalFabric;
+use ramp::testutil::prop;
+use ramp::topology::ramp::RampParams;
+use ramp::transcoder::{is_contention_free, transcode_plan};
+
+fn fabrics() -> Vec<RampParams> {
+    vec![
+        RampParams::new(2, 1, 2, 1),
+        RampParams::new(2, 2, 4, 1),
+        RampParams::fig8_example(),
+        RampParams::new(4, 2, 4, 1),
+        RampParams::new(2, 2, 8, 1),
+        RampParams::new(4, 4, 8, 1),
+        RampParams::new(4, 4, 8, 2), // b = 2 planes
+        RampParams::new(5, 3, 10, 1), // odd x, J < x
+    ]
+}
+
+fn random_bufs(rng: &mut Xoshiro256, n: usize, elems: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| (0..elems).map(|_| (rng.next_below(2000) as f32) - 1000.0).collect())
+        .collect()
+}
+
+#[test]
+fn randomized_ops_are_contention_free_and_correct() {
+    let fabrics = fabrics();
+    prop::check(60, 2024, |g| {
+        let p = g.pick(&fabrics).clone();
+        let n = p.n_nodes();
+        let ops = MpiOp::all();
+        let op = match *g.pick(&ops) {
+            // randomize roots for rooted ops
+            MpiOp::Scatter { .. } => MpiOp::Scatter { root: g.usize_in(0, n) },
+            MpiOp::Gather { .. } => MpiOp::Gather { root: g.usize_in(0, n) },
+            MpiOp::Reduce { .. } => MpiOp::Reduce { root: g.usize_in(0, n) },
+            MpiOp::Broadcast { .. } => MpiOp::Broadcast { root: g.usize_in(0, n) },
+            other => other,
+        };
+        let elems = match op {
+            MpiOp::AllGather | MpiOp::Gather { .. } => g.usize_in(1, 16),
+            _ => padded_len(&p, g.usize_in(1, 4 * n)),
+        };
+        let mut rng = Xoshiro256::seed_from(g.case as u64 * 31 + 5);
+        let mut bufs = random_bufs(&mut rng, n, elems);
+        let inputs = bufs.clone();
+
+        let plan = RampX::new(&p).run(op, &mut bufs).expect("plan");
+
+        // data correctness vs the naive oracle
+        let expect = match op {
+            MpiOp::ReduceScatter => oracle::reduce_scatter(&inputs),
+            MpiOp::AllGather => oracle::all_gather(&inputs),
+            MpiOp::AllReduce => oracle::all_reduce(&inputs),
+            MpiOp::AllToAll => oracle::all_to_all(&inputs),
+            MpiOp::Scatter { root } => oracle::scatter(&inputs, root),
+            MpiOp::Gather { root } => oracle::gather(&inputs, root),
+            MpiOp::Reduce { root } => oracle::reduce(&inputs, root),
+            MpiOp::Broadcast { root } => oracle::broadcast(&inputs, root),
+            MpiOp::Barrier => bufs.clone(), // no data contract
+        };
+        if !matches!(op, MpiOp::Barrier) {
+            assert_eq!(bufs, expect, "{} data mismatch on {p:?}", op.name());
+        }
+
+        // schedule-less: no serialization beyond the ideal slot count
+        assert!(
+            is_contention_free(&p, &plan).expect("transcode"),
+            "{} serialized on {p:?}",
+            op.name()
+        );
+
+        // physical: zero violations on the fabric
+        let sched = transcode_plan(&p, &plan).expect("schedule");
+        let report = OpticalFabric::new(p.clone()).execute(&sched);
+        assert!(
+            report.ok(),
+            "{} fabric violations on {p:?}: {:?}",
+            op.name(),
+            report.violations
+        );
+    });
+}
+
+#[test]
+fn broadcast_select_fabrics_also_clean() {
+    // the conservative B&S wavelength-sharing rules must also hold
+    let fabrics: Vec<RampParams> =
+        fabrics().into_iter().map(|p| p.with_broadcast_select()).collect();
+    prop::check(30, 77, |g| {
+        let p = g.pick(&fabrics).clone();
+        let n = p.n_nodes();
+        let mut rng = Xoshiro256::seed_from(g.case as u64);
+        let mut bufs = random_bufs(&mut rng, n, padded_len(&p, 2 * n));
+        let plan = RampX::new(&p).run(MpiOp::AllReduce, &mut bufs).unwrap();
+        let sched = transcode_plan(&p, &plan).unwrap();
+        let report = OpticalFabric::new(p.clone()).execute(&sched);
+        assert!(report.ok(), "B&S violations on {p:?}: {:?}", report.violations);
+        assert!(is_contention_free(&p, &plan).unwrap(), "B&S serialized on {p:?}");
+    });
+}
+
+#[test]
+fn composition_identities() {
+    // gather(root) ∘ scatter(root) = identity on the root's buffer;
+    // broadcast then reduce-scatter distributes N·x slices
+    let p = RampParams::fig8_example();
+    let n = p.n_nodes();
+    let engine = RampX::new(&p);
+    let mut rng = Xoshiro256::seed_from(9);
+
+    let original: Vec<f32> = (0..n * 2).map(|_| rng.next_f32()).collect();
+    let mut bufs: Vec<Vec<f32>> = vec![vec![]; n];
+    bufs[5] = original.clone();
+    for (i, b) in bufs.iter_mut().enumerate() {
+        if i != 5 {
+            *b = vec![0.0; n * 2];
+        }
+    }
+    // scatter from rank 5 then gather back to rank 5
+    engine.scatter(&mut bufs, 5).unwrap();
+    engine.gather(&mut bufs, 5).unwrap();
+    assert_eq!(bufs[5], original);
+
+    // reduce == all_reduce at the root
+    let inputs = random_bufs(&mut rng, n, n);
+    let mut a = inputs.clone();
+    let mut b = inputs.clone();
+    engine.reduce(&mut a, 3).unwrap();
+    engine.all_reduce(&mut b).unwrap();
+    assert_eq!(a[3], b[3]);
+}
