@@ -1,0 +1,30 @@
+# RAMP reproduction — build/test/bench entry points.
+#
+#   make tier1        release build + full test suite (the CI gate)
+#   make bench-smoke  every bench binary at a tiny budget — catches bench
+#                     code regressions without waiting for real timings
+#   make bench-json   large-message collective benchmarks, machine-readable
+#                     results written to BENCH_collectives.json
+#   make artifacts    lower the L2 JAX graphs to HLO text (needs python+jax)
+
+BENCHES := collectives_bench ddl_bench estimator_bench fabric_bench \
+           runtime_bench transcoder_bench
+
+.PHONY: tier1 bench-smoke bench-json artifacts
+
+tier1:
+	cargo build --release && cargo test -q
+
+# RAMP_BENCH_MS caps every benchutil::bench budget; RAMP_BENCH_MIB shrinks
+# the large-message collective cases so the smoke pass stays in seconds.
+bench-smoke:
+	@for b in $(BENCHES); do \
+		echo "== smoke: $$b =="; \
+		RAMP_BENCH_MS=1 RAMP_BENCH_MIB=1 cargo bench --bench $$b -- --json /dev/null || exit 1; \
+	done
+
+bench-json:
+	cargo bench --bench collectives_bench -- --json BENCH_collectives.json
+
+artifacts:
+	python python/compile/aot.py

@@ -1,18 +1,148 @@
 //! Bench: RAMP-x collective executors (data movement) + Fig 15/18/23
-//! regeneration. `cargo bench --bench collectives_bench`.
+//! regeneration, plus the arena-vs-prerefactor large-message comparison.
+//!
+//! `cargo bench --bench collectives_bench -- --json BENCH_collectives.json`
+//! writes machine-readable results. Env knobs:
+//! * `RAMP_BENCH_MS`  — per-case time budget (ms), see `benchutil::bench`;
+//! * `RAMP_BENCH_MIB` — per-node MiB for the large-message cases
+//!   (default 64; the 128-node case then peaks at ~16 GB of RAM for the
+//!   arena slab, ~12 GB for the pre-refactor baseline's buffers).
 
-use ramp::benchutil::bench;
+use ramp::benchutil::{bench, JsonReporter};
+use ramp::collectives::arena::BufferArena;
 use ramp::collectives::ramp_x::RampX;
 use ramp::collectives::MpiOp;
 use ramp::rng::Xoshiro256;
 use ramp::topology::ramp::RampParams;
+
+/// The pre-refactor data plane, kept verbatim as the benchmark baseline:
+/// every algorithmic step rebuilt all N node buffers as fresh
+/// `Vec<Vec<f32>>` allocations (no plan emission — this measures pure
+/// data movement, which favors the baseline).
+mod baseline {
+    use ramp::collectives::ramp_x::subgroup_list;
+    use ramp::collectives::subgroups::{node_rank, Step};
+    use ramp::topology::ramp::RampParams;
+
+    pub fn reduce_scatter(p: &RampParams, bufs: &mut Vec<Vec<f32>>) {
+        let n = p.n_nodes();
+        for step in Step::active(p) {
+            let groups = subgroup_list(p, step);
+            let s = step.size(p);
+            let cur = bufs[0].len();
+            let chunk = cur / s;
+            let mut newb: Vec<Vec<f32>> = vec![Vec::new(); n];
+            for g in &groups {
+                for (i, mem) in g.iter().enumerate() {
+                    let mut acc = vec![0f32; chunk];
+                    for peer in g.iter() {
+                        let src = &bufs[node_rank(p, *peer)];
+                        for (a, v) in acc.iter_mut().zip(&src[i * chunk..(i + 1) * chunk]) {
+                            *a += v;
+                        }
+                    }
+                    newb[node_rank(p, *mem)] = acc;
+                }
+            }
+            *bufs = newb;
+        }
+    }
+
+    pub fn all_gather(p: &RampParams, bufs: &mut Vec<Vec<f32>>) {
+        let n = p.n_nodes();
+        for step in Step::active(p).into_iter().rev() {
+            let groups = subgroup_list(p, step);
+            let s = step.size(p);
+            let cur = bufs[0].len();
+            let mut newb: Vec<Vec<f32>> = Vec::with_capacity(n);
+            newb.resize_with(n, || Vec::with_capacity(cur * s));
+            for g in &groups {
+                let first = node_rank(p, g[0]);
+                {
+                    let (head, rest) = (&g[0], &g[1..]);
+                    let mut cat = std::mem::take(&mut newb[first]);
+                    cat.extend_from_slice(&bufs[node_rank(p, *head)]);
+                    for mem in rest {
+                        cat.extend_from_slice(&bufs[node_rank(p, *mem)]);
+                    }
+                    newb[first] = cat;
+                }
+                for mem in &g[1..] {
+                    let r = node_rank(p, *mem);
+                    let mut dst = std::mem::take(&mut newb[r]);
+                    dst.extend_from_slice(&newb[first]);
+                    newb[r] = dst;
+                }
+            }
+            *bufs = newb;
+        }
+    }
+
+    pub fn all_reduce(p: &RampParams, bufs: &mut Vec<Vec<f32>>) {
+        reduce_scatter(p, bufs);
+        all_gather(p, bufs);
+    }
+}
 
 fn inputs(n: usize, c: usize) -> Vec<Vec<f32>> {
     let mut r = Xoshiro256::seed_from(1);
     (0..n).map(|_| (0..c).map(|_| r.next_f32()).collect()).collect()
 }
 
+/// Before/after large-message all-reduce at one scale; returns
+/// (baseline GB/s, arena GB/s) of collective payload moved per second.
+fn large_message_case(
+    json: &mut JsonReporter,
+    p: &RampParams,
+    label: &str,
+    elems_per_node: usize,
+) -> (f64, f64) {
+    let n = p.n_nodes();
+    let mib = elems_per_node * 4 / (1 << 20);
+    let bytes = (n * elems_per_node * 4) as f64;
+
+    // before: per-step Vec<Vec<f32>> reallocation (all-reduce keeps the
+    // buffer length, so iterating in place is safe)
+    let mut bufs = inputs(n, elems_per_node);
+    let before = bench(
+        &format!("all-reduce {label} x {mib} MiB/node [pre-refactor]"),
+        2000,
+        || baseline::all_reduce(p, &mut bufs),
+    );
+    drop(bufs);
+    let before_gbs = before.throughput(bytes) / 1e9;
+    json.push(&before, Some(before_gbs));
+
+    // after: arena-resident, zero-allocation, subgroup-parallel. Fill the
+    // regions in place so peak memory is the slab alone.
+    let mut arena = BufferArena::with_capacity(n, elems_per_node);
+    let mut rng = Xoshiro256::seed_from(1);
+    for r in 0..n {
+        for v in arena.front_mut(r).iter_mut() {
+            *v = rng.next_f32();
+        }
+        arena.set_len(r, elems_per_node);
+    }
+    let x = RampX::new(p);
+    let after = bench(
+        &format!("all-reduce {label} x {mib} MiB/node [arena]"),
+        2000,
+        || x.run_arena(MpiOp::AllReduce, &mut arena).unwrap(),
+    );
+    let after_gbs = after.throughput(bytes) / 1e9;
+    json.push(&after, Some(after_gbs));
+
+    println!(
+        "    -> {label}: {before_gbs:.2} GB/s before, {after_gbs:.2} GB/s after \
+         ({:.2}x speed-up)",
+        after_gbs / before_gbs
+    );
+    (before_gbs, after_gbs)
+}
+
 fn main() {
+    let mut json = JsonReporter::from_env_args();
+
     println!("== paper tables regenerated by this bench ==");
     ramp::repro::run("fig15");
     ramp::repro::run("fig18");
@@ -31,20 +161,41 @@ fn main() {
             RampX::new(&p).run(op, &mut bufs).unwrap()
         });
         let bytes = (n * elems * 4) as f64;
-        println!(
-            "    -> {:.1} MB/s of collective payload",
-            r.throughput(bytes) / 1e6
-        );
+        let gbs = r.throughput(bytes) / 1e9;
+        println!("    -> {:.1} MB/s of collective payload", gbs * 1e3);
+        json.push(&r, Some(gbs));
     }
     // all-to-all has the heaviest bookkeeping
-    bench("ramp-x all-to-all (54 nodes)", 400, || {
+    let r = bench("ramp-x all-to-all (54 nodes)", 400, || {
         let mut bufs = inputs(n, 2 * n);
-        RampX::new(&p).all_to_all(&mut bufs).unwrap()
+        RampX::new(&p).run(MpiOp::AllToAll, &mut bufs).unwrap()
     });
+    json.push(&r, None);
     // larger fabric
     let p2 = RampParams::new(4, 4, 8, 1); // 128 nodes
-    bench("ramp-x all-reduce (128 nodes)", 400, || {
+    let r = bench("ramp-x all-reduce (128 nodes)", 400, || {
         let mut bufs = inputs(128, 256);
-        RampX::new(&p2).all_reduce(&mut bufs).unwrap()
+        RampX::new(&p2).run(MpiOp::AllReduce, &mut bufs).unwrap()
     });
+    json.push(&r, None);
+
+    println!("== large-message data plane: pre-refactor vs arena ==");
+    let mib: usize = std::env::var("RAMP_BENCH_MIB")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64);
+    let elems = (mib * (1 << 20) / 4).max(1);
+    let mut speedups = Vec::new();
+    for (p, label) in [(RampParams::fig8_example(), "54 nodes"), (p2.clone(), "128 nodes")] {
+        // pad to a multiple of N so the executors accept the size
+        let elems = elems.div_ceil(p.n_nodes()) * p.n_nodes();
+        let (before, after) = large_message_case(&mut json, &p, label, elems);
+        speedups.push(after / before);
+    }
+    println!(
+        "large-message all-reduce arena speed-up: {}",
+        speedups.iter().map(|s| format!("{s:.2}x")).collect::<Vec<_>>().join(", ")
+    );
+
+    json.write().expect("writing bench JSON");
 }

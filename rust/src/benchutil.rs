@@ -1,6 +1,9 @@
 //! Timing helper for the `harness = false` benches (no criterion
-//! offline): warmup + timed iterations with mean/min/p50 reporting.
+//! offline): warmup + timed iterations with mean/min/p50 reporting, plus
+//! a machine-readable JSON sink (`--json <path>`) so the perf trajectory
+//! of `BENCH_*.json` files can be regenerated from any bench binary.
 
+use std::path::PathBuf;
 use std::time::Instant;
 
 /// One benchmark measurement.
@@ -34,8 +37,14 @@ impl std::fmt::Display for BenchResult {
 }
 
 /// Run `f` repeatedly for roughly `budget_ms` (after 2 warmup calls) and
-/// report statistics. Prints the result line.
+/// report statistics. Prints the result line. The `RAMP_BENCH_MS` env var
+/// overrides every budget — `make bench-smoke` sets it to 1 so bench-code
+/// regressions surface in seconds.
 pub fn bench<T>(name: &str, budget_ms: u64, mut f: impl FnMut() -> T) -> BenchResult {
+    let budget_ms = std::env::var("RAMP_BENCH_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(budget_ms);
     std::hint::black_box(f());
     std::hint::black_box(f());
     let budget = std::time::Duration::from_millis(budget_ms);
@@ -59,4 +68,78 @@ pub fn bench<T>(name: &str, budget_ms: u64, mut f: impl FnMut() -> T) -> BenchRe
     };
     println!("{res}");
     res
+}
+
+/// Collects bench results and writes them as a JSON array of
+/// `{name, ns_per_iter, gb_s}` when the binary was invoked with
+/// `--json <path>` (e.g. `cargo bench --bench collectives_bench --
+/// --json BENCH_collectives.json`). Without the flag it is a no-op.
+pub struct JsonReporter {
+    path: Option<PathBuf>,
+    rows: Vec<String>,
+}
+
+impl JsonReporter {
+    /// Parse `--json <path>` from the process arguments.
+    pub fn from_env_args() -> Self {
+        let mut path = None;
+        let mut args = std::env::args().skip(1);
+        while let Some(a) = args.next() {
+            if a == "--json" {
+                path = args.next().map(PathBuf::from);
+            }
+        }
+        Self { path, rows: Vec::new() }
+    }
+
+    /// Whether a sink path was requested.
+    pub fn active(&self) -> bool {
+        self.path.is_some()
+    }
+
+    /// Record one measurement; `gb_s` is the payload throughput where the
+    /// bench has a meaningful byte count.
+    pub fn push(&mut self, r: &BenchResult, gb_s: Option<f64>) {
+        let gb = gb_s.map_or("null".to_string(), |g| format!("{g:.3}"));
+        self.rows.push(format!(
+            "  {{\"name\": {:?}, \"ns_per_iter\": {:.0}, \"gb_s\": {}}}",
+            r.name,
+            r.mean_s * 1e9,
+            gb
+        ));
+    }
+
+    /// Write the collected rows; a no-op without `--json`.
+    pub fn write(&self) -> std::io::Result<()> {
+        if let Some(p) = &self.path {
+            std::fs::write(p, format!("[\n{}\n]\n", self.rows.join(",\n")))?;
+            println!("wrote {} bench entries to {}", self.rows.len(), p.display());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_rows_are_well_formed() {
+        let mut rep = JsonReporter { path: None, rows: Vec::new() };
+        assert!(!rep.active());
+        let r = BenchResult {
+            name: "all-reduce \"x\"".into(),
+            iters: 3,
+            mean_s: 0.5,
+            min_s: 0.4,
+            p50_s: 0.5,
+        };
+        rep.push(&r, Some(12.3456));
+        rep.push(&r, None);
+        assert!(rep.rows[0].contains("\"ns_per_iter\": 500000000"));
+        assert!(rep.rows[0].contains("\"gb_s\": 12.346"));
+        assert!(rep.rows[0].contains("\\\"x\\\"")); // quotes escaped
+        assert!(rep.rows[1].ends_with("\"gb_s\": null}"));
+        rep.write().unwrap(); // no path: no-op
+    }
 }

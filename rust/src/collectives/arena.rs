@@ -1,0 +1,340 @@
+//! Arena-backed zero-copy buffer plane for the RAMP-x executors.
+//!
+//! The original data plane rebuilt every node's buffer as a fresh
+//! `Vec<Vec<f32>>` at every algorithmic step, so large-message collectives
+//! spent most of their wall-clock in allocator churn rather than in the
+//! modeled x-to-1 reductions (§8.4.2). A [`BufferArena`] replaces that
+//! model with **one contiguous `f32` slab per collective**:
+//!
+//! * the slab is split into a **front** and a **back half** (double
+//!   buffering): a step reads the front and writes the back with zero
+//!   allocation, then [`BufferArena::flip`] swaps the halves;
+//! * each half holds one fixed-stride **region** per MPI rank, addressed
+//!   by `(offset, len)` views ([`ArenaRegion`]) — rank `r`'s live bytes
+//!   are `front[r · region_cap .. r · region_cap + len(r)]`;
+//! * the region stride is pre-sized once from the closed-form phase list
+//!   ([`crate::collectives::ops::ramp_phases`] knows every step's
+//!   per-node byte counts), so no step can outgrow its region.
+//!
+//! The slab layout also makes the per-node simulation loop
+//! embarrassingly parallel: subgroups write disjoint back regions, so
+//! [`run_parallel`] fans subgroup work out over `std::thread::scope`
+//! threads (no extra dependencies, offline-friendly).
+
+use crate::collectives::ops::ramp_phases;
+use crate::collectives::MpiOp;
+use crate::topology::ramp::RampParams;
+use anyhow::{ensure, Result};
+
+/// A `(offset, len)` view into a node's arena region, in f32 elements.
+/// Plans carry these so transfer byte counts come from the actual buffer
+/// views instead of being recomputed per transfer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArenaRegion {
+    /// Element offset within the owning rank's region.
+    pub offset: usize,
+    /// View length in elements.
+    pub len: usize,
+}
+
+impl ArenaRegion {
+    pub fn new(offset: usize, len: usize) -> Self {
+        Self { offset, len }
+    }
+
+    /// Wire size of the view (f32 payload).
+    pub fn bytes(&self) -> u64 {
+        (self.len * 4) as u64
+    }
+}
+
+/// Double-buffered contiguous buffer slab for one collective. See the
+/// module docs for the layout.
+pub struct BufferArena {
+    slab: Vec<f32>,
+    n: usize,
+    region_cap: usize,
+    /// True when the front half is the lower half of the slab.
+    front_is_lower: bool,
+    /// Live element count of each rank's front region.
+    lens: Vec<usize>,
+}
+
+impl BufferArena {
+    /// An arena of `n` regions of `region_cap` elements each (per half).
+    /// All lengths start at 0.
+    pub fn with_capacity(n: usize, region_cap: usize) -> Self {
+        let region_cap = region_cap.max(1);
+        Self {
+            slab: vec![0f32; 2 * n * region_cap],
+            n,
+            region_cap,
+            front_is_lower: true,
+            lens: vec![0; n],
+        }
+    }
+
+    /// Arena sized for running `op` on `p` with the given input buffers,
+    /// loaded with them. Region capacity comes from [`arena_capacity`].
+    pub fn for_op(p: &RampParams, op: MpiOp, bufs: &[Vec<f32>]) -> Result<Self> {
+        let n = p.n_nodes();
+        ensure!(bufs.len() == n, "need {n} buffers, got {}", bufs.len());
+        let max_in = bufs.iter().map(Vec::len).max().unwrap_or(0);
+        let mut arena = Self::with_capacity(n, arena_capacity(p, op, max_in));
+        arena.load(bufs)?;
+        Ok(arena)
+    }
+
+    pub fn n_regions(&self) -> usize {
+        self.n
+    }
+
+    /// Per-rank region stride (elements) in each half.
+    pub fn region_cap(&self) -> usize {
+        self.region_cap
+    }
+
+    /// Live length (elements) of rank `r`'s front region.
+    pub fn len_of(&self, r: usize) -> usize {
+        self.lens[r]
+    }
+
+    /// The common front length, erroring if ranks disagree.
+    pub fn uniform_len(&self) -> Result<usize> {
+        let m = self.lens.first().copied().unwrap_or(0);
+        ensure!(
+            self.lens.iter().all(|&l| l == m),
+            "unequal buffer lengths across ranks"
+        );
+        Ok(m)
+    }
+
+    fn front_base(&self) -> usize {
+        if self.front_is_lower {
+            0
+        } else {
+            self.n * self.region_cap
+        }
+    }
+
+    /// Rank `r`'s live front data.
+    pub fn front(&self, r: usize) -> &[f32] {
+        let base = self.front_base() + r * self.region_cap;
+        &self.slab[base..base + self.lens[r]]
+    }
+
+    /// Rank `r`'s full front region (all `region_cap` elements), for
+    /// callers that fill a region in place before [`Self::set_len`].
+    pub fn front_mut(&mut self, r: usize) -> &mut [f32] {
+        let base = self.front_base() + r * self.region_cap;
+        let cap = self.region_cap;
+        &mut self.slab[base..base + cap]
+    }
+
+    /// Set rank `r`'s live front length after an in-place fill.
+    pub fn set_len(&mut self, r: usize, len: usize) {
+        assert!(len <= self.region_cap, "len {len} > region cap {}", self.region_cap);
+        self.lens[r] = len;
+    }
+
+    /// Copy `data` into rank `r`'s front region, zero-padding to
+    /// `padded` elements (the engine's gradient-padding path).
+    pub fn load_padded(&mut self, r: usize, data: &[f32], padded: usize) -> Result<()> {
+        ensure!(
+            data.len() <= padded && padded <= self.region_cap,
+            "load of {} elements (padded {padded}) exceeds region cap {}",
+            data.len(),
+            self.region_cap
+        );
+        let region = self.front_mut(r);
+        region[..data.len()].copy_from_slice(data);
+        region[data.len()..padded].fill(0.0);
+        self.lens[r] = padded;
+        Ok(())
+    }
+
+    /// Load one buffer per rank into the front half.
+    pub fn load(&mut self, bufs: &[Vec<f32>]) -> Result<()> {
+        ensure!(bufs.len() == self.n, "need {} buffers, got {}", self.n, bufs.len());
+        for (r, b) in bufs.iter().enumerate() {
+            self.load_padded(r, b, b.len())?;
+        }
+        Ok(())
+    }
+
+    /// Materialize the front half back into owned per-rank vectors (the
+    /// compatibility boundary for the `Vec<Vec<f32>>` MPI API).
+    pub fn copy_out(&self) -> Vec<Vec<f32>> {
+        (0..self.n).map(|r| self.front(r).to_vec()).collect()
+    }
+
+    /// Split into the read-only front half and per-rank mutable back
+    /// regions (each `region_cap` long, rank-indexed). Disjoint rank sets
+    /// can then be written from different threads.
+    pub fn split(&mut self) -> (&[f32], Vec<&mut [f32]>) {
+        let half = self.n * self.region_cap;
+        let (lo, hi) = self.slab.split_at_mut(half);
+        let (front, back): (&[f32], &mut [f32]) =
+            if self.front_is_lower { (&lo[..], hi) } else { (&hi[..], lo) };
+        (front, back.chunks_mut(self.region_cap).collect())
+    }
+
+    /// Make the back half the new front, with per-rank live lengths.
+    pub fn flip(&mut self, lens: Vec<usize>) {
+        assert_eq!(lens.len(), self.n);
+        debug_assert!(lens.iter().all(|&l| l <= self.region_cap));
+        self.front_is_lower = !self.front_is_lower;
+        self.lens = lens;
+    }
+
+    /// [`Self::flip`] with every rank at the same length.
+    pub fn flip_uniform(&mut self, len: usize) {
+        assert!(len <= self.region_cap);
+        self.front_is_lower = !self.front_is_lower;
+        self.lens.fill(len);
+    }
+}
+
+/// Region stride (elements per rank per half) needed to run `op` on `p`
+/// with at most `input_elems` input elements per node: the largest
+/// per-node buffer any algorithmic step produces, from the closed-form
+/// phase list (a step over a size-`s` subgroup leaves each member
+/// `per_peer_bytes · s` of buffer — all-gather/gather grow to `m·N`,
+/// reduce-scatter/scatter shrink, all-to-all stays at `m`).
+pub fn arena_capacity(p: &RampParams, op: MpiOp, input_elems: usize) -> usize {
+    let m_bytes = (input_elems * 4) as u64;
+    let phase_bytes = match op {
+        // broadcast replicates the root buffer — regions never grow
+        MpiOp::Broadcast { .. } => m_bytes,
+        // barrier runs a 1-per-node flag all-reduce padded to N elements
+        MpiOp::Barrier => (p.n_nodes() * 4) as u64,
+        _ => ramp_phases(p, op, m_bytes)
+            .iter()
+            .map(|ph| ph.per_peer_bytes * ph.size as u64)
+            .max()
+            .unwrap_or(m_bytes),
+    };
+    (phase_bytes.div_ceil(4) as usize).max(input_elems).max(1)
+}
+
+/// Payload threshold (total f32 elements written by a step) below which
+/// fanning subgroups out over threads costs more than it saves.
+pub const PAR_THRESHOLD_ELEMS: usize = 1 << 16;
+
+/// Execute independent work items (typically one per subgroup, owning the
+/// subgroup's back regions) across scoped threads. Runs inline when the
+/// payload is small, there is ≤ 1 item, or the host has a single core.
+pub fn run_parallel<W: Send>(work: Vec<W>, total_elems: usize, f: impl Fn(W) + Sync) {
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    if threads <= 1 || work.len() <= 1 || total_elems < PAR_THRESHOLD_ELEMS {
+        for w in work {
+            f(w);
+        }
+        return;
+    }
+    let n_buckets = threads.min(work.len());
+    let mut buckets: Vec<Vec<W>> = (0..n_buckets).map(|_| Vec::new()).collect();
+    for (i, w) in work.into_iter().enumerate() {
+        buckets[i % n_buckets].push(w);
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        let mut iter = buckets.into_iter();
+        let first = iter.next();
+        for bucket in iter {
+            s.spawn(move || {
+                for w in bucket {
+                    f(w);
+                }
+            });
+        }
+        // keep the calling thread busy with the first bucket
+        if let Some(bucket) = first {
+            for w in bucket {
+                f(w);
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_flip_roundtrip() {
+        let mut a = BufferArena::with_capacity(3, 8);
+        a.load(&[vec![1.0, 2.0], vec![3.0], vec![]]).unwrap();
+        assert_eq!(a.front(0), &[1.0, 2.0]);
+        assert_eq!(a.front(1), &[3.0]);
+        assert_eq!(a.len_of(2), 0);
+        assert!(a.uniform_len().is_err());
+
+        // write doubled rank sums into the back half, flip, re-read
+        {
+            let (front, mut back) = a.split();
+            for r in 0..3 {
+                let len = if r == 0 { 2 } else { 1 };
+                for i in 0..len {
+                    let v = front.get(r * 8 + i).copied().unwrap_or(-1.0);
+                    back[r][i] = 2.0 * v;
+                }
+            }
+        }
+        a.flip(vec![2, 1, 1]);
+        assert_eq!(a.front(0), &[2.0, 4.0]);
+        assert_eq!(a.front(1), &[6.0]);
+        assert_eq!(a.front(2), &[0.0]); // back half starts zeroed
+
+        // flipping again exposes the original data (double buffering)
+        a.flip(vec![2, 1, 0]);
+        assert_eq!(a.front(0), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn load_padded_zero_fills() {
+        let mut a = BufferArena::with_capacity(2, 8);
+        a.front_mut(0).fill(9.0); // stale data
+        a.load_padded(0, &[1.0, 2.0], 5).unwrap();
+        assert_eq!(a.front(0), &[1.0, 2.0, 0.0, 0.0, 0.0]);
+        assert!(a.load_padded(1, &[0.0; 9], 9).is_err());
+    }
+
+    #[test]
+    fn capacity_covers_growth_and_shrink() {
+        let p = RampParams::fig8_example();
+        let n = p.n_nodes();
+        // all-gather grows contributions n-fold
+        assert!(arena_capacity(&p, MpiOp::AllGather, 10) >= 10 * n);
+        assert!(arena_capacity(&p, MpiOp::Gather { root: 0 }, 10) >= 10 * n);
+        // reduce-scatter / all-reduce / all-to-all stay within the input
+        for op in [MpiOp::ReduceScatter, MpiOp::AllReduce, MpiOp::AllToAll] {
+            let c = arena_capacity(&p, op, 2 * n);
+            assert!((2 * n..4 * n).contains(&c), "{op:?}: cap {c}");
+        }
+        assert_eq!(arena_capacity(&p, MpiOp::Broadcast { root: 0 }, 64), 64);
+        assert!(arena_capacity(&p, MpiOp::Barrier, 1) >= n);
+    }
+
+    #[test]
+    fn run_parallel_covers_all_items_above_threshold() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let hits = AtomicUsize::new(0);
+        let work: Vec<usize> = (0..37).collect();
+        run_parallel(work, PAR_THRESHOLD_ELEMS * 2, |w| {
+            hits.fetch_add(w + 1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), (0..37usize).map(|w| w + 1).sum::<usize>());
+        // inline path
+        let hits2 = AtomicUsize::new(0);
+        run_parallel(vec![1usize, 2, 3], 0, |w| {
+            hits2.fetch_add(w, Ordering::Relaxed);
+        });
+        assert_eq!(hits2.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn region_bytes() {
+        assert_eq!(ArenaRegion::new(4, 10).bytes(), 40);
+    }
+}

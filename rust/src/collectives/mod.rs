@@ -5,6 +5,9 @@
 //!   (Tables 5–6) and the information map / node rank of §6.1.2 (Table 7).
 //! * [`ops`] — `Buff_op`/`Loc_op` algebra and per-step message sizes
 //!   (Table 8, Alg. 1).
+//! * [`arena`] — the zero-copy data plane: one double-buffered contiguous
+//!   slab per collective with per-rank `(offset, len)` regions, pre-sized
+//!   from the closed-form phase list (see `collectives/README.md`).
 //! * [`plan`] — transfer-level collective schedules: rounds of
 //!   (src → dsts, bytes) records consumed by the transcoder, the fabric
 //!   simulator and the estimator.
@@ -13,6 +16,7 @@
 //! * [`ring`], [`hierarchical`], [`torus_strategy`] — baseline strategies.
 //! * [`reference`] — naive single-process oracles for correctness tests.
 
+pub mod arena;
 pub mod hierarchical;
 pub mod ops;
 pub mod plan;

@@ -246,19 +246,60 @@ fn phase_for_size(
 
 /// Step sizes for a job of `n` active nodes placed in network `p`
 /// (§7.4: "nodes selected such that the number of algorithmic steps is
-/// minimised"): greedy factors ≤ x, at most four.
+/// minimised"): **at most four** factors whose product covers `n`.
+///
+/// Uses the fewest steps `k ≤ 4` with `x^k ≥ n` and balances the factors
+/// (`f ≈ n^(1/k)`), so every factor stays ≤ x whenever four x-sized steps
+/// suffice. The previous greedy `rem.min(x)` loop emitted `⌈log_x n⌉`
+/// factors unbounded by four — e.g. 12 factors for `n = 4096, x = 2` —
+/// contradicting the four-step collective structure. When `x⁴ < n` the
+/// factors must exceed `x`; [`phase_for_size`] serializes those subgroups
+/// into one-to-one rounds, so the phase model stays valid.
 pub fn job_step_sizes(p: &RampParams, n: usize) -> Vec<usize> {
     if n >= p.n_nodes() {
         return Step::active(p).iter().map(|s| s.size(p)).collect();
     }
-    let mut sizes = Vec::new();
+    if n <= 1 {
+        return Vec::new();
+    }
+    let x = p.x.max(2);
+    let k = (1..=4usize).find(|&k| pow_at_least(x, k, n)).unwrap_or(4);
+    let mut sizes = Vec::with_capacity(k);
     let mut rem = n;
-    while rem > 1 {
-        let f = rem.min(p.x);
+    for i in 0..k {
+        if rem <= 1 {
+            break;
+        }
+        let left = k - i;
+        let f = if left == 1 { rem } else { nth_root_ceil(rem, left).max(2) };
         sizes.push(f);
         rem = rem.div_ceil(f);
     }
     sizes
+}
+
+/// `x^k ≥ n`, overflow-free.
+fn pow_at_least(x: usize, k: usize, n: usize) -> bool {
+    let mut v: u128 = 1;
+    for _ in 0..k {
+        v *= x as u128;
+        if v >= n as u128 {
+            return true;
+        }
+    }
+    v >= n as u128
+}
+
+/// Smallest `f` with `f^k ≥ n` (balanced factor for [`job_step_sizes`]).
+fn nth_root_ceil(n: usize, k: usize) -> usize {
+    let mut f = ((n as f64).powf(1.0 / k as f64).round() as usize).max(1);
+    while !pow_at_least(f, k, n) {
+        f += 1;
+    }
+    while f > 1 && pow_at_least(f - 1, k, n) {
+        f -= 1;
+    }
+    f
 }
 
 /// Transceiver groups per peer for a *job-subset* subgroup of size `s`:
@@ -511,6 +552,55 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn job_step_sizes_at_most_four_and_cover() {
+        // the doc contract the old greedy loop violated (12 factors for
+        // n=4096 at x=2): ≤ 4 factors, product covers n, bounded padding
+        for p in [
+            RampParams::new(2, 2, 4, 1),
+            RampParams::fig8_example(),
+            RampParams::new(4, 4, 8, 1),
+            RampParams::new(8, 2, 16, 1),
+            RampParams::max_scale(),
+        ] {
+            for n in 2..=4096usize {
+                let sizes = job_step_sizes(&p, n);
+                assert!(sizes.len() <= 4, "{} factors for n={n} on {p:?}", sizes.len());
+                if n >= p.n_nodes() {
+                    continue; // full-network path returns the active steps
+                }
+                let prod: usize = sizes.iter().product();
+                assert!(prod >= n, "product {prod} < n={n} on {p:?}");
+                assert!(prod <= 4 * n, "padding blowup {prod} for n={n} on {p:?}");
+                assert!(sizes.iter().all(|&s| s >= 2), "degenerate factor for n={n}");
+                // balanced: factors stay ≤ x whenever four x-sized steps
+                // suffice
+                let x = p.x.max(2);
+                if x.checked_pow(4).map_or(true, |c| c >= n) {
+                    assert!(
+                        sizes.iter().all(|&s| s <= x),
+                        "factor > x={x} for n={n}: {sizes:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn job_phases_round_count_bounded() {
+        // with ≤4 factors, reduce-scatter is ≤4 phases and all-reduce ≤8
+        // for any job size — the paper's step-count claim at job scale
+        let p = RampParams::max_scale();
+        for n in [2usize, 5, 17, 100, 1000, 4096] {
+            assert!(ramp_or_job_len(&p, MpiOp::ReduceScatter, n) <= 4);
+            assert!(ramp_or_job_len(&p, MpiOp::AllReduce, n) <= 8);
+        }
+    }
+
+    fn ramp_or_job_len(p: &RampParams, op: MpiOp, n: usize) -> usize {
+        job_phases(p, op, GB, n).len()
     }
 
     #[test]

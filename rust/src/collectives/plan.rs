@@ -29,6 +29,17 @@ impl Transfer {
     pub fn unicast(src: NodeCoord, dst: NodeCoord, bytes: u64) -> Self {
         Self { src, dsts: vec![dst], bytes }
     }
+
+    /// Unicast sized by an arena region view: the wire byte count comes
+    /// from the buffer slice actually exchanged (`region.bytes()`), not a
+    /// size recomputed per transfer.
+    pub fn unicast_region(
+        src: NodeCoord,
+        dst: NodeCoord,
+        region: &crate::collectives::arena::ArenaRegion,
+    ) -> Self {
+        Self::unicast(src, dst, region.bytes())
+    }
 }
 
 /// Transfers that occur concurrently.

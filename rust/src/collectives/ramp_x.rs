@@ -7,12 +7,21 @@
 //! verified element-wise against [`super::reference`] and their plans are
 //! verified contention-free on the fabric simulator.
 //!
+//! Buffers live in a [`BufferArena`]: one contiguous double-buffered slab
+//! per collective, with per-rank `(offset, len)` regions. Every step reads
+//! the front half and writes the back half — zero allocation on the hot
+//! path — and the per-node simulation loop fans out across subgroups on
+//! scoped threads (subgroups write disjoint back regions). The
+//! `Vec<Vec<f32>>` MPI-style API survives as the [`RampX::run`] shim,
+//! which loads/unloads the arena once per collective.
+//!
 //! Buffers are indexed by **MPI rank** (the information-map rank of
 //! §6.1.2), not by flat node id; [`subgroups::node_rank`] /
 //! [`subgroups::node_of_rank`] convert. All message sizes must be
 //! divisible by the relevant subgroup-size products; [`padded_len`] gives
 //! the canonical padding.
 
+use crate::collectives::arena::{run_parallel, ArenaRegion, BufferArena};
 use crate::collectives::plan::{CollectivePlan, PlanStep, Round, Transfer};
 use crate::collectives::subgroups::{
     member_index, members, node_of_rank, node_rank, rank_digit, Step,
@@ -31,141 +40,184 @@ impl<'a> RampX<'a> {
         Self { p }
     }
 
-    /// Dispatch an operation on rank-indexed buffers. Returns the emitted
-    /// transfer plan. Buffer semantics match [`super::reference`].
+    /// Dispatch an operation on rank-indexed owned buffers. Loads the
+    /// buffers into a fresh arena, runs [`Self::run_arena`], and copies
+    /// the results back out. Buffer semantics match [`super::reference`].
+    /// Callers on the hot path should hold a [`BufferArena`] across
+    /// iterations and call [`Self::run_arena`] directly.
     pub fn run(&self, op: MpiOp, bufs: &mut Vec<Vec<f32>>) -> Result<CollectivePlan> {
+        let mut arena = BufferArena::for_op(self.p, op, bufs)?;
+        let plan = self.run_arena(op, &mut arena)?;
+        *bufs = arena.copy_out();
+        Ok(plan)
+    }
+
+    /// Dispatch an operation on arena-resident rank regions. Returns the
+    /// emitted transfer plan; results land in the arena's front half.
+    pub fn run_arena(&self, op: MpiOp, arena: &mut BufferArena) -> Result<CollectivePlan> {
         match op {
-            MpiOp::ReduceScatter => self.reduce_scatter(bufs),
-            MpiOp::AllGather => self.all_gather(bufs),
-            MpiOp::AllReduce => self.all_reduce(bufs),
-            MpiOp::AllToAll => self.all_to_all(bufs),
-            MpiOp::Scatter { root } => self.scatter(bufs, root),
-            MpiOp::Gather { root } => self.gather(bufs, root),
-            MpiOp::Reduce { root } => self.reduce(bufs, root),
-            MpiOp::Broadcast { root } => self.broadcast(bufs, root),
-            MpiOp::Barrier => self.barrier(bufs),
+            MpiOp::ReduceScatter => self.reduce_scatter(arena),
+            MpiOp::AllGather => self.all_gather(arena),
+            MpiOp::AllReduce => self.all_reduce(arena),
+            MpiOp::AllToAll => self.all_to_all(arena),
+            MpiOp::Scatter { root } => self.scatter(arena, root),
+            MpiOp::Gather { root } => self.gather(arena, root),
+            MpiOp::Reduce { root } => self.reduce(arena, root),
+            MpiOp::Broadcast { root } => self.broadcast(arena, root),
+            MpiOp::Barrier => self.barrier(arena),
         }
     }
 
     /// Reduce-scatter: every node ends with its rank's `1/N` slice of the
     /// global sum. 3–4 algorithmic steps (Fig 8's worked example).
-    pub fn reduce_scatter(&self, bufs: &mut Vec<Vec<f32>>) -> Result<CollectivePlan> {
+    pub fn reduce_scatter(&self, arena: &mut BufferArena) -> Result<CollectivePlan> {
         let p = self.p;
         let n = p.n_nodes();
-        ensure!(bufs.len() == n, "need {n} buffers, got {}", bufs.len());
-        let m = bufs[0].len();
-        ensure!(bufs.iter().all(|b| b.len() == m), "unequal buffer lengths");
+        ensure!(arena.n_regions() == n, "need {n} regions, got {}", arena.n_regions());
+        let m = arena.uniform_len()?;
         ensure!(m % n == 0, "message length {m} not divisible by N={n} (pad with padded_len)");
 
         let mut plan = CollectivePlan::default();
+        let mut cur = m;
         for step in Step::active(p) {
             let groups = subgroup_list(p, step);
             let s = step.size(p);
-            let cur = bufs[0].len();
             let chunk = cur / s;
-            let mut newb: Vec<Vec<f32>> = vec![Vec::new(); n];
-            for g in &groups {
-                for (i, mem) in g.iter().enumerate() {
-                    let mut acc = vec![0f32; chunk];
-                    for peer in g.iter() {
-                        let src = &bufs[node_rank(p, *peer)];
-                        for (a, v) in acc.iter_mut().zip(&src[i * chunk..(i + 1) * chunk]) {
-                            *a += v;
-                        }
-                    }
-                    newb[node_rank(p, *mem)] = acc;
-                }
+            let region = ArenaRegion::new(0, chunk);
+            let rank_groups = subgroup_ranks(p, &groups);
+            {
+                let cap = arena.region_cap();
+                let (front, back) = arena.split();
+                let bundles = bundle_regions(back, &rank_groups);
+                let work: Vec<(Vec<usize>, Vec<&mut [f32]>)> =
+                    rank_groups.into_iter().zip(bundles).collect();
+                run_parallel(work, cur * n, |(ranks, mut outs)| {
+                    reduce_subgroup(front, cap, &ranks, &mut outs, chunk);
+                });
             }
-            plan.steps.push(exchange_plan_step(
-                p,
-                step,
-                &groups,
-                (chunk * 4) as u64,
-                s,
-                (chunk * 4) as u64,
-            ));
-            *bufs = newb;
+            arena.flip_uniform(chunk);
+            plan.steps.push(exchange_plan_step(p, step, &groups, region, s));
+            cur = chunk;
         }
         Ok(plan)
     }
 
-    /// All-gather: node `r` contributes `bufs[r]`; everyone ends with the
+    /// All-gather: node `r` contributes its region; everyone ends with the
     /// rank-ordered concatenation. Steps run 4 → 1 (§5).
-    pub fn all_gather(&self, bufs: &mut Vec<Vec<f32>>) -> Result<CollectivePlan> {
+    pub fn all_gather(&self, arena: &mut BufferArena) -> Result<CollectivePlan> {
         let p = self.p;
         let n = p.n_nodes();
-        ensure!(bufs.len() == n, "need {n} buffers, got {}", bufs.len());
-        let c = bufs[0].len();
-        ensure!(bufs.iter().all(|b| b.len() == c), "unequal contribution lengths");
+        ensure!(arena.n_regions() == n, "need {n} regions, got {}", arena.n_regions());
+        let mut cur = arena.uniform_len()?;
 
         let mut plan = CollectivePlan::default();
         for step in Step::active(p).into_iter().rev() {
             let groups = subgroup_list(p, step);
             let s = step.size(p);
-            let cur = bufs[0].len();
-            let mut newb: Vec<Vec<f32>> = Vec::with_capacity(n);
-            newb.resize_with(n, || Vec::with_capacity(cur * s));
-            for g in &groups {
-                // build the concatenation once per subgroup …
-                let first = node_rank(p, g[0]);
-                {
-                    let (head, rest) = (&g[0], &g[1..]);
-                    let mut cat = std::mem::take(&mut newb[first]);
-                    cat.extend_from_slice(&bufs[node_rank(p, *head)]);
-                    for mem in rest {
-                        cat.extend_from_slice(&bufs[node_rank(p, *mem)]);
-                    }
-                    newb[first] = cat;
-                }
-                // … then bulk-copy it to the other members
-                for mem in &g[1..] {
-                    let r = node_rank(p, *mem);
-                    let mut dst = std::mem::take(&mut newb[r]);
-                    dst.extend_from_slice(&newb[first]);
-                    newb[r] = dst;
-                }
+            ensure!(
+                cur * s <= arena.region_cap(),
+                "arena region ({}) too small for all-gather growth to {}",
+                arena.region_cap(),
+                cur * s
+            );
+            let rank_groups = subgroup_ranks(p, &groups);
+            {
+                let cap = arena.region_cap();
+                let (front, back) = arena.split();
+                let bundles = bundle_regions(back, &rank_groups);
+                let work: Vec<(Vec<usize>, Vec<&mut [f32]>)> =
+                    rank_groups.into_iter().zip(bundles).collect();
+                run_parallel(work, cur * s * groups.len(), |(ranks, mut outs)| {
+                    concat_subgroup(front, cap, &ranks, &mut outs, cur);
+                });
             }
-            plan.steps.push(exchange_plan_step(p, step, &groups, (cur * 4) as u64, 0, 0));
-            *bufs = newb;
+            arena.flip_uniform(cur * s);
+            plan.steps.push(exchange_plan_step(p, step, &groups, ArenaRegion::new(0, cur), 0));
+            cur *= s;
         }
         Ok(plan)
     }
 
     /// All-reduce = reduce-scatter ∘ all-gather (Rabenseifner, §6.1.5) —
     /// "up to 8 algorithmic steps".
-    pub fn all_reduce(&self, bufs: &mut Vec<Vec<f32>>) -> Result<CollectivePlan> {
-        let mut plan = self.reduce_scatter(bufs)?;
-        let tail = self.all_gather(bufs)?;
+    pub fn all_reduce(&self, arena: &mut BufferArena) -> Result<CollectivePlan> {
+        let mut plan = self.reduce_scatter(arena)?;
+        let tail = self.all_gather(arena)?;
         plan.steps.extend(tail.steps);
         Ok(plan)
     }
 
-    /// All-to-all: node `s`'s buffer is `N` chunks, chunk `d` destined to
+    /// All-to-all: node `s`'s region is `N` chunks, chunk `d` destined to
     /// rank `d`. Digit routing over the four steps (the per-step sizes of
-    /// Table 8 row All-to-All).
-    pub fn all_to_all(&self, bufs: &mut Vec<Vec<f32>>) -> Result<CollectivePlan> {
+    /// Table 8 row All-to-All). Chunk payloads stay in the arena; only
+    /// their `(src, dst)` routing metadata lives on the side.
+    pub fn all_to_all(&self, arena: &mut BufferArena) -> Result<CollectivePlan> {
         let p = self.p;
         let n = p.n_nodes();
-        ensure!(bufs.len() == n, "need {n} buffers, got {}", bufs.len());
-        let m = bufs[0].len();
-        ensure!(bufs.iter().all(|b| b.len() == m), "unequal buffer lengths");
+        ensure!(arena.n_regions() == n, "need {n} regions, got {}", arena.n_regions());
+        let m = arena.uniform_len()?;
         ensure!(m % n == 0, "message length {m} not divisible by N={n}");
         let c = m / n;
 
-        // chunk lists per rank: (src_rank, dst_rank, payload)
-        let mut chunks: Vec<Vec<(usize, usize, Vec<f32>)>> = (0..n)
-            .map(|r| {
-                (0..n)
-                    .map(|d| (r, d, bufs[r][d * c..(d + 1) * c].to_vec()))
-                    .collect()
-            })
-            .collect();
+        // chunk metadata per rank: (src_rank, dst_rank); payloads lie
+        // consecutively in the rank's front region in list order
+        let mut chunks: Vec<Vec<(usize, usize)>> =
+            (0..n).map(|r| (0..n).map(|d| (r, d)).collect()).collect();
 
         let mut plan = CollectivePlan::default();
-        for step in Step::active(p) {
+        let active = Step::active(p);
+        for (si, &step) in active.iter().enumerate() {
+            let final_step = si + 1 == active.len();
             let groups = subgroup_list(p, step);
             let s = step.size(p);
+            let rank_groups = subgroup_ranks(p, &groups);
             let rounds_pairs = exchange_rounds(s, step);
+
+            // metadata pass: route every chunk, recording the per-group
+            // byte matrices for the plan and the copy list for the data
+            // pass. On the final step a chunk lands at its rank-ordered
+            // output offset (`src · c`); earlier steps append.
+            let mut new_chunks: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n];
+            let mut sent_bytes: Vec<Vec<Vec<u64>>> = Vec::with_capacity(groups.len());
+            let mut moves: Vec<Vec<(usize, usize, usize, usize)>> =
+                Vec::with_capacity(groups.len());
+            for g in &rank_groups {
+                let mut mat = vec![vec![0u64; s]; s];
+                let mut mv = Vec::new();
+                for (i, &r) in g.iter().enumerate() {
+                    for (ci, &(src, dst)) in chunks[r].iter().enumerate() {
+                        let k = rank_digit(p, step, dst);
+                        if k != i {
+                            mat[i][k] += (c * 4) as u64;
+                        }
+                        let pos = if final_step { src } else { new_chunks[g[k]].len() };
+                        mv.push((r, ci, k, pos));
+                        new_chunks[g[k]].push((src, dst));
+                    }
+                }
+                sent_bytes.push(mat);
+                moves.push(mv);
+            }
+
+            // data pass: a chunk never leaves its current subgroup within
+            // a step, so subgroups move chunks on independent threads
+            {
+                let cap = arena.region_cap();
+                let (front, back) = arena.split();
+                let bundles = bundle_regions(back, &rank_groups);
+                let work: Vec<(Vec<&mut [f32]>, Vec<(usize, usize, usize, usize)>)> =
+                    bundles.into_iter().zip(moves).collect();
+                run_parallel(work, m * n, |(mut outs, mv)| {
+                    for (srcr, ci, k, pos) in mv {
+                        outs[k][pos * c..(pos + 1) * c].copy_from_slice(
+                            &front[srcr * cap + ci * c..srcr * cap + (ci + 1) * c],
+                        );
+                    }
+                });
+            }
+            arena.flip_uniform(m);
+            chunks = new_chunks;
+
             let mut pstep = PlanStep {
                 label: step_label(step),
                 rounds: Vec::new(),
@@ -174,24 +226,6 @@ impl<'a> RampX<'a> {
                 trx_q: crate::collectives::ops::trx_groups_per_peer(p, step),
                 step: Some(step),
             };
-            // outgoing[i][k] for each group: chunks moving i -> k this step
-            let mut moved: Vec<Vec<(usize, usize, Vec<f32>)>> = vec![Vec::new(); n];
-            let mut sent_bytes: Vec<Vec<Vec<u64>>> = Vec::with_capacity(groups.len());
-            for g in &groups {
-                let mut mat = vec![vec![0u64; s]; s];
-                for (i, mem) in g.iter().enumerate() {
-                    let r = node_rank(p, *mem);
-                    for (src, dst, data) in std::mem::take(&mut chunks[r]) {
-                        let k = rank_digit(p, step, dst);
-                        if k != i {
-                            mat[i][k] += (data.len() * 4) as u64;
-                        }
-                        moved[node_rank(p, g[k])].push((src, dst, data));
-                    }
-                }
-                sent_bytes.push(mat);
-            }
-            chunks = moved;
             for pairs in &rounds_pairs {
                 let mut round = Round::default();
                 for (gi, g) in groups.iter().enumerate() {
@@ -207,34 +241,33 @@ impl<'a> RampX<'a> {
             plan.steps.push(pstep);
         }
 
-        for (r, buf) in bufs.iter_mut().enumerate() {
-            let mut cs = std::mem::take(&mut chunks[r]);
-            for (_, dst, _) in &cs {
-                debug_assert_eq!(*dst, r, "chunk routed to wrong rank");
+        for (r, list) in chunks.iter().enumerate() {
+            for &(_, dst) in list {
+                debug_assert_eq!(dst, r, "chunk routed to wrong rank");
             }
-            cs.sort_by_key(|(src, _, _)| *src);
-            *buf = cs.into_iter().flat_map(|(_, _, d)| d).collect();
         }
         Ok(plan)
     }
 
-    /// Scatter: root's buffer is `N` chunks; rank `r` ends with chunk `r`.
-    pub fn scatter(&self, bufs: &mut Vec<Vec<f32>>, root: usize) -> Result<CollectivePlan> {
+    /// Scatter: root's region is `N` chunks; rank `r` ends with chunk `r`.
+    pub fn scatter(&self, arena: &mut BufferArena, root: usize) -> Result<CollectivePlan> {
         let p = self.p;
         let n = p.n_nodes();
-        ensure!(bufs.len() == n && root < n, "bad buffers/root");
-        let m = bufs[root].len();
+        ensure!(arena.n_regions() == n && root < n, "bad buffers/root");
+        let m = arena.len_of(root);
         ensure!(m % n == 0, "message length {m} not divisible by N={n}");
         let c = m / n;
 
-        // chunk lists: (dst_rank, payload); only holders have any
-        let mut chunks: Vec<Vec<(usize, Vec<f32>)>> = vec![Vec::new(); n];
-        chunks[root] = (0..n).map(|d| (d, bufs[root][d * c..(d + 1) * c].to_vec())).collect();
+        // destination-rank metadata; only holders have any. Chunk `d` of
+        // the root starts at offset `d · c` (list order).
+        let mut chunks: Vec<Vec<usize>> = vec![Vec::new(); n];
+        chunks[root] = (0..n).collect();
 
         let mut plan = CollectivePlan::default();
         for step in Step::active(p) {
             let groups = subgroup_list(p, step);
             let s = step.size(p);
+            let rank_groups = subgroup_ranks(p, &groups);
             // one-to-many within the same communication group (step 4)
             // is transmitter-bound: serialize into peer-offset rounds
             let n_rounds = if step == Step::S4 && s > 2 { s - 1 } else { 1 };
@@ -246,20 +279,23 @@ impl<'a> RampX<'a> {
                 trx_q: crate::collectives::ops::trx_groups_per_peer(p, step),
                 step: Some(step),
             };
-            let mut moved: Vec<Vec<(usize, Vec<f32>)>> = vec![Vec::new(); n];
-            for g in &groups {
-                for (i, mem) in g.iter().enumerate() {
-                    let r = node_rank(p, *mem);
+            let mut new_chunks: Vec<Vec<usize>> = vec![Vec::new(); n];
+            // (src_rank, src_chunk_idx, dst_rank, dst_chunk_idx)
+            let mut moves: Vec<(usize, usize, usize, usize)> = Vec::new();
+            for (g, gr) in groups.iter().zip(&rank_groups) {
+                for (i, (mem, &r)) in g.iter().zip(gr).enumerate() {
                     if chunks[r].is_empty() {
                         continue;
                     }
                     let mut out_bytes = vec![0u64; s];
-                    for (dst, data) in std::mem::take(&mut chunks[r]) {
+                    for (ci, &dst) in chunks[r].iter().enumerate() {
                         let k = rank_digit(p, step, dst);
                         if k != i {
-                            out_bytes[k] += (data.len() * 4) as u64;
+                            out_bytes[k] += (c * 4) as u64;
                         }
-                        moved[node_rank(p, g[k])].push((dst, data));
+                        let dr = gr[k];
+                        moves.push((r, ci, dr, new_chunks[dr].len()));
+                        new_chunks[dr].push(dst);
                     }
                     for (k, &bytes) in out_bytes.iter().enumerate() {
                         if bytes > 0 {
@@ -271,14 +307,22 @@ impl<'a> RampX<'a> {
                     }
                 }
             }
-            chunks = moved;
+            {
+                let cap = arena.region_cap();
+                let (front, mut back) = arena.split();
+                for (srcr, ci, dr, pos) in moves {
+                    back[dr][pos * c..(pos + 1) * c].copy_from_slice(
+                        &front[srcr * cap + ci * c..srcr * cap + (ci + 1) * c],
+                    );
+                }
+            }
+            arena.flip(new_chunks.iter().map(|l| l.len() * c).collect());
+            chunks = new_chunks;
             plan.steps.push(pstep);
         }
 
-        for (r, buf) in bufs.iter_mut().enumerate() {
-            let cs = std::mem::take(&mut chunks[r]);
-            ensure!(cs.len() == 1 && cs[0].0 == r, "scatter routing failed at rank {r}");
-            *buf = cs.into_iter().next().unwrap().1;
+        for (r, list) in chunks.iter().enumerate() {
+            ensure!(list.len() == 1 && list[0] == r, "scatter routing failed at rank {r}");
         }
         Ok(plan)
     }
@@ -287,21 +331,23 @@ impl<'a> RampX<'a> {
     /// 1 → 4: moving within a step-`k` subgroup preserves the already-fixed
     /// digits ρ₁..ρ₋₁ (the §5 invariance is one-directional), so holders
     /// converge as {n : ρ₁..ρₖ = root's} and land exactly on the root.
-    pub fn gather(&self, bufs: &mut Vec<Vec<f32>>, root: usize) -> Result<CollectivePlan> {
+    pub fn gather(&self, arena: &mut BufferArena, root: usize) -> Result<CollectivePlan> {
         let p = self.p;
         let n = p.n_nodes();
-        ensure!(bufs.len() == n && root < n, "bad buffers/root");
+        ensure!(arena.n_regions() == n && root < n, "bad buffers/root");
         let root_node = node_of_rank(p, root);
 
-        let mut chunks: Vec<Vec<(usize, Vec<f32>)>> = (0..n)
-            .map(|r| vec![(r, std::mem::take(&mut bufs[r]))])
-            .collect();
+        // holdings: (original src rank, elems) lists; payloads lie
+        // consecutively in the holder's front region in list order
+        let mut chunks: Vec<Vec<(usize, usize)>> =
+            (0..n).map(|r| vec![(r, arena.len_of(r))]).collect();
 
         let mut plan = CollectivePlan::default();
         for step in Step::active(p) {
             let groups = subgroup_list(p, step);
             let target = member_index(p, step, root_node);
             let s = step.size(p);
+            let rank_groups = subgroup_ranks(p, &groups);
             // many-to-one within the same group (step 4) is receiver-bound
             // (one wavelength): serialize into source-offset rounds
             let n_rounds = if step == Step::S4 && s > 2 { s - 1 } else { 1 };
@@ -313,37 +359,90 @@ impl<'a> RampX<'a> {
                 trx_q: crate::collectives::ops::trx_groups_per_peer(p, step),
                 step: Some(step),
             };
-            let mut moved: Vec<Vec<(usize, Vec<f32>)>> = vec![Vec::new(); n];
-            for g in &groups {
+            let mut new_chunks: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n];
+            // (src_rank, elems, dst_rank, dst_elem_offset)
+            let mut moves: Vec<(usize, usize, usize, usize)> = Vec::new();
+            let mut max_sink_total = 0usize;
+            for (g, gr) in groups.iter().zip(&rank_groups) {
                 let sink = g[target];
-                let sink_rank = node_rank(p, sink);
-                for (i, mem) in g.iter().enumerate() {
-                    let r = node_rank(p, *mem);
+                let sink_rank = gr[target];
+                let mut cursor = 0usize;
+                for (i, (mem, &r)) in g.iter().zip(gr).enumerate() {
                     if chunks[r].is_empty() {
                         continue;
                     }
-                    let bytes: u64 = chunks[r].iter().map(|(_, d)| (d.len() * 4) as u64).sum();
+                    let total: usize = chunks[r].iter().map(|&(_, l)| l).sum();
+                    let bytes = (total * 4) as u64;
                     if i != target && bytes > 0 {
                         let ri = if n_rounds > 1 { (i + s - target) % s - 1 } else { 0 };
                         pstep.rounds[ri].transfers.push(Transfer::unicast(*mem, sink, bytes));
                     }
-                    moved[sink_rank].append(&mut chunks[r]);
+                    if total > 0 {
+                        moves.push((r, total, sink_rank, cursor));
+                        cursor += total;
+                    }
+                    new_chunks[sink_rank].append(&mut chunks[r]);
+                }
+                max_sink_total = max_sink_total.max(cursor);
+            }
+            ensure!(
+                max_sink_total <= arena.region_cap(),
+                "arena region ({}) too small for gather accumulation of {}",
+                arena.region_cap(),
+                max_sink_total
+            );
+            {
+                let cap = arena.region_cap();
+                let (front, mut back) = arena.split();
+                for (srcr, len, dr, off) in moves {
+                    back[dr][off..off + len]
+                        .copy_from_slice(&front[srcr * cap..srcr * cap + len]);
                 }
             }
-            chunks = moved;
+            arena.flip(
+                new_chunks
+                    .iter()
+                    .map(|l| l.iter().map(|&(_, len)| len).sum::<usize>())
+                    .collect(),
+            );
+            chunks = new_chunks;
             plan.steps.push(pstep);
         }
 
-        let mut cs = std::mem::take(&mut chunks[root]);
-        cs.sort_by_key(|(src, _)| *src);
-        bufs[root] = cs.into_iter().flat_map(|(_, d)| d).collect();
+        // rank-order the root's concatenation (chunks arrive in step
+        // order); everyone else keeps nothing
+        let list = std::mem::take(&mut chunks[root]);
+        let mut offs = Vec::with_capacity(list.len());
+        let mut off = 0usize;
+        for &(_, len) in &list {
+            offs.push(off);
+            off += len;
+        }
+        let total = off;
+        let mut order: Vec<usize> = (0..list.len()).collect();
+        order.sort_by_key(|&i| list[i].0);
+        {
+            let cap = arena.region_cap();
+            let (front, mut back) = arena.split();
+            let mut out = 0usize;
+            for &i in &order {
+                let (_, len) = list[i];
+                back[root][out..out + len].copy_from_slice(
+                    &front[root * cap + offs[i]..root * cap + offs[i] + len],
+                );
+                out += len;
+            }
+        }
+        let mut lens = vec![0usize; n];
+        lens[root] = total;
+        arena.flip(lens);
         Ok(plan)
     }
 
     /// Reduce = reduce-scatter ∘ gather (§6.1.5).
-    pub fn reduce(&self, bufs: &mut Vec<Vec<f32>>, root: usize) -> Result<CollectivePlan> {
-        let mut plan = self.reduce_scatter(bufs)?;
-        let tail = self.gather(bufs, root)?;
+    pub fn reduce(&self, arena: &mut BufferArena, root: usize) -> Result<CollectivePlan> {
+        let mut plan = self.reduce_scatter(arena)?;
+        let tail = self.gather(arena, root)?;
         plan.steps.extend(tail.steps);
         Ok(plan)
     }
@@ -352,12 +451,13 @@ impl<'a> RampX<'a> {
     /// stage 1 reaches all nodes sharing the root's wavelength via `x`
     /// simultaneous multicasts; stage 2 re-broadcasts on the remaining
     /// `Λ−1` wavelengths from relay nodes. Pipelined in `k` chunks.
-    pub fn broadcast(&self, bufs: &mut Vec<Vec<f32>>, root: usize) -> Result<CollectivePlan> {
+    pub fn broadcast(&self, arena: &mut BufferArena, root: usize) -> Result<CollectivePlan> {
         let p = self.p;
         let n = p.n_nodes();
-        ensure!(bufs.len() == n && root < n, "bad buffers/root");
+        ensure!(arena.n_regions() == n && root < n, "bad buffers/root");
         let root_node = node_of_rank(p, root);
-        let m_bytes = (bufs[root].len() * 4) as u64;
+        let m = arena.len_of(root);
+        let m_bytes = (m * 4) as u64;
 
         // tier 1: every node on the root's wavelength (reachable in one
         // multicast slot per destination group, x groups in parallel)
@@ -394,7 +494,8 @@ impl<'a> RampX<'a> {
             let mut round = Round::default();
             if r < k {
                 for g in 0..p.x {
-                    let dsts: Vec<NodeCoord> = tier1.iter().copied().filter(|d| d.g == g).collect();
+                    let dsts: Vec<NodeCoord> =
+                        tier1.iter().copied().filter(|d| d.g == g).collect();
                     if !dsts.is_empty() {
                         round.transfers.push(Transfer {
                             src: root_node,
@@ -405,9 +506,6 @@ impl<'a> RampX<'a> {
                 }
             }
             if r >= 1 {
-                // chunk r-1 (clamped) from each relay on its wavelength(s)
-                let chunk_idx = (r - 1).min(k - 1);
-                let _ = chunk_idx;
                 for (wi, &w) in other_wavelengths.iter().enumerate() {
                     // wave scheduling: relay wi%|tier1| sends wavelength w in
                     // round 1 + wi/|tier1| .. that round + k - 1
@@ -433,28 +531,39 @@ impl<'a> RampX<'a> {
         }
         plan.steps.push(pstep);
 
-        let data = bufs[root].clone();
-        for b in bufs.iter_mut() {
-            *b = data.clone();
+        // data: replicate the root region into every back region
+        {
+            let cap = arena.region_cap();
+            let (front, back) = arena.split();
+            let src = &front[root * cap..root * cap + m];
+            run_parallel(back, m * n, |out: &mut [f32]| {
+                out[..m].copy_from_slice(src);
+            });
         }
+        arena.flip_uniform(m);
         Ok(plan)
     }
 
     /// Barrier: four-step flag AND (modelled as a 1-element all-reduce).
-    pub fn barrier(&self, bufs: &mut Vec<Vec<f32>>) -> Result<CollectivePlan> {
+    pub fn barrier(&self, arena: &mut BufferArena) -> Result<CollectivePlan> {
         let p = self.p;
         let n = p.n_nodes();
-        ensure!(bufs.len() == n, "need {n} buffers");
+        ensure!(arena.n_regions() == n, "need {n} regions");
         // each node contributes a presence flag; padded to N elements so the
         // recursive structure applies; result: everyone learns the count
-        let mut flags: Vec<Vec<f32>> = (0..n).map(|_| vec![1.0f32; n]).collect();
+        let mut flags = BufferArena::with_capacity(n, n);
+        for r in 0..n {
+            flags.front_mut(r)[..n].fill(1.0);
+            flags.set_len(r, n);
+        }
         let plan = self.all_reduce(&mut flags)?;
-        let ok = flags.iter().all(|f| f.iter().all(|&v| (v - n as f32).abs() < 0.5));
+        let ok = (0..n).all(|r| flags.front(r).iter().all(|&v| (v - n as f32).abs() < 0.5));
         if !ok {
             bail!("barrier flag reduction failed");
         }
-        for b in bufs.iter_mut() {
-            *b = vec![n as f32];
+        for r in 0..n {
+            arena.front_mut(r)[0] = n as f32;
+            arena.set_len(r, 1);
         }
         Ok(plan)
     }
@@ -479,6 +588,86 @@ pub fn subgroup_list(p: &RampParams, step: Step) -> Vec<Vec<NodeCoord>> {
         .collect()
 }
 
+/// MPI ranks of each subgroup, in information-index order.
+fn subgroup_ranks(p: &RampParams, groups: &[Vec<NodeCoord>]) -> Vec<Vec<usize>> {
+    groups
+        .iter()
+        .map(|g| g.iter().map(|m| node_rank(p, *m)).collect())
+        .collect()
+}
+
+/// Hand each subgroup exclusive ownership of its members' back regions
+/// (subgroups partition the ranks, so every slice is taken exactly once).
+fn bundle_regions<'s>(
+    back: Vec<&'s mut [f32]>,
+    rank_groups: &[Vec<usize>],
+) -> Vec<Vec<&'s mut [f32]>> {
+    let mut slots: Vec<Option<&'s mut [f32]>> = back.into_iter().map(Some).collect();
+    rank_groups
+        .iter()
+        .map(|g| {
+            g.iter()
+                .map(|&r| slots[r].take().expect("rank appears in exactly one subgroup"))
+                .collect()
+        })
+        .collect()
+}
+
+/// Fused s-to-1 reduction for one subgroup (§8.4.2): member `i`'s back
+/// region receives the sum of every member's front chunk `i`. Tiled so
+/// the destination stays cache-resident while the inner loops
+/// autovectorize; float summation order matches the naive oracle
+/// (subgroup member order), keeping results byte-identical.
+fn reduce_subgroup(
+    front: &[f32],
+    cap: usize,
+    ranks: &[usize],
+    outs: &mut [&mut [f32]],
+    chunk: usize,
+) {
+    const TILE: usize = 8 * 1024;
+    for (i, out) in outs.iter_mut().enumerate() {
+        let base = i * chunk;
+        let dst = &mut out[..chunk];
+        let mut t = 0;
+        while t < chunk {
+            let e = (t + TILE).min(chunk);
+            let r0 = ranks[0] * cap + base;
+            dst[t..e].copy_from_slice(&front[r0 + t..r0 + e]);
+            for &peer in &ranks[1..] {
+                let pb = peer * cap + base;
+                let src = &front[pb + t..pb + e];
+                for (d, v) in dst[t..e].iter_mut().zip(src) {
+                    *d += *v;
+                }
+            }
+            t = e;
+        }
+    }
+}
+
+/// All-gather step for one subgroup: build the member-order concatenation
+/// once in the first member's back region, then bulk-copy it to the rest.
+fn concat_subgroup(
+    front: &[f32],
+    cap: usize,
+    ranks: &[usize],
+    outs: &mut [&mut [f32]],
+    cur: usize,
+) {
+    let total = ranks.len() * cur;
+    {
+        let first = &mut outs[0];
+        for (i, &r) in ranks.iter().enumerate() {
+            first[i * cur..(i + 1) * cur].copy_from_slice(&front[r * cap..r * cap + cur]);
+        }
+    }
+    let (first, rest) = outs.split_first_mut().expect("non-empty subgroup");
+    for out in rest {
+        out[..total].copy_from_slice(&first[..total]);
+    }
+}
+
 /// Pairwise exchange rounds within a subgroup of size `s`:
 /// * steps 1–3 (and any pair): every member reaches all `s−1` peers
 ///   concurrently on distinct transceiver groups — one round;
@@ -501,21 +690,23 @@ fn exchange_rounds(s: usize, step: Step) -> Vec<Vec<(usize, usize)>> {
 }
 
 /// Plan step for a full intra-subgroup exchange (reduce-scatter /
-/// all-gather shape): every member sends `bytes` to every peer.
+/// all-gather shape): every member sends the `region` view to every peer,
+/// so the wire size — and the reduced byte count, when `reduce_sources`
+/// marks an s-to-1 reduction — is the arena region's, not a separately
+/// recomputed count.
 fn exchange_plan_step(
     p: &RampParams,
     step: Step,
     groups: &[Vec<NodeCoord>],
-    bytes: u64,
+    region: ArenaRegion,
     reduce_sources: usize,
-    reduce_bytes: u64,
 ) -> PlanStep {
     let s = step.size(p);
     let mut pstep = PlanStep {
         label: step_label(step),
         rounds: Vec::new(),
         reduce_sources,
-        reduce_bytes,
+        reduce_bytes: if reduce_sources > 1 { region.bytes() } else { 0 },
         trx_q: crate::collectives::ops::trx_groups_per_peer(p, step),
         step: Some(step),
     };
@@ -523,7 +714,7 @@ fn exchange_plan_step(
         let mut round = Round::default();
         for g in groups {
             for &(from, to) in &pairs {
-                round.transfers.push(Transfer::unicast(g[from], g[to], bytes));
+                round.transfers.push(Transfer::unicast_region(g[from], g[to], &region));
             }
         }
         pstep.rounds.push(round);
@@ -560,7 +751,7 @@ mod tests {
             let n = p.n_nodes();
             let mut bufs = random_inputs(&p, 2 * n, 1);
             let expect = oracle::reduce_scatter(&bufs);
-            let plan = RampX::new(&p).reduce_scatter(&mut bufs).unwrap();
+            let plan = RampX::new(&p).run(MpiOp::ReduceScatter, &mut bufs).unwrap();
             assert_eq!(bufs, expect, "reduce-scatter mismatch for {p:?}");
             assert_eq!(plan.steps.len(), Step::active(&p).len());
         }
@@ -571,7 +762,7 @@ mod tests {
         for p in params_under_test() {
             let mut bufs = random_inputs(&p, 3, 2);
             let expect = oracle::all_gather(&bufs);
-            RampX::new(&p).all_gather(&mut bufs).unwrap();
+            RampX::new(&p).run(MpiOp::AllGather, &mut bufs).unwrap();
             assert_eq!(bufs, expect, "all-gather mismatch for {p:?}");
         }
     }
@@ -582,7 +773,7 @@ mod tests {
             let n = p.n_nodes();
             let mut bufs = random_inputs(&p, n, 3);
             let expect = oracle::all_reduce(&bufs);
-            let plan = RampX::new(&p).all_reduce(&mut bufs).unwrap();
+            let plan = RampX::new(&p).run(MpiOp::AllReduce, &mut bufs).unwrap();
             assert_eq!(bufs, expect, "all-reduce mismatch for {p:?}");
             // paper: ≤ 8 algorithmic steps
             assert!(plan.steps.len() <= 8);
@@ -595,7 +786,7 @@ mod tests {
             let n = p.n_nodes();
             let mut bufs = random_inputs(&p, 2 * n, 4);
             let expect = oracle::all_to_all(&bufs);
-            RampX::new(&p).all_to_all(&mut bufs).unwrap();
+            RampX::new(&p).run(MpiOp::AllToAll, &mut bufs).unwrap();
             assert_eq!(bufs, expect, "all-to-all mismatch for {p:?}");
         }
     }
@@ -607,7 +798,7 @@ mod tests {
             for root in [0, n / 2, n - 1] {
                 let mut bufs = random_inputs(&p, n, 5);
                 let expect = oracle::scatter(&bufs, root);
-                RampX::new(&p).scatter(&mut bufs, root).unwrap();
+                RampX::new(&p).run(MpiOp::Scatter { root }, &mut bufs).unwrap();
                 assert_eq!(bufs, expect, "scatter mismatch root {root} for {p:?}");
             }
         }
@@ -620,7 +811,7 @@ mod tests {
             for root in [0, 1, n - 1] {
                 let mut bufs = random_inputs(&p, 2, 6);
                 let expect = oracle::gather(&bufs, root);
-                RampX::new(&p).gather(&mut bufs, root).unwrap();
+                RampX::new(&p).run(MpiOp::Gather { root }, &mut bufs).unwrap();
                 assert_eq!(bufs, expect, "gather mismatch root {root} for {p:?}");
             }
         }
@@ -633,7 +824,7 @@ mod tests {
             let root = n - 1;
             let mut bufs = random_inputs(&p, n, 7);
             let expect = oracle::reduce(&bufs, root);
-            RampX::new(&p).reduce(&mut bufs, root).unwrap();
+            RampX::new(&p).run(MpiOp::Reduce { root }, &mut bufs).unwrap();
             assert_eq!(bufs, expect, "reduce mismatch for {p:?}");
         }
     }
@@ -645,7 +836,7 @@ mod tests {
             for root in [0, n / 3] {
                 let mut bufs = random_inputs(&p, 64, 8);
                 let expect = oracle::broadcast(&bufs, root);
-                let plan = RampX::new(&p).broadcast(&mut bufs, root).unwrap();
+                let plan = RampX::new(&p).run(MpiOp::Broadcast { root }, &mut bufs).unwrap();
                 assert_eq!(bufs, expect, "broadcast mismatch for {p:?}");
                 // multicast transfers present whenever racks share a
                 // wavelength (J > 1)
@@ -665,9 +856,40 @@ mod tests {
     fn barrier_completes() {
         for p in params_under_test() {
             let mut bufs = vec![vec![0.0f32]; p.n_nodes()];
-            let plan = RampX::new(&p).barrier(&mut bufs).unwrap();
+            let plan = RampX::new(&p).run(MpiOp::Barrier, &mut bufs).unwrap();
             assert!(plan.n_rounds() >= Step::active(&p).len());
             assert!(bufs.iter().all(|b| b[0] as usize == p.n_nodes()));
+        }
+    }
+
+    #[test]
+    fn arena_persists_across_iterations() {
+        // the coordinator's hot path: one arena, many all-reduces, no
+        // per-iteration reallocation
+        let p = RampParams::new(2, 2, 4, 1);
+        let n = p.n_nodes();
+        let x = RampX::new(&p);
+        let inputs = random_inputs(&p, 2 * n, 21);
+        let mut arena = BufferArena::for_op(&p, MpiOp::AllReduce, &inputs).unwrap();
+        let expect = oracle::all_reduce(&inputs);
+        for iter in 0..3 {
+            arena.load(&inputs).unwrap();
+            x.run_arena(MpiOp::AllReduce, &mut arena).unwrap();
+            assert_eq!(arena.copy_out(), expect, "iteration {iter}");
+        }
+    }
+
+    #[test]
+    fn arena_and_vec_paths_agree() {
+        let p = RampParams::fig8_example();
+        let n = p.n_nodes();
+        for op in [MpiOp::ReduceScatter, MpiOp::AllToAll, MpiOp::AllReduce] {
+            let inputs = random_inputs(&p, 2 * n, 22);
+            let mut vec_bufs = inputs.clone();
+            RampX::new(&p).run(op, &mut vec_bufs).unwrap();
+            let mut arena = BufferArena::for_op(&p, op, &inputs).unwrap();
+            RampX::new(&p).run_arena(op, &mut arena).unwrap();
+            assert_eq!(arena.copy_out(), vec_bufs, "{} arena/vec divergence", op.name());
         }
     }
 
@@ -678,7 +900,7 @@ mod tests {
         let n = p.n_nodes();
         let m_elems = 2 * n; // per node
         let mut bufs = random_inputs(&p, m_elems, 9);
-        let plan = RampX::new(&p).reduce_scatter(&mut bufs).unwrap();
+        let plan = RampX::new(&p).run(MpiOp::ReduceScatter, &mut bufs).unwrap();
         let m_bytes = (m_elems * 4) as u64;
         let mut denom = 1u64;
         for (step, pstep) in Step::active(&p).iter().zip(&plan.steps) {
@@ -695,7 +917,7 @@ mod tests {
         let p = RampParams::new(2, 2, 8, 1); // DG = 4
         let n = p.n_nodes();
         let mut bufs = random_inputs(&p, n, 10);
-        let plan = RampX::new(&p).reduce_scatter(&mut bufs).unwrap();
+        let plan = RampX::new(&p).run(MpiOp::ReduceScatter, &mut bufs).unwrap();
         let s4 = plan.steps.last().unwrap();
         assert_eq!(s4.rounds.len(), 3, "DG=4 ⇒ 3 one-to-one rounds");
     }

@@ -14,6 +14,7 @@
 //! Python never runs here: the binary is self-contained after
 //! `make artifacts`.
 
+use crate::collectives::ramp_x::padded_len;
 use crate::engine::{fabric_for_workers, RampEngine};
 use crate::rng::Xoshiro256;
 use crate::runtime::{
@@ -243,23 +244,32 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     let mut total_comm = 0.0;
     let inv_n = 1.0 / cfg.n_workers as f32;
 
+    // one arena for the whole run: the gradient all-reduce reads/writes
+    // the same double-buffered slab every iteration instead of rebuilding
+    // N gradient vectors per step
+    let grad_target = padded_len(&engine.p, n_params);
+    let mut arena = engine.gradient_arena(n_params);
+
     for step in 0..cfg.steps {
         // scatter distinct data shards
         for w in &workers {
             let (x, y) = corpus.next_batch();
             w.cmd.send(Cmd::Step { x, y }).map_err(|_| anyhow!("worker died"))?;
         }
-        // gather gradients
-        let mut grad_bufs: Vec<Vec<f32>> = Vec::with_capacity(cfg.n_workers);
+        // gather gradients straight into the arena's rank regions; keep
+        // the worker-owned vectors to carry the averaged result back
+        // without any leader-side allocation
+        let mut grad_store: Vec<Vec<f32>> = Vec::with_capacity(cfg.n_workers);
         let mut loss_sum = 0.0f32;
         let mut compute_s: f64 = 0.0;
-        for w in &workers {
+        for (r, w) in workers.iter().enumerate() {
             match w.resp.recv() {
                 Ok(Resp::Grads { grads, loss, elapsed }) => {
                     if grads.len() != n_params {
                         bail!("gradient length {} != {}", grads.len(), n_params);
                     }
-                    grad_bufs.push(grads);
+                    arena.load_padded(r, &grads, grad_target)?;
+                    grad_store.push(grads);
                     loss_sum += loss;
                     compute_s = compute_s.max(elapsed);
                 }
@@ -269,13 +279,13 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
 
         // the paper's system contribution: gradient all-reduce over the
         // optical fabric — real bytes, transcoded, contention-verified
-        let run = engine.all_reduce_padded(&mut grad_bufs, n_params)?;
+        let run = engine.all_reduce_arena(&mut arena)?;
         total_comm += run.completion_time();
 
         // distribute reduced (averaged) gradients; every worker updates
-        for (w, mut grads) in workers.iter().zip(grad_bufs) {
-            for g in grads.iter_mut() {
-                *g *= inv_n;
+        for (r, (w, mut grads)) in workers.iter().zip(grad_store).enumerate() {
+            for (g, &v) in grads.iter_mut().zip(arena.front(r)) {
+                *g = v * inv_n;
             }
             w.cmd.send(Cmd::Update { grads }).map_err(|_| anyhow!("worker died"))?;
         }

@@ -10,6 +10,7 @@
 //! completion time. All of it is deterministic and precomputed from
 //! (topology, op, message) — there is no runtime scheduler (§6.3).
 
+use crate::collectives::arena::BufferArena;
 use crate::collectives::plan::CollectivePlan;
 use crate::collectives::ramp_x::{padded_len, RampX};
 use crate::collectives::MpiOp;
@@ -54,9 +55,21 @@ impl RampEngine {
     }
 
     /// Run `op` over rank-indexed buffers: moves the data (MPI Engine),
-    /// transcodes to NIC instructions, executes on the fabric.
+    /// transcodes to NIC instructions, executes on the fabric. Loads a
+    /// fresh arena per call; hot-path callers should hold a
+    /// [`BufferArena`] across iterations and use [`Self::execute_arena`].
     pub fn execute(&self, op: MpiOp, bufs: &mut Vec<Vec<f32>>) -> Result<CollectiveRun> {
-        let plan = RampX::new(&self.p).run(op, bufs)?;
+        let mut arena = BufferArena::for_op(&self.p, op, bufs)?;
+        let run = self.execute_arena(op, &mut arena)?;
+        *bufs = arena.copy_out();
+        Ok(run)
+    }
+
+    /// Run `op` over arena-resident rank regions: zero-allocation data
+    /// movement, then transcode + fabric verification. Results land in
+    /// the arena's front half.
+    pub fn execute_arena(&self, op: MpiOp, arena: &mut BufferArena) -> Result<CollectiveRun> {
+        let plan = RampX::new(&self.p).run_arena(op, arena)?;
         let schedule = transcode_plan(&self.p, &plan)?;
         let report = self.fabric.execute(&schedule);
         if self.strict && !report.ok() {
@@ -69,6 +82,19 @@ impl RampEngine {
         Ok(CollectiveRun { plan, schedule, report })
     }
 
+    /// An arena sized for repeated gradient all-reduces of `len` f32
+    /// elements per rank (padded to a multiple of N). The coordinator
+    /// allocates this once and reuses it every training iteration.
+    pub fn gradient_arena(&self, len: usize) -> BufferArena {
+        BufferArena::with_capacity(self.n_ranks(), padded_len(&self.p, len))
+    }
+
+    /// All-reduce over a persistent arena whose regions were filled with
+    /// [`BufferArena::load_padded`] to a common padded length.
+    pub fn all_reduce_arena(&self, arena: &mut BufferArena) -> Result<CollectiveRun> {
+        self.execute_arena(MpiOp::AllReduce, arena)
+    }
+
     /// Gradient all-reduce with automatic padding to a multiple of N
     /// (every buffer must have equal length `len`). Returns the fabric
     /// run; buffers keep their original length.
@@ -77,16 +103,20 @@ impl RampEngine {
         bufs: &mut Vec<Vec<f32>>,
         len: usize,
     ) -> Result<CollectiveRun> {
+        if bufs.len() != self.n_ranks() {
+            bail!("need {} buffers, got {}", self.n_ranks(), bufs.len());
+        }
         let target = padded_len(&self.p, len);
-        for b in bufs.iter_mut() {
+        let mut arena = self.gradient_arena(len);
+        for (r, b) in bufs.iter().enumerate() {
             if b.len() != len {
                 bail!("buffer length {} != {}", b.len(), len);
             }
-            b.resize(target, 0.0);
+            arena.load_padded(r, b, target)?;
         }
-        let run = self.execute(MpiOp::AllReduce, bufs)?;
-        for b in bufs.iter_mut() {
-            b.truncate(len);
+        let run = self.all_reduce_arena(&mut arena)?;
+        for (r, b) in bufs.iter_mut().enumerate() {
+            b.copy_from_slice(&arena.front(r)[..len]);
         }
         Ok(run)
     }

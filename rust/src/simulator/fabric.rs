@@ -247,17 +247,27 @@ impl OpticalFabric {
 
 /// Sort one resource class's flat interval list by (key, start) and
 /// report overlapping same-key pairs. Single sort, zero per-key allocs.
+///
+/// Tracks the *running max end* per key rather than comparing adjacent
+/// pairs only: with intervals A=[0,10), B=[1,2), C=[5,6) on one key, the
+/// A–C collision has a gap between B's end and C's start, so a
+/// neighbours-only scan would miss it.
 fn check_overlaps(
     intervals: &mut [(u64, u64, u64, u32)],
     mk: impl Fn(usize, usize) -> Violation,
 ) -> Vec<Violation> {
     intervals.sort_unstable();
     let mut out = Vec::new();
-    for w in intervals.windows(2) {
-        let (k0, _, e0, i0) = w[0];
-        let (k1, s1, _, i1) = w[1];
-        if k0 == k1 && s1 < e0 {
-            out.push(mk(i0 as usize, i1 as usize));
+    let Some(&(k0, _, e0, i0)) = intervals.first() else {
+        return out;
+    };
+    let (mut run_key, mut run_end, mut run_idx) = (k0, e0, i0);
+    for &(k, s, e, i) in &intervals[1..] {
+        if k == run_key && s < run_end {
+            out.push(mk(run_idx as usize, i as usize));
+        }
+        if k != run_key || e > run_end {
+            (run_key, run_end, run_idx) = (k, e, i);
         }
     }
     out
@@ -394,12 +404,52 @@ mod tests {
     }
 
     #[test]
+    fn overlap_scan_catches_spanning_interval() {
+        // A=[0,10) covers both B=[1,2) and C=[5,6); B ends before C starts,
+        // so an adjacent-pairs scan reports only A–B and misses A–C
+        let mk = |a: usize, b: usize| Violation::TransmitterBusy { detail: format!("{a}-{b}") };
+        let mut iv = vec![(7u64, 0u64, 10u64, 0u32), (7, 1, 2, 1), (7, 5, 6, 2)];
+        let v = check_overlaps(&mut iv, mk);
+        let details: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+        assert_eq!(v.len(), 2, "expected A–B and A–C, got {details:?}");
+        assert!(details.iter().any(|d| d.ends_with("0-2")), "A–C missed: {details:?}");
+        // same intervals on distinct keys are clean
+        let mut iv = vec![(1u64, 0u64, 10u64, 0u32), (2, 1, 2, 1), (3, 5, 6, 2)];
+        assert!(check_overlaps(&mut iv, mk).is_empty());
+        assert!(check_overlaps(&mut [], mk).is_empty());
+    }
+
+    #[test]
+    fn detects_transmitter_conflict_across_gap() {
+        // schedule-level version of the spanning-interval case: one long
+        // transmission covers two short later ones on the same transmitter
+        let p = RampParams::fig8_example();
+        let fabric = OpticalFabric::new(p);
+        let src = NodeCoord::new(0, 0, 0);
+        let long = mk_ins(src, NodeCoord::new(1, 0, 4), 1, 4, 0, 10);
+        let short1 = mk_ins(src, NodeCoord::new(1, 0, 5), 1, 5, 1, 1);
+        let short2 = mk_ins(src, NodeCoord::new(2, 0, 5), 1, 5, 5, 1);
+        let sched = Schedule {
+            instructions: vec![long, short1, short2],
+            total_slots: 10,
+            round_ends: vec![10],
+        };
+        let report = fabric.execute(&sched);
+        let tx_conflicts = report
+            .violations
+            .iter()
+            .filter(|v| matches!(v, Violation::TransmitterBusy { .. }))
+            .count();
+        assert!(tx_conflicts >= 2, "spanning conflict missed: {:?}", report.violations);
+    }
+
+    #[test]
     fn utilization_bounded() {
         let p = RampParams::fig8_example();
         let fabric = OpticalFabric::new(p.clone());
         let n = p.n_nodes();
         let mut bufs = random_inputs(n, 64 * n, 13);
-        let plan = RampX::new(&p).all_reduce(&mut bufs).unwrap();
+        let plan = RampX::new(&p).run(MpiOp::AllReduce, &mut bufs).unwrap();
         let sched = transcode_plan(&p, &plan).unwrap();
         let report = fabric.execute(&sched);
         assert!(report.subnet_utilization > 0.0 && report.subnet_utilization <= 1.0 + 1e-9);

@@ -391,7 +391,7 @@ mod tests {
         // big message: slots per round = ceil(bytes / 950·b)
         let elems = 4096 * n;
         let mut bufs = random_inputs(n, elems, 7);
-        let plan = RampX::new(&p).reduce_scatter(&mut bufs).unwrap();
+        let plan = RampX::new(&p).run(MpiOp::ReduceScatter, &mut bufs).unwrap();
         let sched = transcode_plan(&p, &plan).unwrap();
         let payload = group_slot_payload(&p);
         let mut expect = 0u64;
@@ -412,7 +412,7 @@ mod tests {
     fn wire_time_reflects_slots() {
         let p = RampParams::fig8_example();
         let mut bufs = random_inputs(p.n_nodes(), p.n_nodes(), 3);
-        let plan = RampX::new(&p).all_reduce(&mut bufs).unwrap();
+        let plan = RampX::new(&p).run(MpiOp::AllReduce, &mut bufs).unwrap();
         let sched = transcode_plan(&p, &plan).unwrap();
         assert!((sched.wire_time(&p) - sched.total_slots as f64 * p.slot_time).abs() < 1e-15);
         assert!(sched.total_slots > 0);

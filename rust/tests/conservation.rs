@@ -1,0 +1,188 @@
+//! Byte-conservation properties: the closed-form phase lists (Table 8),
+//! the job-placement phase lists, the transfer-level plans the executors
+//! emit, and the bytes the fabric actually carries must all agree.
+//!
+//! * `node_tx_bytes(ramp_phases(..))` == `node_tx_bytes(job_phases(.., N))`
+//!   for every operation — the estimator's two entry points price the
+//!   full network identically;
+//! * the fabric's `wire_bytes` for an executed plan equals the closed
+//!   form (exactly for the divisible message sizes used here; the padding
+//!   in `div_ceil` is the only slack the closed form carries).
+
+use ramp::collectives::ops::{job_phases, node_tx_bytes, ramp_phases};
+use ramp::collectives::ramp_x::RampX;
+use ramp::collectives::MpiOp;
+use ramp::rng::Xoshiro256;
+use ramp::simulator::OpticalFabric;
+use ramp::topology::ramp::RampParams;
+use ramp::transcoder::transcode_plan;
+
+fn fabrics() -> Vec<RampParams> {
+    vec![
+        RampParams::new(2, 2, 4, 1),  // N=16, DG=2
+        RampParams::fig8_example(),   // N=54, all four steps active
+        RampParams::new(4, 2, 4, 1),  // N=32, step 4 inactive
+        RampParams::new(2, 2, 8, 1),  // N=32, DG=4 (multi-round step 4)
+    ]
+}
+
+fn random_inputs(n: usize, elems: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut r = Xoshiro256::seed_from(seed);
+    (0..n).map(|_| (0..elems).map(|_| r.next_f32()).collect()).collect()
+}
+
+#[test]
+fn ramp_and_job_phases_agree_at_full_network() {
+    for p in fabrics() {
+        let n = p.n_nodes();
+        for op in MpiOp::all() {
+            for m in [4 * n as u64, 4096 * n as u64] {
+                assert_eq!(
+                    node_tx_bytes(&ramp_phases(&p, op, m)),
+                    node_tx_bytes(&job_phases(&p, op, m, n)),
+                    "{} closed forms disagree at m={m} on {p:?}",
+                    op.name()
+                );
+            }
+        }
+    }
+}
+
+/// Active step sizes in execution order for the forward (shrinking) ops.
+fn active_sizes(p: &RampParams) -> Vec<u64> {
+    ramp::collectives::subgroups::Step::active(p)
+        .iter()
+        .map(|s| s.size(p) as u64)
+        .collect()
+}
+
+/// Total wire bytes of a RAMP-x gather of `contrib` bytes per node: at
+/// each step every holder except the per-subgroup sink forwards its whole
+/// holding (holder subgroups are all-or-none by the §5 digit invariance).
+fn gather_wire(p: &RampParams, contrib: u64) -> u64 {
+    let mut holders = p.n_nodes() as u64;
+    let mut hold = contrib;
+    let mut wire = 0;
+    for s in active_sizes(p) {
+        let sinks = holders / s;
+        wire += (holders - sinks) * hold;
+        holders = sinks;
+        hold *= s;
+    }
+    wire
+}
+
+/// Total wire bytes of a RAMP-x scatter of `m` bytes at the root: holders
+/// multiply by `s` per step, each forwarding `(s−1)/s` of its holding.
+fn scatter_wire(p: &RampParams, m: u64) -> u64 {
+    let mut holders = 1u64;
+    let mut hold = m;
+    let mut wire = 0;
+    for s in active_sizes(p) {
+        let per = hold / s;
+        wire += holders * per * (s - 1);
+        holders *= s;
+        hold = per;
+    }
+    wire
+}
+
+/// Expected fabric wire bytes for `op` with `m` message bytes (per-node
+/// contribution bytes for all-gather/gather), matching the executors'
+/// data movement exactly for N-divisible sizes.
+fn expected_wire(p: &RampParams, op: MpiOp, m: u64) -> u64 {
+    let n = p.n_nodes() as u64;
+    match op {
+        // symmetric: every node transmits the closed-form per-node total
+        MpiOp::ReduceScatter | MpiOp::AllGather | MpiOp::AllReduce | MpiOp::AllToAll => {
+            n * node_tx_bytes(&ramp_phases(p, op, m))
+        }
+        MpiOp::Scatter { .. } => scatter_wire(p, m),
+        MpiOp::Gather { .. } => gather_wire(p, m),
+        MpiOp::Reduce { .. } => {
+            n * node_tx_bytes(&ramp_phases(p, MpiOp::ReduceScatter, m))
+                + gather_wire(p, m / n)
+        }
+        // the executor models the barrier as an N-flag all-reduce
+        MpiOp::Barrier => n * node_tx_bytes(&ramp_phases(p, MpiOp::AllReduce, 4 * n)),
+        MpiOp::Broadcast { .. } => {
+            // mirror the executor's Eq-1 pipeline: k chunks from the root
+            // (x multicasts each, one fewer when the root is alone on its
+            // wavelength in its group) + k chunks from each of the Λ−1
+            // relay wavelengths into all x groups
+            let s = 3.0;
+            let alpha = p.propagation + p.io_latency;
+            let beta = 1.0 / p.node_capacity();
+            let k = (((m as f64 * 8.0 * (s - 2.0) * beta) / alpha).sqrt().round() as u64).max(1);
+            let chunk = m.div_ceil(k);
+            let root_txs = if p.j == 1 { p.x as u64 - 1 } else { p.x as u64 };
+            chunk * k * (root_txs + (p.lambda as u64 - 1) * p.x as u64)
+        }
+    }
+}
+
+#[test]
+fn executed_plans_conserve_bytes() {
+    for p in fabrics() {
+        let n = p.n_nodes();
+        let fabric = OpticalFabric::new(p.clone());
+        for op in MpiOp::all() {
+            // 2N elements per node: divisible by every step-size product,
+            // so the closed form's div_ceil padding slack is zero
+            let elems = 2 * n;
+            let mut bufs = random_inputs(n, elems, 7);
+            let plan = RampX::new(&p).run(op, &mut bufs).unwrap();
+            let sched = transcode_plan(&p, &plan).unwrap();
+            let report = fabric.execute(&sched);
+            assert!(report.ok(), "{} violations on {p:?}: {:?}", op.name(), report.violations);
+
+            let m = (elems * 4) as u64;
+            let expect = expected_wire(&p, op, m);
+            if matches!(op, MpiOp::Broadcast { .. }) {
+                // the pipeline chunk count is derived through f64 — allow
+                // a little slack against rounding differences
+                let diff = report.wire_bytes.abs_diff(expect);
+                assert!(
+                    diff * 20 <= expect,
+                    "broadcast wire {} vs closed form {} on {p:?}",
+                    report.wire_bytes,
+                    expect
+                );
+            } else {
+                assert_eq!(
+                    report.wire_bytes, expect,
+                    "{} wire bytes diverge from closed form on {p:?}",
+                    op.name()
+                );
+            }
+            // the plan's own accounting must match what the fabric carried
+            assert_eq!(report.wire_bytes, plan.total_wire_bytes(), "{}", op.name());
+        }
+    }
+}
+
+#[test]
+fn job_phases_cover_partial_jobs_conservatively() {
+    // at job scale the closed form must still conserve per-node volume:
+    // reduce-scatter moves ≥ (n−1)/n of the message, all-gather grows the
+    // contribution to ≤ padding slack beyond m·n
+    for p in fabrics() {
+        let full = p.n_nodes();
+        for n in [2usize, 3, full / 2, full - 1] {
+            if n < 2 {
+                continue;
+            }
+            let m = 4096u64 * full as u64;
+            let sizes_prod: u64 = ramp::collectives::ops::job_step_sizes(&p, n)
+                .iter()
+                .map(|&s| s as u64)
+                .product();
+            // reduce-scatter telescopes to m − m/Πs (≥, with ceil padding)
+            let rs = node_tx_bytes(&job_phases(&p, MpiOp::ReduceScatter, m, n));
+            assert!(rs >= m - m / sizes_prod, "rs undercounts: {rs} for n={n} on {p:?}");
+            // all-gather never divides, so it telescopes exactly
+            let ag = node_tx_bytes(&job_phases(&p, MpiOp::AllGather, m, n));
+            assert_eq!(ag, m * (sizes_prod - 1), "ag volume for n={n} on {p:?}");
+        }
+    }
+}

@@ -128,15 +128,15 @@ fn composition_identities() {
         }
     }
     // scatter from rank 5 then gather back to rank 5
-    engine.scatter(&mut bufs, 5).unwrap();
-    engine.gather(&mut bufs, 5).unwrap();
+    engine.run(MpiOp::Scatter { root: 5 }, &mut bufs).unwrap();
+    engine.run(MpiOp::Gather { root: 5 }, &mut bufs).unwrap();
     assert_eq!(bufs[5], original);
 
     // reduce == all_reduce at the root
     let inputs = random_bufs(&mut rng, n, n);
     let mut a = inputs.clone();
     let mut b = inputs.clone();
-    engine.reduce(&mut a, 3).unwrap();
-    engine.all_reduce(&mut b).unwrap();
+    engine.run(MpiOp::Reduce { root: 3 }, &mut a).unwrap();
+    engine.run(MpiOp::AllReduce, &mut b).unwrap();
     assert_eq!(a[3], b[3]);
 }
