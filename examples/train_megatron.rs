@@ -36,6 +36,7 @@ fn main() -> anyhow::Result<()> {
         seed: args.get_usize("seed", 42)? as u64,
         artifacts: ramp::config::artifacts_dir(),
         log_every: args.get_usize("log-every", 20)?,
+        pipeline_chunks: args.get_usize("pipeline", 1)?,
     };
 
     println!(

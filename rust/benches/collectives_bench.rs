@@ -1,5 +1,6 @@
 //! Bench: RAMP-x collective executors (data movement) + Fig 15/18/23
-//! regeneration, plus the arena-vs-prerefactor large-message comparison.
+//! regeneration, plus the arena-vs-prerefactor and serial-vs-pipelined
+//! large-message comparisons.
 //!
 //! `cargo bench --bench collectives_bench -- --json BENCH_collectives.json`
 //! writes machine-readable results. Env knobs:
@@ -9,11 +10,13 @@
 //!   arena slab, ~12 GB for the pre-refactor baseline's buffers).
 
 use ramp::benchutil::{bench, JsonReporter};
-use ramp::collectives::arena::BufferArena;
+use ramp::collectives::arena::{BufferArena, Pipeline};
 use ramp::collectives::ramp_x::RampX;
 use ramp::collectives::MpiOp;
+use ramp::estimator::CollectiveEstimator;
 use ramp::rng::Xoshiro256;
 use ramp::topology::ramp::RampParams;
+use ramp::units::GB;
 
 /// The pre-refactor data plane, kept verbatim as the benchmark baseline:
 /// every algorithmic step rebuilt all N node buffers as fresh
@@ -89,14 +92,15 @@ fn inputs(n: usize, c: usize) -> Vec<Vec<f32>> {
     (0..n).map(|_| (0..c).map(|_| r.next_f32()).collect()).collect()
 }
 
-/// Before/after large-message all-reduce at one scale; returns
-/// (baseline GB/s, arena GB/s) of collective payload moved per second.
+/// Before/after large-message all-reduce at one scale, with serial and
+/// chunk-pipelined arena columns; returns (baseline GB/s, serial arena
+/// GB/s, pipelined arena GB/s) of collective payload moved per second.
 fn large_message_case(
     json: &mut JsonReporter,
     p: &RampParams,
     label: &str,
     elems_per_node: usize,
-) -> (f64, f64) {
+) -> (f64, f64, f64) {
     let n = p.n_nodes();
     let mib = elems_per_node * 4 / (1 << 20);
     let bytes = (n * elems_per_node * 4) as f64;
@@ -125,19 +129,30 @@ fn large_message_case(
     }
     let x = RampX::new(p);
     let after = bench(
-        &format!("all-reduce {label} x {mib} MiB/node [arena]"),
+        &format!("all-reduce {label} x {mib} MiB/node [arena serial]"),
         2000,
         || x.run_arena(MpiOp::AllReduce, &mut arena).unwrap(),
     );
     let after_gbs = after.throughput(bytes) / 1e9;
     json.push(&after, Some(after_gbs));
 
-    println!(
-        "    -> {label}: {before_gbs:.2} GB/s before, {after_gbs:.2} GB/s after \
-         ({:.2}x speed-up)",
-        after_gbs / before_gbs
+    // pipelined: same slab, per-chunk sub-regions (auto K)
+    let xp = RampX::pipelined(p);
+    let piped = bench(
+        &format!("all-reduce {label} x {mib} MiB/node [arena pipelined]"),
+        2000,
+        || xp.run_arena(MpiOp::AllReduce, &mut arena).unwrap(),
     );
-    (before_gbs, after_gbs)
+    let piped_gbs = piped.throughput(bytes) / 1e9;
+    json.push(&piped, Some(piped_gbs));
+
+    println!(
+        "    -> {label}: {before_gbs:.2} GB/s before, {after_gbs:.2} GB/s serial arena, \
+         {piped_gbs:.2} GB/s pipelined ({:.2}x vs pre-refactor, {:.2}x vs serial)",
+        piped_gbs / before_gbs,
+        piped_gbs / after_gbs
+    );
+    (before_gbs, after_gbs, piped_gbs)
 }
 
 fn main() {
@@ -186,16 +201,34 @@ fn main() {
         .unwrap_or(64);
     let elems = (mib * (1 << 20) / 4).max(1);
     let mut speedups = Vec::new();
+    let mut pipe_ratios = Vec::new();
     for (p, label) in [(RampParams::fig8_example(), "54 nodes"), (p2.clone(), "128 nodes")] {
         // pad to a multiple of N so the executors accept the size
         let elems = elems.div_ceil(p.n_nodes()) * p.n_nodes();
-        let (before, after) = large_message_case(&mut json, &p, label, elems);
-        speedups.push(after / before);
+        let (before, serial, piped) = large_message_case(&mut json, &p, label, elems);
+        speedups.push(serial / before);
+        pipe_ratios.push(piped / serial);
     }
     println!(
-        "large-message all-reduce arena speed-up: {}",
-        speedups.iter().map(|s| format!("{s:.2}x")).collect::<Vec<_>>().join(", ")
+        "large-message all-reduce arena speed-up: {}; pipelined/serial: {}",
+        speedups.iter().map(|s| format!("{s:.2}x")).collect::<Vec<_>>().join(", "),
+        pipe_ratios.iter().map(|s| format!("{s:.2}x")).collect::<Vec<_>>().join(", ")
     );
+
+    println!("== modeled completion: serial vs chunk-pipelined (overlap of reduce with wire) ==");
+    let est = CollectiveEstimator::ramp(&RampParams::max_scale());
+    for (op, label) in [
+        (MpiOp::AllReduce, "all-reduce"),
+        (MpiOp::ReduceScatter, "reduce-scatter"),
+    ] {
+        let cmp = est.pipeline_comparison(op, GB, 65_536, Pipeline::auto());
+        println!(
+            "    -> {label} 1 GB @ 65,536 nodes: serial {:.3} ms, pipelined {:.3} ms ({:.2}x)",
+            cmp.serial.total() * 1e3,
+            cmp.pipelined.total() * 1e3,
+            cmp.speedup()
+        );
+    }
 
     json.write().expect("writing bench JSON");
 }

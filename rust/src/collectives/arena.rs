@@ -46,6 +46,117 @@ impl ArenaRegion {
     pub fn bytes(&self) -> u64 {
         (self.len * 4) as u64
     }
+
+    /// Split the view into (at most) `k` contiguous, disjoint sub-views
+    /// that cover it exactly — the per-chunk region views of the
+    /// pipelined executors. Sizes differ by at most one element.
+    pub fn chunks(&self, k: usize) -> Vec<ArenaRegion> {
+        chunk_bounds(self.len, k)
+            .into_iter()
+            .map(|(lo, hi)| ArenaRegion::new(self.offset + lo, hi - lo))
+            .collect()
+    }
+}
+
+/// Partition `[0, len)` into (at most) `k` non-empty `(lo, hi)` ranges
+/// covering it exactly, sizes differing by at most one (earlier chunks
+/// take the remainder). `len == 0` yields no ranges.
+pub fn chunk_bounds(len: usize, k: usize) -> Vec<(usize, usize)> {
+    if len == 0 {
+        return Vec::new();
+    }
+    let k = k.clamp(1, len);
+    let base = len / k;
+    let rem = len % k;
+    let mut out = Vec::with_capacity(k);
+    let mut lo = 0;
+    for i in 0..k {
+        let hi = lo + base + usize::from(i < rem);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+/// Hard ceiling on pipeline chunks: past this the per-chunk slot
+/// quantization and plan bookkeeping outgrow the latency being hidden.
+pub const MAX_PIPELINE_CHUNKS: usize = 16;
+
+/// Pipeline chunk count for a per-member payload of `m_bytes` on `p`:
+/// the chunk-pipelining analogue of the paper's Eq-1 trade-off. Splitting
+/// a step into `K` chunks lets chunk `c+1`'s local reduce overlap chunk
+/// `c`'s wire transfer, but each extra chunk pays one slot-quantization /
+/// reconfiguration overhead (`slot_time`; the OCS itself reconfigures in
+/// ~1 ns, §4.1), so `K* = sqrt(T_wire / T_slot)`, clamped to
+/// `[1, MAX_PIPELINE_CHUNKS]`.
+pub fn pipeline_chunk_count(p: &RampParams, m_bytes: u64) -> usize {
+    let wire = m_bytes as f64 * 8.0 / p.node_capacity();
+    if wire <= p.slot_time || p.slot_time <= 0.0 {
+        return 1;
+    }
+    ((wire / p.slot_time).sqrt().round() as usize).clamp(1, MAX_PIPELINE_CHUNKS)
+}
+
+/// Chunk-pipelining configuration for the RAMP-x executors (threaded from
+/// the engine / coordinator down to every executor's inner loop).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pipeline {
+    /// Requested chunk count: `0` = auto-select per step via
+    /// [`pipeline_chunk_count`]; `1` = unpipelined (the legacy
+    /// whole-region path); `k > 1` = fixed chunk count.
+    pub chunks: usize,
+    /// Auto selection never shreds a step's per-member payload below this
+    /// many elements per chunk (keeps the reduce/copy kernels
+    /// vector-width friendly). Ignored for fixed chunk counts so tests
+    /// can force chunking on small messages.
+    pub min_chunk_elems: usize,
+}
+
+impl Pipeline {
+    /// 4096 f32 = 16 KiB per chunk floor for auto selection.
+    pub const DEFAULT_MIN_CHUNK_ELEMS: usize = 1 << 12;
+
+    /// Unpipelined: every step processes its whole region at once.
+    pub fn off() -> Self {
+        Self { chunks: 1, min_chunk_elems: Self::DEFAULT_MIN_CHUNK_ELEMS }
+    }
+
+    /// Auto-select the chunk count per step from the step's payload.
+    pub fn auto() -> Self {
+        Self { chunks: 0, min_chunk_elems: Self::DEFAULT_MIN_CHUNK_ELEMS }
+    }
+
+    /// Fixed chunk count. Effective counts are capped at
+    /// [`MAX_PIPELINE_CHUNKS`] and at the step's payload size by
+    /// [`Self::chunks_for`] — requesting more silently runs at the cap.
+    pub fn fixed(k: usize) -> Self {
+        Self { chunks: k.max(1), min_chunk_elems: Self::DEFAULT_MIN_CHUNK_ELEMS }
+    }
+
+    /// Parse the engine/CLI knob: `0` = auto, `1` = off, `k` = fixed
+    /// (capped at [`MAX_PIPELINE_CHUNKS`]).
+    pub fn from_knob(k: usize) -> Self {
+        if k == 0 {
+            Self::auto()
+        } else {
+            Self::fixed(k)
+        }
+    }
+
+    /// Chunk count for a step whose per-member payload is `elems` f32
+    /// elements. Never exceeds `elems` (every chunk stays non-empty).
+    pub fn chunks_for(&self, p: &RampParams, elems: usize) -> usize {
+        if elems <= 1 {
+            return 1;
+        }
+        let k = match self.chunks {
+            0 => pipeline_chunk_count(p, (elems * 4) as u64)
+                .min(elems / self.min_chunk_elems.max(1))
+                .max(1),
+            k => k,
+        };
+        k.clamp(1, MAX_PIPELINE_CHUNKS).min(elems)
+    }
 }
 
 /// Double-buffered contiguous buffer slab for one collective. See the
@@ -336,5 +447,108 @@ mod tests {
     #[test]
     fn region_bytes() {
         assert_eq!(ArenaRegion::new(4, 10).bytes(), 40);
+    }
+
+    #[test]
+    fn chunk_bounds_partition_exactly() {
+        for len in [0usize, 1, 2, 7, 16, 54, 1000, 4097] {
+            for k in [1usize, 2, 3, 5, 16, 100] {
+                let b = chunk_bounds(len, k);
+                if len == 0 {
+                    assert!(b.is_empty());
+                    continue;
+                }
+                assert_eq!(b.len(), k.min(len), "len={len} k={k}");
+                assert_eq!(b[0].0, 0);
+                assert_eq!(b.last().unwrap().1, len);
+                for w in b.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "gap/overlap at len={len} k={k}");
+                }
+                let sizes: Vec<usize> = b.iter().map(|(lo, hi)| hi - lo).collect();
+                assert!(sizes.iter().all(|&s| s >= 1));
+                let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(mx - mn <= 1, "unbalanced chunks for len={len} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn region_chunk_views_disjoint_and_covering() {
+        let r = ArenaRegion::new(8, 10);
+        let views = r.chunks(4);
+        assert_eq!(views.len(), 4);
+        assert_eq!(views[0].offset, 8);
+        assert_eq!(views.iter().map(|v| v.len).sum::<usize>(), 10);
+        assert_eq!(views.iter().map(|v| v.bytes()).sum::<u64>(), r.bytes());
+        for w in views.windows(2) {
+            assert_eq!(w[0].offset + w[0].len, w[1].offset);
+        }
+    }
+
+    #[test]
+    fn pipeline_chunk_count_scales_with_message() {
+        let p = RampParams::fig8_example();
+        // tiny payloads never chunk
+        assert_eq!(pipeline_chunk_count(&p, 64), 1);
+        // growth is monotone and capped
+        let mut last = 0;
+        for mib in [1u64, 4, 16, 64, 256] {
+            let k = pipeline_chunk_count(&p, mib << 20);
+            assert!(k >= last, "non-monotone at {mib} MiB");
+            assert!(k <= MAX_PIPELINE_CHUNKS);
+            last = k;
+        }
+        assert_eq!(pipeline_chunk_count(&p, 256 << 20), MAX_PIPELINE_CHUNKS);
+    }
+
+    #[test]
+    fn pipeline_config_selection() {
+        let p = RampParams::fig8_example();
+        assert_eq!(Pipeline::off().chunks_for(&p, 1 << 24), 1);
+        // fixed counts ignore the auto floor but never exceed the payload
+        assert_eq!(Pipeline::fixed(3).chunks_for(&p, 32), 3);
+        assert_eq!(Pipeline::fixed(16).chunks_for(&p, 5), 5);
+        assert_eq!(Pipeline::fixed(3).chunks_for(&p, 1), 1);
+        // auto respects the per-chunk element floor
+        let auto = Pipeline::auto();
+        assert_eq!(auto.chunks_for(&p, 1024), 1, "small payloads stay whole");
+        let big = auto.chunks_for(&p, 1 << 24); // 64 MiB
+        assert!(big > 1 && big <= MAX_PIPELINE_CHUNKS);
+        assert!(auto.chunks_for(&p, 1 << 24) * Pipeline::DEFAULT_MIN_CHUNK_ELEMS <= (1 << 24));
+        assert_eq!(Pipeline::from_knob(0), Pipeline::auto());
+        assert_eq!(Pipeline::from_knob(1), Pipeline::off());
+        assert_eq!(Pipeline::from_knob(7), Pipeline::fixed(7));
+    }
+
+    #[test]
+    fn chunked_back_writes_never_alias_front_or_neighbours() {
+        // write through per-chunk views: the front half must stay intact
+        // until the flip, and no chunk may leak across region boundaries
+        let mut a = BufferArena::with_capacity(3, 12);
+        a.load(&[vec![1.0; 10], vec![2.0; 10], vec![3.0; 10]]).unwrap();
+        let views = ArenaRegion::new(0, 10).chunks(4);
+        for v in &views {
+            let (front, mut back) = a.split();
+            for r in 0..3 {
+                for i in v.offset..v.offset + v.len {
+                    back[r][i] = front[r * 12 + i] * 10.0;
+                }
+            }
+        }
+        // front untouched before the flip
+        assert!(a.front(0).iter().all(|&x| x == 1.0));
+        assert!(a.front(2).iter().all(|&x| x == 3.0));
+        a.flip_uniform(10);
+        assert!(a.front(0).iter().all(|&x| x == 10.0));
+        assert!(a.front(1).iter().all(|&x| x == 20.0));
+        assert!(a.front(2).iter().all(|&x| x == 30.0));
+        // the two unwritten tail elements of each region stayed zero —
+        // chunk views covered exactly [0, 10) of each region
+        for r in 0..3 {
+            assert_eq!(a.front_mut(r)[10..12], [0.0, 0.0], "region {r} tail leaked");
+        }
+        // flipping back exposes the original data unscathed
+        a.flip_uniform(10);
+        assert!(a.front(1).iter().all(|&x| x == 2.0));
     }
 }

@@ -7,7 +7,10 @@
 //!   (Table 8, Alg. 1).
 //! * [`arena`] — the zero-copy data plane: one double-buffered contiguous
 //!   slab per collective with per-rank `(offset, len)` regions, pre-sized
-//!   from the closed-form phase list (see `collectives/README.md`).
+//!   from the closed-form phase list, plus the chunk-pipelining policy
+//!   ([`arena::Pipeline`]) that splits steps into per-chunk sub-regions
+//!   so the local reduce overlaps the wire transfer (see
+//!   `collectives/README.md`).
 //! * [`plan`] — transfer-level collective schedules: rounds of
 //!   (src → dsts, bytes) records consumed by the transcoder, the fabric
 //!   simulator and the estimator.

@@ -68,6 +68,47 @@ pub struct PhaseSpec {
     pub reduce_bytes: u64,
     /// Transceiver groups striped per peer communication (Eqs 3–5).
     pub q: usize,
+    /// Pipeline chunk count the executor splits this phase into (1 =
+    /// unchunked). Byte totals are chunk-invariant: `per_peer_bytes` /
+    /// `reduce_bytes` stay the *whole-round* figures; a chunk carries
+    /// `1/chunks` of each. The overlap-aware completion model lives in
+    /// `estimator::collective_time`.
+    pub chunks: usize,
+}
+
+/// The single chunk-selection policy for the timing model, shared by
+/// [`pipelined_phases`] and the estimator's overlap-aware completion
+/// model: only phases with a local reduction have compute to hide under
+/// the wire, so only they chunk. Movement-only phases (and broadcast,
+/// whose phase already encodes the Eq-1 pipeline and carries no
+/// reduction) keep `1`. The *executors* still emit chunk sub-rounds for
+/// movement steps — the wire bytes are K-invariant and the sub-rounds
+/// stream back-to-back — but the model prices them at the serial figure.
+pub fn phase_chunks(
+    p: &RampParams,
+    ph: &PhaseSpec,
+    pipeline: crate::collectives::arena::Pipeline,
+) -> usize {
+    if ph.reduce_sources > 1 {
+        pipeline.chunks_for(p, (ph.per_peer_bytes / 4) as usize)
+    } else {
+        1
+    }
+}
+
+/// [`ramp_phases`] with each phase carrying the pipeline chunk count the
+/// overlap timing model uses for it (see [`phase_chunks`]).
+pub fn pipelined_phases(
+    p: &RampParams,
+    op: MpiOp,
+    m: u64,
+    pipeline: crate::collectives::arena::Pipeline,
+) -> Vec<PhaseSpec> {
+    let mut v = ramp_phases(p, op, m);
+    for ph in &mut v {
+        ph.chunks = phase_chunks(p, ph, pipeline);
+    }
+    v
 }
 
 /// Closed-form phase list for a RAMP-x collective with message size
@@ -241,6 +282,7 @@ fn phase_for_size(
         reduce_sources: if reduce { s } else { 0 },
         reduce_bytes: if reduce { per_peer * rounds as u64 } else { 0 },
         q,
+        chunks: 1,
     }
 }
 
@@ -435,6 +477,7 @@ pub fn broadcast_phases(p: &RampParams, m: u64) -> Vec<PhaseSpec> {
         reduce_sources: 0,
         reduce_bytes: 0,
         q: p.x, // Eq 1's β is the inverse of full node capacity
+        chunks: 1, // the Eq-1 pipeline is already encoded in `rounds`
     }]
 }
 
@@ -601,6 +644,42 @@ mod tests {
 
     fn ramp_or_job_len(p: &RampParams, op: MpiOp, n: usize) -> usize {
         job_phases(p, op, GB, n).len()
+    }
+
+    #[test]
+    fn pipelined_phases_preserve_byte_totals() {
+        use crate::collectives::arena::Pipeline;
+        let p = RampParams::max_scale();
+        for op in MpiOp::all() {
+            for pl in [Pipeline::off(), Pipeline::fixed(4), Pipeline::auto()] {
+                let serial = ramp_phases(&p, op, GB);
+                let chunked = pipelined_phases(&p, op, GB, pl);
+                assert_eq!(
+                    node_tx_bytes(&serial),
+                    node_tx_bytes(&chunked),
+                    "{} chunking changed wire volume",
+                    op.name()
+                );
+                assert_eq!(serial.len(), chunked.len());
+                for (a, b) in serial.iter().zip(&chunked) {
+                    assert_eq!(a.per_peer_bytes, b.per_peer_bytes);
+                    assert_eq!(a.rounds, b.rounds);
+                    assert!(b.chunks >= 1);
+                }
+            }
+        }
+        // at 1 GB every reduce-carrying phase chunks deep
+        let ph = pipelined_phases(&p, MpiOp::ReduceScatter, GB, Pipeline::fixed(8));
+        assert!(ph.iter().all(|s| s.chunks == 8));
+        // movement-only phases have nothing to overlap: serial figure
+        let ag = pipelined_phases(&p, MpiOp::AllGather, GB, Pipeline::fixed(8));
+        assert!(ag.iter().all(|s| s.chunks == 1));
+        // the all-gather tail of all-reduce likewise stays serial
+        let ar = pipelined_phases(&p, MpiOp::AllReduce, GB, Pipeline::fixed(8));
+        assert!(ar.iter().all(|s| (s.chunks == 8) == (s.reduce_sources > 1)));
+        // broadcast stays on its native Eq-1 pipeline
+        let bc = pipelined_phases(&p, MpiOp::Broadcast { root: 0 }, GB, Pipeline::fixed(8));
+        assert!(bc.iter().all(|s| s.chunks == 1));
     }
 
     #[test]

@@ -85,6 +85,28 @@ pub struct PlanStep {
     /// transcoder picks the transceiver-group formula per step (step 3
     /// needs the `(g_src + j_dst) mod x` variant — see transcoder docs).
     pub step: Option<crate::collectives::subgroups::Step>,
+    /// Pipeline chunk count of this step (0 / 1 = unchunked). When
+    /// `n_chunks > 1`, `rounds.len() == base_rounds · n_chunks` and the
+    /// rounds are ordered base-round-major: the `n_chunks` chunk
+    /// sub-rounds of each base round are consecutive and stream
+    /// back-to-back on the wire, so head-to-head latency is paid once per
+    /// *base* round (the nanosecond OCS re-targets between chunks without
+    /// a fresh propagation delay). Chunk sub-round byte counts sum exactly
+    /// to the base round's, so conservation accounting is chunk-invariant.
+    pub n_chunks: usize,
+}
+
+impl PlanStep {
+    /// Latency-bearing round count of this step: chunk sub-rounds of one
+    /// base round share a single H2H.
+    pub fn base_rounds(&self) -> usize {
+        let k = self.n_chunks.max(1);
+        if k > 1 && self.rounds.len() % k == 0 {
+            self.rounds.len() / k
+        } else {
+            self.rounds.len()
+        }
+    }
 }
 
 /// A fully-expanded collective schedule for one operation on one job.
@@ -96,9 +118,18 @@ pub struct CollectivePlan {
 impl CollectivePlan {
     /// Total number of communication rounds (the paper's "algorithmic
     /// steps" for step-count comparisons counts rounds, since each round
-    /// pays one H2H latency — Fig 15).
+    /// pays one H2H latency — Fig 15). Chunk sub-rounds count
+    /// individually here; see [`Self::n_base_rounds`] for the
+    /// latency-bearing count.
     pub fn n_rounds(&self) -> usize {
         self.steps.iter().map(|s| s.rounds.len()).sum()
+    }
+
+    /// Latency-bearing rounds: chunk sub-rounds of one base round stream
+    /// back-to-back and pay a single H2H (the pipelined executor's whole
+    /// point). Equals [`Self::n_rounds`] for unchunked plans.
+    pub fn n_base_rounds(&self) -> usize {
+        self.steps.iter().map(|s| s.base_rounds()).sum()
     }
 
     /// Total bytes on the wire across all transfers (multicast counted
@@ -152,5 +183,24 @@ mod tests {
         assert_eq!(plan.n_rounds(), 2);
         assert_eq!(plan.total_wire_bytes(), 20); // multicast counted once
         assert_eq!(plan.n_transfers(), 2);
+    }
+
+    #[test]
+    fn base_rounds_fold_chunk_subrounds() {
+        let mut s = PlanStep::default();
+        s.rounds = vec![Round::default(); 6];
+        assert_eq!(s.base_rounds(), 6, "unchunked: every round pays H2H");
+        s.n_chunks = 3;
+        assert_eq!(s.base_rounds(), 2, "3 chunk sub-rounds share one H2H");
+        s.n_chunks = 4; // not a divisor: treated as unchunked (defensive)
+        assert_eq!(s.base_rounds(), 6);
+        let mut plan = CollectivePlan::default();
+        let mut chunked = PlanStep::default();
+        chunked.rounds = vec![Round::default(); 6];
+        chunked.n_chunks = 3;
+        plan.steps.push(chunked);
+        plan.steps.push(PlanStep { rounds: vec![Round::default()], ..Default::default() });
+        assert_eq!(plan.n_rounds(), 7);
+        assert_eq!(plan.n_base_rounds(), 3);
     }
 }

@@ -21,7 +21,7 @@
 //! divisible by the relevant subgroup-size products; [`padded_len`] gives
 //! the canonical padding.
 
-use crate::collectives::arena::{run_parallel, ArenaRegion, BufferArena};
+use crate::collectives::arena::{chunk_bounds, run_parallel, ArenaRegion, BufferArena, Pipeline};
 use crate::collectives::plan::{CollectivePlan, PlanStep, Round, Transfer};
 use crate::collectives::subgroups::{
     member_index, members, node_of_rank, node_rank, rank_digit, Step,
@@ -31,13 +31,40 @@ use crate::topology::ramp::{NodeCoord, RampParams};
 use anyhow::{bail, ensure, Result};
 
 /// RAMP-x executor over a parameterized network.
+///
+/// With chunk pipelining enabled ([`Self::pipelined`] /
+/// [`Self::with_pipeline`]), every step splits its per-member payload
+/// into `K` per-chunk sub-regions of the arena ([`ArenaRegion::chunks`])
+/// and processes them in chunk order, so chunk `c+1`'s local
+/// compute/reduce overlaps chunk `c`'s wire transfer. The emitted plan
+/// carries one sub-round per chunk (base-round-major, byte totals
+/// chunk-invariant) and tags the step with `n_chunks`, which the
+/// transcoder uses to pay head-to-head latency once per *base* round.
 pub struct RampX<'a> {
     pub p: &'a RampParams,
+    pipeline: Pipeline,
 }
 
 impl<'a> RampX<'a> {
+    /// Unpipelined executor (`K = 1` everywhere) — plans and data paths
+    /// are byte-identical to the pre-pipelining data plane.
     pub fn new(p: &'a RampParams) -> Self {
-        Self { p }
+        Self { p, pipeline: Pipeline::off() }
+    }
+
+    /// Executor with auto-selected chunk pipelining (see
+    /// [`crate::collectives::arena::pipeline_chunk_count`]).
+    pub fn pipelined(p: &'a RampParams) -> Self {
+        Self { p, pipeline: Pipeline::auto() }
+    }
+
+    pub fn with_pipeline(mut self, pipeline: Pipeline) -> Self {
+        self.pipeline = pipeline;
+        self
+    }
+
+    pub fn pipeline(&self) -> Pipeline {
+        self.pipeline
     }
 
     /// Dispatch an operation on rank-indexed owned buffers. Loads the
@@ -83,7 +110,8 @@ impl<'a> RampX<'a> {
             let groups = subgroup_list(p, step);
             let s = step.size(p);
             let chunk = cur / s;
-            let region = ArenaRegion::new(0, chunk);
+            let k = self.pipeline.chunks_for(p, chunk);
+            let views = ArenaRegion::new(0, chunk).chunks(k);
             let rank_groups = subgroup_ranks(p, &groups);
             {
                 let cap = arena.region_cap();
@@ -91,12 +119,24 @@ impl<'a> RampX<'a> {
                 let bundles = bundle_regions(back, &rank_groups);
                 let work: Vec<(Vec<usize>, Vec<&mut [f32]>)> =
                     rank_groups.into_iter().zip(bundles).collect();
+                let views = &views;
+                // chunk-sequential per subgroup: chunk v's reduce overlaps
+                // chunk v−1's wire transfer in the emitted schedule. The
+                // sub-ranges partition the region, so this is
+                // data-movement-identical to the whole-region pass at the
+                // same per-step setup cost (one split/bundle/spawn). The
+                // work estimate stays cur·n: the fused reduce reads s
+                // inputs per output element.
                 run_parallel(work, cur * n, |(ranks, mut outs)| {
-                    reduce_subgroup(front, cap, &ranks, &mut outs, chunk);
+                    for v in views {
+                        reduce_subgroup(
+                            front, cap, &ranks, &mut outs, chunk, v.offset, v.offset + v.len,
+                        );
+                    }
                 });
             }
             arena.flip_uniform(chunk);
-            plan.steps.push(exchange_plan_step(p, step, &groups, region, s));
+            plan.steps.push(exchange_plan_step(p, step, &groups, &views, s));
             cur = chunk;
         }
         Ok(plan)
@@ -120,6 +160,8 @@ impl<'a> RampX<'a> {
                 arena.region_cap(),
                 cur * s
             );
+            let k = self.pipeline.chunks_for(p, cur);
+            let views = ArenaRegion::new(0, cur).chunks(k);
             let rank_groups = subgroup_ranks(p, &groups);
             {
                 let cap = arena.region_cap();
@@ -127,12 +169,17 @@ impl<'a> RampX<'a> {
                 let bundles = bundle_regions(back, &rank_groups);
                 let work: Vec<(Vec<usize>, Vec<&mut [f32]>)> =
                     rank_groups.into_iter().zip(bundles).collect();
+                let views = &views;
                 run_parallel(work, cur * s * groups.len(), |(ranks, mut outs)| {
-                    concat_subgroup(front, cap, &ranks, &mut outs, cur);
+                    for v in views {
+                        concat_subgroup(
+                            front, cap, &ranks, &mut outs, cur, v.offset, v.offset + v.len,
+                        );
+                    }
                 });
             }
             arena.flip_uniform(cur * s);
-            plan.steps.push(exchange_plan_step(p, step, &groups, ArenaRegion::new(0, cur), 0));
+            plan.steps.push(exchange_plan_step(p, step, &groups, &views, 0));
             cur *= s;
         }
         Ok(plan)
@@ -166,6 +213,9 @@ impl<'a> RampX<'a> {
 
         let mut plan = CollectivePlan::default();
         let active = Step::active(p);
+        // pipeline chunk count: sub-divide each route chunk's `c` elements
+        let kp = self.pipeline.chunks_for(p, c);
+        let views = chunk_bounds(c, kp);
         for (si, &step) in active.iter().enumerate() {
             let final_step = si + 1 == active.len();
             let groups = subgroup_list(p, step);
@@ -174,11 +224,11 @@ impl<'a> RampX<'a> {
             let rounds_pairs = exchange_rounds(s, step);
 
             // metadata pass: route every chunk, recording the per-group
-            // byte matrices for the plan and the copy list for the data
-            // pass. On the final step a chunk lands at its rank-ordered
-            // output offset (`src · c`); earlier steps append.
+            // route-chunk *count* matrices for the plan and the copy list
+            // for the data pass. On the final step a chunk lands at its
+            // rank-ordered output offset (`src · c`); earlier steps append.
             let mut new_chunks: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n];
-            let mut sent_bytes: Vec<Vec<Vec<u64>>> = Vec::with_capacity(groups.len());
+            let mut sent_counts: Vec<Vec<Vec<u64>>> = Vec::with_capacity(groups.len());
             let mut moves: Vec<Vec<(usize, usize, usize, usize)>> =
                 Vec::with_capacity(groups.len());
             for g in &rank_groups {
@@ -188,30 +238,35 @@ impl<'a> RampX<'a> {
                     for (ci, &(src, dst)) in chunks[r].iter().enumerate() {
                         let k = rank_digit(p, step, dst);
                         if k != i {
-                            mat[i][k] += (c * 4) as u64;
+                            mat[i][k] += 1;
                         }
                         let pos = if final_step { src } else { new_chunks[g[k]].len() };
                         mv.push((r, ci, k, pos));
                         new_chunks[g[k]].push((src, dst));
                     }
                 }
-                sent_bytes.push(mat);
+                sent_counts.push(mat);
                 moves.push(mv);
             }
 
-            // data pass: a chunk never leaves its current subgroup within
-            // a step, so subgroups move chunks on independent threads
+            // data pass: a route chunk never leaves its current subgroup
+            // within a step, so subgroups move their pipeline-chunk
+            // sub-ranges on independent threads, chunk-sequentially per
+            // subgroup (mirrors the emitted sub-round order)
             {
                 let cap = arena.region_cap();
                 let (front, back) = arena.split();
                 let bundles = bundle_regions(back, &rank_groups);
                 let work: Vec<(Vec<&mut [f32]>, Vec<(usize, usize, usize, usize)>)> =
                     bundles.into_iter().zip(moves).collect();
+                let views = &views;
                 run_parallel(work, m * n, |(mut outs, mv)| {
-                    for (srcr, ci, k, pos) in mv {
-                        outs[k][pos * c..(pos + 1) * c].copy_from_slice(
-                            &front[srcr * cap + ci * c..srcr * cap + (ci + 1) * c],
-                        );
+                    for &(lo, hi) in views {
+                        for &(srcr, ci, k, pos) in &mv {
+                            outs[k][pos * c + lo..pos * c + hi].copy_from_slice(
+                                &front[srcr * cap + ci * c + lo..srcr * cap + ci * c + hi],
+                            );
+                        }
                     }
                 });
             }
@@ -225,18 +280,23 @@ impl<'a> RampX<'a> {
                 reduce_bytes: 0,
                 trx_q: crate::collectives::ops::trx_groups_per_peer(p, step),
                 step: Some(step),
+                n_chunks: views.len().max(1),
             };
             for pairs in &rounds_pairs {
-                let mut round = Round::default();
-                for (gi, g) in groups.iter().enumerate() {
-                    for &(from, to) in pairs {
-                        let bytes = sent_bytes[gi][from][to];
-                        if bytes > 0 {
-                            round.transfers.push(Transfer::unicast(g[from], g[to], bytes));
+                // base-round-major: the chunk sub-rounds of one pairwise
+                // exchange are consecutive and stream back-to-back
+                for &(lo, hi) in &views {
+                    let mut round = Round::default();
+                    for (gi, g) in groups.iter().enumerate() {
+                        for &(from, to) in pairs {
+                            let bytes = sent_counts[gi][from][to] * ((hi - lo) * 4) as u64;
+                            if bytes > 0 {
+                                round.transfers.push(Transfer::unicast(g[from], g[to], bytes));
+                            }
                         }
                     }
+                    pstep.rounds.push(round);
                 }
-                pstep.rounds.push(round);
             }
             plan.steps.push(pstep);
         }
@@ -264,6 +324,10 @@ impl<'a> RampX<'a> {
         chunks[root] = (0..n).collect();
 
         let mut plan = CollectivePlan::default();
+        // pipeline chunk count: sub-divide each route chunk's `c` elements
+        let kp = self.pipeline.chunks_for(p, c);
+        let views = chunk_bounds(c, kp);
+        let n_views = views.len().max(1);
         for step in Step::active(p) {
             let groups = subgroup_list(p, step);
             let s = step.size(p);
@@ -273,11 +337,12 @@ impl<'a> RampX<'a> {
             let n_rounds = if step == Step::S4 && s > 2 { s - 1 } else { 1 };
             let mut pstep = PlanStep {
                 label: step_label(step),
-                rounds: vec![Round::default(); n_rounds],
+                rounds: vec![Round::default(); n_rounds * n_views],
                 reduce_sources: 0,
                 reduce_bytes: 0,
                 trx_q: crate::collectives::ops::trx_groups_per_peer(p, step),
                 step: Some(step),
+                n_chunks: n_views,
             };
             let mut new_chunks: Vec<Vec<usize>> = vec![Vec::new(); n];
             // (src_rank, src_chunk_idx, dst_rank, dst_chunk_idx)
@@ -287,22 +352,24 @@ impl<'a> RampX<'a> {
                     if chunks[r].is_empty() {
                         continue;
                     }
-                    let mut out_bytes = vec![0u64; s];
+                    let mut out_counts = vec![0u64; s];
                     for (ci, &dst) in chunks[r].iter().enumerate() {
                         let k = rank_digit(p, step, dst);
                         if k != i {
-                            out_bytes[k] += (c * 4) as u64;
+                            out_counts[k] += 1;
                         }
                         let dr = gr[k];
                         moves.push((r, ci, dr, new_chunks[dr].len()));
                         new_chunks[dr].push(dst);
                     }
-                    for (k, &bytes) in out_bytes.iter().enumerate() {
-                        if bytes > 0 {
+                    for (k, &cnt) in out_counts.iter().enumerate() {
+                        if cnt > 0 {
                             let ri = if n_rounds > 1 { (k + s - i) % s - 1 } else { 0 };
-                            pstep.rounds[ri]
-                                .transfers
-                                .push(Transfer::unicast(*mem, g[k], bytes));
+                            for (vi, &(lo, hi)) in views.iter().enumerate() {
+                                pstep.rounds[ri * n_views + vi].transfers.push(
+                                    Transfer::unicast(*mem, g[k], cnt * ((hi - lo) * 4) as u64),
+                                );
+                            }
                         }
                     }
                 }
@@ -310,10 +377,12 @@ impl<'a> RampX<'a> {
             {
                 let cap = arena.region_cap();
                 let (front, mut back) = arena.split();
-                for (srcr, ci, dr, pos) in moves {
-                    back[dr][pos * c..(pos + 1) * c].copy_from_slice(
-                        &front[srcr * cap + ci * c..srcr * cap + (ci + 1) * c],
-                    );
+                for &(lo, hi) in &views {
+                    for &(srcr, ci, dr, pos) in &moves {
+                        back[dr][pos * c + lo..pos * c + hi].copy_from_slice(
+                            &front[srcr * cap + ci * c + lo..srcr * cap + ci * c + hi],
+                        );
+                    }
                 }
             }
             arena.flip(new_chunks.iter().map(|l| l.len() * c).collect());
@@ -351,18 +420,13 @@ impl<'a> RampX<'a> {
             // many-to-one within the same group (step 4) is receiver-bound
             // (one wavelength): serialize into source-offset rounds
             let n_rounds = if step == Step::S4 && s > 2 { s - 1 } else { 1 };
-            let mut pstep = PlanStep {
-                label: step_label(step),
-                rounds: vec![Round::default(); n_rounds],
-                reduce_sources: 0,
-                reduce_bytes: 0,
-                trx_q: crate::collectives::ops::trx_groups_per_peer(p, step),
-                step: Some(step),
-            };
             let mut new_chunks: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n];
             // (src_rank, elems, dst_rank, dst_elem_offset)
             let mut moves: Vec<(usize, usize, usize, usize)> = Vec::new();
+            // (src, sink, elems, base round) — chunked into sub-rounds below
+            let mut xfers: Vec<(NodeCoord, NodeCoord, usize, usize)> = Vec::new();
             let mut max_sink_total = 0usize;
+            let mut max_hold = 0usize;
             for (g, gr) in groups.iter().zip(&rank_groups) {
                 let sink = g[target];
                 let sink_rank = gr[target];
@@ -372,10 +436,10 @@ impl<'a> RampX<'a> {
                         continue;
                     }
                     let total: usize = chunks[r].iter().map(|&(_, l)| l).sum();
-                    let bytes = (total * 4) as u64;
-                    if i != target && bytes > 0 {
+                    if i != target && total > 0 {
                         let ri = if n_rounds > 1 { (i + s - target) % s - 1 } else { 0 };
-                        pstep.rounds[ri].transfers.push(Transfer::unicast(*mem, sink, bytes));
+                        xfers.push((*mem, sink, total, ri));
+                        max_hold = max_hold.max(total);
                     }
                     if total > 0 {
                         moves.push((r, total, sink_rank, cursor));
@@ -391,12 +455,33 @@ impl<'a> RampX<'a> {
                 arena.region_cap(),
                 max_sink_total
             );
+            // chunk count from the largest holding this step forwards;
+            // smaller holdings produce fewer (never empty) sub-rounds
+            let kp = self.pipeline.chunks_for(p, max_hold);
+            let mut pstep = PlanStep {
+                label: step_label(step),
+                rounds: vec![Round::default(); n_rounds * kp],
+                reduce_sources: 0,
+                reduce_bytes: 0,
+                trx_q: crate::collectives::ops::trx_groups_per_peer(p, step),
+                step: Some(step),
+                n_chunks: kp,
+            };
+            for (src, sink, total, ri) in xfers {
+                for (vi, (lo, hi)) in chunk_bounds(total, kp).into_iter().enumerate() {
+                    pstep.rounds[ri * kp + vi]
+                        .transfers
+                        .push(Transfer::unicast(src, sink, ((hi - lo) * 4) as u64));
+                }
+            }
             {
                 let cap = arena.region_cap();
                 let (front, mut back) = arena.split();
                 for (srcr, len, dr, off) in moves {
-                    back[dr][off..off + len]
-                        .copy_from_slice(&front[srcr * cap..srcr * cap + len]);
+                    for (lo, hi) in chunk_bounds(len, kp) {
+                        back[dr][off + lo..off + hi]
+                            .copy_from_slice(&front[srcr * cap + lo..srcr * cap + hi]);
+                    }
                 }
             }
             arena.flip(
@@ -480,6 +565,8 @@ impl<'a> RampX<'a> {
         let chunk_bytes = m_bytes.div_ceil(k as u64);
 
         let mut plan = CollectivePlan::default();
+        // broadcast is natively chunk-pipelined (Eq 1): each of its rounds
+        // is one pipeline stage and pays its own H2H, so n_chunks stays 0
         let mut pstep = PlanStep {
             label: "bcast-tree".into(),
             rounds: Vec::new(),
@@ -487,6 +574,7 @@ impl<'a> RampX<'a> {
             reduce_bytes: 0,
             trx_q: 1,
             step: None,
+            n_chunks: 0,
         };
         // round r: root multicasts chunk r (if r < k); relays re-multicast
         // chunk r-1 (if 1 <= r).
@@ -613,25 +701,29 @@ fn bundle_regions<'s>(
         .collect()
 }
 
-/// Fused s-to-1 reduction for one subgroup (§8.4.2): member `i`'s back
+/// Fused s-to-1 reduction for one subgroup (§8.4.2) over the element
+/// sub-range `[lo, hi)` of each member's output chunk: member `i`'s back
 /// region receives the sum of every member's front chunk `i`. Tiled so
 /// the destination stays cache-resident while the inner loops
 /// autovectorize; float summation order matches the naive oracle
-/// (subgroup member order), keeping results byte-identical.
+/// (subgroup member order) and is chunk-range-invariant — sub-dividing
+/// `[0, chunk)` into pipeline chunks keeps results byte-identical.
 fn reduce_subgroup(
     front: &[f32],
     cap: usize,
     ranks: &[usize],
     outs: &mut [&mut [f32]],
     chunk: usize,
+    lo: usize,
+    hi: usize,
 ) {
     const TILE: usize = 8 * 1024;
     for (i, out) in outs.iter_mut().enumerate() {
         let base = i * chunk;
-        let dst = &mut out[..chunk];
-        let mut t = 0;
-        while t < chunk {
-            let e = (t + TILE).min(chunk);
+        let dst = &mut out[..hi];
+        let mut t = lo;
+        while t < hi {
+            let e = (t + TILE).min(hi);
             let r0 = ranks[0] * cap + base;
             dst[t..e].copy_from_slice(&front[r0 + t..r0 + e]);
             for &peer in &ranks[1..] {
@@ -646,25 +738,38 @@ fn reduce_subgroup(
     }
 }
 
-/// All-gather step for one subgroup: build the member-order concatenation
-/// once in the first member's back region, then bulk-copy it to the rest.
+/// All-gather step for one subgroup over the contribution sub-range
+/// `[lo, hi)`: build the member-order concatenation once in the first
+/// member's back region, then copy it to the rest (one bulk memcpy when
+/// the range is the whole contribution, per-member strided slices for a
+/// pipeline chunk).
 fn concat_subgroup(
     front: &[f32],
     cap: usize,
     ranks: &[usize],
     outs: &mut [&mut [f32]],
     cur: usize,
+    lo: usize,
+    hi: usize,
 ) {
-    let total = ranks.len() * cur;
     {
         let first = &mut outs[0];
         for (i, &r) in ranks.iter().enumerate() {
-            first[i * cur..(i + 1) * cur].copy_from_slice(&front[r * cap..r * cap + cur]);
+            first[i * cur + lo..i * cur + hi]
+                .copy_from_slice(&front[r * cap + lo..r * cap + hi]);
         }
     }
     let (first, rest) = outs.split_first_mut().expect("non-empty subgroup");
     for out in rest {
-        out[..total].copy_from_slice(&first[..total]);
+        if lo == 0 && hi == cur {
+            let total = ranks.len() * cur;
+            out[..total].copy_from_slice(&first[..total]);
+        } else {
+            for i in 0..ranks.len() {
+                out[i * cur + lo..i * cur + hi]
+                    .copy_from_slice(&first[i * cur + lo..i * cur + hi]);
+            }
+        }
     }
 }
 
@@ -690,34 +795,43 @@ fn exchange_rounds(s: usize, step: Step) -> Vec<Vec<(usize, usize)>> {
 }
 
 /// Plan step for a full intra-subgroup exchange (reduce-scatter /
-/// all-gather shape): every member sends the `region` view to every peer,
-/// so the wire size — and the reduced byte count, when `reduce_sources`
-/// marks an s-to-1 reduction — is the arena region's, not a separately
-/// recomputed count.
+/// all-gather shape): every member sends each per-chunk region view in
+/// `views` to every peer, so the wire size — and the reduced byte count,
+/// when `reduce_sources` marks an s-to-1 reduction — comes from the arena
+/// views actually exchanged, not a separately recomputed count. One
+/// sub-round per chunk view, base-round-major; chunk byte counts sum
+/// exactly to the whole region's.
 fn exchange_plan_step(
     p: &RampParams,
     step: Step,
     groups: &[Vec<NodeCoord>],
-    region: ArenaRegion,
+    views: &[ArenaRegion],
     reduce_sources: usize,
 ) -> PlanStep {
     let s = step.size(p);
+    let empty = [ArenaRegion::new(0, 0)];
+    let views = if views.is_empty() { &empty[..] } else { views };
+    let total_bytes: u64 = views.iter().map(ArenaRegion::bytes).sum();
     let mut pstep = PlanStep {
         label: step_label(step),
         rounds: Vec::new(),
         reduce_sources,
-        reduce_bytes: if reduce_sources > 1 { region.bytes() } else { 0 },
+        // per *base* round: chunk sub-rounds stream one reduction's worth
+        reduce_bytes: if reduce_sources > 1 { total_bytes } else { 0 },
         trx_q: crate::collectives::ops::trx_groups_per_peer(p, step),
         step: Some(step),
+        n_chunks: views.len(),
     };
     for pairs in exchange_rounds(s, step) {
-        let mut round = Round::default();
-        for g in groups {
-            for &(from, to) in &pairs {
-                round.transfers.push(Transfer::unicast_region(g[from], g[to], &region));
+        for region in views {
+            let mut round = Round::default();
+            for g in groups {
+                for &(from, to) in &pairs {
+                    round.transfers.push(Transfer::unicast_region(g[from], g[to], region));
+                }
             }
+            pstep.rounds.push(round);
         }
-        pstep.rounds.push(round);
     }
     pstep
 }
@@ -920,6 +1034,91 @@ mod tests {
         let plan = RampX::new(&p).run(MpiOp::ReduceScatter, &mut bufs).unwrap();
         let s4 = plan.steps.last().unwrap();
         assert_eq!(s4.rounds.len(), 3, "DG=4 ⇒ 3 one-to-one rounds");
+    }
+
+    #[test]
+    fn pipelined_executor_bitwise_matches_unpipelined() {
+        // sub-dividing a step's element range never changes the
+        // summation order, so pipelined results are byte-identical —
+        // for every op, fabric shape and chunk count
+        for p in params_under_test() {
+            let n = p.n_nodes();
+            for pl in [Pipeline::fixed(2), Pipeline::fixed(3), Pipeline::auto()] {
+                for op in MpiOp::all() {
+                    let elems = match op {
+                        MpiOp::AllGather | MpiOp::Gather { .. } => 5,
+                        _ => 2 * n,
+                    };
+                    let inputs = random_inputs(&p, elems, 31);
+                    let mut serial = inputs.clone();
+                    RampX::new(&p).run(op, &mut serial).unwrap();
+                    let mut chunked = inputs.clone();
+                    RampX::new(&p).with_pipeline(pl).run(op, &mut chunked).unwrap();
+                    assert_eq!(
+                        serial,
+                        chunked,
+                        "{} diverged under {pl:?} on {p:?}",
+                        op.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_plans_conserve_bytes_and_base_rounds() {
+        for p in params_under_test() {
+            let n = p.n_nodes();
+            for op in MpiOp::all() {
+                let elems = match op {
+                    MpiOp::AllGather | MpiOp::Gather { .. } => 6,
+                    _ => 2 * n,
+                };
+                let mut a = random_inputs(&p, elems, 32);
+                let serial = RampX::new(&p).run(op, &mut a).unwrap();
+                let mut b = random_inputs(&p, elems, 32);
+                let chunked =
+                    RampX::new(&p).with_pipeline(Pipeline::fixed(3)).run(op, &mut b).unwrap();
+                assert_eq!(
+                    serial.total_wire_bytes(),
+                    chunked.total_wire_bytes(),
+                    "{} wire bytes not chunk-invariant on {p:?}",
+                    op.name()
+                );
+                // chunk sub-rounds never add latency-bearing rounds
+                assert_eq!(
+                    serial.n_base_rounds(),
+                    chunked.n_base_rounds(),
+                    "{} base rounds changed on {p:?}",
+                    op.name()
+                );
+                assert!(chunked.n_rounds() >= serial.n_rounds());
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_reduce_scatter_chunks_rounds() {
+        let p = RampParams::fig8_example();
+        let n = p.n_nodes();
+        let mut bufs = random_inputs(&p, 6 * n, 33);
+        let plan =
+            RampX::new(&p).with_pipeline(Pipeline::fixed(3)).run(MpiOp::ReduceScatter, &mut bufs).unwrap();
+        for pstep in &plan.steps {
+            assert_eq!(pstep.n_chunks, 3);
+            assert_eq!(pstep.rounds.len() % 3, 0);
+            assert_eq!(pstep.base_rounds() * 3, pstep.rounds.len());
+            // the 3 sub-rounds of a base round carry the whole region
+            for base in pstep.rounds.chunks(3) {
+                let t0 = &base[0].transfers[0];
+                let total: u64 = base.iter().map(|r| r.transfers[0].bytes).sum();
+                // all sub-round transfers connect the same pair in order
+                assert!(base
+                    .iter()
+                    .all(|r| r.transfers[0].src == t0.src && r.transfers[0].dsts == t0.dsts));
+                assert!(total > 0);
+            }
+        }
     }
 
     #[test]

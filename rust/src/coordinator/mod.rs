@@ -41,6 +41,12 @@ pub struct TrainConfig {
     pub artifacts: PathBuf,
     /// Record a loss point every `log_every` steps.
     pub log_every: usize,
+    /// Chunk-pipelining knob for the gradient all-reduce: `0` = auto
+    /// (size-based `pipeline_chunk_count`), `1` = off, `k` = fixed chunk
+    /// count. Results are byte-identical either way; chunking overlaps
+    /// the per-chunk reduce with the wire transfer and shares each base
+    /// round's H2H across chunk sub-rounds.
+    pub pipeline_chunks: usize,
 }
 
 impl Default for TrainConfig {
@@ -54,6 +60,7 @@ impl Default for TrainConfig {
             seed: 42,
             artifacts: PathBuf::from("artifacts"),
             log_every: 10,
+            pipeline_chunks: 1,
         }
     }
 }
@@ -216,7 +223,8 @@ fn spawn_worker(
 /// Run a data-parallel training job end to end. See module docs.
 pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     let fabric = fabric_for_workers(cfg.n_workers)?;
-    let engine = RampEngine::new(fabric);
+    let engine = RampEngine::new(fabric)
+        .with_pipeline(crate::collectives::arena::Pipeline::from_knob(cfg.pipeline_chunks));
     let rt = Runtime::open(&cfg.artifacts)?;
     let n_params = rt.manifest.get_usize(&format!("model.{}.n_params", cfg.model))?;
     let vocab = rt.manifest.get_usize(&format!("model.{}.vocab", cfg.model))?;

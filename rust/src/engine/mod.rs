@@ -10,7 +10,7 @@
 //! completion time. All of it is deterministic and precomputed from
 //! (topology, op, message) — there is no runtime scheduler (§6.3).
 
-use crate::collectives::arena::BufferArena;
+use crate::collectives::arena::{BufferArena, Pipeline};
 use crate::collectives::plan::CollectivePlan;
 use crate::collectives::ramp_x::{padded_len, RampX};
 use crate::collectives::MpiOp;
@@ -41,12 +41,22 @@ pub struct RampEngine {
     /// (on by default — the paper's contention-less claim is a hard
     /// invariant).
     pub strict: bool,
+    /// Chunk-pipelining configuration passed to every executor run
+    /// (off by default; results are byte-identical either way).
+    pub pipeline: Pipeline,
 }
 
 impl RampEngine {
     pub fn new(p: RampParams) -> Self {
         let fabric = OpticalFabric::new(p.clone());
-        Self { p, fabric, strict: true }
+        Self { p, fabric, strict: true, pipeline: Pipeline::off() }
+    }
+
+    /// Engine with chunk-pipelined executors (`Pipeline::auto()` /
+    /// `Pipeline::fixed(k)`).
+    pub fn with_pipeline(mut self, pipeline: Pipeline) -> Self {
+        self.pipeline = pipeline;
+        self
     }
 
     /// Number of ranks this engine's fabric hosts.
@@ -69,7 +79,7 @@ impl RampEngine {
     /// movement, then transcode + fabric verification. Results land in
     /// the arena's front half.
     pub fn execute_arena(&self, op: MpiOp, arena: &mut BufferArena) -> Result<CollectiveRun> {
-        let plan = RampX::new(&self.p).run_arena(op, arena)?;
+        let plan = RampX::new(&self.p).with_pipeline(self.pipeline).run_arena(op, arena)?;
         let schedule = transcode_plan(&self.p, &plan)?;
         let report = self.fabric.execute(&schedule);
         if self.strict && !report.ok() {
@@ -177,6 +187,26 @@ mod tests {
         let engine = RampEngine::new(fabric_for_workers(4).unwrap());
         let mut bufs = vec![vec![0.0; 4], vec![0.0; 5], vec![0.0; 4], vec![0.0; 4]];
         assert!(engine.all_reduce_padded(&mut bufs, 4).is_err());
+    }
+
+    #[test]
+    fn pipelined_engine_matches_serial_and_amortizes_h2h() {
+        let p = fabric_for_workers(16).unwrap();
+        let serial = RampEngine::new(p.clone());
+        let pipelined = RampEngine::new(p).with_pipeline(Pipeline::fixed(4));
+        let mut r = Xoshiro256::seed_from(11);
+        let inputs: Vec<Vec<f32>> =
+            (0..16).map(|_| (0..64).map(|_| r.next_f32()).collect()).collect();
+        let mut a = inputs.clone();
+        let run_a = serial.execute(MpiOp::AllReduce, &mut a).unwrap();
+        let mut b = inputs.clone();
+        let run_b = pipelined.execute(MpiOp::AllReduce, &mut b).unwrap();
+        assert_eq!(a, b, "pipelined engine changed the result");
+        assert!(run_b.report.ok());
+        assert_eq!(run_a.report.wire_bytes, run_b.report.wire_bytes);
+        // chunk sub-rounds add wire rounds but share the base round's H2H
+        assert!(run_b.schedule.round_ends.len() > run_a.schedule.round_ends.len());
+        assert_eq!(run_b.schedule.h2h_rounds, run_a.schedule.h2h_rounds);
     }
 
     #[test]

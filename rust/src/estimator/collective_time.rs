@@ -8,6 +8,7 @@
 //! roofline time of the local reduction (§7.4.1). Rounds are synchronous;
 //! the critical path is the worst link the round's pattern crosses.
 
+use crate::collectives::arena::Pipeline;
 use crate::collectives::ops::job_phases;
 use crate::collectives::{hierarchical, ring, torus_strategy};
 use crate::collectives::{BaselinePhase, LinkClass, MpiOp, Strategy};
@@ -225,6 +226,24 @@ impl CollectiveEstimator {
     }
 
     fn ramp_time(&self, p: &RampParams, op: MpiOp, m: u64, n: usize) -> CollectiveTime {
+        self.ramp_time_with(p, op, m, n, None)
+    }
+
+    /// Per-round model: serial pays `α + W + C` (H2H, wire, local
+    /// reduce). With `K` pipeline chunks the reduce of chunk `c` overlaps
+    /// the wire transfer of chunk `c+1`, so only the *larger* of (W, C)
+    /// stays whole and the smaller shrinks to one chunk's worth:
+    /// `α + max(W, C) + min(W, C)/K`, plus `(K−1)` slot-quantization
+    /// overheads (the cost [`crate::collectives::arena::pipeline_chunk_count`]
+    /// balances). Broadcast phases keep their native Eq-1 pipeline.
+    fn ramp_time_with(
+        &self,
+        p: &RampParams,
+        op: MpiOp,
+        m: u64,
+        n: usize,
+        pipeline: Option<Pipeline>,
+    ) -> CollectiveTime {
         let h2h_per_round = p.propagation + p.io_latency;
         let mut t = CollectiveTime::default();
         for ph in job_phases(p, op, m, n) {
@@ -236,6 +255,23 @@ impl CollectiveEstimator {
             };
             let wire = ph.per_peer_bytes as f64 * 8.0 / rate;
             let compute = self.device.reduce_pass(ph.reduce_sources, ph.reduce_bytes as f64);
+            // shared policy (ops::phase_chunks): only reduce-carrying
+            // phases have compute to hide; movement-only and broadcast
+            // phases keep the serial figure
+            let k = match pipeline {
+                Some(pl) => crate::collectives::ops::phase_chunks(p, &ph, pl),
+                None => 1,
+            };
+            let (wire, compute) = if k > 1 {
+                let overhead = (k - 1) as f64 * p.slot_time;
+                if wire >= compute {
+                    (wire + overhead, compute / k as f64)
+                } else {
+                    (wire / k as f64 + overhead, compute)
+                }
+            } else {
+                (wire, compute)
+            };
             t.add(
                 ph.rounds as f64 * h2h_per_round,
                 ph.rounds as f64 * wire,
@@ -243,6 +279,40 @@ impl CollectiveEstimator {
             );
         }
         t
+    }
+
+    /// Completion time with chunk-pipelined RAMP-x executors. Baseline
+    /// systems have no RAMP-style chunk overlap and return their serial
+    /// figure unchanged.
+    pub fn completion_time_pipelined(
+        &self,
+        op: MpiOp,
+        m: u64,
+        n: usize,
+        pipeline: Pipeline,
+    ) -> CollectiveTime {
+        if n <= 1 {
+            return CollectiveTime::default();
+        }
+        match &self.system {
+            System::Ramp(p) => self.ramp_time_with(p, op, m, n, Some(pipeline)),
+            _ => self.completion_time(op, m, n),
+        }
+    }
+
+    /// Serial vs chunk-pipelined completion of the same collective — the
+    /// before/after readout the bench and CLI print.
+    pub fn pipeline_comparison(
+        &self,
+        op: MpiOp,
+        m: u64,
+        n: usize,
+        pipeline: Pipeline,
+    ) -> PipelineComparison {
+        PipelineComparison {
+            serial: self.completion_time(op, m, n),
+            pipelined: self.completion_time_pipelined(op, m, n, pipeline),
+        }
     }
 
     fn baseline_time(
@@ -266,6 +336,24 @@ impl CollectiveEstimator {
             );
         }
         t
+    }
+}
+
+/// Serial vs chunk-pipelined completion of one collective on one system.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineComparison {
+    pub serial: CollectiveTime,
+    pub pipelined: CollectiveTime,
+}
+
+impl PipelineComparison {
+    /// Serial / pipelined total time (≥ 1 when pipelining helps).
+    pub fn speedup(&self) -> f64 {
+        if self.pipelined.total() == 0.0 {
+            1.0
+        } else {
+            self.serial.total() / self.pipelined.total()
+        }
     }
 }
 
@@ -384,6 +472,57 @@ mod tests {
         let rs_pen = oversub.completion_time(MpiOp::ReduceScatter, m, n).total()
             / matched.completion_time(MpiOp::ReduceScatter, m, n).total();
         assert!(a2a_pen >= rs_pen, "a2a {a2a_pen} vs rs {rs_pen}");
+    }
+
+    #[test]
+    fn pipelined_model_never_slower_when_auto() {
+        // auto K balances overlap savings against slot quantization, so
+        // the pipelined estimate beats (or ties) serial for the
+        // reduce-carrying ops at every scale/size probed
+        let ramp = CollectiveEstimator::ramp(&RampParams::max_scale());
+        for op in MpiOp::all() {
+            for m in [10 * MB, GB, 10 * GB] {
+                for n in [128usize, 4096, 65_536] {
+                    let cmp = ramp.pipeline_comparison(op, m, n, Pipeline::auto());
+                    assert!(
+                        cmp.pipelined.total() <= cmp.serial.total() * (1.0 + 1e-9),
+                        "{} m={m} n={n}: pipelined {} > serial {}",
+                        op.name(),
+                        cmp.pipelined.total(),
+                        cmp.serial.total()
+                    );
+                    assert_eq!(cmp.pipelined.h2h, cmp.serial.h2h, "H2H count is K-invariant");
+                }
+            }
+        }
+        // large reduce-carrying collectives actually gain
+        let cmp = ramp.pipeline_comparison(MpiOp::AllReduce, 10 * GB, 65_536, Pipeline::auto());
+        assert!(cmp.speedup() > 1.0, "no overlap gain at 10 GB: {}", cmp.speedup());
+    }
+
+    #[test]
+    fn pipelined_model_identity_cases() {
+        let ramp = CollectiveEstimator::ramp(&RampParams::max_scale());
+        // K = 1 is exactly the serial model
+        let a = ramp.completion_time(MpiOp::AllReduce, GB, 4096);
+        let b = ramp.completion_time_pipelined(MpiOp::AllReduce, GB, 4096, Pipeline::off());
+        assert_eq!(a, b);
+        // broadcast keeps its native Eq-1 pipeline
+        let op = MpiOp::Broadcast { root: 0 };
+        let a = ramp.completion_time(op, GB, 4096);
+        let b = ramp.completion_time_pipelined(op, GB, 4096, Pipeline::fixed(8));
+        assert_eq!(a, b);
+        // baselines have no RAMP-style chunk overlap
+        let ring = CollectiveEstimator::fat_tree_ring(1.0);
+        assert_eq!(
+            ring.completion_time(MpiOp::AllReduce, GB, 4096),
+            ring.completion_time_pipelined(MpiOp::AllReduce, GB, 4096, Pipeline::auto())
+        );
+        // single node still free
+        assert_eq!(
+            ramp.completion_time_pipelined(MpiOp::AllReduce, GB, 1, Pipeline::auto()).total(),
+            0.0
+        );
     }
 
     #[test]

@@ -4,9 +4,13 @@
 //! ramp info                         architecture summary (Table 2)
 //! ramp repro <figN|tableN|all>      regenerate a paper table/figure
 //! ramp train [--workers N] [--steps N] [--model tiny] [--lr X]
-//!                                   real DDP training through the fabric
-//! ramp collective <op> [--nodes N] [--mb M] [--oversub S]
-//!                                   completion-time comparison for one op
+//!            [--pipeline K]          real DDP training through the fabric
+//!                                    (K: 0 = auto chunk pipelining,
+//!                                     1 = off, k = fixed chunk count —
+//!                                     capped at 16)
+//! ramp collective <op> [--nodes N] [--mb M] [--oversub S] [--pipeline K]
+//!                                   completion-time comparison for one op,
+//!                                   with a serial-vs-pipelined readout
 //! ```
 
 use anyhow::{anyhow, bail, Result};
@@ -45,8 +49,8 @@ fn run() -> Result<()> {
             println!(
                 "RAMP — flat nanosecond optical network + MPI operations for DDL\n\n\
                  usage:\n  ramp info\n  ramp repro <fig6|fig7|table3|table4|fig15..fig23|all>\n  \
-                 ramp train [--workers N] [--steps N] [--model tiny] [--lr X] [--momentum X]\n  \
-                 ramp collective <op> [--nodes N] [--mb M] [--oversub S]\n\n\
+                 ramp train [--workers N] [--steps N] [--model tiny] [--lr X] [--momentum X] [--pipeline K]\n  \
+                 ramp collective <op> [--nodes N] [--mb M] [--oversub S] [--pipeline K]\n\n\
                  ops: reduce-scatter all-gather all-reduce all-to-all scatter gather reduce broadcast"
             );
             Ok(())
@@ -85,6 +89,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         seed: args.get_usize("seed", 42)? as u64,
         artifacts: ramp::config::artifacts_dir(),
         log_every: args.get_usize("log-every", 10)?,
+        pipeline_chunks: args.get_usize("pipeline", 1)?,
     };
     println!(
         "training {} with {} workers for {} steps (lr {}, momentum {})",
@@ -165,6 +170,14 @@ fn cmd_collective(args: &Args) -> Result<()> {
         fmt_time(b.total()),
         bname,
         b.total() / r.total()
+    );
+    let pipeline = ramp::collectives::arena::Pipeline::from_knob(args.get_usize("pipeline", 0)?);
+    let cmp = ramp.pipeline_comparison(op, m, n, pipeline);
+    println!(
+        "chunk pipelining: serial {} vs pipelined {} — {:.2}x",
+        fmt_time(cmp.serial.total()),
+        fmt_time(cmp.pipelined.total()),
+        cmp.speedup()
     );
     Ok(())
 }

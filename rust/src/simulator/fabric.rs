@@ -198,9 +198,17 @@ impl OpticalFabric {
                     * p.lambda as f64);
         }
 
-        // virtual clock: every round boundary pays one H2H (propagation +
-        // node I/O) — the estimator's convention (§7.4.1)
-        let rounds = sched.round_ends.len() as f64;
+        // virtual clock: every *latency-bearing* round boundary pays one
+        // H2H (propagation + node I/O) — the estimator's convention
+        // (§7.4.1). Chunk sub-rounds of a pipelined base round stream
+        // back-to-back and share a single H2H (per-chunk transfer
+        // scheduling); hand-built schedules without the count fall back
+        // to one H2H per round.
+        let rounds = if sched.h2h_rounds > 0 {
+            sched.h2h_rounds
+        } else {
+            sched.round_ends.len()
+        } as f64;
         report.completion_time = report.makespan_slots as f64 * p.slot_time
             + rounds * (p.propagation + p.io_latency);
         report
@@ -352,7 +360,8 @@ mod tests {
         let fabric = OpticalFabric::new(p);
         let a = mk_ins(NodeCoord::new(0, 0, 1), NodeCoord::new(1, 0, 4), 1, 4, 0, 2);
         let b = mk_ins(NodeCoord::new(0, 1, 2), NodeCoord::new(1, 1, 4), 1, 4, 1, 2);
-        let sched = Schedule { instructions: vec![a, b], total_slots: 3, round_ends: vec![3] };
+        let sched =
+            Schedule { instructions: vec![a, b], total_slots: 3, round_ends: vec![3], h2h_rounds: 1 };
         let report = fabric.execute(&sched);
         assert!(report
             .violations
@@ -367,7 +376,8 @@ mod tests {
         let src = NodeCoord::new(0, 0, 0);
         let a = mk_ins(src, NodeCoord::new(1, 0, 4), 1, 4, 0, 3);
         let b = mk_ins(src, NodeCoord::new(1, 0, 5), 1, 5, 2, 2);
-        let sched = Schedule { instructions: vec![a, b], total_slots: 5, round_ends: vec![5] };
+        let sched =
+            Schedule { instructions: vec![a, b], total_slots: 5, round_ends: vec![5], h2h_rounds: 1 };
         let report = fabric.execute(&sched);
         assert!(report
             .violations
@@ -381,7 +391,8 @@ mod tests {
         let fabric = OpticalFabric::new(p);
         // transmission on λ3 to a node filtering λ4
         let bad = mk_ins(NodeCoord::new(0, 0, 0), NodeCoord::new(1, 0, 4), 1, 3, 0, 1);
-        let sched = Schedule { instructions: vec![bad], total_slots: 1, round_ends: vec![1] };
+        let sched =
+            Schedule { instructions: vec![bad], total_slots: 1, round_ends: vec![1], h2h_rounds: 1 };
         let report = fabric.execute(&sched);
         assert!(report
             .violations
@@ -395,7 +406,8 @@ mod tests {
         let fabric = OpticalFabric::new(p.clone());
         let mut ins = mk_ins(NodeCoord::new(0, 0, 0), NodeCoord::new(1, 0, 4), 1, 4, 0, 1);
         ins.bytes = group_slot_payload(&p) * 5;
-        let sched = Schedule { instructions: vec![ins], total_slots: 1, round_ends: vec![1] };
+        let sched =
+            Schedule { instructions: vec![ins], total_slots: 1, round_ends: vec![1], h2h_rounds: 1 };
         let report = fabric.execute(&sched);
         assert!(report
             .violations
@@ -433,6 +445,7 @@ mod tests {
             instructions: vec![long, short1, short2],
             total_slots: 10,
             round_ends: vec![10],
+            h2h_rounds: 1,
         };
         let report = fabric.execute(&sched);
         let tx_conflicts = report
@@ -441,6 +454,36 @@ mod tests {
             .filter(|v| matches!(v, Violation::TransmitterBusy { .. }))
             .count();
         assert!(tx_conflicts >= 2, "spanning conflict missed: {:?}", report.violations);
+    }
+
+    #[test]
+    fn chunked_schedule_pays_h2h_per_base_round() {
+        use crate::collectives::arena::Pipeline;
+        let p = RampParams::fig8_example();
+        let fabric = OpticalFabric::new(p.clone());
+        let n = p.n_nodes();
+        let mut serial_bufs = random_inputs(n, 4 * n, 23);
+        let serial_plan = RampX::new(&p).run(MpiOp::AllReduce, &mut serial_bufs).unwrap();
+        let serial_sched = transcode_plan(&p, &serial_plan).unwrap();
+        let mut bufs = random_inputs(n, 4 * n, 23);
+        let plan = RampX::new(&p)
+            .with_pipeline(Pipeline::fixed(4))
+            .run(MpiOp::AllReduce, &mut bufs)
+            .unwrap();
+        let sched = transcode_plan(&p, &plan).unwrap();
+        let report = fabric.execute(&sched);
+        assert!(report.ok());
+        // 4 chunk sub-rounds per base round on the wire...
+        assert!(sched.round_ends.len() > serial_sched.round_ends.len());
+        assert_eq!(sched.round_ends.len(), sched.h2h_rounds * 4);
+        assert_eq!(sched.h2h_rounds, serial_sched.h2h_rounds);
+        // ...but H2H is paid once per base round, exactly like serial
+        let h2h = (p.propagation + p.io_latency) * sched.h2h_rounds as f64;
+        let expect = report.makespan_slots as f64 * p.slot_time + h2h;
+        assert!((report.completion_time - expect).abs() < 1e-12);
+        let naive = report.makespan_slots as f64 * p.slot_time
+            + (p.propagation + p.io_latency) * sched.round_ends.len() as f64;
+        assert!(report.completion_time < naive, "chunking must not multiply H2H");
     }
 
     #[test]

@@ -60,6 +60,13 @@ pub struct Schedule {
     /// Slot boundaries of each plan round (exclusive end), for latency
     /// accounting per algorithmic step.
     pub round_ends: Vec<u64>,
+    /// Latency-bearing round boundaries: the chunk sub-rounds of a
+    /// pipelined base round stream back-to-back on the wire (the
+    /// nanosecond OCS re-targets between chunks without a fresh
+    /// propagation delay), so they share one H2H. Equals
+    /// `round_ends.len()` for unchunked plans; `0` means "not computed"
+    /// (hand-built schedules) and falls back to `round_ends.len()`.
+    pub h2h_rounds: usize,
 }
 
 impl Schedule {
@@ -178,6 +185,7 @@ impl<'a> Transcoder<'a> {
         let mut clock = 0u64;
         for step in &plan.steps {
             let q = step.trx_q.max(1);
+            sched.h2h_rounds += step.base_rounds();
             for round in &step.rounds {
                 clock = self.transcode_round(round, q, step.step, clock, &mut sched)?;
                 sched.round_ends.push(clock);
@@ -380,6 +388,45 @@ mod tests {
                     "{} serialized on {p:?}",
                     op.name()
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_plans_stay_contention_free_and_amortize_h2h() {
+        use crate::collectives::arena::Pipeline;
+        for p in [RampParams::fig8_example(), RampParams::new(2, 2, 8, 1)] {
+            let n = p.n_nodes();
+            for op in MpiOp::all() {
+                let elems = match op {
+                    MpiOp::AllGather | MpiOp::Gather { .. } => 6,
+                    _ => 2 * n,
+                };
+                let mut serial_bufs = random_inputs(n, elems, 17);
+                let serial = RampX::new(&p).run(op, &mut serial_bufs).unwrap();
+                let serial_sched = transcode_plan(&p, &serial).unwrap();
+                let mut bufs = random_inputs(n, elems, 17);
+                let plan = RampX::new(&p)
+                    .with_pipeline(Pipeline::fixed(3))
+                    .run(op, &mut bufs)
+                    .unwrap();
+                let sched = transcode_plan(&p, &plan).unwrap();
+                check_no_double_booking(&p, &sched);
+                // every chunk sub-round is itself schedule-less
+                assert!(
+                    is_contention_free(&p, &plan).unwrap(),
+                    "chunked {} serialized on {p:?}",
+                    op.name()
+                );
+                // chunking adds wire rounds but no latency-bearing ones
+                assert_eq!(
+                    sched.h2h_rounds,
+                    serial_sched.h2h_rounds,
+                    "chunked {} pays extra H2H on {p:?}",
+                    op.name()
+                );
+                assert_eq!(serial_sched.h2h_rounds, serial_sched.round_ends.len());
+                assert!(sched.round_ends.len() >= sched.h2h_rounds);
             }
         }
     }

@@ -123,40 +123,57 @@ fn expected_wire(p: &RampParams, op: MpiOp, m: u64) -> u64 {
 
 #[test]
 fn executed_plans_conserve_bytes() {
+    // the closed forms must tie to the executed wire bytes with chunk
+    // pipelining off AND on: chunk sub-rounds partition each base round's
+    // payload exactly, so the totals are K-invariant
+    let pipelines = [
+        ramp::collectives::arena::Pipeline::off(),
+        ramp::collectives::arena::Pipeline::fixed(3),
+        ramp::collectives::arena::Pipeline::auto(),
+    ];
     for p in fabrics() {
         let n = p.n_nodes();
         let fabric = OpticalFabric::new(p.clone());
         for op in MpiOp::all() {
-            // 2N elements per node: divisible by every step-size product,
-            // so the closed form's div_ceil padding slack is zero
-            let elems = 2 * n;
-            let mut bufs = random_inputs(n, elems, 7);
-            let plan = RampX::new(&p).run(op, &mut bufs).unwrap();
-            let sched = transcode_plan(&p, &plan).unwrap();
-            let report = fabric.execute(&sched);
-            assert!(report.ok(), "{} violations on {p:?}: {:?}", op.name(), report.violations);
-
-            let m = (elems * 4) as u64;
-            let expect = expected_wire(&p, op, m);
-            if matches!(op, MpiOp::Broadcast { .. }) {
-                // the pipeline chunk count is derived through f64 — allow
-                // a little slack against rounding differences
-                let diff = report.wire_bytes.abs_diff(expect);
+            for pipeline in pipelines {
+                // 2N elements per node: divisible by every step-size
+                // product, so the closed form's div_ceil padding slack is
+                // zero
+                let elems = 2 * n;
+                let mut bufs = random_inputs(n, elems, 7);
+                let plan =
+                    RampX::new(&p).with_pipeline(pipeline).run(op, &mut bufs).unwrap();
+                let sched = transcode_plan(&p, &plan).unwrap();
+                let report = fabric.execute(&sched);
                 assert!(
-                    diff * 20 <= expect,
-                    "broadcast wire {} vs closed form {} on {p:?}",
-                    report.wire_bytes,
-                    expect
+                    report.ok(),
+                    "{} violations under {pipeline:?} on {p:?}: {:?}",
+                    op.name(),
+                    report.violations
                 );
-            } else {
-                assert_eq!(
-                    report.wire_bytes, expect,
-                    "{} wire bytes diverge from closed form on {p:?}",
-                    op.name()
-                );
+
+                let m = (elems * 4) as u64;
+                let expect = expected_wire(&p, op, m);
+                if matches!(op, MpiOp::Broadcast { .. }) {
+                    // the pipeline chunk count is derived through f64 —
+                    // allow a little slack against rounding differences
+                    let diff = report.wire_bytes.abs_diff(expect);
+                    assert!(
+                        diff * 20 <= expect,
+                        "broadcast wire {} vs closed form {} on {p:?}",
+                        report.wire_bytes,
+                        expect
+                    );
+                } else {
+                    assert_eq!(
+                        report.wire_bytes, expect,
+                        "{} wire bytes diverge from closed form under {pipeline:?} on {p:?}",
+                        op.name()
+                    );
+                }
+                // the plan's own accounting must match the fabric's
+                assert_eq!(report.wire_bytes, plan.total_wire_bytes(), "{}", op.name());
             }
-            // the plan's own accounting must match what the fabric carried
-            assert_eq!(report.wire_bytes, plan.total_wire_bytes(), "{}", op.name());
         }
     }
 }

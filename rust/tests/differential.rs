@@ -1,0 +1,328 @@
+//! Differential test harness: every RAMP-x executor — chunk-pipelined
+//! and unpipelined — against the naive reference collectives, on
+//! seeded-random inputs across a grid of (fabric shape, message size,
+//! chunk count) including non-power-of-two and padding-edge sizes.
+//!
+//! Three layers of agreement are asserted per grid point:
+//! 1. executor output vs `collectives::reference` oracle, elementwise
+//!    within f32 reduction tolerance (movement-only ops must be exact);
+//! 2. pipelined output vs unpipelined output, *bitwise* — sub-dividing a
+//!    step's element range never reorders the float summation;
+//! 3. pipelined plan wire bytes vs unpipelined plan wire bytes (chunk
+//!    sub-round byte counts partition the base round exactly), and the
+//!    transcoded schedule executes violation-free on the fabric.
+//!
+//! Plus property tests for the arena invariants the pipelined executors
+//! lean on: `arena_capacity` covers every phase the closed forms predict,
+//! and chunked back-half writes never alias the front half or leak
+//! across `ArenaRegion` boundaries.
+
+use ramp::collectives::arena::{arena_capacity, BufferArena, Pipeline};
+use ramp::collectives::ops::{job_phases, job_step_sizes, ramp_phases};
+use ramp::collectives::ramp_x::{padded_len, RampX};
+use ramp::collectives::{reference, MpiOp};
+use ramp::rng::Xoshiro256;
+use ramp::simulator::OpticalFabric;
+use ramp::topology::ramp::RampParams;
+use ramp::transcoder::transcode_plan;
+
+/// Fabric shapes under differential test: all four steps active, steps 3
+/// and 4 inactive, non-power-of-two node counts, multi-round step 4.
+fn fabrics() -> Vec<RampParams> {
+    vec![
+        RampParams::new(2, 2, 4, 1),  // N=16, DG=2
+        RampParams::fig8_example(),   // N=54 (non-pow2), all steps active
+        RampParams::new(4, 2, 4, 1),  // N=32, step 4 inactive
+        RampParams::new(3, 1, 3, 1),  // N=9 (non-pow2), steps 3+4 inactive
+        RampParams::new(2, 2, 8, 1),  // N=32, DG=4 (multi-round step 4)
+    ]
+}
+
+/// Chunk-count axis of the grid: off, small fixed counts (forced even on
+/// tiny messages), the hard cap, and auto selection.
+fn pipelines() -> Vec<Pipeline> {
+    vec![
+        Pipeline::off(),
+        Pipeline::fixed(2),
+        Pipeline::fixed(3),
+        Pipeline::fixed(16),
+        Pipeline::auto(),
+    ]
+}
+
+/// Per-node message lengths (elements) for ops that require `N | m`:
+/// the minimum, the padding edge just above it (`padded_len(n+1) = 2n`),
+/// and non-power-of-two multiples.
+fn divisible_sizes(p: &RampParams) -> Vec<usize> {
+    let n = p.n_nodes();
+    vec![n, padded_len(p, n + 1), 3 * n, 7 * n]
+}
+
+/// Per-node contribution lengths for all-gather/gather (no divisibility
+/// constraint): including 1 and non-powers of two.
+fn contribution_sizes() -> Vec<usize> {
+    vec![1, 3, 8, 13]
+}
+
+fn random_inputs(n: usize, elems: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut r = Xoshiro256::seed_from(seed);
+    (0..n)
+        .map(|_| (0..elems).map(|_| (r.next_below(2000) as f32) * 0.25 - 250.0).collect())
+        .collect()
+}
+
+/// Deterministic per-grid-point seed.
+fn grid_seed(pi: usize, oi: usize, elems: usize, ki: usize) -> u64 {
+    (pi as u64) << 48 ^ (oi as u64) << 32 ^ (elems as u64) << 8 ^ ki as u64
+}
+
+/// Elementwise comparison within f32 reduction tolerance. The executors
+/// preserve the oracle's summation order, so `exact` ops must match
+/// bitwise; reduce-carrying ops are allowed the tolerance the MPI
+/// standard would.
+fn assert_close(got: &[Vec<f32>], want: &[Vec<f32>], exact: bool, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: rank count");
+    for (r, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.len(), w.len(), "{ctx}: rank {r} length");
+        for (i, (a, b)) in g.iter().zip(w).enumerate() {
+            if exact {
+                assert!(a == b, "{ctx}: rank {r} elem {i}: {a} != {b}");
+            } else {
+                let tol = 1e-5 * b.abs().max(1.0);
+                assert!((a - b).abs() <= tol, "{ctx}: rank {r} elem {i}: {a} vs {b}");
+            }
+        }
+    }
+}
+
+fn oracle(op: MpiOp, inputs: &[Vec<f32>]) -> Option<Vec<Vec<f32>>> {
+    Some(match op {
+        MpiOp::ReduceScatter => reference::reduce_scatter(inputs),
+        MpiOp::AllGather => reference::all_gather(inputs),
+        MpiOp::AllReduce => reference::all_reduce(inputs),
+        MpiOp::AllToAll => reference::all_to_all(inputs),
+        MpiOp::Scatter { root } => reference::scatter(inputs, root),
+        MpiOp::Gather { root } => reference::gather(inputs, root),
+        MpiOp::Reduce { root } => reference::reduce(inputs, root),
+        MpiOp::Broadcast { root } => reference::broadcast(inputs, root),
+        MpiOp::Barrier => return None, // no buffer semantics to compare
+    })
+}
+
+fn is_movement_only(op: MpiOp) -> bool {
+    matches!(
+        op,
+        MpiOp::AllGather
+            | MpiOp::AllToAll
+            | MpiOp::Scatter { .. }
+            | MpiOp::Gather { .. }
+            | MpiOp::Broadcast { .. }
+    )
+}
+
+/// Ops with a root, placed at interesting positions; symmetric ops once.
+fn op_instances(n: usize) -> Vec<MpiOp> {
+    let mut ops = vec![MpiOp::ReduceScatter, MpiOp::AllGather, MpiOp::AllReduce, MpiOp::AllToAll];
+    for root in [0, n / 2, n - 1] {
+        ops.push(MpiOp::Scatter { root });
+        ops.push(MpiOp::Gather { root });
+        ops.push(MpiOp::Reduce { root });
+        ops.push(MpiOp::Broadcast { root });
+    }
+    ops.push(MpiOp::Barrier);
+    ops
+}
+
+fn sizes_for(p: &RampParams, op: MpiOp) -> Vec<usize> {
+    match op {
+        MpiOp::AllGather | MpiOp::Gather { .. } => contribution_sizes(),
+        MpiOp::Broadcast { .. } => vec![1, 64, 257],
+        MpiOp::Barrier => vec![1],
+        _ => divisible_sizes(p),
+    }
+}
+
+#[test]
+fn all_nine_ops_match_reference_pipelined_and_not() {
+    for (pi, p) in fabrics().iter().enumerate() {
+        let n = p.n_nodes();
+        for (oi, &op) in op_instances(n).iter().enumerate() {
+            for elems in sizes_for(p, op) {
+                // unpipelined run is the bitwise anchor for every chunking
+                let seed = grid_seed(pi, oi, elems, 0);
+                let inputs = random_inputs(n, elems, seed);
+                let mut serial = inputs.clone();
+                RampX::new(p).run(op, &mut serial).unwrap();
+                if let Some(expect) = oracle(op, &inputs) {
+                    assert_close(
+                        &serial,
+                        &expect,
+                        is_movement_only(op),
+                        &format!("{} serial m={elems} on {p:?}", op.name()),
+                    );
+                }
+                for (ki, pl) in pipelines().iter().enumerate().skip(1) {
+                    let mut chunked = inputs.clone();
+                    RampX::new(p).with_pipeline(*pl).run(op, &mut chunked).unwrap();
+                    assert_eq!(
+                        serial,
+                        chunked,
+                        "{} K-grid point {ki} diverged bitwise at m={elems} on {p:?}",
+                        op.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn barrier_counts_everyone_under_every_chunking() {
+    for p in fabrics() {
+        let n = p.n_nodes();
+        for pl in pipelines() {
+            let mut bufs = vec![vec![0.0f32]; n];
+            RampX::new(&p).with_pipeline(pl).run(MpiOp::Barrier, &mut bufs).unwrap();
+            assert!(bufs.iter().all(|b| b[0] as usize == n), "barrier under {pl:?} on {p:?}");
+        }
+    }
+}
+
+#[test]
+fn pipelined_plans_execute_clean_and_conserve_wire_bytes() {
+    for p in fabrics() {
+        let n = p.n_nodes();
+        let fabric = OpticalFabric::new(p.clone());
+        for op in op_instances(n) {
+            let elems = match op {
+                MpiOp::AllGather | MpiOp::Gather { .. } => 6,
+                MpiOp::Broadcast { .. } | MpiOp::Barrier => 8,
+                _ => 2 * n,
+            };
+            let mut serial_bufs = random_inputs(n, elems, 99);
+            let serial = RampX::new(&p).run(op, &mut serial_bufs).unwrap();
+            for pl in [Pipeline::fixed(2), Pipeline::fixed(5), Pipeline::auto()] {
+                let mut bufs = random_inputs(n, elems, 99);
+                let plan = RampX::new(&p).with_pipeline(pl).run(op, &mut bufs).unwrap();
+                assert_eq!(
+                    plan.total_wire_bytes(),
+                    serial.total_wire_bytes(),
+                    "{} wire bytes drift under {pl:?} on {p:?}",
+                    op.name()
+                );
+                assert_eq!(
+                    plan.n_base_rounds(),
+                    serial.n_base_rounds(),
+                    "{} latency rounds drift under {pl:?} on {p:?}",
+                    op.name()
+                );
+                let sched = transcode_plan(&p, &plan).unwrap();
+                let report = fabric.execute(&sched);
+                assert!(
+                    report.ok(),
+                    "{} under {pl:?} violates fabric rules on {p:?}: {:?}",
+                    op.name(),
+                    report.violations
+                );
+                assert_eq!(report.wire_bytes, plan.total_wire_bytes(), "{}", op.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn arena_capacity_covers_every_closed_form_phase() {
+    // the executor pre-sizes regions from ramp_phases; every phase of the
+    // full-network closed form (and the job closed form at full size,
+    // which must coincide) has to fit
+    for p in fabrics() {
+        let n = p.n_nodes();
+        for op in MpiOp::all() {
+            if matches!(op, MpiOp::Broadcast { .. }) {
+                // broadcast replicates the root buffer over a multicast
+                // tree; its PhaseSpec models tree stages, not per-node
+                // buffer growth (arena_capacity special-cases it)
+                continue;
+            }
+            for elems in [n, 2 * n, 7 * n] {
+                let cap_bytes = (arena_capacity(&p, op, elems) * 4) as u64;
+                let m = (elems * 4) as u64;
+                for ph in ramp_phases(&p, op, m) {
+                    let per_node = ph.per_peer_bytes * ph.size as u64;
+                    assert!(
+                        per_node <= cap_bytes,
+                        "{}: phase at {:?} needs {per_node} B > cap {cap_bytes} B on {p:?}",
+                        op.name(),
+                        ph.step
+                    );
+                }
+                for ph in job_phases(&p, op, m, n) {
+                    let per_node = ph.per_peer_bytes * ph.size as u64;
+                    assert!(
+                        per_node <= cap_bytes,
+                        "{}: job phase needs {per_node} B > cap {cap_bytes} B on {p:?}",
+                        op.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn arena_capacity_survives_every_executor_path() {
+    // end-to-end sufficiency: BufferArena::for_op + run must never trip
+    // the executors' internal region-capacity guards, for any op, shape,
+    // padding-edge size, or chunking
+    for p in fabrics() {
+        let n = p.n_nodes();
+        for op in MpiOp::all() {
+            let sizes = match op {
+                MpiOp::AllGather | MpiOp::Gather { .. } => contribution_sizes(),
+                MpiOp::Broadcast { .. } | MpiOp::Barrier => vec![1, 17],
+                _ => vec![n, padded_len(&p, n + 1)],
+            };
+            for elems in sizes {
+                let inputs = random_inputs(n, elems, 3);
+                let mut arena = BufferArena::for_op(&p, op, &inputs).unwrap();
+                RampX::pipelined(&p).run_arena(op, &mut arena).unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn job_step_growth_stays_within_padding_bound() {
+    // partial-job phase lists are estimator-only (the data plane always
+    // runs the full network); their growth is bounded by the ≤ 4·n
+    // factor-product guarantee of job_step_sizes, which this pins down
+    for p in fabrics() {
+        let full = p.n_nodes();
+        for n in [2usize, 3, full / 2, full - 1, full] {
+            if n < 2 {
+                continue;
+            }
+            let prod: usize = job_step_sizes(&p, n).iter().product();
+            assert!(prod >= n.min(full) && prod <= 4 * n, "prod {prod} for n={n} on {p:?}");
+        }
+    }
+}
+
+#[test]
+fn chunked_execution_leaves_no_residue_across_regions() {
+    // run a pipelined all-reduce twice on one arena with different data;
+    // the second result must show no trace of the first (chunked writes
+    // cover their regions exactly — nothing leaks across boundaries or
+    // survives a flip)
+    for p in [RampParams::new(2, 2, 4, 1), RampParams::fig8_example()] {
+        let n = p.n_nodes();
+        let x = RampX::new(&p).with_pipeline(Pipeline::fixed(3));
+        let first = random_inputs(n, 2 * n, 41);
+        let second = random_inputs(n, 2 * n, 42);
+        let mut arena = BufferArena::for_op(&p, MpiOp::AllReduce, &first).unwrap();
+        x.run_arena(MpiOp::AllReduce, &mut arena).unwrap();
+        arena.load(&second).unwrap();
+        x.run_arena(MpiOp::AllReduce, &mut arena).unwrap();
+        assert_eq!(arena.copy_out(), reference::all_reduce(&second), "residue on {p:?}");
+    }
+}
