@@ -37,6 +37,7 @@ fn main() -> anyhow::Result<()> {
         artifacts: ramp::config::artifacts_dir(),
         log_every: args.get_usize("log-every", 20)?,
         pipeline_chunks: args.get_usize("pipeline", 1)?,
+        pool_threads: args.get_usize("pool-threads", 0)?,
     };
 
     println!(

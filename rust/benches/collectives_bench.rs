@@ -1,6 +1,7 @@
 //! Bench: RAMP-x collective executors (data movement) + Fig 15/18/23
-//! regeneration, plus the arena-vs-prerefactor and serial-vs-pipelined
-//! large-message comparisons.
+//! regeneration, plus the large-message data-plane generations:
+//! pre-refactor Vec-of-Vec vs PR-2 spawn-per-step arena vs the
+//! persistent-pool arena (serial and chunk-pipelined).
 //!
 //! `cargo bench --bench collectives_bench -- --json BENCH_collectives.json`
 //! writes machine-readable results. Env knobs:
@@ -11,6 +12,7 @@
 
 use ramp::benchutil::{bench, JsonReporter};
 use ramp::collectives::arena::{BufferArena, Pipeline};
+use ramp::collectives::pool::{PoolSel, WorkerPool};
 use ramp::collectives::ramp_x::RampX;
 use ramp::collectives::MpiOp;
 use ramp::estimator::CollectiveEstimator;
@@ -92,15 +94,16 @@ fn inputs(n: usize, c: usize) -> Vec<Vec<f32>> {
     (0..n).map(|_| (0..c).map(|_| r.next_f32()).collect()).collect()
 }
 
-/// Before/after large-message all-reduce at one scale, with serial and
-/// chunk-pipelined arena columns; returns (baseline GB/s, serial arena
-/// GB/s, pipelined arena GB/s) of collective payload moved per second.
+/// Large-message all-reduce at one scale across the data-plane
+/// generations: pre-refactor Vec-of-Vec, PR-2 spawn-per-step arena,
+/// persistent-pool arena, and pooled + chunk-pipelined. Returns the
+/// payload GB/s of each column.
 fn large_message_case(
     json: &mut JsonReporter,
     p: &RampParams,
     label: &str,
     elems_per_node: usize,
-) -> (f64, f64, f64) {
+) -> (f64, f64, f64, f64) {
     let n = p.n_nodes();
     let mib = elems_per_node * 4 / (1 << 20);
     let bytes = (n * elems_per_node * 4) as f64;
@@ -117,7 +120,7 @@ fn large_message_case(
     let before_gbs = before.throughput(bytes) / 1e9;
     json.push(&before, Some(before_gbs));
 
-    // after: arena-resident, zero-allocation, subgroup-parallel. Fill the
+    // arena columns: zero-allocation, subgroup-parallel. Fill the
     // regions in place so peak memory is the slab alone.
     let mut arena = BufferArena::with_capacity(n, elems_per_node);
     let mut rng = Xoshiro256::seed_from(1);
@@ -127,19 +130,33 @@ fn large_message_case(
         }
         arena.set_len(r, elems_per_node);
     }
-    let x = RampX::new(p);
-    let after = bench(
-        &format!("all-reduce {label} x {mib} MiB/node [arena serial]"),
-        2000,
-        || x.run_arena(MpiOp::AllReduce, &mut arena).unwrap(),
-    );
-    let after_gbs = after.throughput(bytes) / 1e9;
-    json.push(&after, Some(after_gbs));
 
-    // pipelined: same slab, per-chunk sub-regions (auto K)
+    // PR-2 baseline: std::thread::scope spawn/join on every step
+    let x_spawn = RampX::new(p).with_pool(PoolSel::Off);
+    let spawned = bench(
+        &format!("all-reduce {label} x {mib} MiB/node [arena spawn-per-step]"),
+        2000,
+        || x_spawn.run_arena(MpiOp::AllReduce, &mut arena).unwrap(),
+    );
+    let spawned_gbs = spawned.throughput(bytes) / 1e9;
+    json.push(&spawned, Some(spawned_gbs));
+
+    // this PR: persistent pool, sticky lanes, zero steady-state spawns
+    let x_pool = RampX::new(p).with_pool(PoolSel::Global);
+    let spawns_before = WorkerPool::global().spawn_count();
+    let pooled = bench(
+        &format!("all-reduce {label} x {mib} MiB/node [arena pooled]"),
+        2000,
+        || x_pool.run_arena(MpiOp::AllReduce, &mut arena).unwrap(),
+    );
+    let steady_spawns = WorkerPool::global().spawn_count() - spawns_before;
+    let pooled_gbs = pooled.throughput(bytes) / 1e9;
+    json.push(&pooled, Some(pooled_gbs));
+
+    // pooled + pipelined: same slab, per-chunk sub-regions (auto K)
     let xp = RampX::pipelined(p);
     let piped = bench(
-        &format!("all-reduce {label} x {mib} MiB/node [arena pipelined]"),
+        &format!("all-reduce {label} x {mib} MiB/node [arena pooled pipelined]"),
         2000,
         || xp.run_arena(MpiOp::AllReduce, &mut arena).unwrap(),
     );
@@ -147,12 +164,14 @@ fn large_message_case(
     json.push(&piped, Some(piped_gbs));
 
     println!(
-        "    -> {label}: {before_gbs:.2} GB/s before, {after_gbs:.2} GB/s serial arena, \
-         {piped_gbs:.2} GB/s pipelined ({:.2}x vs pre-refactor, {:.2}x vs serial)",
+        "    -> {label}: {before_gbs:.2} GB/s pre-refactor, {spawned_gbs:.2} GB/s \
+         spawn-per-step, {pooled_gbs:.2} GB/s pooled, {piped_gbs:.2} GB/s pooled+pipelined \
+         ({:.2}x pool vs spawn, {:.2}x vs pre-refactor; {steady_spawns} OS threads spawned \
+         during the pooled column)",
+        pooled_gbs / spawned_gbs,
         piped_gbs / before_gbs,
-        piped_gbs / after_gbs
     );
-    (before_gbs, after_gbs, piped_gbs)
+    (before_gbs, spawned_gbs, pooled_gbs, piped_gbs)
 }
 
 fn main() {
@@ -200,35 +219,48 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .unwrap_or(64);
     let elems = (mib * (1 << 20) / 4).max(1);
-    let mut speedups = Vec::new();
-    let mut pipe_ratios = Vec::new();
+    let mut arena_speedups = Vec::new();
+    let mut pool_speedups = Vec::new();
     for (p, label) in [(RampParams::fig8_example(), "54 nodes"), (p2.clone(), "128 nodes")] {
         // pad to a multiple of N so the executors accept the size
         let elems = elems.div_ceil(p.n_nodes()) * p.n_nodes();
-        let (before, serial, piped) = large_message_case(&mut json, &p, label, elems);
-        speedups.push(serial / before);
-        pipe_ratios.push(piped / serial);
+        let (before, spawned, pooled, _piped) = large_message_case(&mut json, &p, label, elems);
+        arena_speedups.push(spawned / before);
+        pool_speedups.push(pooled / spawned);
     }
     println!(
-        "large-message all-reduce arena speed-up: {}; pipelined/serial: {}",
-        speedups.iter().map(|s| format!("{s:.2}x")).collect::<Vec<_>>().join(", "),
-        pipe_ratios.iter().map(|s| format!("{s:.2}x")).collect::<Vec<_>>().join(", ")
+        "large-message all-reduce arena speed-up: {}; pooled vs spawn-per-step: {}",
+        arena_speedups.iter().map(|s| format!("{s:.2}x")).collect::<Vec<_>>().join(", "),
+        pool_speedups.iter().map(|s| format!("{s:.2}x")).collect::<Vec<_>>().join(", ")
     );
 
     println!("== modeled completion: serial vs chunk-pipelined (overlap of reduce with wire) ==");
     let est = CollectiveEstimator::ramp(&RampParams::max_scale());
+    let host = CollectiveEstimator::ramp_host_measured(&RampParams::max_scale());
     for (op, label) in [
         (MpiOp::AllReduce, "all-reduce"),
         (MpiOp::ReduceScatter, "reduce-scatter"),
     ] {
         let cmp = est.pipeline_comparison(op, GB, 65_536, Pipeline::auto());
+        let hcmp = host.pipeline_comparison(op, GB, 65_536, Pipeline::auto());
         println!(
-            "    -> {label} 1 GB @ 65,536 nodes: serial {:.3} ms, pipelined {:.3} ms ({:.2}x)",
+            "    -> {label} 1 GB @ 65,536 nodes: serial {:.3} ms, pipelined {:.3} ms ({:.2}x); \
+             with this host's measured reduce kernel: {:.3} ms pipelined ({:.2}x)",
             cmp.serial.total() * 1e3,
             cmp.pipelined.total() * 1e3,
-            cmp.speedup()
+            cmp.speedup(),
+            hcmp.pipelined.total() * 1e3,
+            hcmp.speedup()
         );
     }
+    println!(
+        "measured reduce-kernel bandwidth: {:.2} GB/s (SIMD width {} lanes); \
+         global pool: {} worker threads, {} total fan-outs, 0 spawns after warm-up",
+        ramp::collectives::kernels::measured_reduce_bandwidth() / 1e9,
+        ramp::collectives::kernels::simd_width(),
+        WorkerPool::global().n_workers(),
+        WorkerPool::global().fan_outs()
+    );
 
     json.write().expect("writing bench JSON");
 }

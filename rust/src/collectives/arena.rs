@@ -18,8 +18,10 @@
 //!
 //! The slab layout also makes the per-node simulation loop
 //! embarrassingly parallel: subgroups write disjoint back regions, so
-//! [`run_parallel`] fans subgroup work out over `std::thread::scope`
-//! threads (no extra dependencies, offline-friendly).
+//! subgroup work fans out across the persistent executor pool
+//! ([`crate::collectives::pool`]; [`run_parallel`] is the thin shim over
+//! it, [`run_parallel_weighted`] the spawn-per-step scoped fallback —
+//! no extra dependencies, offline-friendly).
 
 use crate::collectives::ops::ramp_phases;
 use crate::collectives::MpiOp;
@@ -330,24 +332,103 @@ pub fn arena_capacity(p: &RampParams, op: MpiOp, input_elems: usize) -> usize {
 
 /// Payload threshold (total f32 elements written by a step) below which
 /// fanning subgroups out over threads costs more than it saves.
+/// Overridable at runtime via `RAMP_PAR_THRESHOLD` (see
+/// [`par_threshold`]).
 pub const PAR_THRESHOLD_ELEMS: usize = 1 << 16;
 
+/// The host's available parallelism, queried once per process and cached
+/// (`available_parallelism` can be a syscall — PR 1 paid it on every
+/// `run_parallel` call).
+pub fn host_parallelism() -> usize {
+    static THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *THREADS
+        .get_or_init(|| std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1))
+}
+
+/// Effective parallel threshold: [`PAR_THRESHOLD_ELEMS`] unless the
+/// `RAMP_PAR_THRESHOLD` env knob overrides it (elements; read once per
+/// process — see `collectives/README.md`).
+pub fn par_threshold() -> usize {
+    static THRESHOLD: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *THRESHOLD
+        .get_or_init(|| crate::config::par_threshold_override().unwrap_or(PAR_THRESHOLD_ELEMS))
+}
+
+/// Indices of `weights` in largest-first order (ties broken by index, so
+/// placement is deterministic).
+pub fn lpt_order(weights: &[usize]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(weights[i]), i));
+    order
+}
+
+/// Pack item indices into `n_buckets` bins, largest weight first onto
+/// the least-loaded bin (LPT). Keeps bins balanced even when payload
+/// sizes are skewed — the old `i % n_buckets` round-robin could put all
+/// heavy items in one bin.
+pub fn lpt_buckets(weights: &[usize], n_buckets: usize) -> Vec<Vec<usize>> {
+    let n_buckets = n_buckets.max(1);
+    let mut bins: Vec<Vec<usize>> = (0..n_buckets).map(|_| Vec::new()).collect();
+    let mut loads = vec![0u64; n_buckets];
+    for i in lpt_order(weights) {
+        let b = (0..n_buckets).min_by_key(|&b| (loads[b], b)).expect("n_buckets > 0");
+        loads[b] += weights[i].max(1) as u64;
+        bins[b].push(i);
+    }
+    bins
+}
+
+/// [`lpt_buckets`] over owned `(weight, item)` pairs: materializes the
+/// index bins into bins of items (each item moved exactly once). The
+/// one bucket-unpacking implementation shared by the scoped fallback
+/// and the pool's unkeyed entry point.
+pub fn lpt_take_buckets<W>(work: Vec<(usize, W)>, n_buckets: usize) -> Vec<Vec<W>> {
+    let weights: Vec<usize> = work.iter().map(|(wt, _)| *wt).collect();
+    let mut slots: Vec<Option<W>> = work.into_iter().map(|(_, w)| Some(w)).collect();
+    lpt_buckets(&weights, n_buckets)
+        .into_iter()
+        .map(|bin| {
+            bin.into_iter()
+                .map(|i| slots[i].take().expect("each index placed once"))
+                .collect()
+        })
+        .collect()
+}
+
 /// Execute independent work items (typically one per subgroup, owning the
-/// subgroup's back regions) across scoped threads. Runs inline when the
-/// payload is small, there is ≤ 1 item, or the host has a single core.
+/// subgroup's back regions) across the process-wide persistent
+/// [`crate::collectives::pool::WorkerPool`] — a thin shim for callers
+/// without per-item identities or weights (unit-weight LPT binning per
+/// call, **no sticky assignment**: list indices are not stable
+/// identities and would collide with the executors' rank keys). Runs
+/// inline when the payload is under [`par_threshold`], there is ≤ 1
+/// item, or the host has a single core. Callers that know per-item
+/// payloads and sticky identities (the executors) fan out through the
+/// pool directly.
 pub fn run_parallel<W: Send>(work: Vec<W>, total_elems: usize, f: impl Fn(W) + Sync) {
-    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
-    if threads <= 1 || work.len() <= 1 || total_elems < PAR_THRESHOLD_ELEMS {
-        for w in work {
+    let weighted = work.into_iter().map(|w| (1, w)).collect();
+    crate::collectives::pool::WorkerPool::global().run_unkeyed(weighted, total_elems, f);
+}
+
+/// The PR-2 spawn-per-step execution path, kept as the pool-less
+/// fallback (`PoolSel::Off`) and as the bench baseline the pool is
+/// measured against: scoped threads spawned and joined per call, items
+/// packed size-aware ([`lpt_buckets`]) instead of round-robin. Runs
+/// inline under the same conditions as [`run_parallel`].
+pub fn run_parallel_weighted<W: Send>(
+    work: Vec<(usize, W)>,
+    total_elems: usize,
+    f: impl Fn(W) + Sync,
+) {
+    let threads = host_parallelism();
+    if threads <= 1 || work.len() <= 1 || total_elems < par_threshold() {
+        for (_, w) in work {
             f(w);
         }
         return;
     }
     let n_buckets = threads.min(work.len());
-    let mut buckets: Vec<Vec<W>> = (0..n_buckets).map(|_| Vec::new()).collect();
-    for (i, w) in work.into_iter().enumerate() {
-        buckets[i % n_buckets].push(w);
-    }
+    let buckets = lpt_take_buckets(work, n_buckets);
     let f = &f;
     std::thread::scope(|s| {
         let mut iter = buckets.into_iter();
@@ -442,6 +523,44 @@ mod tests {
             hits2.fetch_add(w, Ordering::Relaxed);
         });
         assert_eq!(hits2.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn run_parallel_weighted_covers_all_items() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let hits = AtomicUsize::new(0);
+        let work: Vec<(usize, usize)> = (0..29).map(|w| (1 + w % 7, w)).collect();
+        run_parallel_weighted(work, PAR_THRESHOLD_ELEMS * 2, |w| {
+            hits.fetch_add(w + 1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), (0..29usize).map(|w| w + 1).sum::<usize>());
+    }
+
+    #[test]
+    fn lpt_buckets_balance_skewed_weights() {
+        // one heavy item + seven light: round-robin over 2 buckets put
+        // the heavy item with 3 light ones (load 11 vs 4); LPT isolates
+        // it (load 8 vs 7)
+        let weights = [8usize, 1, 1, 1, 1, 1, 1, 1];
+        let bins = lpt_buckets(&weights, 2);
+        let load = |b: &Vec<usize>| b.iter().map(|&i| weights[i]).sum::<usize>();
+        let (a, b) = (load(&bins[0]), load(&bins[1]));
+        assert_eq!(a + b, 15);
+        assert!(a.abs_diff(b) <= 1, "unbalanced: {a} vs {b}");
+        // every index appears exactly once
+        let mut all: Vec<usize> = bins.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..8).collect::<Vec<_>>());
+        // deterministic tie-breaking
+        assert_eq!(lpt_buckets(&weights, 2), bins);
+        assert_eq!(lpt_order(&[3, 9, 3, 1]), vec![1, 0, 2, 3]);
+    }
+
+    #[test]
+    fn host_parallelism_and_threshold_are_cached_and_sane() {
+        assert!(host_parallelism() >= 1);
+        assert_eq!(host_parallelism(), host_parallelism());
+        assert!(par_threshold() >= 1);
     }
 
     #[test]

@@ -1,0 +1,435 @@
+//! SIMD-width-aware reduction / copy kernels for the arena data plane.
+//!
+//! PR 1 fused the per-subgroup s-to-1 reduction into a tiled slice loop
+//! inside `ramp_x.rs`; this module extracts that loop into a **kernel
+//! layer** and makes it width-aware:
+//!
+//! * the host's usable f32 SIMD width is probed **once**
+//!   ([`simd_width`], cached in a `OnceLock`): 16 lanes with AVX-512F,
+//!   8 with AVX2, 4 otherwise (NEON / SSE2 / scalar fallback);
+//! * element strips are processed through monomorphized `W`-lane block
+//!   passes (`chunks_exact(W)` bodies the autovectorizer maps onto full
+//!   vector registers, plus a scalar tail);
+//! * the peer loop of the s-to-1 reduction is **pair-fused**
+//!   ([`add2_assign`]): one pass over the destination strip consumes two
+//!   peer strips, halving destination load/store traffic. The per-element
+//!   addition order is untouched — `d = (d + a) + b` performs the same
+//!   two sequential f32 additions the one-peer-at-a-time loop performs —
+//!   so results stay **byte-identical** to the serial oracle and to the
+//!   unfused pass (asserted by the property tests below and by
+//!   `rust/tests/differential.rs`);
+//! * strips are sized so destination + two peer strips stay L1-resident
+//!   ([`STRIP_ELEMS`]), keeping the fused pass memory-bound on DRAM
+//!   reads rather than cache thrash.
+//!
+//! The gather/concat kernels keep the bulk-copy fast path: a whole-region
+//! pass is one `copy_from_slice` per member (`memcpy`), a pipeline-chunk
+//! pass copies per-member strided sub-ranges.
+//!
+//! [`measured_reduce_bandwidth`] times the *actual* reduce kernel once
+//! and caches the resulting effective memory bandwidth, which
+//! [`crate::estimator::roofline::RooflineDevice::host_measured`] feeds
+//! into the overlap timing model in place of the A100 constant.
+
+use std::sync::OnceLock;
+
+/// Elements per strip: destination + two peer source strips at 4 B/elem
+/// stay within a 32 KiB L1 slice (3 · 2048 · 4 B = 24 KiB).
+pub const STRIP_ELEMS: usize = 2048;
+
+fn probe_simd_width() -> usize {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            16
+        } else if std::arch::is_x86_feature_detected!("avx2") {
+            8
+        } else {
+            4
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        4
+    }
+}
+
+/// Usable f32 SIMD lane count of this host, probed once per process.
+pub fn simd_width() -> usize {
+    static WIDTH: OnceLock<usize> = OnceLock::new();
+    *WIDTH.get_or_init(probe_simd_width)
+}
+
+/// `dst[i] += a[i]` in `W`-lane blocks plus a scalar tail. One f32
+/// addition per element, in element order.
+fn add_assign_w<const W: usize>(dst: &mut [f32], a: &[f32]) {
+    debug_assert_eq!(dst.len(), a.len());
+    let mut dc = dst.chunks_exact_mut(W);
+    let mut ac = a.chunks_exact(W);
+    for (d, s) in (&mut dc).zip(&mut ac) {
+        for i in 0..W {
+            d[i] += s[i];
+        }
+    }
+    for (d, s) in dc.into_remainder().iter_mut().zip(ac.remainder()) {
+        *d += *s;
+    }
+}
+
+/// Pair-fused `dst[i] = (dst[i] + a[i]) + b[i]` in `W`-lane blocks plus a
+/// scalar tail. Exactly the two sequential additions of two
+/// [`add_assign_w`] passes per element — same order, same rounding — but
+/// one destination load/store instead of two.
+fn add2_assign_w<const W: usize>(dst: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert_eq!(dst.len(), a.len());
+    debug_assert_eq!(dst.len(), b.len());
+    let mut dc = dst.chunks_exact_mut(W);
+    let mut ac = a.chunks_exact(W);
+    let mut bc = b.chunks_exact(W);
+    for ((d, s), t) in (&mut dc).zip(&mut ac).zip(&mut bc) {
+        for i in 0..W {
+            d[i] = (d[i] + s[i]) + t[i];
+        }
+    }
+    for ((d, s), t) in dc
+        .into_remainder()
+        .iter_mut()
+        .zip(ac.remainder())
+        .zip(bc.remainder())
+    {
+        *d = (*d + *s) + *t;
+    }
+}
+
+/// Width-dispatched single-peer accumulation pass.
+pub fn add_assign(dst: &mut [f32], a: &[f32]) {
+    match simd_width() {
+        16 => add_assign_w::<16>(dst, a),
+        8 => add_assign_w::<8>(dst, a),
+        _ => add_assign_w::<4>(dst, a),
+    }
+}
+
+/// Width-dispatched pair-fused accumulation pass.
+pub fn add2_assign(dst: &mut [f32], a: &[f32], b: &[f32]) {
+    match simd_width() {
+        16 => add2_assign_w::<16>(dst, a, b),
+        8 => add2_assign_w::<8>(dst, a, b),
+        _ => add2_assign_w::<4>(dst, a, b),
+    }
+}
+
+/// Fused s-to-1 reduction for one subgroup (§8.4.2) over the element
+/// sub-range `[lo, hi)` of each member's output chunk: member `i`'s back
+/// region receives the sum of every member's front chunk `i`.
+///
+/// Strip-tiled: the destination strip stays L1-resident while the peer
+/// loop streams over it in fused pairs. Float summation order is the
+/// naive oracle's (subgroup member order, per element) and is
+/// chunk-range-invariant — sub-dividing `[0, chunk)` into pipeline
+/// chunks keeps results byte-identical.
+pub fn reduce_subgroup(
+    front: &[f32],
+    cap: usize,
+    ranks: &[usize],
+    outs: &mut [&mut [f32]],
+    chunk: usize,
+    lo: usize,
+    hi: usize,
+) {
+    for (i, out) in outs.iter_mut().enumerate() {
+        let base = i * chunk;
+        let dst = &mut out[..hi];
+        let mut t = lo;
+        while t < hi {
+            let e = (t + STRIP_ELEMS).min(hi);
+            let r0 = ranks[0] * cap + base;
+            dst[t..e].copy_from_slice(&front[r0 + t..r0 + e]);
+            let mut peers = ranks[1..].chunks_exact(2);
+            for pair in &mut peers {
+                let (pa, pb) = (pair[0] * cap + base, pair[1] * cap + base);
+                add2_assign(&mut dst[t..e], &front[pa + t..pa + e], &front[pb + t..pb + e]);
+            }
+            if let &[last] = peers.remainder() {
+                let pb = last * cap + base;
+                add_assign(&mut dst[t..e], &front[pb + t..pb + e]);
+            }
+            t = e;
+        }
+    }
+}
+
+/// Scalar reference for [`reduce_subgroup`]: one peer at a time, one
+/// element at a time, no strips, no fusing. The property tests assert
+/// the tiled kernel matches this bitwise for every width, sub-range and
+/// subgroup size.
+pub fn reduce_subgroup_scalar(
+    front: &[f32],
+    cap: usize,
+    ranks: &[usize],
+    outs: &mut [&mut [f32]],
+    chunk: usize,
+    lo: usize,
+    hi: usize,
+) {
+    for (i, out) in outs.iter_mut().enumerate() {
+        let base = i * chunk;
+        for e in lo..hi {
+            let mut acc = front[ranks[0] * cap + base + e];
+            for &peer in &ranks[1..] {
+                acc += front[peer * cap + base + e];
+            }
+            out[e] = acc;
+        }
+    }
+}
+
+/// All-gather step for one subgroup over the contribution sub-range
+/// `[lo, hi)`: build the member-order concatenation once in the first
+/// member's back region, then copy it to the rest — one bulk `memcpy`
+/// when the range is the whole contribution (the fast path), per-member
+/// strided slices for a pipeline chunk.
+pub fn concat_subgroup(
+    front: &[f32],
+    cap: usize,
+    ranks: &[usize],
+    outs: &mut [&mut [f32]],
+    cur: usize,
+    lo: usize,
+    hi: usize,
+) {
+    {
+        let first = &mut outs[0];
+        for (i, &r) in ranks.iter().enumerate() {
+            first[i * cur + lo..i * cur + hi].copy_from_slice(&front[r * cap + lo..r * cap + hi]);
+        }
+    }
+    let (first, rest) = outs.split_first_mut().expect("non-empty subgroup");
+    for out in rest {
+        if lo == 0 && hi == cur {
+            let total = ranks.len() * cur;
+            out[..total].copy_from_slice(&first[..total]);
+        } else {
+            for i in 0..ranks.len() {
+                out[i * cur + lo..i * cur + hi].copy_from_slice(&first[i * cur + lo..i * cur + hi]);
+            }
+        }
+    }
+}
+
+/// Effective memory bandwidth (bytes/s) of this host's fused reduce
+/// kernel, measured once and cached. An `s`-to-1 pass over `chunk`
+/// output elements moves `(s + 1) · 4 · chunk` bytes (s reads + 1
+/// write), the figure the roofline model divides by. The working set
+/// (4 × 8 MiB sources + 8 MiB output = 40 MiB) is sized past typical
+/// L3 capacities so the figure reflects the DRAM-streaming rate the
+/// ≥64 MiB/node collectives actually see, not cache bandwidth.
+pub fn measured_reduce_bandwidth() -> f64 {
+    static BW: OnceLock<f64> = OnceLock::new();
+    *BW.get_or_init(|| {
+        const SOURCES: usize = 4;
+        const CHUNK: usize = 1 << 21; // 8 MiB per source region
+        let front = vec![1.0f32; SOURCES * CHUNK];
+        let mut out = vec![0.0f32; CHUNK];
+        let ranks: Vec<usize> = (0..SOURCES).collect();
+        let moved = ((SOURCES + 1) * CHUNK * 4) as f64;
+        let mut best = f64::INFINITY;
+        for _ in 0..4 {
+            let t0 = std::time::Instant::now();
+            {
+                let mut outs = [out.as_mut_slice()];
+                reduce_subgroup(&front, CHUNK, &ranks, &mut outs, CHUNK, 0, CHUNK);
+            }
+            std::hint::black_box(&mut out);
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        if best > 0.0 && best.is_finite() {
+            (moved / best).max(1e8)
+        } else {
+            1e8
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn front_for(n_ranks: usize, cap: usize, seed: u64) -> Vec<f32> {
+        let mut r = Xoshiro256::seed_from(seed);
+        // mix magnitudes so any reassociation would change the rounding
+        (0..n_ranks * cap)
+            .map(|_| {
+                let v = (r.next_below(2000) as f32) * 0.37 - 370.0;
+                if r.next_below(7) == 0 {
+                    v * 1e6
+                } else {
+                    v
+                }
+            })
+            .collect()
+    }
+
+    fn run_reduce(
+        tiled: bool,
+        front: &[f32],
+        cap: usize,
+        ranks: &[usize],
+        n_outs: usize,
+        chunk: usize,
+        lo: usize,
+        hi: usize,
+    ) -> Vec<Vec<f32>> {
+        let mut outs: Vec<Vec<f32>> = vec![vec![0.0; cap]; n_outs];
+        {
+            let mut views: Vec<&mut [f32]> = outs.iter_mut().map(Vec::as_mut_slice).collect();
+            if tiled {
+                reduce_subgroup(front, cap, ranks, &mut views, chunk, lo, hi);
+            } else {
+                reduce_subgroup_scalar(front, cap, ranks, &mut views, chunk, lo, hi);
+            }
+        }
+        outs
+    }
+
+    #[test]
+    fn simd_width_is_probed_once_and_sane() {
+        let w = simd_width();
+        assert!(w == 4 || w == 8 || w == 16);
+        assert_eq!(w, simd_width());
+    }
+
+    #[test]
+    fn tiled_reduce_matches_scalar_bitwise_across_shapes() {
+        // non-power-of-two subgroup sizes, strip-unaligned sub-ranges,
+        // lengths straddling the strip and lane boundaries
+        for s in [2usize, 3, 5, 7] {
+            for chunk in [1usize, 5, 63, STRIP_ELEMS - 1, STRIP_ELEMS + 17] {
+                let cap = s * chunk.max(1);
+                let front = front_for(s, cap, (s * 1000 + chunk) as u64);
+                let ranks: Vec<usize> = (0..s).collect();
+                let ranges = [
+                    (0, chunk),
+                    (chunk / 3, chunk),
+                    (0, (2 * chunk).div_ceil(3)),
+                    (chunk / 4, (3 * chunk).div_ceil(4)),
+                ];
+                for (lo, hi) in ranges {
+                    if lo >= hi {
+                        continue;
+                    }
+                    let a = run_reduce(true, &front, cap, &ranks, s, chunk, lo, hi);
+                    let b = run_reduce(false, &front, cap, &ranks, s, chunk, lo, hi);
+                    assert_eq!(a, b, "s={s} chunk={chunk} range=({lo},{hi})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_sub_ranges_compose_to_the_whole_pass() {
+        // running the kernel over the K sub-ranges of a partition must be
+        // bitwise identical to one whole-range pass (the pipelining
+        // invariant), for every chunk count
+        let s = 5;
+        let chunk = 3 * STRIP_ELEMS + 11;
+        let cap = s * chunk;
+        let front = front_for(s, cap, 99);
+        let ranks: Vec<usize> = (0..s).collect();
+        let whole = run_reduce(true, &front, cap, &ranks, s, chunk, 0, chunk);
+        for k in [2usize, 3, 5, 16] {
+            let mut outs: Vec<Vec<f32>> = vec![vec![0.0; cap]; s];
+            for (lo, hi) in crate::collectives::arena::chunk_bounds(chunk, k) {
+                let mut views: Vec<&mut [f32]> = outs.iter_mut().map(Vec::as_mut_slice).collect();
+                reduce_subgroup(&front, cap, &ranks, &mut views, chunk, lo, hi);
+            }
+            assert_eq!(outs, whole, "k={k}");
+        }
+    }
+
+    #[test]
+    fn fixed_width_passes_agree_bitwise() {
+        // per-element order is width-invariant, so every monomorphized
+        // width must produce identical bits (only the blocking differs)
+        let n = 3 * STRIP_ELEMS + 29;
+        let front = front_for(3, n, 7);
+        let (a, b) = front.split_at(n);
+        let b = &b[..n];
+        let mut d4: Vec<f32> = front[2 * n..].to_vec();
+        let mut d8 = d4.clone();
+        let mut d16 = d4.clone();
+        add2_assign_w::<4>(&mut d4, a, b);
+        add2_assign_w::<8>(&mut d8, a, b);
+        add2_assign_w::<16>(&mut d16, a, b);
+        assert_eq!(d4, d8);
+        assert_eq!(d8, d16);
+        let mut s4: Vec<f32> = front[2 * n..].to_vec();
+        let mut s8 = s4.clone();
+        add_assign_w::<4>(&mut s4, a);
+        add_assign_w::<8>(&mut s8, a);
+        assert_eq!(s4, s8);
+        // pair-fused ≡ two sequential single passes
+        let mut two: Vec<f32> = front[2 * n..].to_vec();
+        add_assign(&mut two, a);
+        add_assign(&mut two, b);
+        assert_eq!(two, d4, "pair fusing must not reassociate");
+    }
+
+    #[test]
+    fn reduce_touches_only_the_requested_range() {
+        let s = 3;
+        let chunk = 100;
+        let cap = s * chunk;
+        let front = front_for(s, cap, 13);
+        let ranks: Vec<usize> = (0..s).collect();
+        let mut outs: Vec<Vec<f32>> = vec![vec![f32::NAN; cap]; s];
+        {
+            let mut views: Vec<&mut [f32]> = outs.iter_mut().map(Vec::as_mut_slice).collect();
+            reduce_subgroup(&front, cap, &ranks, &mut views, chunk, 20, 70);
+        }
+        for out in &outs {
+            assert!(out[..20].iter().all(|v| v.is_nan()), "prefix clobbered");
+            assert!(out[20..70].iter().all(|v| !v.is_nan()), "range not written");
+            assert!(out[70..].iter().all(|v| v.is_nan()), "suffix clobbered");
+        }
+    }
+
+    #[test]
+    fn concat_chunked_equals_whole_and_bulk_path() {
+        let s = 4;
+        let cur = 37;
+        let cap = s * cur;
+        let front = front_for(s, cap, 17);
+        let ranks: Vec<usize> = (0..s).collect();
+        let build = |ranges: &[(usize, usize)]| -> Vec<Vec<f32>> {
+            let mut outs: Vec<Vec<f32>> = vec![vec![0.0; cap]; s];
+            for &(lo, hi) in ranges {
+                let mut views: Vec<&mut [f32]> = outs.iter_mut().map(Vec::as_mut_slice).collect();
+                concat_subgroup(&front, cap, &ranks, &mut views, cur, lo, hi);
+            }
+            outs
+        };
+        let whole = build(&[(0, cur)]);
+        for r in 0..s {
+            for (i, &rank) in ranks.iter().enumerate() {
+                assert_eq!(
+                    whole[r][i * cur..(i + 1) * cur],
+                    front[rank * cap..rank * cap + cur],
+                    "member {i} missing in out {r}"
+                );
+            }
+        }
+        for k in [2usize, 3, 7] {
+            let chunked = build(&crate::collectives::arena::chunk_bounds(cur, k));
+            assert_eq!(chunked, whole, "k={k}");
+        }
+    }
+
+    #[test]
+    fn measured_bandwidth_is_positive_and_cached() {
+        let a = measured_reduce_bandwidth();
+        assert!(a >= 1e8 && a.is_finite());
+        assert_eq!(a, measured_reduce_bandwidth());
+    }
+}

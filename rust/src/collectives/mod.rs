@@ -11,6 +11,12 @@
 //!   ([`arena::Pipeline`]) that splits steps into per-chunk sub-regions
 //!   so the local reduce overlaps the wire transfer (see
 //!   `collectives/README.md`).
+//! * [`pool`] — the persistent executor pool: long-lived worker threads
+//!   with sticky subgroup→lane assignment; zero thread spawns on the
+//!   steady-state collective path.
+//! * [`kernels`] — SIMD-width-aware strip-tiled reduce/concat kernels
+//!   (width probed once, pair-fused peer passes, bulk-copy fast path),
+//!   byte-identical to the scalar reference.
 //! * [`plan`] — transfer-level collective schedules: rounds of
 //!   (src → dsts, bytes) records consumed by the transcoder, the fabric
 //!   simulator and the estimator.
@@ -21,8 +27,10 @@
 
 pub mod arena;
 pub mod hierarchical;
+pub mod kernels;
 pub mod ops;
 pub mod plan;
+pub mod pool;
 pub mod ramp_x;
 pub mod reference;
 pub mod ring;

@@ -1,0 +1,542 @@
+//! Persistent executor pool for the RAMP-x data plane.
+//!
+//! PR 1's `run_parallel` paid a `std::thread::scope` spawn/join on
+//! **every** collective step — with chunk pipelining (PR 2) that cost
+//! lands once per step of every iteration, right on the path whose
+//! nanosecond-reconfiguration claim (§8.4.2) the reproduction is trying
+//! to defend. A [`WorkerPool`] replaces that with threads created
+//! **once** and reused across steps, chunks and training iterations:
+//!
+//! * each worker owns a private job queue (mutex + condvar); a fan-out
+//!   call bins its work items, pushes one job per busy worker, runs the
+//!   caller's own bin inline, and waits on a per-call latch — no OS
+//!   thread is ever spawned after pool construction (asserted by
+//!   [`WorkerPool::spawn_count`] staying flat);
+//! * **sticky subgroup→lane assignment**: work items carry a stable key
+//!   (the subgroup's first MPI rank). A key keeps the lane it was first
+//!   assigned to, so a subgroup's back regions are re-touched by the
+//!   same core across consecutive steps and iterations and stay hot in
+//!   that core's cache. New keys are placed size-aware: largest weight
+//!   first onto the least-loaded lane (LPT), replacing the old
+//!   `i % n_buckets` round-robin;
+//! * the caller participates as the last lane (`lanes = workers + 1`),
+//!   so a pool sized to the host never leaves the dispatching thread
+//!   idle — and the caller is itself a stable lane for stickiness.
+//!
+//! Work items only ever borrow the arena split for the duration of one
+//! fan-out call; the pool erases those lifetimes to move jobs into the
+//! long-lived queues and guarantees (via a wait-on-drop latch guard)
+//! that the call does not return — not even by unwinding — before every
+//! submitted job has finished. That is the same contract
+//! `std::thread::scope` provides, without the per-call spawn.
+
+use crate::collectives::arena::{host_parallelism, lpt_order, par_threshold};
+use rustc_hash::FxHashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+
+/// A work item with the metadata the pool bins by: `key` is the sticky
+/// identity (stable across steps — the subgroup's first MPI rank),
+/// `weight` the payload size in elements (drives size-aware placement).
+pub struct Keyed<W> {
+    pub key: usize,
+    pub weight: usize,
+    pub item: W,
+}
+
+impl<W> Keyed<W> {
+    pub fn new(key: usize, weight: usize, item: W) -> Self {
+        Self { key, weight, item }
+    }
+}
+
+/// Which execution substrate a [`crate::collectives::ramp_x::RampX`]
+/// fans subgroup work out on.
+#[derive(Clone, Debug, Default)]
+pub enum PoolSel {
+    /// The process-wide [`WorkerPool::global`] pool; payloads under the
+    /// parallel threshold run inline (the production default).
+    #[default]
+    Global,
+    /// Never pool: the PR-2 spawn-per-step scoped fallback
+    /// (`arena::run_parallel_weighted`). Kept for benchmarking the pool
+    /// against and for single-shot callers.
+    Off,
+    /// An explicit caller-owned pool (the `--pool-threads` knob); honors
+    /// the inline threshold exactly like [`PoolSel::Global`].
+    Handle(Arc<WorkerPool>),
+    /// An explicit pool that always fans out (no inline threshold), so
+    /// tests and measurements exercise the pooled path even on tiny
+    /// payloads. Not a production mode.
+    Forced(Arc<WorkerPool>),
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct WorkerShared {
+    queue: Mutex<Vec<Job>>,
+    ready: Condvar,
+}
+
+struct Shared {
+    workers: Vec<WorkerShared>,
+    shutdown: AtomicBool,
+}
+
+/// Completion latch for one fan-out call: counts outstanding jobs and
+/// wakes the caller when the last one finishes. Jobs decrement through a
+/// drop guard, so a panicking kernel still releases the caller.
+///
+/// The counter lives **under the mutex**: the latch itself sits on the
+/// fan-out call's stack frame and workers reach it through a
+/// lifetime-erased reference, so the decrement, the zero check and the
+/// notify must be one critical section. (With a lock-free decrement, a
+/// worker bringing the count to zero could race the caller past its
+/// `wait()` — the frame, and the latch with it, would be gone before
+/// the worker touched `lock`/`cv` to notify: use-after-free.) The last
+/// toucher of the mutex is always the waiter, which is the frame that
+/// owns the latch.
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+    /// First worker panic payload, re-raised on the caller after the
+    /// wait so diagnostics (message, location) survive the pool hop —
+    /// matching what `std::thread::scope` does on the scoped path.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl Latch {
+    fn new() -> Self {
+        Self { remaining: Mutex::new(0), cv: Condvar::new(), panic: Mutex::new(None) }
+    }
+
+    fn add(&self) {
+        *lock_recover(&self.remaining) += 1;
+    }
+
+    fn done(&self) {
+        let mut g = lock_recover(&self.remaining);
+        *g -= 1;
+        if *g == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = lock_recover(&self.remaining);
+        while *g > 0 {
+            g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// Decrements the latch even if the job body unwinds.
+struct LatchGuard<'l>(&'l Latch);
+
+impl Drop for LatchGuard<'_> {
+    fn drop(&mut self) {
+        self.0.done();
+    }
+}
+
+/// Blocks until every job submitted by this call has finished, even when
+/// the caller's own inline bin panics mid-call — the borrowed arena
+/// slices and closure must outlive every worker touching them.
+struct ScopeGuard<'l>(&'l Latch);
+
+impl Drop for ScopeGuard<'_> {
+    fn drop(&mut self) {
+        self.0.wait();
+    }
+}
+
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The persistent worker pool. See the module docs.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// key → lane sticky map. Assignments persist across fan-outs;
+    /// per-lane loads are rebuilt from scratch inside each call (sticky
+    /// items charge their lane first, then fresh keys are LPT-placed).
+    sticky: Mutex<FxHashMap<usize, usize>>,
+    n_workers: usize,
+    spawns: AtomicUsize,
+    fan_outs: AtomicU64,
+    sticky_hits: AtomicU64,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("workers", &self.n_workers)
+            .field("spawns", &self.spawns.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl WorkerPool {
+    /// A pool with `n_workers` long-lived OS threads (plus the calling
+    /// thread as an extra lane at fan-out time). `0` workers is valid:
+    /// every fan-out then runs inline on the caller.
+    pub fn new(n_workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            workers: (0..n_workers)
+                .map(|_| WorkerShared { queue: Mutex::new(Vec::new()), ready: Condvar::new() })
+                .collect(),
+            shutdown: AtomicBool::new(false),
+        });
+        let pool = Self {
+            shared: shared.clone(),
+            handles: Mutex::new(Vec::with_capacity(n_workers)),
+            sticky: Mutex::new(FxHashMap::default()),
+            n_workers,
+            spawns: AtomicUsize::new(0),
+            fan_outs: AtomicU64::new(0),
+            sticky_hits: AtomicU64::new(0),
+        };
+        let mut handles = lock_recover(&pool.handles);
+        for w in 0..n_workers {
+            let shared = shared.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("ramp-pool-{w}"))
+                .spawn(move || worker_loop(&shared, w))
+                .expect("spawning pool worker");
+            pool.spawns.fetch_add(1, Ordering::SeqCst);
+            handles.push(h);
+        }
+        drop(handles);
+        pool
+    }
+
+    /// The process-wide pool, created on first use and sized so that
+    /// workers + the calling lane equal the host's (cached) parallelism.
+    /// Never torn down — its threads idle on their condvars between
+    /// collectives.
+    pub fn global() -> &'static WorkerPool {
+        static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+        GLOBAL.get_or_init(|| WorkerPool::new(host_parallelism().saturating_sub(1)))
+    }
+
+    /// Long-lived worker threads owned by this pool.
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Parallel lanes a fan-out spreads over (workers + the caller).
+    pub fn lanes(&self) -> usize {
+        self.n_workers + 1
+    }
+
+    /// OS threads ever spawned by this pool — constant after
+    /// construction; the steady-state zero-spawn assertion of the bench
+    /// and tests reads this.
+    pub fn spawn_count(&self) -> usize {
+        self.spawns.load(Ordering::SeqCst)
+    }
+
+    /// Fan-out calls that actually dispatched to workers.
+    pub fn fan_outs(&self) -> u64 {
+        self.fan_outs.load(Ordering::SeqCst)
+    }
+
+    /// Work items whose sticky key was already mapped to a lane.
+    pub fn sticky_hits(&self) -> u64 {
+        self.sticky_hits.load(Ordering::SeqCst)
+    }
+
+    /// The lane `key` is currently stuck to, if any (test hook).
+    pub fn sticky_lane(&self, key: usize) -> Option<usize> {
+        lock_recover(&self.sticky).get(&key).copied()
+    }
+
+    /// Run keyed work items across the pool, inline when the total
+    /// payload is under the parallel threshold (the production entry
+    /// point — `PoolSel::Global`).
+    pub fn run_keyed<W: Send>(
+        &self,
+        work: Vec<Keyed<W>>,
+        total_elems: usize,
+        f: impl Fn(W) + Sync,
+    ) {
+        if total_elems < par_threshold() {
+            for k in work {
+                f(k.item);
+            }
+            return;
+        }
+        self.run_keyed_forced(work, f);
+    }
+
+    /// Run keyed work items across the pool unconditionally (no inline
+    /// threshold). Blocks until every item has completed; item `i` is
+    /// executed exactly once, on whichever lane its key is stuck to.
+    pub fn run_keyed_forced<W: Send>(&self, work: Vec<Keyed<W>>, f: impl Fn(W) + Sync) {
+        if self.n_workers == 0 || work.len() <= 1 {
+            for k in work {
+                f(k.item);
+            }
+            return;
+        }
+        // lane `lanes - 1` is the caller itself
+        let lanes = self.lanes();
+        let mut bins: Vec<Vec<W>> = (0..lanes).map(|_| Vec::new()).collect();
+        {
+            let mut sticky = lock_recover(&self.sticky);
+            // per-call loads: sticky items charge their lane first, then
+            // new keys go largest-first onto the least-loaded lane
+            let mut loads = vec![0u64; lanes];
+            let mut fresh: Vec<Keyed<W>> = Vec::new();
+            for k in work {
+                match sticky.get(&k.key) {
+                    Some(&lane) => {
+                        self.sticky_hits.fetch_add(1, Ordering::Relaxed);
+                        loads[lane] += k.weight.max(1) as u64;
+                        bins[lane].push(k.item);
+                    }
+                    None => fresh.push(k),
+                }
+            }
+            let weights: Vec<usize> = fresh.iter().map(|k| k.weight).collect();
+            let mut slots: Vec<Option<Keyed<W>>> = fresh.into_iter().map(Some).collect();
+            for i in lpt_order(&weights) {
+                let k = slots[i].take().expect("each index placed once");
+                let lane = (0..lanes).min_by_key(|&l| (loads[l], l)).expect("lanes > 0");
+                sticky.insert(k.key, lane);
+                loads[lane] += k.weight.max(1) as u64;
+                bins[lane].push(k.item);
+            }
+        }
+        self.dispatch(bins, &f);
+    }
+
+    /// Run **unkeyed** weighted items: size-aware LPT binning per call,
+    /// no sticky assignment. This is the entry point for callers without
+    /// a stable item identity (the `arena::run_parallel` shim) — keying
+    /// those by list index would collide with the executors'
+    /// rank-keyed entries in the sticky map and pin unrelated work to
+    /// their lanes. Inline below the parallel threshold.
+    pub fn run_unkeyed<W: Send>(
+        &self,
+        work: Vec<(usize, W)>,
+        total_elems: usize,
+        f: impl Fn(W) + Sync,
+    ) {
+        if self.n_workers == 0 || work.len() <= 1 || total_elems < par_threshold() {
+            for (_, w) in work {
+                f(w);
+            }
+            return;
+        }
+        let bins = crate::collectives::arena::lpt_take_buckets(work, self.lanes());
+        self.dispatch(bins, &f);
+    }
+
+    /// Submit one job per non-empty worker bin, run the caller's bin (the
+    /// last one) inline, and wait for completion. See the module docs for
+    /// the scoped-borrow contract.
+    fn dispatch<W: Send>(&self, mut bins: Vec<Vec<W>>, f: &(impl Fn(W) + Sync)) {
+        debug_assert_eq!(bins.len(), self.lanes());
+        let caller_bin = bins.pop().expect("caller lane exists");
+        let latch = Latch::new();
+        let guard = ScopeGuard(&latch);
+        let latch_ref = &latch;
+        let mut submitted = 0usize;
+        for (w, bin) in bins.into_iter().enumerate() {
+            if bin.is_empty() {
+                continue;
+            }
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let _done = LatchGuard(latch_ref);
+                let run = std::panic::AssertUnwindSafe(|| {
+                    for item in bin {
+                        f(item);
+                    }
+                });
+                if let Err(payload) = std::panic::catch_unwind(run) {
+                    let mut slot = lock_recover(&latch_ref.panic);
+                    slot.get_or_insert(payload);
+                }
+            });
+            // SAFETY: the job borrows `f`, `latch` and the arena slices
+            // inside `bin`, all of which outlive this call: `guard`
+            // waits for the latch before this stack frame unwinds, and
+            // the latch is decremented (via LatchGuard) even when the
+            // job body panics. Erasing the lifetime is what lets the job
+            // travel through the pool's 'static queues — the same trick
+            // scoped-thread implementations use internally.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job)
+            };
+            latch.add();
+            let ws = &self.shared.workers[w];
+            lock_recover(&ws.queue).push(job);
+            ws.ready.notify_one();
+            submitted += 1;
+        }
+        for item in caller_bin {
+            f(item);
+        }
+        drop(guard); // wait for the workers
+        if submitted > 0 {
+            self.fan_outs.fetch_add(1, Ordering::SeqCst);
+        }
+        if let Some(payload) = lock_recover(&latch.panic).take() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        for w in &self.shared.workers {
+            let _g = lock_recover(&w.queue);
+            w.ready.notify_all();
+        }
+        for h in lock_recover(&self.handles).drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, idx: usize) {
+    let me = &shared.workers[idx];
+    loop {
+        let job = {
+            let mut q = lock_recover(&me.queue);
+            loop {
+                if let Some(j) = q.pop() {
+                    break Some(j);
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = me.ready.wait(q).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        match job {
+            Some(j) => j(),
+            None => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn pool_runs_every_item_exactly_once() {
+        let pool = WorkerPool::new(3);
+        let hits = AtomicUsize::new(0);
+        let work: Vec<Keyed<usize>> =
+            (0..41).map(|i| Keyed::new(i, 1 + i % 5, i)).collect();
+        pool.run_keyed_forced(work, |w| {
+            hits.fetch_add(w + 1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), (0..41usize).map(|w| w + 1).sum::<usize>());
+        assert_eq!(pool.spawn_count(), 3);
+        assert_eq!(pool.fan_outs(), 1);
+    }
+
+    #[test]
+    fn sticky_keys_keep_their_lane_across_calls() {
+        let pool = WorkerPool::new(2);
+        let work = |seed: usize| -> Vec<Keyed<usize>> {
+            (0..6).map(|k| Keyed::new(k * 9, 64, seed + k)).collect()
+        };
+        pool.run_keyed_forced(work(0), |_| {});
+        let lanes: Vec<usize> = (0..6).map(|k| pool.sticky_lane(k * 9).unwrap()).collect();
+        pool.run_keyed_forced(work(100), |_| {});
+        let again: Vec<usize> = (0..6).map(|k| pool.sticky_lane(k * 9).unwrap()).collect();
+        assert_eq!(lanes, again, "sticky assignment drifted");
+        assert_eq!(pool.sticky_hits(), 6, "second call should hit every key");
+        // size-aware placement spread the 6 equal keys over all 3 lanes
+        for lane in 0..3 {
+            assert_eq!(lanes.iter().filter(|&&l| l == lane).count(), 2, "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn threshold_keeps_small_payloads_inline() {
+        let pool = WorkerPool::new(2);
+        let hits = AtomicUsize::new(0);
+        pool.run_keyed(
+            (0..4).map(|i| Keyed::new(i, 1, i)).collect(),
+            8, // far below PAR_THRESHOLD_ELEMS
+            |w| {
+                hits.fetch_add(w + 1, Ordering::Relaxed);
+            },
+        );
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+        assert_eq!(pool.fan_outs(), 0, "small payloads must not dispatch");
+        assert!(pool.sticky_lane(0).is_none());
+    }
+
+    #[test]
+    fn unkeyed_runs_cover_items_without_touching_the_sticky_map() {
+        let pool = WorkerPool::new(2);
+        let hits = AtomicUsize::new(0);
+        pool.run_unkeyed(
+            (0..23).map(|i| (1usize, i)).collect(),
+            crate::collectives::arena::PAR_THRESHOLD_ELEMS * 2,
+            |w: usize| {
+                hits.fetch_add(w + 1, Ordering::Relaxed);
+            },
+        );
+        assert_eq!(hits.load(Ordering::Relaxed), (0..23usize).map(|w| w + 1).sum::<usize>());
+        assert_eq!(pool.fan_outs(), 1);
+        // index-shaped identities must never pollute the sticky map
+        for key in 0..23 {
+            assert!(pool.sticky_lane(key).is_none(), "key {key} leaked into sticky map");
+        }
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = WorkerPool::new(0);
+        let hits = AtomicUsize::new(0);
+        pool.run_keyed_forced((0..5).map(|i| Keyed::new(i, 1, i)).collect(), |w| {
+            hits.fetch_add(w, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+        assert_eq!(pool.spawn_count(), 0);
+    }
+
+    #[test]
+    fn borrowed_state_is_written_in_place() {
+        // the scoped-lifetime contract: jobs mutate stack-owned buffers
+        // through &mut borrows and everything is visible after the call
+        let pool = WorkerPool::new(3);
+        let mut bufs: Vec<Vec<f32>> = (0..8).map(|r| vec![r as f32; 16]).collect();
+        {
+            let work: Vec<Keyed<&mut Vec<f32>>> = bufs
+                .iter_mut()
+                .enumerate()
+                .map(|(r, b)| Keyed::new(r, b.len(), b))
+                .collect();
+            pool.run_keyed_forced(work, |b| {
+                for v in b.iter_mut() {
+                    *v *= 2.0;
+                }
+            });
+        }
+        for (r, b) in bufs.iter().enumerate() {
+            assert!(b.iter().all(|&v| v == 2.0 * r as f32), "rank {r}");
+        }
+    }
+
+    #[test]
+    fn global_pool_is_a_singleton_with_flat_spawn_count() {
+        let a = WorkerPool::global();
+        let before = a.spawn_count();
+        a.run_keyed_forced((0..9).map(|i| Keyed::new(i, 1, i)).collect(), |_| {});
+        let b = WorkerPool::global();
+        assert!(std::ptr::eq(a, b));
+        assert_eq!(b.spawn_count(), before, "steady state must not spawn");
+    }
+}

@@ -11,8 +11,12 @@
 //! per collective, with per-rank `(offset, len)` regions. Every step reads
 //! the front half and writes the back half — zero allocation on the hot
 //! path — and the per-node simulation loop fans out across subgroups on
-//! scoped threads (subgroups write disjoint back regions). The
-//! `Vec<Vec<f32>>` MPI-style API survives as the [`RampX::run`] shim,
+//! the persistent executor pool ([`crate::collectives::pool`]): subgroups
+//! write disjoint back regions, each keyed to a sticky lane so its
+//! regions stay cache-hot across steps, with zero thread spawns on the
+//! steady-state path. The s-to-1 reductions and concat copies run through
+//! the SIMD-width-aware kernel layer ([`crate::collectives::kernels`]).
+//! The `Vec<Vec<f32>>` MPI-style API survives as the [`RampX::run`] shim,
 //! which loads/unloads the arena once per collective.
 //!
 //! Buffers are indexed by **MPI rank** (the information-map rank of
@@ -21,8 +25,12 @@
 //! divisible by the relevant subgroup-size products; [`padded_len`] gives
 //! the canonical padding.
 
-use crate::collectives::arena::{chunk_bounds, run_parallel, ArenaRegion, BufferArena, Pipeline};
+use crate::collectives::arena::{
+    chunk_bounds, run_parallel_weighted, ArenaRegion, BufferArena, Pipeline,
+};
+use crate::collectives::kernels::{concat_subgroup, reduce_subgroup};
 use crate::collectives::plan::{CollectivePlan, PlanStep, Round, Transfer};
+use crate::collectives::pool::{Keyed, PoolSel, WorkerPool};
 use crate::collectives::subgroups::{
     member_index, members, node_of_rank, node_rank, rank_digit, Step,
 };
@@ -43,19 +51,22 @@ use anyhow::{bail, ensure, Result};
 pub struct RampX<'a> {
     pub p: &'a RampParams,
     pipeline: Pipeline,
+    pool: PoolSel,
 }
 
 impl<'a> RampX<'a> {
     /// Unpipelined executor (`K = 1` everywhere) — plans and data paths
-    /// are byte-identical to the pre-pipelining data plane.
+    /// are byte-identical to the pre-pipelining data plane. Subgroup work
+    /// fans out on the process-wide persistent pool
+    /// ([`PoolSel::Global`]); see [`Self::with_pool`].
     pub fn new(p: &'a RampParams) -> Self {
-        Self { p, pipeline: Pipeline::off() }
+        Self { p, pipeline: Pipeline::off(), pool: PoolSel::default() }
     }
 
     /// Executor with auto-selected chunk pipelining (see
     /// [`crate::collectives::arena::pipeline_chunk_count`]).
     pub fn pipelined(p: &'a RampParams) -> Self {
-        Self { p, pipeline: Pipeline::auto() }
+        Self { p, pipeline: Pipeline::auto(), pool: PoolSel::default() }
     }
 
     pub fn with_pipeline(mut self, pipeline: Pipeline) -> Self {
@@ -65,6 +76,36 @@ impl<'a> RampX<'a> {
 
     pub fn pipeline(&self) -> Pipeline {
         self.pipeline
+    }
+
+    /// Select the execution substrate: the global persistent pool
+    /// (default), a caller-owned pool, or the PR-2 spawn-per-step scoped
+    /// fallback ([`PoolSel::Off`]). Results are bitwise identical in all
+    /// three — partitioning never changes any item's computation.
+    pub fn with_pool(mut self, pool: PoolSel) -> Self {
+        self.pool = pool;
+        self
+    }
+
+    pub fn pool(&self) -> &PoolSel {
+        &self.pool
+    }
+
+    /// Fan keyed subgroup work out on the configured substrate. Items
+    /// carry a sticky key (the subgroup's first MPI rank — stable across
+    /// steps, so a subgroup's back regions stay hot in one lane's cache)
+    /// and a payload weight in elements (size-aware placement).
+    fn fan_out<W: Send>(&self, work: Vec<Keyed<W>>, total_elems: usize, f: impl Fn(W) + Sync) {
+        match &self.pool {
+            PoolSel::Global => WorkerPool::global().run_keyed(work, total_elems, f),
+            PoolSel::Handle(pool) => pool.run_keyed(work, total_elems, f),
+            PoolSel::Forced(pool) => pool.run_keyed_forced(work, f),
+            PoolSel::Off => run_parallel_weighted(
+                work.into_iter().map(|k| (k.weight, k.item)).collect(),
+                total_elems,
+                f,
+            ),
+        }
     }
 
     /// Dispatch an operation on rank-indexed owned buffers. Loads the
@@ -117,17 +158,22 @@ impl<'a> RampX<'a> {
                 let cap = arena.region_cap();
                 let (front, back) = arena.split();
                 let bundles = bundle_regions(back, &rank_groups);
-                let work: Vec<(Vec<usize>, Vec<&mut [f32]>)> =
-                    rank_groups.into_iter().zip(bundles).collect();
+                let work: Vec<Keyed<(Vec<usize>, Vec<&mut [f32]>)>> = rank_groups
+                    .into_iter()
+                    .zip(bundles)
+                    .map(|(ranks, outs)| {
+                        Keyed::new(ranks[0], chunk * ranks.len(), (ranks, outs))
+                    })
+                    .collect();
                 let views = &views;
                 // chunk-sequential per subgroup: chunk v's reduce overlaps
                 // chunk v−1's wire transfer in the emitted schedule. The
                 // sub-ranges partition the region, so this is
                 // data-movement-identical to the whole-region pass at the
-                // same per-step setup cost (one split/bundle/spawn). The
-                // work estimate stays cur·n: the fused reduce reads s
+                // same per-step setup cost (one split/bundle/dispatch).
+                // The work estimate stays cur·n: the fused reduce reads s
                 // inputs per output element.
-                run_parallel(work, cur * n, |(ranks, mut outs)| {
+                self.fan_out(work, cur * n, |(ranks, mut outs)| {
                     for v in views {
                         reduce_subgroup(
                             front, cap, &ranks, &mut outs, chunk, v.offset, v.offset + v.len,
@@ -167,10 +213,15 @@ impl<'a> RampX<'a> {
                 let cap = arena.region_cap();
                 let (front, back) = arena.split();
                 let bundles = bundle_regions(back, &rank_groups);
-                let work: Vec<(Vec<usize>, Vec<&mut [f32]>)> =
-                    rank_groups.into_iter().zip(bundles).collect();
+                let work: Vec<Keyed<(Vec<usize>, Vec<&mut [f32]>)>> = rank_groups
+                    .into_iter()
+                    .zip(bundles)
+                    .map(|(ranks, outs)| {
+                        Keyed::new(ranks[0], cur * s * ranks.len(), (ranks, outs))
+                    })
+                    .collect();
                 let views = &views;
-                run_parallel(work, cur * s * groups.len(), |(ranks, mut outs)| {
+                self.fan_out(work, cur * s * groups.len(), |(ranks, mut outs)| {
                     for v in views {
                         concat_subgroup(
                             front, cap, &ranks, &mut outs, cur, v.offset, v.offset + v.len,
@@ -257,10 +308,14 @@ impl<'a> RampX<'a> {
                 let cap = arena.region_cap();
                 let (front, back) = arena.split();
                 let bundles = bundle_regions(back, &rank_groups);
-                let work: Vec<(Vec<&mut [f32]>, Vec<(usize, usize, usize, usize)>)> =
-                    bundles.into_iter().zip(moves).collect();
+                let work: Vec<Keyed<(Vec<&mut [f32]>, Vec<(usize, usize, usize, usize)>)>> =
+                    rank_groups
+                        .iter()
+                        .zip(bundles.into_iter().zip(moves))
+                        .map(|(g, (outs, mv))| Keyed::new(g[0], mv.len() * c, (outs, mv)))
+                        .collect();
                 let views = &views;
-                run_parallel(work, m * n, |(mut outs, mv)| {
+                self.fan_out(work, m * n, |(mut outs, mv)| {
                     for &(lo, hi) in views {
                         for &(srcr, ci, k, pos) in &mv {
                             outs[k][pos * c + lo..pos * c + hi].copy_from_slice(
@@ -376,14 +431,31 @@ impl<'a> RampX<'a> {
             }
             {
                 let cap = arena.region_cap();
-                let (front, mut back) = arena.split();
-                for &(lo, hi) in &views {
-                    for &(srcr, ci, dr, pos) in &moves {
-                        back[dr][pos * c + lo..pos * c + hi].copy_from_slice(
-                            &front[srcr * cap + ci * c + lo..srcr * cap + ci * c + hi],
-                        );
-                    }
+                let (front, back) = arena.split();
+                // group moves by destination rank so each back region is
+                // owned by exactly one work item (chunk-order per move is
+                // preserved; copies are disjoint either way)
+                let mut per_dst: Vec<Vec<(usize, usize, usize)>> = vec![Vec::new(); n];
+                for &(srcr, ci, dr, pos) in &moves {
+                    per_dst[dr].push((srcr, ci, pos));
                 }
+                let work: Vec<Keyed<(&mut [f32], Vec<(usize, usize, usize)>)>> = back
+                    .into_iter()
+                    .zip(per_dst)
+                    .enumerate()
+                    .filter(|(_, (_, mv))| !mv.is_empty())
+                    .map(|(r, (out, mv))| Keyed::new(r, mv.len() * c, (out, mv)))
+                    .collect();
+                let views = &views;
+                self.fan_out(work, moves.len() * c, |(out, mv)| {
+                    for &(srcr, ci, pos) in &mv {
+                        for &(lo, hi) in views {
+                            out[pos * c + lo..pos * c + hi].copy_from_slice(
+                                &front[srcr * cap + ci * c + lo..srcr * cap + ci * c + hi],
+                            );
+                        }
+                    }
+                });
             }
             arena.flip(new_chunks.iter().map(|l| l.len() * c).collect());
             chunks = new_chunks;
@@ -476,13 +548,30 @@ impl<'a> RampX<'a> {
             }
             {
                 let cap = arena.region_cap();
-                let (front, mut back) = arena.split();
+                let (front, back) = arena.split();
+                let total: usize = moves.iter().map(|&(_, len, _, _)| len).sum();
+                let mut per_dst: Vec<Vec<(usize, usize, usize)>> = vec![Vec::new(); n];
                 for (srcr, len, dr, off) in moves {
-                    for (lo, hi) in chunk_bounds(len, kp) {
-                        back[dr][off + lo..off + hi]
-                            .copy_from_slice(&front[srcr * cap + lo..srcr * cap + hi]);
-                    }
+                    per_dst[dr].push((srcr, len, off));
                 }
+                let work: Vec<Keyed<(&mut [f32], Vec<(usize, usize, usize)>)>> = back
+                    .into_iter()
+                    .zip(per_dst)
+                    .enumerate()
+                    .filter(|(_, (_, mv))| !mv.is_empty())
+                    .map(|(r, (out, mv))| {
+                        let w: usize = mv.iter().map(|&(_, len, _)| len).sum();
+                        Keyed::new(r, w, (out, mv))
+                    })
+                    .collect();
+                self.fan_out(work, total, |(out, mv)| {
+                    for &(srcr, len, off) in &mv {
+                        for (lo, hi) in chunk_bounds(len, kp) {
+                            out[off + lo..off + hi]
+                                .copy_from_slice(&front[srcr * cap + lo..srcr * cap + hi]);
+                        }
+                    }
+                });
             }
             arena.flip(
                 new_chunks
@@ -619,12 +708,18 @@ impl<'a> RampX<'a> {
         }
         plan.steps.push(pstep);
 
-        // data: replicate the root region into every back region
+        // data: replicate the root region into every back region (keyed
+        // by rank, so each rank's region lands on its sticky lane)
         {
             let cap = arena.region_cap();
             let (front, back) = arena.split();
             let src = &front[root * cap..root * cap + m];
-            run_parallel(back, m * n, |out: &mut [f32]| {
+            let work: Vec<Keyed<&mut [f32]>> = back
+                .into_iter()
+                .enumerate()
+                .map(|(r, out)| Keyed::new(r, m, out))
+                .collect();
+            self.fan_out(work, m * n, |out: &mut [f32]| {
                 out[..m].copy_from_slice(src);
             });
         }
@@ -699,78 +794,6 @@ fn bundle_regions<'s>(
                 .collect()
         })
         .collect()
-}
-
-/// Fused s-to-1 reduction for one subgroup (§8.4.2) over the element
-/// sub-range `[lo, hi)` of each member's output chunk: member `i`'s back
-/// region receives the sum of every member's front chunk `i`. Tiled so
-/// the destination stays cache-resident while the inner loops
-/// autovectorize; float summation order matches the naive oracle
-/// (subgroup member order) and is chunk-range-invariant — sub-dividing
-/// `[0, chunk)` into pipeline chunks keeps results byte-identical.
-fn reduce_subgroup(
-    front: &[f32],
-    cap: usize,
-    ranks: &[usize],
-    outs: &mut [&mut [f32]],
-    chunk: usize,
-    lo: usize,
-    hi: usize,
-) {
-    const TILE: usize = 8 * 1024;
-    for (i, out) in outs.iter_mut().enumerate() {
-        let base = i * chunk;
-        let dst = &mut out[..hi];
-        let mut t = lo;
-        while t < hi {
-            let e = (t + TILE).min(hi);
-            let r0 = ranks[0] * cap + base;
-            dst[t..e].copy_from_slice(&front[r0 + t..r0 + e]);
-            for &peer in &ranks[1..] {
-                let pb = peer * cap + base;
-                let src = &front[pb + t..pb + e];
-                for (d, v) in dst[t..e].iter_mut().zip(src) {
-                    *d += *v;
-                }
-            }
-            t = e;
-        }
-    }
-}
-
-/// All-gather step for one subgroup over the contribution sub-range
-/// `[lo, hi)`: build the member-order concatenation once in the first
-/// member's back region, then copy it to the rest (one bulk memcpy when
-/// the range is the whole contribution, per-member strided slices for a
-/// pipeline chunk).
-fn concat_subgroup(
-    front: &[f32],
-    cap: usize,
-    ranks: &[usize],
-    outs: &mut [&mut [f32]],
-    cur: usize,
-    lo: usize,
-    hi: usize,
-) {
-    {
-        let first = &mut outs[0];
-        for (i, &r) in ranks.iter().enumerate() {
-            first[i * cur + lo..i * cur + hi]
-                .copy_from_slice(&front[r * cap + lo..r * cap + hi]);
-        }
-    }
-    let (first, rest) = outs.split_first_mut().expect("non-empty subgroup");
-    for out in rest {
-        if lo == 0 && hi == cur {
-            let total = ranks.len() * cur;
-            out[..total].copy_from_slice(&first[..total]);
-        } else {
-            for i in 0..ranks.len() {
-                out[i * cur + lo..i * cur + hi]
-                    .copy_from_slice(&first[i * cur + lo..i * cur + hi]);
-            }
-        }
-    }
 }
 
 /// Pairwise exchange rounds within a subgroup of size `s`:
@@ -1005,6 +1028,55 @@ mod tests {
             RampX::new(&p).run_arena(op, &mut arena).unwrap();
             assert_eq!(arena.copy_out(), vec_bufs, "{} arena/vec divergence", op.name());
         }
+    }
+
+    #[test]
+    fn pool_scoped_and_global_paths_agree_bitwise() {
+        use std::sync::Arc;
+        let pool = Arc::new(WorkerPool::new(3));
+        for p in params_under_test() {
+            let n = p.n_nodes();
+            for op in MpiOp::all() {
+                let elems = match op {
+                    MpiOp::AllGather | MpiOp::Gather { .. } => 4,
+                    _ => 2 * n,
+                };
+                let inputs = random_inputs(&p, elems, 55);
+                let mut scoped = inputs.clone();
+                RampX::new(&p).with_pool(PoolSel::Off).run(op, &mut scoped).unwrap();
+                let mut global = inputs.clone();
+                RampX::new(&p).with_pool(PoolSel::Global).run(op, &mut global).unwrap();
+                let mut pooled = inputs.clone();
+                RampX::new(&p)
+                    .with_pool(PoolSel::Forced(pool.clone()))
+                    .run(op, &mut pooled)
+                    .unwrap();
+                assert_eq!(scoped, global, "{} scoped/global divergence", op.name());
+                assert_eq!(scoped, pooled, "{} scoped/pooled divergence", op.name());
+            }
+        }
+    }
+
+    #[test]
+    fn steady_state_collectives_spawn_no_threads() {
+        use std::sync::Arc;
+        let p = RampParams::new(2, 2, 4, 1);
+        let n = p.n_nodes();
+        let pool = Arc::new(WorkerPool::new(2));
+        let x = RampX::new(&p)
+            .with_pool(PoolSel::Forced(pool.clone()))
+            .with_pipeline(Pipeline::fixed(2));
+        let inputs = random_inputs(&p, 2 * n, 77);
+        let expect = oracle::all_reduce(&inputs);
+        let mut arena = BufferArena::for_op(&p, MpiOp::AllReduce, &inputs).unwrap();
+        for iter in 0..4 {
+            arena.load(&inputs).unwrap();
+            x.run_arena(MpiOp::AllReduce, &mut arena).unwrap();
+            assert_eq!(arena.copy_out(), expect, "iteration {iter}");
+        }
+        assert_eq!(pool.spawn_count(), 2, "pool must never grow");
+        assert!(pool.fan_outs() > 0, "explicit pool must actually dispatch");
+        assert!(pool.sticky_hits() > 0, "repeat steps must reuse sticky lanes");
     }
 
     #[test]

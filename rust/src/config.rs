@@ -10,6 +10,15 @@ pub fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
+/// `RAMP_PAR_THRESHOLD` override for the data plane's parallel
+/// threshold (total f32 elements a step must write before subgroup work
+/// fans out over threads; see `collectives/README.md`). Unset or
+/// unparsable values fall back to
+/// [`crate::collectives::arena::PAR_THRESHOLD_ELEMS`].
+pub fn par_threshold_override() -> Option<usize> {
+    std::env::var("RAMP_PAR_THRESHOLD").ok()?.parse().ok()
+}
+
 /// Message sizes swept by the comparison harness (Fig 20–22).
 pub const SWEEP_MESSAGES: [u64; 4] = [
     10 * crate::units::MB,

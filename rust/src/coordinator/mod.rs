@@ -47,6 +47,12 @@ pub struct TrainConfig {
     /// the per-chunk reduce with the wire transfer and shares each base
     /// round's H2H across chunk sub-rounds.
     pub pipeline_chunks: usize,
+    /// Executor-pool lanes for the gradient all-reduce data plane: `0` =
+    /// the process-wide persistent pool sized to the host (default),
+    /// `1` = inline (no pool), `n` = an engine-owned pool of `n` lanes.
+    /// Pool threads are created once and reused by every training
+    /// iteration — the steady-state path spawns nothing.
+    pub pool_threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -61,6 +67,7 @@ impl Default for TrainConfig {
             artifacts: PathBuf::from("artifacts"),
             log_every: 10,
             pipeline_chunks: 1,
+            pool_threads: 0,
         }
     }
 }
@@ -224,7 +231,8 @@ fn spawn_worker(
 pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     let fabric = fabric_for_workers(cfg.n_workers)?;
     let engine = RampEngine::new(fabric)
-        .with_pipeline(crate::collectives::arena::Pipeline::from_knob(cfg.pipeline_chunks));
+        .with_pipeline(crate::collectives::arena::Pipeline::from_knob(cfg.pipeline_chunks))
+        .with_pool_threads(cfg.pool_threads);
     let rt = Runtime::open(&cfg.artifacts)?;
     let n_params = rt.manifest.get_usize(&format!("model.{}.n_params", cfg.model))?;
     let vocab = rt.manifest.get_usize(&format!("model.{}.vocab", cfg.model))?;

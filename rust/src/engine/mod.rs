@@ -12,12 +12,14 @@
 
 use crate::collectives::arena::{BufferArena, Pipeline};
 use crate::collectives::plan::CollectivePlan;
+use crate::collectives::pool::{PoolSel, WorkerPool};
 use crate::collectives::ramp_x::{padded_len, RampX};
 use crate::collectives::MpiOp;
 use crate::simulator::{FabricReport, OpticalFabric};
 use crate::topology::ramp::RampParams;
 use crate::transcoder::{transcode_plan, Schedule};
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 /// Everything one collective execution produced.
 pub struct CollectiveRun {
@@ -44,18 +46,39 @@ pub struct RampEngine {
     /// Chunk-pipelining configuration passed to every executor run
     /// (off by default; results are byte-identical either way).
     pub pipeline: Pipeline,
+    /// Executor-pool selection passed to every executor run: the
+    /// process-wide persistent pool by default (its worker threads are
+    /// created once and reused across steps, chunks and training
+    /// iterations), an engine-owned pool after
+    /// [`Self::with_pool_threads`], or the spawn-per-step fallback.
+    /// Results are bitwise identical in all three.
+    pub pool: PoolSel,
 }
 
 impl RampEngine {
     pub fn new(p: RampParams) -> Self {
         let fabric = OpticalFabric::new(p.clone());
-        Self { p, fabric, strict: true, pipeline: Pipeline::off() }
+        Self { p, fabric, strict: true, pipeline: Pipeline::off(), pool: PoolSel::default() }
     }
 
     /// Engine with chunk-pipelined executors (`Pipeline::auto()` /
     /// `Pipeline::fixed(k)`).
     pub fn with_pipeline(mut self, pipeline: Pipeline) -> Self {
         self.pipeline = pipeline;
+        self
+    }
+
+    /// Engine with an explicit executor-pool size (the `--pool-threads`
+    /// CLI knob): `0` keeps the process-wide pool sized to the host;
+    /// `n ≥ 1` gives this engine its own pool of `n` parallel lanes
+    /// (`n − 1` worker threads plus the calling thread — `1` runs every
+    /// collective inline). The pool lives exactly as long as the engine,
+    /// alongside the arenas it feeds.
+    pub fn with_pool_threads(mut self, lanes: usize) -> Self {
+        self.pool = match lanes {
+            0 => PoolSel::Global,
+            n => PoolSel::Handle(Arc::new(WorkerPool::new(n - 1))),
+        };
         self
     }
 
@@ -79,7 +102,10 @@ impl RampEngine {
     /// movement, then transcode + fabric verification. Results land in
     /// the arena's front half.
     pub fn execute_arena(&self, op: MpiOp, arena: &mut BufferArena) -> Result<CollectiveRun> {
-        let plan = RampX::new(&self.p).with_pipeline(self.pipeline).run_arena(op, arena)?;
+        let plan = RampX::new(&self.p)
+            .with_pipeline(self.pipeline)
+            .with_pool(self.pool.clone())
+            .run_arena(op, arena)?;
         let schedule = transcode_plan(&self.p, &plan)?;
         let report = self.fabric.execute(&schedule);
         if self.strict && !report.ok() {
@@ -207,6 +233,43 @@ mod tests {
         // chunk sub-rounds add wire rounds but share the base round's H2H
         assert!(run_b.schedule.round_ends.len() > run_a.schedule.round_ends.len());
         assert_eq!(run_b.schedule.h2h_rounds, run_a.schedule.h2h_rounds);
+    }
+
+    #[test]
+    fn engine_owned_pool_matches_global_and_never_respawns() {
+        let p = fabric_for_workers(16).unwrap();
+        let engine = RampEngine::new(p.clone()).with_pool_threads(3);
+        let pool = match &engine.pool {
+            PoolSel::Handle(pool) => pool.clone(),
+            other => panic!("expected an engine-owned pool, got {other:?}"),
+        };
+        assert_eq!(pool.n_workers(), 2, "3 lanes = 2 workers + caller");
+        let baseline = RampEngine::new(p);
+        let mut r = Xoshiro256::seed_from(23);
+        // 8192 elems/rank keeps the first reduce-scatter step's payload
+        // (8192 · 16 elems) above par_threshold, so the engine-owned
+        // (threshold-honoring) pool really dispatches
+        let inputs: Vec<Vec<f32>> =
+            (0..16).map(|_| (0..8192).map(|_| r.next_f32()).collect()).collect();
+        let spawns = pool.spawn_count();
+        for _ in 0..3 {
+            let mut a = inputs.clone();
+            let mut b = inputs.clone();
+            engine.execute(MpiOp::AllReduce, &mut a).unwrap();
+            baseline.execute(MpiOp::AllReduce, &mut b).unwrap();
+            assert_eq!(a, b, "pooled engine changed the result");
+        }
+        assert_eq!(pool.spawn_count(), spawns, "steady state must not spawn");
+        assert!(pool.fan_outs() > 0, "engine pool must actually run the steps");
+        // lanes = 1 means inline execution, still correct
+        let inline = RampEngine::new(fabric_for_workers(16).unwrap()).with_pool_threads(1);
+        let mut c = inputs.clone();
+        inline.execute(MpiOp::AllReduce, &mut c).unwrap();
+        let mut d = inputs;
+        RampEngine::new(fabric_for_workers(16).unwrap())
+            .execute(MpiOp::AllReduce, &mut d)
+            .unwrap();
+        assert_eq!(c, d);
     }
 
     #[test]

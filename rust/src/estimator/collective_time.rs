@@ -88,6 +88,15 @@ impl CollectiveEstimator {
         Self { system: System::Ramp(p.clone()), device: RooflineDevice::a100() }
     }
 
+    /// RAMP estimator whose compute-overlap term uses the **measured**
+    /// per-element throughput of this host's reduce kernel
+    /// ([`RooflineDevice::host_measured`]) instead of the A100 constant —
+    /// the figure the pooled bench prints next to its wall-clock columns
+    /// so modeled and measured overlap can be compared on one machine.
+    pub fn ramp_host_measured(p: &RampParams) -> Self {
+        Self { system: System::Ramp(p.clone()), device: RooflineDevice::host_measured() }
+    }
+
     /// SuperPod fat-tree with ring strategy; `oversub` = σ.
     pub fn fat_tree_ring(oversub: f64) -> Self {
         Self {
@@ -523,6 +532,22 @@ mod tests {
             ramp.completion_time_pipelined(MpiOp::AllReduce, GB, 1, Pipeline::auto()).total(),
             0.0
         );
+    }
+
+    #[test]
+    fn host_measured_estimator_prices_reduce_ops() {
+        let p = RampParams::max_scale();
+        let host = CollectiveEstimator::ramp_host_measured(&p);
+        let t = host.completion_time(MpiOp::AllReduce, GB, 65_536);
+        assert!(t.compute > 0.0 && t.total().is_finite());
+        // same wire/H2H model as the constant-device estimator — only
+        // the compute term moves with the measured kernel throughput
+        let a100 = CollectiveEstimator::ramp(&p).completion_time(MpiOp::AllReduce, GB, 65_536);
+        assert_eq!(t.h2h, a100.h2h);
+        assert_eq!(t.h2t, a100.h2t);
+        // and the overlap model accepts it
+        let cmp = host.pipeline_comparison(MpiOp::AllReduce, GB, 65_536, Pipeline::auto());
+        assert!(cmp.pipelined.total() <= cmp.serial.total() * (1.0 + 1e-9));
     }
 
     #[test]

@@ -41,6 +41,23 @@ impl RooflineDevice {
         }
     }
 
+    /// This host, with the memory bandwidth **measured from the actual
+    /// SIMD reduce kernel** the data plane runs
+    /// ([`crate::collectives::kernels::measured_reduce_bandwidth`],
+    /// probed once and cached) instead of a datasheet constant. The
+    /// reduce term of the overlap timing model then reflects what the
+    /// host's fused x-to-1 pass really sustains. Reductions are
+    /// memory-bound, so the flops ceiling is set high enough to never
+    /// bind; the dtype is the data plane's f32.
+    pub fn host_measured() -> Self {
+        Self {
+            name: "host-measured",
+            peak_flops: 1e15,
+            mem_bw: crate::collectives::kernels::measured_reduce_bandwidth(),
+            dtype_bytes: 4.0,
+        }
+    }
+
     /// Time of ONE fused `s`-to-1 reduction pass producing `bytes_out`
     /// bytes: reads `s` inputs, writes one output.
     pub fn reduce_pass(&self, sources: usize, bytes_out: f64) -> f64 {
@@ -117,6 +134,16 @@ mod tests {
         let t1k = d.chain_reduce_total(1024, 1e9);
         let t64k = d.chain_reduce_total(65_536, 1e9);
         assert!((t64k / t1k - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn host_measured_device_is_usable() {
+        let d = RooflineDevice::host_measured();
+        assert!(d.mem_bw >= 1e8 && d.mem_bw.is_finite());
+        let t = d.reduce_pass(4, 1e6);
+        assert!(t > 0.0 && t.is_finite());
+        // memory-bound by construction: the flops ceiling never binds
+        assert!((t - 5e6 / d.mem_bw).abs() / t < 1e-9);
     }
 
     #[test]

@@ -4,10 +4,13 @@
 //! ramp info                         architecture summary (Table 2)
 //! ramp repro <figN|tableN|all>      regenerate a paper table/figure
 //! ramp train [--workers N] [--steps N] [--model tiny] [--lr X]
-//!            [--pipeline K]          real DDP training through the fabric
+//!            [--pipeline K] [--pool-threads T]
+//!                                    real DDP training through the fabric
 //!                                    (K: 0 = auto chunk pipelining,
 //!                                     1 = off, k = fixed chunk count —
-//!                                     capped at 16)
+//!                                     capped at 16; T: 0 = the global
+//!                                     persistent executor pool, 1 =
+//!                                     inline, T = a pool of T lanes)
 //! ramp collective <op> [--nodes N] [--mb M] [--oversub S] [--pipeline K]
 //!                                   completion-time comparison for one op,
 //!                                   with a serial-vs-pipelined readout
@@ -49,7 +52,7 @@ fn run() -> Result<()> {
             println!(
                 "RAMP — flat nanosecond optical network + MPI operations for DDL\n\n\
                  usage:\n  ramp info\n  ramp repro <fig6|fig7|table3|table4|fig15..fig23|all>\n  \
-                 ramp train [--workers N] [--steps N] [--model tiny] [--lr X] [--momentum X] [--pipeline K]\n  \
+                 ramp train [--workers N] [--steps N] [--model tiny] [--lr X] [--momentum X] [--pipeline K] [--pool-threads T]\n  \
                  ramp collective <op> [--nodes N] [--mb M] [--oversub S] [--pipeline K]\n\n\
                  ops: reduce-scatter all-gather all-reduce all-to-all scatter gather reduce broadcast"
             );
@@ -90,6 +93,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         artifacts: ramp::config::artifacts_dir(),
         log_every: args.get_usize("log-every", 10)?,
         pipeline_chunks: args.get_usize("pipeline", 1)?,
+        pool_threads: args.get_usize("pool-threads", 0)?,
     };
     println!(
         "training {} with {} workers for {} steps (lr {}, momentum {})",

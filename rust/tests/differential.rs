@@ -16,15 +16,24 @@
 //! lean on: `arena_capacity` covers every phase the closed forms predict,
 //! and chunked back-half writes never alias the front half or leak
 //! across `ArenaRegion` boundaries.
+//!
+//! The grid also carries an **execution-substrate axis**: every chunked
+//! configuration runs both on the PR-2 spawn-per-step scoped fallback
+//! (`PoolSel::Off`) and on a shared persistent `WorkerPool` (forced, so
+//! tiny payloads exercise the pooled path too), asserting bitwise
+//! agreement with the scoped serial anchor and — at the end of the run —
+//! that the pool never spawned a thread after construction.
 
 use ramp::collectives::arena::{arena_capacity, BufferArena, Pipeline};
 use ramp::collectives::ops::{job_phases, job_step_sizes, ramp_phases};
+use ramp::collectives::pool::{PoolSel, WorkerPool};
 use ramp::collectives::ramp_x::{padded_len, RampX};
 use ramp::collectives::{reference, MpiOp};
 use ramp::rng::Xoshiro256;
 use ramp::simulator::OpticalFabric;
 use ramp::topology::ramp::RampParams;
 use ramp::transcoder::transcode_plan;
+use std::sync::{Arc, OnceLock};
 
 /// Fabric shapes under differential test: all four steps active, steps 3
 /// and 4 inactive, non-power-of-two node counts, multi-round step 4.
@@ -36,6 +45,21 @@ fn fabrics() -> Vec<RampParams> {
         RampParams::new(3, 1, 3, 1),  // N=9 (non-pow2), steps 3+4 inactive
         RampParams::new(2, 2, 8, 1),  // N=32, DG=4 (multi-round step 4)
     ]
+}
+
+/// One persistent pool shared by the whole differential run — the same
+/// lifetime shape the coordinator uses (threads created once, reused by
+/// every collective under test).
+fn shared_pool() -> Arc<WorkerPool> {
+    static POOL: OnceLock<Arc<WorkerPool>> = OnceLock::new();
+    POOL.get_or_init(|| Arc::new(WorkerPool::new(3))).clone()
+}
+
+/// Execution-substrate axis of the grid: the PR-2 spawn-per-step scoped
+/// fallback, and the persistent pool (forced, so even the tiny
+/// differential payloads exercise the pooled path).
+fn pool_modes() -> Vec<(&'static str, PoolSel)> {
+    vec![("scoped", PoolSel::Off), ("pooled", PoolSel::Forced(shared_pool()))]
 }
 
 /// Chunk-count axis of the grid: off, small fixed counts (forced even on
@@ -148,11 +172,12 @@ fn all_nine_ops_match_reference_pipelined_and_not() {
         let n = p.n_nodes();
         for (oi, &op) in op_instances(n).iter().enumerate() {
             for elems in sizes_for(p, op) {
-                // unpipelined run is the bitwise anchor for every chunking
+                // unpipelined scoped run is the bitwise anchor for every
+                // (chunking, execution substrate) combination
                 let seed = grid_seed(pi, oi, elems, 0);
                 let inputs = random_inputs(n, elems, seed);
                 let mut serial = inputs.clone();
-                RampX::new(p).run(op, &mut serial).unwrap();
+                RampX::new(p).with_pool(PoolSel::Off).run(op, &mut serial).unwrap();
                 if let Some(expect) = oracle(op, &inputs) {
                     assert_close(
                         &serial,
@@ -161,15 +186,25 @@ fn all_nine_ops_match_reference_pipelined_and_not() {
                         &format!("{} serial m={elems} on {p:?}", op.name()),
                     );
                 }
-                for (ki, pl) in pipelines().iter().enumerate().skip(1) {
-                    let mut chunked = inputs.clone();
-                    RampX::new(p).with_pipeline(*pl).run(op, &mut chunked).unwrap();
-                    assert_eq!(
-                        serial,
-                        chunked,
-                        "{} K-grid point {ki} diverged bitwise at m={elems} on {p:?}",
-                        op.name()
-                    );
+                for (ki, pl) in pipelines().iter().enumerate() {
+                    for (pool_name, pool) in pool_modes() {
+                        if ki == 0 && pool_name == "scoped" {
+                            continue; // that is the anchor itself
+                        }
+                        let mut chunked = inputs.clone();
+                        RampX::new(p)
+                            .with_pipeline(*pl)
+                            .with_pool(pool)
+                            .run(op, &mut chunked)
+                            .unwrap();
+                        assert_eq!(
+                            serial,
+                            chunked,
+                            "{} K-grid point {ki} ({pool_name}) diverged bitwise at \
+                             m={elems} on {p:?}",
+                            op.name()
+                        );
+                    }
                 }
             }
         }
@@ -181,11 +216,53 @@ fn barrier_counts_everyone_under_every_chunking() {
     for p in fabrics() {
         let n = p.n_nodes();
         for pl in pipelines() {
-            let mut bufs = vec![vec![0.0f32]; n];
-            RampX::new(&p).with_pipeline(pl).run(MpiOp::Barrier, &mut bufs).unwrap();
-            assert!(bufs.iter().all(|b| b[0] as usize == n), "barrier under {pl:?} on {p:?}");
+            for (pool_name, pool) in pool_modes() {
+                let mut bufs = vec![vec![0.0f32]; n];
+                RampX::new(&p)
+                    .with_pipeline(pl)
+                    .with_pool(pool)
+                    .run(MpiOp::Barrier, &mut bufs)
+                    .unwrap();
+                assert!(
+                    bufs.iter().all(|b| b[0] as usize == n),
+                    "barrier under {pl:?} ({pool_name}) on {p:?}"
+                );
+            }
         }
     }
+}
+
+#[test]
+fn persistent_pool_steady_state_spawns_nothing_across_the_net() {
+    // run a slice of the nine-op net repeatedly on the shared pool: the
+    // thread count must stay exactly as constructed — the warm-up spawn
+    // is the only spawn there ever is
+    let pool = shared_pool();
+    assert_eq!(pool.spawn_count(), 3, "shared pool is constructed with 3 workers");
+    let p = RampParams::fig8_example();
+    let n = p.n_nodes();
+    let x = RampX::new(&p)
+        .with_pool(PoolSel::Forced(pool.clone()))
+        .with_pipeline(Pipeline::fixed(3));
+    let before = pool.fan_outs();
+    for iter in 0..3 {
+        for op in [MpiOp::AllReduce, MpiOp::AllToAll, MpiOp::Broadcast { root: 1 }] {
+            let elems = 2 * n;
+            let inputs = random_inputs(n, elems, 7 + iter);
+            let mut got = inputs.clone();
+            x.run(op, &mut got).unwrap();
+            let mut want = inputs.clone();
+            RampX::new(&p)
+                .with_pool(PoolSel::Off)
+                .with_pipeline(Pipeline::fixed(3))
+                .run(op, &mut want)
+                .unwrap();
+            assert_eq!(got, want, "{} iteration {iter}", op.name());
+        }
+    }
+    assert_eq!(pool.spawn_count(), 3, "steady-state collectives must spawn nothing");
+    assert!(pool.fan_outs() > before, "the pooled path must actually dispatch");
+    assert!(pool.sticky_hits() > 0, "repeat steps must hit the sticky map");
 }
 
 #[test]
