@@ -10,10 +10,16 @@
 BENCHES := collectives_bench ddl_bench estimator_bench fabric_bench \
            runtime_bench transcoder_bench
 
-.PHONY: tier1 bench-smoke bench-json artifacts
+.PHONY: tier1 bench-smoke bench-json fuzz artifacts
 
 tier1:
 	cargo build --release && cargo test -q
+
+# long randomized differential fuzz (the nightly CI profile; tier-1 runs
+# a 200-case slice inline). RAMP_FUZZ_CASES overrides the case count;
+# replay a failing seed with RAMP_FUZZ_REPLAY=<seed>.
+fuzz:
+	RAMP_FUZZ_CASES=$${RAMP_FUZZ_CASES:-2000} cargo test --release --test differential -- --ignored
 
 # RAMP_BENCH_MS caps every benchutil::bench budget; RAMP_BENCH_MIB shrinks
 # the large-message collective cases so the smoke pass stays in seconds.

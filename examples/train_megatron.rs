@@ -27,6 +27,9 @@ use ramp::units::{fmt_bytes, fmt_count, fmt_time};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
+    // `--pipeline off|auto|cross|cross:K|K`
+    let pipeline =
+        ramp::collectives::arena::Pipeline::from_spec(&args.get_or("pipeline", "1"))?;
     let cfg = TrainConfig {
         model: args.get_or("model", "tiny"),
         n_workers: args.get_usize("workers", 4)?,
@@ -36,7 +39,8 @@ fn main() -> anyhow::Result<()> {
         seed: args.get_usize("seed", 42)? as u64,
         artifacts: ramp::config::artifacts_dir(),
         log_every: args.get_usize("log-every", 20)?,
-        pipeline_chunks: args.get_usize("pipeline", 1)?,
+        pipeline_chunks: pipeline.chunks,
+        pipeline_cross: pipeline.cross,
         pool_threads: args.get_usize("pool-threads", 0)?,
     };
 

@@ -96,14 +96,14 @@ fn inputs(n: usize, c: usize) -> Vec<Vec<f32>> {
 
 /// Large-message all-reduce at one scale across the data-plane
 /// generations: pre-refactor Vec-of-Vec, PR-2 spawn-per-step arena,
-/// persistent-pool arena, and pooled + chunk-pipelined. Returns the
-/// payload GB/s of each column.
+/// persistent-pool arena, pooled + chunk-pipelined, and pooled +
+/// cross-step chunk lanes. Returns the payload GB/s of each column.
 fn large_message_case(
     json: &mut JsonReporter,
     p: &RampParams,
     label: &str,
     elems_per_node: usize,
-) -> (f64, f64, f64, f64) {
+) -> (f64, f64, f64, f64, f64) {
     let n = p.n_nodes();
     let mib = elems_per_node * 4 / (1 << 20);
     let bytes = (n * elems_per_node * 4) as f64;
@@ -163,15 +163,26 @@ fn large_message_case(
     let piped_gbs = piped.throughput(bytes) / 1e9;
     json.push(&piped, Some(piped_gbs));
 
+    // this PR: cross-step chunk lanes — the dependency-aware lane
+    // schedule interleaves steps instead of barriering between them
+    let xc = RampX::new(p).with_pipeline(Pipeline::cross(0));
+    let crossed = bench(
+        &format!("all-reduce {label} x {mib} MiB/node [arena pooled cross-step]"),
+        2000,
+        || xc.run_arena(MpiOp::AllReduce, &mut arena).unwrap(),
+    );
+    let crossed_gbs = crossed.throughput(bytes) / 1e9;
+    json.push(&crossed, Some(crossed_gbs));
+
     println!(
         "    -> {label}: {before_gbs:.2} GB/s pre-refactor, {spawned_gbs:.2} GB/s \
-         spawn-per-step, {pooled_gbs:.2} GB/s pooled, {piped_gbs:.2} GB/s pooled+pipelined \
-         ({:.2}x pool vs spawn, {:.2}x vs pre-refactor; {steady_spawns} OS threads spawned \
-         during the pooled column)",
+         spawn-per-step, {pooled_gbs:.2} GB/s pooled, {piped_gbs:.2} GB/s pooled+pipelined, \
+         {crossed_gbs:.2} GB/s pooled cross-step ({:.2}x pool vs spawn, {:.2}x vs \
+         pre-refactor; {steady_spawns} OS threads spawned during the pooled column)",
         pooled_gbs / spawned_gbs,
         piped_gbs / before_gbs,
     );
-    (before_gbs, spawned_gbs, pooled_gbs, piped_gbs)
+    (before_gbs, spawned_gbs, pooled_gbs, piped_gbs, crossed_gbs)
 }
 
 fn main() {
@@ -224,7 +235,8 @@ fn main() {
     for (p, label) in [(RampParams::fig8_example(), "54 nodes"), (p2.clone(), "128 nodes")] {
         // pad to a multiple of N so the executors accept the size
         let elems = elems.div_ceil(p.n_nodes()) * p.n_nodes();
-        let (before, spawned, pooled, _piped) = large_message_case(&mut json, &p, label, elems);
+        let (before, spawned, pooled, _piped, _crossed) =
+            large_message_case(&mut json, &p, label, elems);
         arena_speedups.push(spawned / before);
         pool_speedups.push(pooled / spawned);
     }
@@ -234,7 +246,10 @@ fn main() {
         pool_speedups.iter().map(|s| format!("{s:.2}x")).collect::<Vec<_>>().join(", ")
     );
 
-    println!("== modeled completion: serial vs chunk-pipelined (overlap of reduce with wire) ==");
+    println!(
+        "== modeled completion: serial vs intra-step vs cross-step chunk lanes \
+         (overlap of reduce with wire) =="
+    );
     let est = CollectiveEstimator::ramp(&RampParams::max_scale());
     let host = CollectiveEstimator::ramp_host_measured(&RampParams::max_scale());
     for (op, label) in [
@@ -244,13 +259,38 @@ fn main() {
         let cmp = est.pipeline_comparison(op, GB, 65_536, Pipeline::auto());
         let hcmp = host.pipeline_comparison(op, GB, 65_536, Pipeline::auto());
         println!(
-            "    -> {label} 1 GB @ 65,536 nodes: serial {:.3} ms, pipelined {:.3} ms ({:.2}x); \
-             with this host's measured reduce kernel: {:.3} ms pipelined ({:.2}x)",
+            "    -> {label} 1 GB @ 65,536 nodes: serial {:.3} ms, intra-step {:.3} ms \
+             ({:.2}x), cross-step {:.3} ms ({:.2}x); with this host's measured reduce \
+             kernel: intra {:.3} ms ({:.2}x), cross {:.3} ms ({:.2}x)",
             cmp.serial.total() * 1e3,
             cmp.pipelined.total() * 1e3,
             cmp.speedup(),
+            cmp.crossstep.total() * 1e3,
+            cmp.cross_speedup(),
             hcmp.pipelined.total() * 1e3,
-            hcmp.speedup()
+            hcmp.speedup(),
+            hcmp.crossstep.total() * 1e3,
+            hcmp.cross_speedup()
+        );
+    }
+    // the acceptance readout: modeled cross-step ≤ intra-step at the
+    // bench's own 54- and 128-node ≥64 MiB/node all-reduce scales
+    for (p, n) in [(RampParams::fig8_example(), 54u64), (RampParams::new(4, 4, 8, 1), 128u64)] {
+        let e = CollectiveEstimator::ramp(&p);
+        let m = (mib as u64).max(64) * (1u64 << 20);
+        let cmp = e.pipeline_comparison(MpiOp::AllReduce, m, n as usize, Pipeline::auto());
+        println!(
+            "    -> all-reduce {} MiB/node @ {n} nodes: serial {:.3} ms, intra-step {:.3} ms, \
+             cross-step {:.3} ms ({})",
+            m >> 20,
+            cmp.serial.total() * 1e3,
+            cmp.pipelined.total() * 1e3,
+            cmp.crossstep.total() * 1e3,
+            if cmp.crossstep.total() <= cmp.pipelined.total() * (1.0 + 1e-9) {
+                "cross ≤ intra ok"
+            } else {
+                "cross-step REGRESSION"
+            }
         );
     }
     println!(

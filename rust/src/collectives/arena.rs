@@ -112,6 +112,14 @@ pub struct Pipeline {
     /// vector-width friendly). Ignored for fixed chunk counts so tests
     /// can force chunking on small messages.
     pub min_chunk_elems: usize,
+    /// Cross-step chunk lanes: chunk `c` of step `r+1` runs as soon as
+    /// chunk `c` of step `r` is published, instead of waiting for the
+    /// whole step (dependency-aware lane schedule — see
+    /// `transcoder::lanes` and `collectives/README.md`). Applies to the
+    /// exchange-kernel family (reduce-scatter / all-gather and their
+    /// compositions); other ops degrade to intra-step pipelining with
+    /// the same chunk policy. Results stay bitwise identical either way.
+    pub cross: bool,
 }
 
 impl Pipeline {
@@ -120,19 +128,32 @@ impl Pipeline {
 
     /// Unpipelined: every step processes its whole region at once.
     pub fn off() -> Self {
-        Self { chunks: 1, min_chunk_elems: Self::DEFAULT_MIN_CHUNK_ELEMS }
+        Self { chunks: 1, min_chunk_elems: Self::DEFAULT_MIN_CHUNK_ELEMS, cross: false }
     }
 
     /// Auto-select the chunk count per step from the step's payload.
     pub fn auto() -> Self {
-        Self { chunks: 0, min_chunk_elems: Self::DEFAULT_MIN_CHUNK_ELEMS }
+        Self { chunks: 0, min_chunk_elems: Self::DEFAULT_MIN_CHUNK_ELEMS, cross: false }
     }
 
     /// Fixed chunk count. Effective counts are capped at
     /// [`MAX_PIPELINE_CHUNKS`] and at the step's payload size by
     /// [`Self::chunks_for`] — requesting more silently runs at the cap.
     pub fn fixed(k: usize) -> Self {
-        Self { chunks: k.max(1), min_chunk_elems: Self::DEFAULT_MIN_CHUNK_ELEMS }
+        Self { chunks: k.max(1), min_chunk_elems: Self::DEFAULT_MIN_CHUNK_ELEMS, cross: false }
+    }
+
+    /// Cross-step chunk lanes with the given chunk knob (`0` = auto,
+    /// `k` = fixed — same interpretation as [`Self::from_knob`]).
+    pub fn cross(k: usize) -> Self {
+        Self { cross: true, ..Self::from_knob(k) }
+    }
+
+    /// The same chunk policy with cross-step lanes stripped — the
+    /// intra-step barrier path the executors degrade to when an op (or
+    /// substrate) cannot lane-align.
+    pub fn without_cross(self) -> Self {
+        Self { cross: false, ..self }
     }
 
     /// Parse the engine/CLI knob: `0` = auto, `1` = off, `k` = fixed
@@ -142,6 +163,29 @@ impl Pipeline {
             Self::auto()
         } else {
             Self::fixed(k)
+        }
+    }
+
+    /// Parse the textual CLI spec: `off` / `auto` / `cross` /
+    /// `cross:K` / a number (the [`Self::from_knob`] interpretation).
+    pub fn from_spec(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "off" => Ok(Self::off()),
+            "auto" => Ok(Self::auto()),
+            "cross" => Ok(Self::cross(0)),
+            _ => {
+                if let Some(k) = s.strip_prefix("cross:") {
+                    let k: usize = k
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad cross chunk count: {k}"))?;
+                    Ok(Self::cross(k))
+                } else {
+                    let k: usize = s.parse().map_err(|_| {
+                        anyhow::anyhow!("bad pipeline spec {s} (off|auto|cross|cross:K|K)")
+                    })?;
+                    Ok(Self::from_knob(k))
+                }
+            }
         }
     }
 
@@ -285,11 +329,36 @@ impl BufferArena {
     /// regions (each `region_cap` long, rank-indexed). Disjoint rank sets
     /// can then be written from different threads.
     pub fn split(&mut self) -> (&[f32], Vec<&mut [f32]>) {
+        self.split_oriented(self.front_is_lower)
+    }
+
+    /// [`Self::split`] with an explicit read-half selection. Cross-step
+    /// chunk lanes drive both halves without flipping: step `r` of a lane
+    /// schedule reads the half step `r−1` wrote, so the driver picks the
+    /// orientation per step and calls [`Self::set_front`] once at the
+    /// end ([`EpochTags`] guard the interleaving).
+    pub fn split_oriented(&mut self, read_lower: bool) -> (&[f32], Vec<&mut [f32]>) {
         let half = self.n * self.region_cap;
         let (lo, hi) = self.slab.split_at_mut(half);
         let (front, back): (&[f32], &mut [f32]) =
-            if self.front_is_lower { (&lo[..], hi) } else { (&hi[..], lo) };
+            if read_lower { (&lo[..], hi) } else { (&hi[..], lo) };
         (front, back.chunks_mut(self.region_cap).collect())
+    }
+
+    /// True when the front half is currently the lower half of the slab
+    /// (the parity anchor for cross-step lane drivers).
+    pub fn front_is_lower(&self) -> bool {
+        self.front_is_lower
+    }
+
+    /// Publish an explicit front orientation and per-rank live lengths —
+    /// the cross-step driver's single flip-equivalent after its last
+    /// lane task.
+    pub fn set_front(&mut self, front_is_lower: bool, lens: Vec<usize>) {
+        assert_eq!(lens.len(), self.n);
+        debug_assert!(lens.iter().all(|&l| l <= self.region_cap));
+        self.front_is_lower = front_is_lower;
+        self.lens = lens;
     }
 
     /// Make the back half the new front, with per-rank live lengths.
@@ -328,6 +397,80 @@ pub fn arena_capacity(p: &RampParams, op: MpiOp, input_elems: usize) -> usize {
             .unwrap_or(m_bytes),
     };
     (phase_bytes.div_ceil(4) as usize).max(input_elems).max(1)
+}
+
+/// Per-(rank, chunk) publication epochs for cross-step chunk lanes.
+///
+/// A lane task `(step r, chunk c)` may only start once every region it
+/// reads carries epoch `r` — i.e. chunk `c` of every rank it touches has
+/// been published by step `r−1` (the initial load publishes epoch 0).
+/// Because the cross-step chunk geometry is *fraction-pure* (a task only
+/// ever reads and writes slab positions whose low coordinate falls in
+/// its own fraction — see `collectives/README.md`), this single check
+/// covers the read-after-write, write-after-read and write-after-write
+/// hazards of running steps `r` and `r+1` concurrently on the
+/// double-buffered slab. The lane driver verifies before dispatching
+/// each task and publishes after it completes; a violation is a schedule
+/// bug, surfaced as an error instead of silent corruption.
+#[derive(Clone, Debug)]
+pub struct EpochTags {
+    n: usize,
+    k: usize,
+    tags: Vec<u32>,
+}
+
+impl EpochTags {
+    /// Tags for `n` ranks × `k` chunk lanes, all at epoch 0 (the freshly
+    /// loaded arena front).
+    pub fn new(n: usize, k: usize) -> Self {
+        Self { n, k, tags: vec![0; n * k.max(1)] }
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.k
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.n
+    }
+
+    /// Current epoch of `(rank, chunk)`.
+    pub fn get(&self, rank: usize, chunk: usize) -> u32 {
+        self.tags[rank * self.k + chunk]
+    }
+
+    /// Verify every rank in `ranks` has published `chunk` at exactly
+    /// `epoch` — the read-region precondition of a lane task.
+    pub fn require(
+        &self,
+        ranks: impl IntoIterator<Item = usize>,
+        chunk: usize,
+        epoch: u32,
+    ) -> Result<()> {
+        for q in ranks {
+            let got = self.get(q, chunk);
+            ensure!(
+                got == epoch,
+                "cross-step epoch violation: rank {q} chunk {chunk} at epoch {got}, \
+                 lane task needs {epoch}"
+            );
+        }
+        Ok(())
+    }
+
+    /// Publish `chunk` of every rank in `ranks` at `epoch` (called after
+    /// the lane task's writes complete).
+    pub fn publish(&mut self, ranks: impl IntoIterator<Item = usize>, chunk: usize, epoch: u32) {
+        for q in ranks {
+            self.tags[q * self.k + chunk] = epoch;
+        }
+    }
+
+    /// True when every tag sits at `epoch` — the post-condition of a
+    /// completed lane schedule (every task ran exactly once).
+    pub fn all_at(&self, epoch: u32) -> bool {
+        self.tags.iter().all(|&t| t == epoch)
+    }
 }
 
 /// Payload threshold (total f32 elements written by a step) below which
@@ -618,6 +761,65 @@ mod tests {
             last = k;
         }
         assert_eq!(pipeline_chunk_count(&p, 256 << 20), MAX_PIPELINE_CHUNKS);
+    }
+
+    #[test]
+    fn split_oriented_drives_both_halves_without_flips() {
+        let mut a = BufferArena::with_capacity(2, 4);
+        a.load(&[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        assert!(a.front_is_lower());
+        // "step 0": read lower, write upper
+        {
+            let (front, mut back) = a.split_oriented(true);
+            for r in 0..2 {
+                back[r][0] = front[r * 4] * 10.0;
+            }
+        }
+        // "step 1": read upper, write lower — no flip in between
+        {
+            let (front, mut back) = a.split_oriented(false);
+            for r in 0..2 {
+                back[r][0] = front[r * 4] + 1.0;
+            }
+        }
+        a.set_front(true, vec![1, 1]);
+        assert_eq!(a.front(0), &[11.0]);
+        assert_eq!(a.front(1), &[31.0]);
+        assert!(a.front_is_lower());
+    }
+
+    #[test]
+    fn epoch_tags_guard_the_lane_order() {
+        let mut e = EpochTags::new(3, 2);
+        assert_eq!((e.n_ranks(), e.n_chunks()), (3, 2));
+        assert!(e.all_at(0));
+        // step 0 chunk 0 may start; step 1 chunk 0 may not
+        e.require(0..3, 0, 0).unwrap();
+        assert!(e.require([0usize], 0, 1).is_err());
+        e.publish(0..3, 0, 1);
+        e.require(0..3, 0, 1).unwrap();
+        assert_eq!(e.get(1, 0), 1);
+        assert_eq!(e.get(1, 1), 0);
+        // a republish at the wrong epoch is caught by the next require
+        assert!(e.require(0..3, 1, 1).is_err());
+        e.publish(0..3, 1, 1);
+        assert!(e.all_at(1));
+    }
+
+    #[test]
+    fn pipeline_spec_parsing() {
+        assert_eq!(Pipeline::from_spec("off").unwrap(), Pipeline::off());
+        assert_eq!(Pipeline::from_spec("auto").unwrap(), Pipeline::auto());
+        assert_eq!(Pipeline::from_spec("0").unwrap(), Pipeline::auto());
+        assert_eq!(Pipeline::from_spec("1").unwrap(), Pipeline::off());
+        assert_eq!(Pipeline::from_spec("5").unwrap(), Pipeline::fixed(5));
+        let c = Pipeline::from_spec("cross").unwrap();
+        assert!(c.cross && c.chunks == 0);
+        let c3 = Pipeline::from_spec("cross:3").unwrap();
+        assert!(c3.cross && c3.chunks == 3);
+        assert_eq!(c3.without_cross(), Pipeline::fixed(3));
+        assert!(Pipeline::from_spec("bogus").is_err());
+        assert!(Pipeline::from_spec("cross:x").is_err());
     }
 
     #[test]

@@ -94,6 +94,17 @@ pub struct PlanStep {
     /// a fresh propagation delay). Chunk sub-round byte counts sum exactly
     /// to the base round's, so conservation accounting is chunk-invariant.
     pub n_chunks: usize,
+    /// True when this step's chunk partitioning is *fraction-pure*: chunk
+    /// `c` only reads and writes slab positions whose low coordinate
+    /// falls in final-output fraction `c`, so chunk `c` of the next
+    /// lane-aligned step depends only on chunk `c` of this one (plus the
+    /// same-fraction peer regions). The transcoder's lane scheduler
+    /// (`transcoder::lanes`) emits per-chunk cross-step dependency edges
+    /// between consecutive lane-aligned steps of equal `n_chunks`, and a
+    /// full barrier everywhere else. Base-round-major intra-step chunking
+    /// (contiguous sub-ranges) is NOT fraction-pure and leaves this
+    /// false.
+    pub lane_aligned: bool,
 }
 
 impl PlanStep {

@@ -29,6 +29,19 @@
 //! that the call does not return — not even by unwinding — before every
 //! submitted job has finished. That is the same contract
 //! `std::thread::scope` provides, without the per-call spawn.
+//!
+//! The per-worker queues double as the **per-lane ready queues** of the
+//! cross-step chunk-lane schedule (`transcoder::lanes`): the lane driver
+//! dispatches `(step, chunk)` tasks in dependency order, each task's
+//! subgroup items land on their sticky lanes, and a lane drains its
+//! queue FIFO — so a subgroup's regions are touched by the same core
+//! across *steps* of the interleaved schedule, not just within one.
+//! The pool is safe for **concurrent fan-outs** from multiple threads
+//! (binning and sticky assignment are serialized on the sticky map's
+//! mutex; each call owns a private latch): the stress net
+//! (`rust/tests/pool_stress.rs`) runs whole collectives from several
+//! threads against one pool and asserts zero steady-state spawns and a
+//! consistent sticky map.
 
 use crate::collectives::arena::{host_parallelism, lpt_order, par_threshold};
 use rustc_hash::FxHashMap;
@@ -250,6 +263,20 @@ impl WorkerPool {
     /// The lane `key` is currently stuck to, if any (test hook).
     pub fn sticky_lane(&self, key: usize) -> Option<usize> {
         lock_recover(&self.sticky).get(&key).copied()
+    }
+
+    /// Number of keys currently held by the sticky map (diagnostic; the
+    /// stress tests assert it is bounded by the distinct keys ever
+    /// dispatched, even under concurrent callers).
+    pub fn sticky_size(&self) -> usize {
+        lock_recover(&self.sticky).len()
+    }
+
+    /// Every sticky assignment names a valid lane — the consistency
+    /// invariant concurrent fan-outs must preserve.
+    pub fn sticky_lanes_valid(&self) -> bool {
+        let lanes = self.lanes();
+        lock_recover(&self.sticky).values().all(|&l| l < lanes)
     }
 
     /// Run keyed work items across the pool, inline when the total

@@ -26,7 +26,7 @@
 //! the canonical padding.
 
 use crate::collectives::arena::{
-    chunk_bounds, run_parallel_weighted, ArenaRegion, BufferArena, Pipeline,
+    chunk_bounds, run_parallel_weighted, ArenaRegion, BufferArena, EpochTags, Pipeline,
 };
 use crate::collectives::kernels::{concat_subgroup, reduce_subgroup};
 use crate::collectives::plan::{CollectivePlan, PlanStep, Round, Transfer};
@@ -120,9 +120,54 @@ impl<'a> RampX<'a> {
         Ok(plan)
     }
 
+    /// The pipeline after substrate constraints: cross-step lanes are
+    /// driven through the pool's sticky per-lane queues, so under the
+    /// spawn-per-step scoped fallback ([`PoolSel::Off`], which has no
+    /// persistent lanes) cross-step schedules degrade to the PR-2
+    /// intra-step barrier path — correctness first, never a panic
+    /// (regression-tested in this module and in the differential net).
+    fn effective_pipeline(&self) -> Pipeline {
+        if self.pipeline.cross && matches!(self.pool, PoolSel::Off) {
+            self.pipeline.without_cross()
+        } else {
+            self.pipeline
+        }
+    }
+
+    /// This executor with cross-step lanes stripped (same chunk policy,
+    /// same pool) — the intra-step fallback for ops whose data movement
+    /// is not lane-aligned (metadata-routed all-to-all/scatter/gather,
+    /// broadcast's native Eq-1 pipeline) and for degenerate payloads.
+    fn as_intra(&self) -> RampX<'a> {
+        RampX { p: self.p, pipeline: self.pipeline.without_cross(), pool: self.pool.clone() }
+    }
+
     /// Dispatch an operation on arena-resident rank regions. Returns the
     /// emitted transfer plan; results land in the arena's front half.
+    ///
+    /// With [`Pipeline::cross`] set, the exchange-kernel family
+    /// (reduce-scatter, all-gather, all-reduce, reduce's scatter half,
+    /// barrier's flag all-reduce) runs on the cross-step chunk-lane
+    /// schedule (`transcoder::lanes`); every other op — and every op
+    /// under [`PoolSel::Off`] — degrades to the intra-step barrier path
+    /// with the same chunk policy. Results are bitwise identical in all
+    /// modes.
     pub fn run_arena(&self, op: MpiOp, arena: &mut BufferArena) -> Result<CollectivePlan> {
+        if self.effective_pipeline().cross {
+            match op {
+                MpiOp::ReduceScatter => return self.reduce_scatter_cross(arena),
+                MpiOp::AllGather => return self.all_gather_cross(arena),
+                MpiOp::AllReduce => return self.all_reduce_cross(arena),
+                MpiOp::Reduce { root } => {
+                    let mut plan = self.reduce_scatter_cross(arena)?;
+                    let tail = self.gather(arena, root)?;
+                    plan.steps.extend(tail.steps);
+                    return Ok(plan);
+                }
+                MpiOp::Barrier => return self.barrier(arena),
+                _ => return self.as_intra().run_arena(op, arena),
+            }
+        }
         match op {
             MpiOp::ReduceScatter => self.reduce_scatter(arena),
             MpiOp::AllGather => self.all_gather(arena),
@@ -336,6 +381,7 @@ impl<'a> RampX<'a> {
                 trx_q: crate::collectives::ops::trx_groups_per_peer(p, step),
                 step: Some(step),
                 n_chunks: views.len().max(1),
+                lane_aligned: false,
             };
             for pairs in &rounds_pairs {
                 // base-round-major: the chunk sub-rounds of one pairwise
@@ -398,6 +444,7 @@ impl<'a> RampX<'a> {
                 trx_q: crate::collectives::ops::trx_groups_per_peer(p, step),
                 step: Some(step),
                 n_chunks: n_views,
+                lane_aligned: false,
             };
             let mut new_chunks: Vec<Vec<usize>> = vec![Vec::new(); n];
             // (src_rank, src_chunk_idx, dst_rank, dst_chunk_idx)
@@ -538,6 +585,7 @@ impl<'a> RampX<'a> {
                 trx_q: crate::collectives::ops::trx_groups_per_peer(p, step),
                 step: Some(step),
                 n_chunks: kp,
+                lane_aligned: false,
             };
             for (src, sink, total, ri) in xfers {
                 for (vi, (lo, hi)) in chunk_bounds(total, kp).into_iter().enumerate() {
@@ -664,6 +712,7 @@ impl<'a> RampX<'a> {
             trx_q: 1,
             step: None,
             n_chunks: 0,
+            lane_aligned: false,
         };
         // round r: root multicasts chunk r (if r < k); relays re-multicast
         // chunk r-1 (if 1 <= r).
@@ -739,7 +788,9 @@ impl<'a> RampX<'a> {
             flags.front_mut(r)[..n].fill(1.0);
             flags.set_len(r, n);
         }
-        let plan = self.all_reduce(&mut flags)?;
+        // dispatch through run_arena so the flag all-reduce inherits the
+        // configured execution mode (intra-step or cross-step lanes)
+        let plan = self.run_arena(MpiOp::AllReduce, &mut flags)?;
         let ok = (0..n).all(|r| flags.front(r).iter().all(|&v| (v - n as f32).abs() < 0.5));
         if !ok {
             bail!("barrier flag reduction failed");
@@ -750,6 +801,249 @@ impl<'a> RampX<'a> {
         }
         Ok(plan)
     }
+
+    // ---- cross-step chunk lanes -------------------------------------
+    //
+    // Intra-step pipelining still barriers between algorithmic steps:
+    // chunk 0 of step r+1 waits for chunk K−1 of step r. The cross-step
+    // drivers below chunk by **final-output fraction** instead of by
+    // contiguous sub-range: with `unit` the invariant low coordinate
+    // (the final per-rank reduce-scatter slice, or the all-gather
+    // contribution), chunk `c` of *every* step touches exactly the slab
+    // positions `u·unit + fracs[c]` — so chunk `c` of step r+1 depends
+    // only on chunk `c` of step r (its own and its peers'), and the
+    // dependency-aware lane schedule (`transcoder::lanes`) interleaves
+    // steps with no full-pipeline barrier. Fraction purity also makes
+    // concurrent tasks' read/write sets disjoint on both slab halves,
+    // which the per-chunk `EpochTags` verify at dispatch time. The
+    // per-element computation (member-order summation, member-order
+    // concatenation) is untouched, so results stay bitwise identical to
+    // the serial oracle — enforced across the whole op × fabric × size ×
+    // substrate matrix by `rust/tests/differential.rs`.
+
+    /// Execute lane-aligned exchange stages through the dependency-aware
+    /// lane schedule derived from `plan`. `unit` is the invariant low
+    /// coordinate; `fracs` its chunk partition. The arena's halves are
+    /// driven without intermediate flips ([`BufferArena::split_oriented`])
+    /// and published once at the end.
+    fn run_lane_stages(
+        &self,
+        arena: &mut BufferArena,
+        stages: &[LaneStage],
+        unit: usize,
+        fracs: &[(usize, usize)],
+        plan: &CollectivePlan,
+    ) -> Result<()> {
+        let n = self.p.n_nodes();
+        ensure!(!stages.is_empty() && unit > 0, "degenerate lane stages");
+        ensure!(
+            stages.iter().all(|st| st.cur.max(st.out) <= arena.region_cap()),
+            "arena region ({}) too small for a lane stage",
+            arena.region_cap()
+        );
+        let sched = crate::transcoder::lanes::LaneSchedule::from_plan(plan);
+        sched.validate(plan)?;
+        let mut epochs = EpochTags::new(n, fracs.len());
+        let read_lower0 = arena.front_is_lower();
+        for task in &sched.tasks {
+            let (r, c) = (task.step, task.chunk);
+            let stage = &stages[r];
+            // a lane may only start once its read regions are published:
+            // chunk c of every rank must sit at epoch r (fraction purity
+            // extends this single check to the write-after-read and
+            // write-after-write hazards of driving both halves at once)
+            epochs.require(0..n, c, r as u32)?;
+            let (flo, fhi) = fracs[c];
+            let flen = fhi - flo;
+            // interval space: the reduce walks output slots, the concat
+            // walks input-contribution slots
+            let span = if stage.reduce { stage.out } else { stage.cur };
+            let slots = span / unit;
+            {
+                let cap = arena.region_cap();
+                let (front, back) = arena.split_oriented(read_lower0 ^ (r % 2 == 1));
+                let bundles = bundle_regions(back, &stage.rank_groups);
+                let work: Vec<Keyed<(Vec<usize>, Vec<&mut [f32]>)>> = stage
+                    .rank_groups
+                    .iter()
+                    .cloned()
+                    .zip(bundles)
+                    .map(|(ranks, outs)| {
+                        Keyed::new(ranks[0], slots * flen * ranks.len(), (ranks, outs))
+                    })
+                    .collect();
+                let (reduce, out_len, cur_len) = (stage.reduce, stage.out, stage.cur);
+                self.fan_out(work, slots * flen * n, |(ranks, mut outs)| {
+                    for u in 0..slots {
+                        let (lo, hi) = (u * unit + flo, u * unit + fhi);
+                        if reduce {
+                            reduce_subgroup(front, cap, &ranks, &mut outs, out_len, lo, hi);
+                        } else {
+                            concat_subgroup(front, cap, &ranks, &mut outs, cur_len, lo, hi);
+                        }
+                    }
+                });
+            }
+            epochs.publish(0..n, c, r as u32 + 1);
+        }
+        ensure!(
+            epochs.all_at(stages.len() as u32),
+            "lane schedule finished with unpublished chunks"
+        );
+        // single flip-equivalent: the last stage wrote the half opposite
+        // its read half
+        let last = stages.len() - 1;
+        let final_read_lower = read_lower0 ^ (last % 2 == 1);
+        arena.set_front(!final_read_lower, vec![stages[last].out; n]);
+        Ok(())
+    }
+
+    /// Lane stages of a reduce-scatter of `m` elements per rank.
+    fn lane_stages_reduce_scatter(&self, m: usize) -> Vec<LaneStage> {
+        let p = self.p;
+        let mut cur = m;
+        Step::active(p)
+            .into_iter()
+            .map(|step| {
+                let groups = subgroup_list(p, step);
+                let rank_groups = subgroup_ranks(p, &groups);
+                let out = cur / step.size(p);
+                let st = LaneStage { step, groups, rank_groups, cur, out, reduce: true };
+                cur = out;
+                st
+            })
+            .collect()
+    }
+
+    /// Lane stages of an all-gather of `m0` contribution elements.
+    fn lane_stages_all_gather(&self, m0: usize) -> Vec<LaneStage> {
+        let p = self.p;
+        let mut cur = m0;
+        Step::active(p)
+            .into_iter()
+            .rev()
+            .map(|step| {
+                let groups = subgroup_list(p, step);
+                let rank_groups = subgroup_ranks(p, &groups);
+                let out = cur * step.size(p);
+                let st = LaneStage { step, groups, rank_groups, cur, out, reduce: false };
+                cur = out;
+                st
+            })
+            .collect()
+    }
+
+    /// Plan step for one lane stage: per-chunk wire views carry chunk
+    /// `c`'s strided payload (`slots · |fracs[c]|` elements), which sums
+    /// exactly to the stage's whole per-peer payload — all conservation
+    /// accounting stays chunk- and schedule-invariant. Marked
+    /// `lane_aligned` so the lane scheduler emits per-chunk edges.
+    fn lane_plan_step(&self, stage: &LaneStage, unit: usize, fracs: &[(usize, usize)]) -> PlanStep {
+        let span = if stage.reduce { stage.out } else { stage.cur };
+        let slots = span / unit;
+        let mut off = 0;
+        let views: Vec<ArenaRegion> = fracs
+            .iter()
+            .map(|&(lo, hi)| {
+                let len = slots * (hi - lo);
+                let v = ArenaRegion::new(off, len);
+                off += len;
+                v
+            })
+            .collect();
+        let reduce_sources = if stage.reduce { stage.step.size(self.p) } else { 0 };
+        let mut pstep =
+            exchange_plan_step(self.p, stage.step, &stage.groups, &views, reduce_sources);
+        pstep.lane_aligned = true;
+        pstep
+    }
+
+    /// Reduce-scatter on cross-step chunk lanes — bitwise identical to
+    /// [`Self::reduce_scatter`].
+    pub fn reduce_scatter_cross(&self, arena: &mut BufferArena) -> Result<CollectivePlan> {
+        let p = self.p;
+        let n = p.n_nodes();
+        ensure!(arena.n_regions() == n, "need {n} regions, got {}", arena.n_regions());
+        let m = arena.uniform_len()?;
+        ensure!(m % n == 0, "message length {m} not divisible by N={n} (pad with padded_len)");
+        let unit = m / n;
+        if unit == 0 {
+            return self.as_intra().reduce_scatter(arena);
+        }
+        let k = self.pipeline.without_cross().chunks_for(p, unit);
+        let fracs = chunk_bounds(unit, k);
+        let stages = self.lane_stages_reduce_scatter(m);
+        let mut plan = CollectivePlan::default();
+        for st in &stages {
+            plan.steps.push(self.lane_plan_step(st, unit, &fracs));
+        }
+        self.run_lane_stages(arena, &stages, unit, &fracs, &plan)?;
+        Ok(plan)
+    }
+
+    /// All-gather on cross-step chunk lanes — bitwise identical to
+    /// [`Self::all_gather`].
+    pub fn all_gather_cross(&self, arena: &mut BufferArena) -> Result<CollectivePlan> {
+        let p = self.p;
+        let n = p.n_nodes();
+        ensure!(arena.n_regions() == n, "need {n} regions, got {}", arena.n_regions());
+        let unit = arena.uniform_len()?;
+        if unit == 0 {
+            return self.as_intra().all_gather(arena);
+        }
+        let k = self.pipeline.without_cross().chunks_for(p, unit);
+        let fracs = chunk_bounds(unit, k);
+        let stages = self.lane_stages_all_gather(unit);
+        let mut plan = CollectivePlan::default();
+        for st in &stages {
+            plan.steps.push(self.lane_plan_step(st, unit, &fracs));
+        }
+        self.run_lane_stages(arena, &stages, unit, &fracs, &plan)?;
+        Ok(plan)
+    }
+
+    /// All-reduce on one end-to-end cross-step lane schedule: the
+    /// all-gather's chunk `c` starts as soon as the *final*
+    /// reduce-scatter stage publishes chunk `c` — the pipeline drains
+    /// once across all (up to) 8 steps instead of once per step. Bitwise
+    /// identical to [`Self::all_reduce`].
+    pub fn all_reduce_cross(&self, arena: &mut BufferArena) -> Result<CollectivePlan> {
+        let p = self.p;
+        let n = p.n_nodes();
+        ensure!(arena.n_regions() == n, "need {n} regions, got {}", arena.n_regions());
+        let m = arena.uniform_len()?;
+        ensure!(m % n == 0, "message length {m} not divisible by N={n} (pad with padded_len)");
+        let unit = m / n;
+        if unit == 0 {
+            return self.as_intra().all_reduce(arena);
+        }
+        let k = self.pipeline.without_cross().chunks_for(p, unit);
+        let fracs = chunk_bounds(unit, k);
+        let mut stages = self.lane_stages_reduce_scatter(m);
+        stages.extend(self.lane_stages_all_gather(unit));
+        let mut plan = CollectivePlan::default();
+        for st in &stages {
+            plan.steps.push(self.lane_plan_step(st, unit, &fracs));
+        }
+        self.run_lane_stages(arena, &stages, unit, &fracs, &plan)?;
+        Ok(plan)
+    }
+}
+
+/// One lane-aligned exchange stage of a cross-step schedule: one
+/// algorithmic step of reduce-scatter (`reduce`) or all-gather
+/// (member-order concat), with its subgroup structure and per-member
+/// input/output lengths.
+struct LaneStage {
+    step: Step,
+    groups: Vec<Vec<NodeCoord>>,
+    rank_groups: Vec<Vec<usize>>,
+    /// Per-member input length read by this stage (elements).
+    cur: usize,
+    /// Per-member output length written by this stage (elements).
+    out: usize,
+    /// s-to-1 member-order reduction (true) or member-order concat.
+    reduce: bool,
 }
 
 /// Smallest length ≥ `len` divisible by `N` (canonical padding for
@@ -844,6 +1138,7 @@ fn exchange_plan_step(
         trx_q: crate::collectives::ops::trx_groups_per_peer(p, step),
         step: Some(step),
         n_chunks: views.len(),
+        lane_aligned: false,
     };
     for pairs in exchange_rounds(s, step) {
         for region in views {
@@ -1190,6 +1485,121 @@ mod tests {
                     .all(|r| r.transfers[0].src == t0.src && r.transfers[0].dsts == t0.dsts));
                 assert!(total > 0);
             }
+        }
+    }
+
+    #[test]
+    fn cross_step_lanes_bitwise_match_serial_for_every_op() {
+        // the cross-step drivers (and the intra-step degradations for
+        // the non-lane-aligned ops) must be bitwise identical to the
+        // serial executor — same member-order summation, different order
+        // of chunk tasks only
+        for p in params_under_test() {
+            let n = p.n_nodes();
+            for pl in [Pipeline::cross(0), Pipeline::cross(2), Pipeline::cross(3)] {
+                for op in MpiOp::all() {
+                    let elems = match op {
+                        MpiOp::AllGather | MpiOp::Gather { .. } => 5,
+                        _ => 2 * n,
+                    };
+                    let inputs = random_inputs(&p, elems, 61);
+                    let mut serial = inputs.clone();
+                    RampX::new(&p).run(op, &mut serial).unwrap();
+                    let mut crossed = inputs.clone();
+                    RampX::new(&p).with_pipeline(pl).run(op, &mut crossed).unwrap();
+                    assert_eq!(serial, crossed, "{} diverged under {pl:?} on {p:?}", op.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cross_step_plans_conserve_bytes_and_validate() {
+        use crate::transcoder::lanes::LaneSchedule;
+        for p in params_under_test() {
+            let n = p.n_nodes();
+            for op in [MpiOp::ReduceScatter, MpiOp::AllGather, MpiOp::AllReduce] {
+                let elems = match op {
+                    MpiOp::AllGather => 6,
+                    _ => 2 * n,
+                };
+                let mut a = random_inputs(&p, elems, 62);
+                let serial = RampX::new(&p).run(op, &mut a).unwrap();
+                let mut b = random_inputs(&p, elems, 62);
+                let crossed =
+                    RampX::new(&p).with_pipeline(Pipeline::cross(3)).run(op, &mut b).unwrap();
+                assert_eq!(
+                    serial.total_wire_bytes(),
+                    crossed.total_wire_bytes(),
+                    "{} wire bytes not schedule-invariant on {p:?}",
+                    op.name()
+                );
+                assert_eq!(
+                    serial.n_base_rounds(),
+                    crossed.n_base_rounds(),
+                    "{} base rounds changed on {p:?}",
+                    op.name()
+                );
+                // every lane stage is fraction-pure and uniformly chunked
+                assert!(crossed.steps.iter().all(|s| s.lane_aligned));
+                let sched = LaneSchedule::from_plan(&crossed);
+                sched.validate(&crossed).unwrap();
+                // with K > 1 chunks the schedule must actually cross
+                // steps (per-chunk edges at every boundary)
+                if crossed.steps[0].n_chunks > 1 {
+                    assert_eq!(
+                        sched.aligned_boundaries(&crossed),
+                        crossed.steps.len() - 1,
+                        "{} lane schedule degenerated on {p:?}",
+                        op.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_off_with_cross_degrades_to_barrier_path() {
+        // regression (correctness first): the scoped spawn-per-step
+        // fallback has no persistent lanes, so cross-step schedules
+        // degrade to the PR-2 intra-step barrier path instead of
+        // panicking — and stay bitwise identical
+        let p = RampParams::fig8_example();
+        let n = p.n_nodes();
+        let inputs = random_inputs(&p, 2 * n, 63);
+        let mut serial = inputs.clone();
+        RampX::new(&p).run(MpiOp::AllReduce, &mut serial).unwrap();
+        let mut degraded = inputs.clone();
+        let plan = RampX::new(&p)
+            .with_pipeline(Pipeline::cross(3))
+            .with_pool(PoolSel::Off)
+            .run(MpiOp::AllReduce, &mut degraded)
+            .unwrap();
+        assert_eq!(serial, degraded, "degraded cross run changed the result");
+        // the degraded plan is the intra-step one: no lane-aligned steps
+        assert!(plan.steps.iter().all(|s| !s.lane_aligned));
+        // while the pooled cross plan is lane-aligned throughout
+        let mut crossed = inputs.clone();
+        let cplan = RampX::new(&p)
+            .with_pipeline(Pipeline::cross(3))
+            .run(MpiOp::AllReduce, &mut crossed)
+            .unwrap();
+        assert_eq!(serial, crossed);
+        assert!(cplan.steps.iter().all(|s| s.lane_aligned));
+    }
+
+    #[test]
+    fn cross_step_reuses_one_arena_across_iterations() {
+        let p = RampParams::new(2, 2, 4, 1);
+        let n = p.n_nodes();
+        let x = RampX::new(&p).with_pipeline(Pipeline::cross(2));
+        let inputs = random_inputs(&p, 2 * n, 64);
+        let expect = oracle::all_reduce(&inputs);
+        let mut arena = BufferArena::for_op(&p, MpiOp::AllReduce, &inputs).unwrap();
+        for iter in 0..3 {
+            arena.load(&inputs).unwrap();
+            x.run_arena(MpiOp::AllReduce, &mut arena).unwrap();
+            assert_eq!(arena.copy_out(), expect, "iteration {iter}");
         }
     }
 

@@ -19,6 +19,20 @@ pub fn par_threshold_override() -> Option<usize> {
     std::env::var("RAMP_PAR_THRESHOLD").ok()?.parse().ok()
 }
 
+/// `RAMP_FUZZ_CASES` override for the randomized differential fuzz net
+/// (`rust/tests/differential.rs`): number of random cases drawn. Unset
+/// or unparsable values fall back to the test's profile default (200 in
+/// tier-1, 2000 in the nightly-style `--ignored` job).
+pub fn fuzz_cases_override() -> Option<usize> {
+    std::env::var("RAMP_FUZZ_CASES").ok()?.parse().ok()
+}
+
+/// `RAMP_FUZZ_REPLAY` — replay exactly one failing fuzz case by the seed
+/// the harness printed (and wrote to `target/fuzz-failing-seed.txt`).
+pub fn fuzz_replay_seed() -> Option<u64> {
+    std::env::var("RAMP_FUZZ_REPLAY").ok()?.parse().ok()
+}
+
 /// Message sizes swept by the comparison harness (Fig 20–22).
 pub const SWEEP_MESSAGES: [u64; 4] = [
     10 * crate::units::MB,

@@ -47,6 +47,12 @@ pub struct TrainConfig {
     /// the per-chunk reduce with the wire transfer and shares each base
     /// round's H2H across chunk sub-rounds.
     pub pipeline_chunks: usize,
+    /// Cross-step chunk lanes for the gradient all-reduce (CLI
+    /// `--pipeline cross[:K]`): chunk `c` enters the next algorithmic
+    /// step as soon as its dependencies publish, instead of barriering
+    /// per step. Combines with `pipeline_chunks` for the chunk count;
+    /// results stay byte-identical.
+    pub pipeline_cross: bool,
     /// Executor-pool lanes for the gradient all-reduce data plane: `0` =
     /// the process-wide persistent pool sized to the host (default),
     /// `1` = inline (no pool), `n` = an engine-owned pool of `n` lanes.
@@ -67,6 +73,7 @@ impl Default for TrainConfig {
             artifacts: PathBuf::from("artifacts"),
             log_every: 10,
             pipeline_chunks: 1,
+            pipeline_cross: false,
             pool_threads: 0,
         }
     }
@@ -230,8 +237,10 @@ fn spawn_worker(
 /// Run a data-parallel training job end to end. See module docs.
 pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     let fabric = fabric_for_workers(cfg.n_workers)?;
+    let mut pipeline = crate::collectives::arena::Pipeline::from_knob(cfg.pipeline_chunks);
+    pipeline.cross = cfg.pipeline_cross;
     let engine = RampEngine::new(fabric)
-        .with_pipeline(crate::collectives::arena::Pipeline::from_knob(cfg.pipeline_chunks))
+        .with_pipeline(pipeline)
         .with_pool_threads(cfg.pool_threads);
     let rt = Runtime::open(&cfg.artifacts)?;
     let n_params = rt.manifest.get_usize(&format!("model.{}.n_params", cfg.model))?;

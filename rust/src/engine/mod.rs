@@ -101,12 +101,23 @@ impl RampEngine {
     /// Run `op` over arena-resident rank regions: zero-allocation data
     /// movement, then transcode + fabric verification. Results land in
     /// the arena's front half.
+    ///
+    /// Plans with lane-aligned steps (cross-step chunk lanes) are
+    /// transcoded through the dependency-aware lane scheduler
+    /// (`transcoder::transcode_lanes`), so the fabric's virtual clock
+    /// sees the interleaved wire schedule — chunk `c` of step `r+1`
+    /// released at its dependencies' completion slot — not the
+    /// base-round-major barrier stream.
     pub fn execute_arena(&self, op: MpiOp, arena: &mut BufferArena) -> Result<CollectiveRun> {
         let plan = RampX::new(&self.p)
             .with_pipeline(self.pipeline)
             .with_pool(self.pool.clone())
             .run_arena(op, arena)?;
-        let schedule = transcode_plan(&self.p, &plan)?;
+        let schedule = if plan.steps.iter().any(|s| s.lane_aligned) {
+            crate::transcoder::transcode_plan_lanes(&self.p, &plan)?
+        } else {
+            transcode_plan(&self.p, &plan)?
+        };
         let report = self.fabric.execute(&schedule);
         if self.strict && !report.ok() {
             bail!(
@@ -233,6 +244,27 @@ mod tests {
         // chunk sub-rounds add wire rounds but share the base round's H2H
         assert!(run_b.schedule.round_ends.len() > run_a.schedule.round_ends.len());
         assert_eq!(run_b.schedule.h2h_rounds, run_a.schedule.h2h_rounds);
+    }
+
+    #[test]
+    fn cross_step_engine_matches_serial_and_passes_the_fabric() {
+        let p = fabric_for_workers(16).unwrap();
+        let serial = RampEngine::new(p.clone());
+        let crossed = RampEngine::new(p).with_pipeline(Pipeline::cross(4));
+        let mut r = Xoshiro256::seed_from(31);
+        let inputs: Vec<Vec<f32>> =
+            (0..16).map(|_| (0..64).map(|_| r.next_f32()).collect()).collect();
+        let mut a = inputs.clone();
+        let run_a = serial.execute(MpiOp::AllReduce, &mut a).unwrap();
+        let mut b = inputs;
+        let run_b = crossed.execute(MpiOp::AllReduce, &mut b).unwrap();
+        assert_eq!(a, b, "cross-step engine changed the result");
+        assert!(run_b.report.ok(), "cross-step schedule violated the fabric");
+        assert_eq!(run_a.report.wire_bytes, run_b.report.wire_bytes);
+        // lane plans keep the serial H2H count: chunk sub-rounds share
+        // their base round's H2H, interleaved or not
+        assert_eq!(run_b.schedule.h2h_rounds, run_a.schedule.h2h_rounds);
+        assert!(run_b.plan.steps.iter().all(|s| s.lane_aligned));
     }
 
     #[test]

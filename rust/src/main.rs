@@ -4,16 +4,18 @@
 //! ramp info                         architecture summary (Table 2)
 //! ramp repro <figN|tableN|all>      regenerate a paper table/figure
 //! ramp train [--workers N] [--steps N] [--model tiny] [--lr X]
-//!            [--pipeline K] [--pool-threads T]
+//!            [--pipeline P] [--pool-threads T]
 //!                                    real DDP training through the fabric
-//!                                    (K: 0 = auto chunk pipelining,
-//!                                     1 = off, k = fixed chunk count —
-//!                                     capped at 16; T: 0 = the global
-//!                                     persistent executor pool, 1 =
-//!                                     inline, T = a pool of T lanes)
-//! ramp collective <op> [--nodes N] [--mb M] [--oversub S] [--pipeline K]
+//!                                    (P: 0/auto = auto chunk pipelining,
+//!                                     1/off = off, K = fixed chunk count
+//!                                     capped at 16, cross / cross:K =
+//!                                     cross-step chunk lanes; T: 0 = the
+//!                                     global persistent executor pool,
+//!                                     1 = inline, T = a pool of T lanes)
+//! ramp collective <op> [--nodes N] [--mb M] [--oversub S] [--pipeline P]
 //!                                   completion-time comparison for one op,
-//!                                   with a serial-vs-pipelined readout
+//!                                   with a serial vs intra-step vs
+//!                                   cross-step pipelining readout
 //! ```
 
 use anyhow::{anyhow, bail, Result};
@@ -52,8 +54,8 @@ fn run() -> Result<()> {
             println!(
                 "RAMP — flat nanosecond optical network + MPI operations for DDL\n\n\
                  usage:\n  ramp info\n  ramp repro <fig6|fig7|table3|table4|fig15..fig23|all>\n  \
-                 ramp train [--workers N] [--steps N] [--model tiny] [--lr X] [--momentum X] [--pipeline K] [--pool-threads T]\n  \
-                 ramp collective <op> [--nodes N] [--mb M] [--oversub S] [--pipeline K]\n\n\
+                 ramp train [--workers N] [--steps N] [--model tiny] [--lr X] [--momentum X] [--pipeline off|auto|cross|K] [--pool-threads T]\n  \
+                 ramp collective <op> [--nodes N] [--mb M] [--oversub S] [--pipeline off|auto|cross|K]\n\n\
                  ops: reduce-scatter all-gather all-reduce all-to-all scatter gather reduce broadcast"
             );
             Ok(())
@@ -83,6 +85,9 @@ fn info() -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    // `--pipeline off|auto|cross|cross:K|K`
+    let pipeline =
+        ramp::collectives::arena::Pipeline::from_spec(&args.get_or("pipeline", "1"))?;
     let cfg = TrainConfig {
         model: args.get_or("model", "tiny"),
         n_workers: args.get_usize("workers", 4)?,
@@ -92,7 +97,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         seed: args.get_usize("seed", 42)? as u64,
         artifacts: ramp::config::artifacts_dir(),
         log_every: args.get_usize("log-every", 10)?,
-        pipeline_chunks: args.get_usize("pipeline", 1)?,
+        pipeline_chunks: pipeline.chunks,
+        pipeline_cross: pipeline.cross,
         pool_threads: args.get_usize("pool-threads", 0)?,
     };
     println!(
@@ -175,13 +181,16 @@ fn cmd_collective(args: &Args) -> Result<()> {
         bname,
         b.total() / r.total()
     );
-    let pipeline = ramp::collectives::arena::Pipeline::from_knob(args.get_usize("pipeline", 0)?);
+    let pipeline =
+        ramp::collectives::arena::Pipeline::from_spec(&args.get_or("pipeline", "0"))?;
     let cmp = ramp.pipeline_comparison(op, m, n, pipeline);
     println!(
-        "chunk pipelining: serial {} vs pipelined {} — {:.2}x",
+        "chunk pipelining: serial {} vs intra-step {} ({:.2}x) vs cross-step {} ({:.2}x)",
         fmt_time(cmp.serial.total()),
         fmt_time(cmp.pipelined.total()),
-        cmp.speedup()
+        cmp.speedup(),
+        fmt_time(cmp.crossstep.total()),
+        cmp.cross_speedup()
     );
     Ok(())
 }

@@ -1,0 +1,369 @@
+//! Dependency-aware cross-step lane schedule (the scheduling half of the
+//! cross-step chunk-lane pipeline; the data-plane half lives in
+//! `collectives::ramp_x`).
+//!
+//! A chunk-pipelined plan is base-round-major: the `K` chunk sub-rounds
+//! of step `r` all complete before step `r+1` starts — a full barrier
+//! between algorithmic steps. But when consecutive steps are
+//! **lane-aligned** (`PlanStep::lane_aligned` with equal `n_chunks`, the
+//! fraction-pure chunk geometry the cross-step executors emit), chunk `c`
+//! of step `r+1` reads *only* what chunk `c` of step `r` published — its
+//! own subgroup's regions and the same-fraction peer regions — so the
+//! barrier collapses to per-chunk edges:
+//!
+//! ```text
+//!            chunk 0   chunk 1   chunk 2          wave t runs every task
+//! step r   ──[r,0]────[r,1]────[r,2]──            with step+chunk = t:
+//!               │  ╲      │  ╲     │               [r,1] and [r+1,0] are
+//! step r+1 ──[r+1,0]──[r+1,1]──[r+1,2]──           concurrent — chunk 0
+//!               (edge [r,c] → [r+1,c])             enters step r+1 while
+//!                                                  chunk 1 runs step r
+//! ```
+//!
+//! [`LaneSchedule::from_plan`] derives one task per `(step, chunk)`,
+//! per-chunk dependency edges across lane-aligned boundaries (a full
+//! barrier across non-aligned ones), and the ASAP wave levels. The
+//! executors drive their data movement in this order (verifying each
+//! task's read regions against the arena's `EpochTags` before it
+//! starts); [`super::Transcoder::transcode_lanes`] emits the NIC
+//! instruction stream in the same order, releasing each task at its
+//! dependencies' completion slot instead of at the global round barrier.
+
+use crate::collectives::plan::CollectivePlan;
+use anyhow::{ensure, Result};
+
+/// One lane task: all chunk-`c` sub-rounds of plan step `step`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkTask {
+    /// Index into `plan.steps`.
+    pub step: usize,
+    /// Chunk lane within the step (`0` for unchunked steps).
+    pub chunk: usize,
+}
+
+/// The interleaved cross-step schedule of one plan. See the module docs.
+#[derive(Clone, Debug, Default)]
+pub struct LaneSchedule {
+    /// Tasks in execution order: a linear extension of `deps`, grouped
+    /// wave-major (every task of wave `w` precedes every task of wave
+    /// `w+1`).
+    pub tasks: Vec<ChunkTask>,
+    /// `deps[i]` = indices (into `tasks`) that must complete before
+    /// `tasks[i]` starts — the **data** dependency edges (per-chunk
+    /// across lane-aligned boundaries, full barrier elsewhere).
+    pub deps: Vec<Vec<usize>>,
+    /// Stream-schedule waves: levels over the data edges **plus** the
+    /// intra-step stream edges `(r, c−1) → (r, c)` (a step's chunk
+    /// sub-rounds stream in order on the wire). For a lane-aligned chain
+    /// this is exactly the software-pipeline diagonal — wave `t` holds
+    /// every `(r, c)` with `r + c = t` — so tasks in one wave are
+    /// mutually independent and cross step boundaries.
+    pub waves: Vec<Vec<usize>>,
+}
+
+/// Lane task count of a plan step: `n_chunks` when the step is cleanly
+/// chunked (rounds divisible base-round-major), else one task covering
+/// the whole step.
+fn step_tasks(plan: &CollectivePlan, r: usize) -> usize {
+    let s = &plan.steps[r];
+    let k = s.n_chunks.max(1);
+    if k > 1 && s.rounds.len() % k == 0 {
+        k
+    } else {
+        1
+    }
+}
+
+/// Whether steps `r−1` and `r` of `plan` are lane-aligned: both
+/// fraction-pure with the same chunk count, so per-chunk edges replace
+/// the step barrier.
+pub fn aligned_boundary(plan: &CollectivePlan, r: usize) -> bool {
+    if r == 0 {
+        return false;
+    }
+    let (a, b) = (&plan.steps[r - 1], &plan.steps[r]);
+    a.lane_aligned
+        && b.lane_aligned
+        && step_tasks(plan, r - 1) == step_tasks(plan, r)
+        && step_tasks(plan, r) > 1
+}
+
+impl LaneSchedule {
+    /// Build the dependency-aware lane schedule of `plan`.
+    pub fn from_plan(plan: &CollectivePlan) -> Self {
+        // first index of each step's tasks in the (step, chunk)-major id
+        // space used while wiring dependencies
+        let counts: Vec<usize> = (0..plan.steps.len()).map(|r| step_tasks(plan, r)).collect();
+        let mut base = Vec::with_capacity(counts.len());
+        let mut total = 0;
+        for &c in &counts {
+            base.push(total);
+            total += c;
+        }
+        let mut tasks = Vec::with_capacity(total);
+        for (r, &c) in counts.iter().enumerate() {
+            for chunk in 0..c {
+                tasks.push(ChunkTask { step: r, chunk });
+            }
+        }
+        let mut deps: Vec<Vec<usize>> = vec![Vec::new(); total];
+        for r in 1..counts.len() {
+            if aligned_boundary(plan, r) {
+                // per-chunk edge: (r, c) ← (r−1, c)
+                for c in 0..counts[r] {
+                    deps[base[r] + c].push(base[r - 1] + c);
+                }
+            } else {
+                // barrier: every task of r waits for every task of r−1
+                for c in 0..counts[r] {
+                    deps[base[r] + c].extend(base[r - 1]..base[r - 1] + counts[r - 1]);
+                }
+            }
+        }
+        // stream-schedule levels: data edges plus the intra-step stream
+        // order (chunk c follows chunk c−1 of the same step on the wire)
+        // — for aligned chains this yields the r + c pipeline diagonal
+        let mut level = vec![0usize; total];
+        for (r, &cnt) in counts.iter().enumerate() {
+            for c in 0..cnt {
+                let i = base[r] + c;
+                // deps always point at earlier (step, chunk)-major ids
+                let mut l = deps[i].iter().map(|&d| level[d] + 1).max().unwrap_or(0);
+                if c > 0 {
+                    l = l.max(level[base[r] + c - 1] + 1);
+                }
+                level[i] = l;
+            }
+        }
+        let n_waves = level.iter().copied().max().map_or(0, |m| m + 1);
+        let mut waves: Vec<Vec<usize>> = vec![Vec::new(); n_waves];
+
+        // execution order: wave-major, then by (chunk, step) so the lane
+        // driver publishes lower fractions first within a wave
+        let mut order: Vec<usize> = (0..total).collect();
+        order.sort_by_key(|&i| (level[i], tasks[i].chunk, tasks[i].step));
+        let mut pos = vec![0usize; total];
+        for (new_i, &old_i) in order.iter().enumerate() {
+            pos[old_i] = new_i;
+        }
+        let tasks_ord: Vec<ChunkTask> = order.iter().map(|&i| tasks[i]).collect();
+        let deps_ord: Vec<Vec<usize>> = order
+            .iter()
+            .map(|&i| deps[i].iter().map(|&d| pos[d]).collect())
+            .collect();
+        for &old_i in &order {
+            waves[level[old_i]].push(pos[old_i]);
+        }
+        Self { tasks: tasks_ord, deps: deps_ord, waves }
+    }
+
+    /// Schedule-validity properties (the cross-step safety net):
+    /// * every `(step, chunk)` of the plan appears **exactly once**;
+    /// * every dependency precedes its dependent in execution order;
+    /// * waves partition the tasks and a task's dependencies all lie in
+    ///   strictly earlier waves;
+    /// * across a non-aligned boundary the schedule degenerates to the
+    ///   base-round-major barrier (each task depends on the whole
+    ///   previous step).
+    pub fn validate(&self, plan: &CollectivePlan) -> Result<()> {
+        let expect: usize = (0..plan.steps.len()).map(|r| step_tasks(plan, r)).sum();
+        ensure!(
+            self.tasks.len() == expect,
+            "lane schedule has {} tasks, plan needs {expect}",
+            self.tasks.len()
+        );
+        let mut seen = vec![false; expect];
+        for (i, t) in self.tasks.iter().enumerate() {
+            ensure!(t.step < plan.steps.len(), "task {i} names step {}", t.step);
+            ensure!(
+                t.chunk < step_tasks(plan, t.step),
+                "task {i} names chunk {} of step {}",
+                t.chunk,
+                t.step
+            );
+            let id: usize = (0..t.step).map(|r| step_tasks(plan, r)).sum::<usize>() + t.chunk;
+            ensure!(!seen[id], "(step {}, chunk {}) scheduled twice", t.step, t.chunk);
+            seen[id] = true;
+        }
+        ensure!(seen.iter().all(|&s| s), "lane schedule dropped a (step, chunk)");
+        for (i, ds) in self.deps.iter().enumerate() {
+            for &d in ds {
+                ensure!(d < i, "task {i} depends on later/self task {d}");
+            }
+        }
+        // waves partition and respect dependencies
+        let mut wave_of = vec![usize::MAX; self.tasks.len()];
+        let mut covered = 0;
+        for (w, wave) in self.waves.iter().enumerate() {
+            for &i in wave {
+                ensure!(wave_of[i] == usize::MAX, "task {i} in two waves");
+                wave_of[i] = w;
+                covered += 1;
+            }
+        }
+        ensure!(covered == self.tasks.len(), "waves do not cover all tasks");
+        for (i, ds) in self.deps.iter().enumerate() {
+            for &d in ds {
+                ensure!(
+                    wave_of[d] < wave_of[i],
+                    "task {i} (wave {}) depends on task {d} (wave {})",
+                    wave_of[i],
+                    wave_of[d]
+                );
+            }
+        }
+        // barrier boundaries really are barriers
+        for r in 1..plan.steps.len() {
+            if aligned_boundary(plan, r) {
+                continue;
+            }
+            let prev = step_tasks(plan, r - 1);
+            for (i, t) in self.tasks.iter().enumerate() {
+                if t.step == r {
+                    let from_prev = self.deps[i]
+                        .iter()
+                        .filter(|&&d| self.tasks[d].step == r - 1)
+                        .count();
+                    ensure!(
+                        from_prev == prev,
+                        "non-aligned boundary {r} is not a barrier for task {i}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of barrier-free (per-chunk) boundaries this schedule
+    /// exploits — 0 means it degenerates to base-round-major execution.
+    pub fn aligned_boundaries(&self, plan: &CollectivePlan) -> usize {
+        (1..plan.steps.len()).filter(|&r| aligned_boundary(plan, r)).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::plan::{PlanStep, Round};
+
+    fn chunked_step(k: usize, base_rounds: usize, aligned: bool) -> PlanStep {
+        PlanStep {
+            rounds: vec![Round::default(); k * base_rounds],
+            n_chunks: k,
+            lane_aligned: aligned,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn aligned_steps_get_diagonal_waves() {
+        let mut plan = CollectivePlan::default();
+        for _ in 0..3 {
+            plan.steps.push(chunked_step(4, 1, true));
+        }
+        let s = LaneSchedule::from_plan(&plan);
+        s.validate(&plan).unwrap();
+        assert_eq!(s.tasks.len(), 12);
+        assert_eq!(s.aligned_boundaries(&plan), 2);
+        // diagonal: 3 steps of 4 chunks ⇒ 3 + 4 − 1 waves
+        assert_eq!(s.waves.len(), 6);
+        // wave 2 holds (0,2), (1,1), (2,0) — cross-step concurrency
+        let wave2: Vec<(usize, usize)> =
+            s.waves[2].iter().map(|&i| (s.tasks[i].step, s.tasks[i].chunk)).collect();
+        assert!(wave2.contains(&(2, 0)) && wave2.contains(&(1, 1)) && wave2.contains(&(0, 2)));
+        // per-chunk edges only
+        for (i, t) in s.tasks.iter().enumerate() {
+            if t.step > 0 {
+                assert_eq!(s.deps[i].len(), 1);
+                let d = s.deps[i][0];
+                assert_eq!((s.tasks[d].step, s.tasks[d].chunk), (t.step - 1, t.chunk));
+            }
+        }
+    }
+
+    #[test]
+    fn unaligned_boundary_is_a_barrier() {
+        let mut plan = CollectivePlan::default();
+        plan.steps.push(chunked_step(3, 1, true));
+        plan.steps.push(chunked_step(3, 1, false)); // not fraction-pure
+        plan.steps.push(chunked_step(3, 1, true));
+        let s = LaneSchedule::from_plan(&plan);
+        s.validate(&plan).unwrap();
+        assert_eq!(s.aligned_boundaries(&plan), 0);
+        // barrier schedule: chunks stream within a step, steps never
+        // overlap — 3 · 3 single-task waves, and chunk 0 of step 1 waits
+        // for chunk 2 of step 0 (the inverse of the aligned diagonal)
+        assert_eq!(s.waves.len(), 9);
+        let wave_of = |step: usize, chunk: usize| {
+            s.waves
+                .iter()
+                .position(|w| {
+                    w.iter().any(|&i| s.tasks[i].step == step && s.tasks[i].chunk == chunk)
+                })
+                .unwrap()
+        };
+        assert!(wave_of(1, 0) > wave_of(0, 2), "barrier boundary overlapped");
+    }
+
+    #[test]
+    fn mixed_chunk_counts_fall_back_to_barriers() {
+        let mut plan = CollectivePlan::default();
+        plan.steps.push(chunked_step(4, 1, true));
+        plan.steps.push(chunked_step(2, 1, true)); // different K
+        let s = LaneSchedule::from_plan(&plan);
+        s.validate(&plan).unwrap();
+        assert_eq!(s.aligned_boundaries(&plan), 0);
+        for (i, t) in s.tasks.iter().enumerate() {
+            if t.step == 1 {
+                assert_eq!(s.deps[i].len(), 4, "barrier edge count");
+            }
+        }
+    }
+
+    #[test]
+    fn unchunked_plan_degenerates_to_step_sequence() {
+        let mut plan = CollectivePlan::default();
+        for _ in 0..4 {
+            plan.steps.push(chunked_step(1, 2, false));
+        }
+        let s = LaneSchedule::from_plan(&plan);
+        s.validate(&plan).unwrap();
+        assert_eq!(s.tasks.len(), 4);
+        assert_eq!(s.waves.len(), 4);
+    }
+
+    #[test]
+    fn indivisible_rounds_collapse_to_one_task() {
+        let mut plan = CollectivePlan::default();
+        let mut st = chunked_step(1, 5, false);
+        st.n_chunks = 3; // 5 rounds % 3 != 0 — defensive single task
+        plan.steps.push(st);
+        plan.steps.push(chunked_step(3, 1, true));
+        let s = LaneSchedule::from_plan(&plan);
+        s.validate(&plan).unwrap();
+        assert_eq!(s.tasks.len(), 1 + 3);
+        assert_eq!(s.aligned_boundaries(&plan), 0);
+    }
+
+    #[test]
+    fn validate_rejects_corrupted_schedules() {
+        let mut plan = CollectivePlan::default();
+        plan.steps.push(chunked_step(2, 1, true));
+        plan.steps.push(chunked_step(2, 1, true));
+        let good = LaneSchedule::from_plan(&plan);
+        good.validate(&plan).unwrap();
+        // duplicated task
+        let mut bad = good.clone();
+        bad.tasks[0] = bad.tasks[1];
+        assert!(bad.validate(&plan).is_err());
+        // dependency pointing forward
+        let mut bad = good.clone();
+        let last = bad.tasks.len() - 1;
+        bad.deps[0] = vec![last];
+        assert!(bad.validate(&plan).is_err());
+        // wave membership inconsistent with dependencies
+        let mut bad = good.clone();
+        bad.waves = vec![bad.waves.concat()];
+        assert!(bad.validate(&plan).is_err());
+    }
+}

@@ -124,12 +124,16 @@ fn expected_wire(p: &RampParams, op: MpiOp, m: u64) -> u64 {
 #[test]
 fn executed_plans_conserve_bytes() {
     // the closed forms must tie to the executed wire bytes with chunk
-    // pipelining off AND on: chunk sub-rounds partition each base round's
-    // payload exactly, so the totals are K-invariant
+    // pipelining off AND on — intra-step and cross-step: chunk sub-rounds
+    // partition each base round's payload exactly (contiguously for the
+    // base-round-major path, fraction-strided for the lane path), so the
+    // totals are K- and schedule-invariant
     let pipelines = [
         ramp::collectives::arena::Pipeline::off(),
         ramp::collectives::arena::Pipeline::fixed(3),
         ramp::collectives::arena::Pipeline::auto(),
+        ramp::collectives::arena::Pipeline::cross(3),
+        ramp::collectives::arena::Pipeline::cross(0),
     ];
     for p in fabrics() {
         let n = p.n_nodes();

@@ -63,7 +63,8 @@ fn pool_modes() -> Vec<(&'static str, PoolSel)> {
 }
 
 /// Chunk-count axis of the grid: off, small fixed counts (forced even on
-/// tiny messages), the hard cap, and auto selection.
+/// tiny messages), the hard cap, auto selection, and the cross-step
+/// chunk-lane modes (auto and forced chunk counts).
 fn pipelines() -> Vec<Pipeline> {
     vec![
         Pipeline::off(),
@@ -71,6 +72,8 @@ fn pipelines() -> Vec<Pipeline> {
         Pipeline::fixed(3),
         Pipeline::fixed(16),
         Pipeline::auto(),
+        Pipeline::cross(0),
+        Pipeline::cross(3),
     ]
 }
 
@@ -278,7 +281,8 @@ fn pipelined_plans_execute_clean_and_conserve_wire_bytes() {
             };
             let mut serial_bufs = random_inputs(n, elems, 99);
             let serial = RampX::new(&p).run(op, &mut serial_bufs).unwrap();
-            for pl in [Pipeline::fixed(2), Pipeline::fixed(5), Pipeline::auto()] {
+            for pl in [Pipeline::fixed(2), Pipeline::fixed(5), Pipeline::auto(), Pipeline::cross(3)]
+            {
                 let mut bufs = random_inputs(n, elems, 99);
                 let plan = RampX::new(&p).with_pipeline(pl).run(op, &mut bufs).unwrap();
                 assert_eq!(
@@ -381,6 +385,209 @@ fn job_step_growth_stays_within_padding_bound() {
             }
             let prod: usize = job_step_sizes(&p, n).iter().product();
             assert!(prod >= n.min(full) && prod <= 4 * n, "prod {prod} for n={n} on {p:?}");
+        }
+    }
+}
+
+// ---- randomized differential fuzz ---------------------------------------
+
+/// Tiny seeded LCG (Knuth MMIX constants) for drawing fuzz *cases*.
+/// Deliberately separate from `ramp::rng::Xoshiro256` (which generates
+/// the input *payloads*): the case-drawing stream must stay
+/// self-contained and frozen so a printed case seed replays the same
+/// grid point even if the crate RNG ever changes.
+struct Lcg(u64);
+
+impl Lcg {
+    fn new(seed: u64) -> Self {
+        // avoid the degenerate all-zero stream start
+        Self(seed ^ 0x9e37_79b9_7f4a_7c15)
+    }
+
+    fn next(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0
+    }
+
+    /// Uniform-ish draw in `[0, n)` from the high bits.
+    fn below(&mut self, n: usize) -> usize {
+        ((self.next() >> 33) % n as u64) as usize
+    }
+
+    fn pick<'v, T>(&mut self, v: &'v [T]) -> &'v T {
+        &v[self.below(v.len())]
+    }
+}
+
+/// One randomly drawn differential case: (fabric, op incl. root
+/// placement, payload size incl. <16 KiB and padding edges, chunk mode
+/// incl. cross-step, execution substrate), checked **bitwise** against
+/// the scoped serial anchor — and the anchor itself against the
+/// reference oracle. Panics with the case seed for replay.
+fn run_fuzz_case(seed: u64) {
+    let mut rng = Lcg::new(seed);
+    let fabric_set = fabrics();
+    let p = rng.pick(&fabric_set).clone();
+    let n = p.n_nodes();
+    let oi = rng.below(op_instances(n).len());
+    let op = op_instances(n)[oi];
+    let sizes = match op {
+        // contributions: tiny, non-pow2, and a 16 KiB-edge straddler
+        MpiOp::AllGather | MpiOp::Gather { .. } => vec![1, 2, 3, 8, 13, 64, 257],
+        MpiOp::Broadcast { .. } => vec![1, 2, 64, 257, 4099],
+        MpiOp::Barrier => vec![1],
+        // N-divisible: minimum, the padding edge above it, non-pow2
+        // multiples, and a multi-strip payload (still < 16 KiB/chunk so
+        // the auto floor keeps small messages whole)
+        _ => vec![n, padded_len(&p, n + 1), 2 * n, 3 * n, 7 * n, 16 * n],
+    };
+    let elems = *rng.pick(&sizes);
+    let modes = [
+        Pipeline::off(),
+        Pipeline::fixed(2),
+        Pipeline::fixed(3),
+        Pipeline::fixed(5),
+        Pipeline::fixed(16),
+        Pipeline::auto(),
+        Pipeline::cross(0),
+        Pipeline::cross(2),
+        Pipeline::cross(3),
+        Pipeline::cross(16),
+    ];
+    let pl = *rng.pick(&modes);
+    let pooled = rng.below(2) == 1;
+    let inputs = random_inputs(n, elems, seed ^ 0xf00d);
+
+    let mut anchor = inputs.clone();
+    RampX::new(&p).with_pool(PoolSel::Off).run(op, &mut anchor).unwrap();
+    if let Some(expect) = oracle(op, &inputs) {
+        assert_close(
+            &anchor,
+            &expect,
+            is_movement_only(op),
+            &format!("fuzz seed {seed}: {} anchor vs oracle m={elems} on {p:?}", op.name()),
+        );
+    }
+    let substrate: PoolSel =
+        if pooled { PoolSel::Forced(shared_pool()) } else { PoolSel::Off };
+    let mut got = inputs.clone();
+    RampX::new(&p).with_pipeline(pl).with_pool(substrate).run(op, &mut got).unwrap();
+    assert_eq!(
+        got,
+        anchor,
+        "fuzz seed {seed}: {} diverged bitwise under {pl:?} ({}) m={elems} on {p:?}",
+        op.name(),
+        if pooled { "pooled" } else { "scoped" }
+    );
+}
+
+/// Drive `cases` fuzz cases from a fixed master seed. On the first
+/// failure the failing case seed is written to
+/// `target/fuzz-failing-seed.txt` (CI uploads it as an artifact) and the
+/// panic message names it; replay exactly that case with
+/// `RAMP_FUZZ_REPLAY=<seed> cargo test -q fuzz_differential`.
+fn run_fuzz(cases: usize) {
+    if let Some(seed) = ramp::config::fuzz_replay_seed() {
+        run_fuzz_case(seed);
+        return;
+    }
+    // drop any stale seed from a previous run: CI caches target/ and
+    // uploads the file on *any* job failure, so a leftover seed would
+    // point at a case this run never failed
+    let _ = std::fs::remove_file("target/fuzz-failing-seed.txt");
+    let mut master = Lcg::new(0x5eed_2026);
+    for i in 0..cases {
+        let seed = master.next();
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_fuzz_case(seed);
+        }));
+        if let Err(payload) = outcome {
+            let _ = std::fs::create_dir_all("target");
+            let _ = std::fs::write(
+                "target/fuzz-failing-seed.txt",
+                format!("case {i} of {cases}: seed {seed}\n"),
+            );
+            eprintln!(
+                "fuzz case {i} FAILED — replay with: RAMP_FUZZ_REPLAY={seed} \
+                 cargo test -q fuzz_differential"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+#[test]
+fn fuzz_differential_matrix() {
+    // tier-1 profile: 200 cases (override with RAMP_FUZZ_CASES)
+    run_fuzz(ramp::config::fuzz_cases_override().unwrap_or(200));
+}
+
+#[test]
+#[ignore = "long fuzz profile — run via `cargo test --release -- --ignored` (nightly CI job)"]
+fn fuzz_differential_matrix_long() {
+    // nightly-style profile: 2000 cases (override with RAMP_FUZZ_CASES)
+    run_fuzz(ramp::config::fuzz_cases_override().unwrap_or(2000));
+}
+
+// ---- cross-step lane-schedule validity ----------------------------------
+
+#[test]
+fn cross_step_lane_schedules_are_valid_and_conserve_wire_bytes() {
+    // satellite properties of the dependency graph: every (chunk, step)
+    // appears exactly once, dependencies precede their dependents, waves
+    // respect dependencies (all checked by validate()); wire totals stay
+    // chunk- and schedule-invariant against the serial plan
+    use ramp::transcoder::lanes::LaneSchedule;
+    use ramp::transcoder::transcode_plan_lanes;
+    for p in fabrics() {
+        let n = p.n_nodes();
+        let fabric = OpticalFabric::new(p.clone());
+        for op in [MpiOp::ReduceScatter, MpiOp::AllGather, MpiOp::AllReduce] {
+            let elems = match op {
+                MpiOp::AllGather => 6,
+                _ => 2 * n,
+            };
+            let mut serial_bufs = random_inputs(n, elems, 77);
+            let serial = RampX::new(&p).run(op, &mut serial_bufs).unwrap();
+            for pl in [Pipeline::cross(2), Pipeline::cross(3), Pipeline::cross(0)] {
+                let mut bufs = random_inputs(n, elems, 77);
+                let plan = RampX::new(&p).with_pipeline(pl).run(op, &mut bufs).unwrap();
+                let sched = LaneSchedule::from_plan(&plan);
+                sched.validate(&plan).unwrap();
+                assert_eq!(
+                    plan.total_wire_bytes(),
+                    serial.total_wire_bytes(),
+                    "{} wire bytes drift under {pl:?} on {p:?}",
+                    op.name()
+                );
+                assert_eq!(plan.n_base_rounds(), serial.n_base_rounds(), "{}", op.name());
+                // chunked cross plans must actually exploit every
+                // boundary (no hidden barriers)
+                let k = plan.steps[0].n_chunks;
+                assert!(plan.steps.iter().all(|s| s.n_chunks == k && s.lane_aligned));
+                if k > 1 {
+                    assert_eq!(
+                        sched.aligned_boundaries(&plan),
+                        plan.steps.len() - 1,
+                        "{} lane schedule degenerated under {pl:?} on {p:?}",
+                        op.name()
+                    );
+                }
+                // the interleaved NIC stream executes violation-free and
+                // carries exactly the plan's bytes
+                let wire = transcode_plan_lanes(&p, &plan).unwrap();
+                let report = fabric.execute(&wire);
+                assert!(
+                    report.ok(),
+                    "{} lane schedule violates fabric rules under {pl:?} on {p:?}: {:?}",
+                    op.name(),
+                    report.violations
+                );
+                assert_eq!(report.wire_bytes, plan.total_wire_bytes(), "{}", op.name());
+            }
         }
     }
 }

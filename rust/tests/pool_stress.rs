@@ -1,0 +1,136 @@
+//! Pool stress net: whole collectives dispatched concurrently from 2–4
+//! threads sharing one persistent `WorkerPool` — the lifetime shape of a
+//! multi-job coordinator. Asserts:
+//!
+//! * **no deadlock** — the test completes (every fan-out call owns a
+//!   private latch; worker queues interleave jobs from all callers);
+//! * **zero steady-state spawns** — the thread count never moves after
+//!   pool construction, no matter how many callers race;
+//! * **bitwise correctness under interleaving** — every concurrent run
+//!   matches its single-threaded scoped anchor exactly;
+//! * **sticky-map consistency** — every sticky assignment names a valid
+//!   lane, the map never grows beyond the distinct keys dispatched, and
+//!   assignments stay stable once made (a second barrage re-hits them).
+
+use ramp::collectives::arena::Pipeline;
+use ramp::collectives::pool::{PoolSel, WorkerPool};
+use ramp::collectives::ramp_x::RampX;
+use ramp::collectives::MpiOp;
+use ramp::rng::Xoshiro256;
+use ramp::topology::ramp::RampParams;
+use std::sync::Arc;
+
+fn random_inputs(n: usize, elems: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut r = Xoshiro256::seed_from(seed);
+    (0..n)
+        .map(|_| (0..elems).map(|_| (r.next_below(2000) as f32) * 0.5 - 500.0).collect())
+        .collect()
+}
+
+fn op_for(i: usize) -> MpiOp {
+    match i % 4 {
+        0 => MpiOp::AllReduce,
+        1 => MpiOp::ReduceScatter,
+        2 => MpiOp::AllToAll,
+        _ => MpiOp::AllGather,
+    }
+}
+
+/// One thread's barrage: `iters` collectives on the shared pool, each
+/// checked bitwise against a fresh scoped (pool-less) anchor.
+fn barrage(pool: &Arc<WorkerPool>, p: &RampParams, thread: usize, iters: usize) {
+    let n = p.n_nodes();
+    let pipeline = match thread % 3 {
+        0 => Pipeline::off(),
+        1 => Pipeline::fixed(3),
+        _ => Pipeline::cross(3),
+    };
+    let x = RampX::new(p).with_pool(PoolSel::Forced(pool.clone())).with_pipeline(pipeline);
+    for iter in 0..iters {
+        let op = op_for(thread + iter);
+        let elems = match op {
+            MpiOp::AllGather => 7,
+            _ => 2 * n,
+        };
+        let inputs = random_inputs(n, elems, 900 + (thread * 31 + iter) as u64);
+        let mut got = inputs.clone();
+        x.run(op, &mut got).unwrap();
+        let mut want = inputs.clone();
+        RampX::new(p).with_pool(PoolSel::Off).run(op, &mut want).unwrap();
+        assert_eq!(got, want, "thread {thread} iteration {iter} ({}) diverged", op.name());
+    }
+}
+
+#[test]
+fn concurrent_collectives_share_one_pool_without_deadlock_or_spawns() {
+    let pool = Arc::new(WorkerPool::new(3));
+    let p = RampParams::fig8_example();
+    let n = p.n_nodes();
+    assert_eq!(pool.spawn_count(), 3, "construction is the only spawn");
+
+    for n_threads in [2usize, 4] {
+        std::thread::scope(|s| {
+            for t in 0..n_threads {
+                let pool = &pool;
+                let p = &p;
+                s.spawn(move || barrage(pool, p, t, 3));
+            }
+        });
+    }
+
+    assert_eq!(pool.spawn_count(), 3, "steady state must never spawn");
+    assert!(pool.fan_outs() > 0, "the pooled path must actually dispatch");
+    assert!(pool.sticky_hits() > 0, "repeat subgroups must re-hit their lanes");
+    // sticky keys are subgroup first-ranks, so the map is bounded by the
+    // rank space no matter how many threads raced
+    assert!(pool.sticky_size() <= n, "sticky map leaked keys: {}", pool.sticky_size());
+    assert!(pool.sticky_lanes_valid(), "sticky assignment names an invalid lane");
+
+    // stability: once assigned, a key's lane survives another barrage
+    let lanes_before: Vec<Option<usize>> = (0..n).map(|k| pool.sticky_lane(k)).collect();
+    let hits_before = pool.sticky_hits();
+    std::thread::scope(|s| {
+        for t in 0..3 {
+            let pool = &pool;
+            let p = &p;
+            s.spawn(move || barrage(pool, p, t, 2));
+        }
+    });
+    let lanes_after: Vec<Option<usize>> = (0..n).map(|k| pool.sticky_lane(k)).collect();
+    for (k, (before, after)) in lanes_before.iter().zip(&lanes_after).enumerate() {
+        if before.is_some() {
+            assert_eq!(before, after, "sticky lane of key {k} drifted under interleaving");
+        }
+    }
+    assert!(pool.sticky_hits() > hits_before, "second barrage must hit the sticky map");
+    assert_eq!(pool.spawn_count(), 3);
+}
+
+#[test]
+fn concurrent_callers_on_the_global_pool_stay_correct() {
+    // the production default: PoolSel::Global honors the inline
+    // threshold, so drive payloads big enough to actually fan out
+    let p = RampParams::new(2, 2, 4, 1);
+    let n = p.n_nodes();
+    let elems = 8192; // n·elems per step ≫ PAR_THRESHOLD_ELEMS
+    let spawns_before = WorkerPool::global().spawn_count();
+    std::thread::scope(|s| {
+        for t in 0..3usize {
+            let p = &p;
+            s.spawn(move || {
+                let inputs = random_inputs(n, elems, 40 + t as u64);
+                let mut got = inputs.clone();
+                RampX::new(p).run(MpiOp::AllReduce, &mut got).unwrap();
+                let mut want = inputs.clone();
+                RampX::new(p).with_pool(PoolSel::Off).run(MpiOp::AllReduce, &mut want).unwrap();
+                assert_eq!(got, want, "thread {t} diverged on the global pool");
+            });
+        }
+    });
+    assert_eq!(
+        WorkerPool::global().spawn_count(),
+        spawns_before,
+        "global pool spawned threads under concurrent collectives"
+    );
+    assert!(WorkerPool::global().sticky_lanes_valid());
+}
