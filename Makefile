@@ -10,7 +10,7 @@
 BENCHES := collectives_bench ddl_bench estimator_bench fabric_bench \
            runtime_bench transcoder_bench
 
-.PHONY: tier1 bench-smoke bench-json fuzz artifacts
+.PHONY: tier1 bench-smoke bench-json bench-check fuzz artifacts
 
 tier1:
 	cargo build --release && cargo test -q
@@ -31,6 +31,13 @@ bench-smoke:
 
 bench-json:
 	cargo bench --bench collectives_bench -- --json BENCH_collectives.json
+
+# regression gate: record a fresh run next to the committed baseline and
+# fail on >10% slowdown in any `[arena pooled cross-step]` row. Skips
+# cleanly while the committed file is still the placeholder.
+bench-check:
+	cargo bench --bench collectives_bench -- --json BENCH_collectives.ci.json
+	python3 scripts/bench_regression.py BENCH_collectives.json BENCH_collectives.ci.json
 
 artifacts:
 	python python/compile/aot.py

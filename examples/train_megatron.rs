@@ -42,6 +42,9 @@ fn main() -> anyhow::Result<()> {
         pipeline_chunks: pipeline.chunks,
         pipeline_cross: pipeline.cross,
         pool_threads: args.get_usize("pool-threads", 0)?,
+        lane_driver: ramp::collectives::lane_exec::LaneDriver::from_spec(
+            &args.get_or("lane-driver", "event"),
+        )?,
     };
 
     println!(

@@ -12,6 +12,7 @@
 
 use ramp::benchutil::{bench, JsonReporter};
 use ramp::collectives::arena::{BufferArena, Pipeline};
+use ramp::collectives::lane_exec::LaneDriver;
 use ramp::collectives::pool::{PoolSel, WorkerPool};
 use ramp::collectives::ramp_x::RampX;
 use ramp::collectives::MpiOp;
@@ -163,14 +164,30 @@ fn large_message_case(
     let piped_gbs = piped.throughput(bytes) / 1e9;
     json.push(&piped, Some(piped_gbs));
 
-    // this PR: cross-step chunk lanes — the dependency-aware lane
-    // schedule interleaves steps instead of barriering between them
+    // PR 4 baseline: cross-step chunk lanes on the in-order task-by-task
+    // driver (one pool fill/drain per lane task)
+    let xi = RampX::new(p)
+        .with_pipeline(Pipeline::cross(0))
+        .with_lane_driver(LaneDriver::InOrder);
+    let inorder = bench(
+        &format!("all-reduce {label} x {mib} MiB/node [arena pooled cross-step in-order]"),
+        2000,
+        || xi.run_arena(MpiOp::AllReduce, &mut arena).unwrap(),
+    );
+    json.push(&inorder, Some(inorder.throughput(bytes) / 1e9));
+
+    // this PR: event-driven cross-step lanes — the whole lane schedule
+    // is ONE pool fan-out, tasks firing as their atomic epochs publish
+    // (the per-task fill/drain above amortizes once per schedule)
     let xc = RampX::new(p).with_pipeline(Pipeline::cross(0));
+    let blocked_before = WorkerPool::global().lane_blocked_ns();
     let crossed = bench(
         &format!("all-reduce {label} x {mib} MiB/node [arena pooled cross-step]"),
         2000,
         || xc.run_arena(MpiOp::AllReduce, &mut arena).unwrap(),
     );
+    let blocked_ns =
+        (WorkerPool::global().lane_blocked_ns() - blocked_before) / crossed.iters.max(1) as u64;
     let crossed_gbs = crossed.throughput(bytes) / 1e9;
     json.push(&crossed, Some(crossed_gbs));
 
@@ -178,11 +195,40 @@ fn large_message_case(
         "    -> {label}: {before_gbs:.2} GB/s pre-refactor, {spawned_gbs:.2} GB/s \
          spawn-per-step, {pooled_gbs:.2} GB/s pooled, {piped_gbs:.2} GB/s pooled+pipelined, \
          {crossed_gbs:.2} GB/s pooled cross-step ({:.2}x pool vs spawn, {:.2}x vs \
-         pre-refactor; {steady_spawns} OS threads spawned during the pooled column)",
+         pre-refactor, {:.2}x event vs in-order lanes; {steady_spawns} OS threads spawned \
+         during the pooled column; ~{blocked_ns} ns/iter parked on epochs)",
         pooled_gbs / spawned_gbs,
         piped_gbs / before_gbs,
+        inorder.mean_s / crossed.mean_s,
     );
     (before_gbs, spawned_gbs, pooled_gbs, piped_gbs, crossed_gbs)
+}
+
+/// The nine-op `[arena pooled cross-step]` sweep: every RAMP-x op on the
+/// event-driven lane path at a moderate payload, so the bench-regression
+/// gate covers the whole suite (not just all-reduce).
+fn nine_op_cross_step(json: &mut JsonReporter, p: &RampParams) {
+    let n = p.n_nodes();
+    for op in MpiOp::all() {
+        let elems = match op {
+            MpiOp::AllGather | MpiOp::Gather { .. } => 4096,
+            MpiOp::Barrier => 1,
+            _ => 1024 * n,
+        };
+        let inputs = inputs(n, elems);
+        let mut arena = ramp::collectives::arena::BufferArena::for_op(p, op, &inputs).unwrap();
+        let x = RampX::new(p).with_pipeline(Pipeline::cross(0));
+        let bytes = (n * elems * 4) as f64;
+        let r = bench(
+            &format!("ramp-x {} ({n} nodes) [arena pooled cross-step]", op.name()),
+            400,
+            || {
+                arena.load(&inputs).unwrap();
+                x.run_arena(op, &mut arena).unwrap()
+            },
+        );
+        json.push(&r, Some(r.throughput(bytes) / 1e9));
+    }
 }
 
 fn main() {
@@ -246,6 +292,9 @@ fn main() {
         pool_speedups.iter().map(|s| format!("{s:.2}x")).collect::<Vec<_>>().join(", ")
     );
 
+    println!("== nine-op cross-step sweep (event-driven lane schedules) ==");
+    nine_op_cross_step(&mut json, &p);
+
     println!(
         "== modeled completion: serial vs intra-step vs cross-step chunk lanes \
          (overlap of reduce with wire) =="
@@ -295,11 +344,26 @@ fn main() {
     }
     println!(
         "measured reduce-kernel bandwidth: {:.2} GB/s (SIMD width {} lanes); \
-         global pool: {} worker threads, {} total fan-outs, 0 spawns after warm-up",
+         global pool: {} worker threads, {} total fan-outs, 0 spawns after warm-up, \
+         {} ms total parked on lane epochs",
         ramp::collectives::kernels::measured_reduce_bandwidth() / 1e9,
         ramp::collectives::kernels::simd_width(),
         WorkerPool::global().n_workers(),
-        WorkerPool::global().fan_outs()
+        WorkerPool::global().fan_outs(),
+        WorkerPool::global().lane_blocked_ns() / 1_000_000
+    );
+    // blocked-time counters as a standalone artifact (uploaded by CI
+    // next to BENCH_collectives.json)
+    let _ = std::fs::create_dir_all("target");
+    let _ = std::fs::write(
+        "target/bench-lane-blocked.json",
+        format!(
+            "{{\"lane_blocked_ns\": {}, \"fan_outs\": {}, \"spawns\": {}, \"workers\": {}}}\n",
+            WorkerPool::global().lane_blocked_ns(),
+            WorkerPool::global().fan_outs(),
+            WorkerPool::global().spawn_count(),
+            WorkerPool::global().n_workers()
+        ),
     );
 
     json.write().expect("writing bench JSON");

@@ -30,5 +30,14 @@ fn main() {
             "    -> {:.2} M slot-transmissions/s verified ({slots} per schedule)",
             res.throughput(slots as f64) / 1e6
         );
+        // the occupancy-scratch delta: a fresh fabric per execution pays
+        // the four interval-list allocations the reused fabric amortizes
+        let cold = bench(&format!("fabric execute {label} [cold scratch]"), 400, || {
+            OpticalFabric::new(p.clone()).execute(&sched)
+        });
+        println!(
+            "    -> scratch reuse: {:.2}x vs per-call allocation",
+            cold.mean_s / res.mean_s
+        );
     }
 }

@@ -60,6 +60,21 @@ impl ArenaRegion {
     }
 }
 
+/// The `f`-th of exactly `k` balanced `(lo, hi)` parts of `[0, len)`,
+/// allowing empty parts when `len < k`. For `len ≥ k` this coincides with
+/// `chunk_bounds(len, k)[f]` (earlier parts take the remainder) — the
+/// per-move fraction rule of the metadata-routed cross-step executors,
+/// where holdings of different lengths must all partition under one lane
+/// count `k`.
+pub fn frac_bounds(len: usize, k: usize, f: usize) -> (usize, usize) {
+    let k = k.max(1);
+    debug_assert!(f < k);
+    let base = len / k;
+    let rem = len % k;
+    let lo = f * base + f.min(rem);
+    (lo, lo + base + usize::from(f < rem))
+}
+
 /// Partition `[0, len)` into (at most) `k` non-empty `(lo, hi)` ranges
 /// covering it exactly, sizes differing by at most one (earlier chunks
 /// take the remainder). `len == 0` yields no ranges.
@@ -145,8 +160,25 @@ impl Pipeline {
 
     /// Cross-step chunk lanes with the given chunk knob (`0` = auto,
     /// `k` = fixed — same interpretation as [`Self::from_knob`]).
+    /// Degenerate `k = 1` is clamped via [`Self::normalized`].
     pub fn cross(k: usize) -> Self {
-        Self { cross: true, ..Self::from_knob(k) }
+        Self { cross: true, ..Self::from_knob(k) }.normalized()
+    }
+
+    /// Clamp degenerate cross-step requests: `cross` with a fixed chunk
+    /// count of 1 would build a one-chunk lane schedule that cannot cross
+    /// any step boundary (a silent no-op). Clamp it to the smallest chunk
+    /// count that can (2). Every entry point — the CLI spec parser,
+    /// [`Self::cross`], `RampX::with_pipeline` / `RampEngine::with_pipeline`
+    /// and `TrainConfig::pipeline` — routes through this, so `cross:1`
+    /// behaves identically everywhere (regression-tested per entry
+    /// point). Auto selection (`chunks == 0`) is untouched: its K = 1 on
+    /// small payloads is the profitability floor, not a user request.
+    pub fn normalized(mut self) -> Self {
+        if self.cross && self.chunks == 1 {
+            self.chunks = 2;
+        }
+        self
     }
 
     /// The same chunk policy with cross-step lanes stripped — the
@@ -375,6 +407,41 @@ impl BufferArena {
         self.front_is_lower = !self.front_is_lower;
         self.lens.fill(len);
     }
+
+    /// Raw slab coordinates for the cross-step lane drivers
+    /// (`collectives::lane_exec::SlabView`): the slab base pointer, the
+    /// half stride, the per-rank region stride and the current front
+    /// orientation.
+    ///
+    /// Taking `&mut self` guarantees no safe reference into the slab
+    /// coexists with the raw view; the caller is responsible for keeping
+    /// all concurrent accesses through the pointer disjoint (the lane
+    /// drivers get this from fraction purity + the [`EpochTags`]
+    /// protocol) and for republishing lengths/orientation via
+    /// [`Self::set_front`] when done.
+    pub fn slab_parts(&mut self) -> SlabParts {
+        SlabParts {
+            ptr: self.slab.as_mut_ptr(),
+            half: self.n * self.region_cap,
+            cap: self.region_cap,
+            n: self.n,
+            front_is_lower: self.front_is_lower,
+        }
+    }
+}
+
+/// Raw slab coordinates handed to the lane drivers — see
+/// [`BufferArena::slab_parts`].
+pub struct SlabParts {
+    pub ptr: *mut f32,
+    /// Elements per half (`n · region_cap`).
+    pub half: usize,
+    /// Per-rank region stride in elements.
+    pub cap: usize,
+    /// Rank count.
+    pub n: usize,
+    /// Whether the front (step-0 read) half is the lower half.
+    pub front_is_lower: bool,
 }
 
 /// Region stride (elements per rank per half) needed to run `op` on `p`
@@ -399,31 +466,48 @@ pub fn arena_capacity(p: &RampParams, op: MpiOp, input_elems: usize) -> usize {
     (phase_bytes.div_ceil(4) as usize).max(input_elems).max(1)
 }
 
-/// Per-(rank, chunk) publication epochs for cross-step chunk lanes.
+/// Per-(rank, chunk) publication epochs for cross-step chunk lanes —
+/// **atomic** counters, so whole lane schedules can run as one concurrent
+/// pool fan-out with tasks firing the instant their dependencies publish
+/// (the event-driven driver in `collectives::lane_exec`).
 ///
-/// A lane task `(step r, chunk c)` may only start once every region it
-/// reads carries epoch `r` — i.e. chunk `c` of every rank it touches has
-/// been published by step `r−1` (the initial load publishes epoch 0).
-/// Because the cross-step chunk geometry is *fraction-pure* (a task only
-/// ever reads and writes slab positions whose low coordinate falls in
-/// its own fraction — see `collectives/README.md`), this single check
-/// covers the read-after-write, write-after-read and write-after-write
-/// hazards of running steps `r` and `r+1` concurrently on the
-/// double-buffered slab. The lane driver verifies before dispatching
-/// each task and publishes after it completes; a violation is a schedule
-/// bug, surfaced as an error instead of silent corruption.
-#[derive(Clone, Debug)]
+/// A lane work item of step `r` may only start once every rank whose
+/// chunk-`c` data it reads *or writes* carries epoch `r` — i.e. every
+/// step-`r−1` access to those regions has completed (the initial load
+/// publishes epoch 0). Because the cross-step chunk geometry is
+/// *fraction-pure* (an item only ever touches slab positions whose low
+/// coordinate falls in its own fraction — see `collectives/README.md`),
+/// this single check covers the read-after-write, write-after-read and
+/// write-after-write hazards of running steps concurrently on the
+/// double-buffered slab.
+///
+/// Memory ordering: publishers store with `Release` after their plain
+/// writes into the slab; waiters load with `Acquire` before their plain
+/// reads, so a gating load that observes epoch `r` happens-after every
+/// write the step-`r−1` items made to the gated regions. Concurrent
+/// items' plain accesses never overlap (disjoint fractions / disjoint
+/// write sets), so release/acquire on these counters is the only
+/// synchronization the slab needs. The in-order driver uses the same
+/// tags sequentially and keeps PR-4's exact-epoch verification
+/// (`require`) before every task — a violation is a schedule bug,
+/// surfaced as an error instead of silent corruption.
+#[derive(Debug)]
 pub struct EpochTags {
     n: usize,
     k: usize,
-    tags: Vec<u32>,
+    tags: Vec<std::sync::atomic::AtomicU32>,
 }
 
 impl EpochTags {
     /// Tags for `n` ranks × `k` chunk lanes, all at epoch 0 (the freshly
     /// loaded arena front).
     pub fn new(n: usize, k: usize) -> Self {
-        Self { n, k, tags: vec![0; n * k.max(1)] }
+        let k = k.max(1);
+        Self {
+            n,
+            k,
+            tags: (0..n * k).map(|_| std::sync::atomic::AtomicU32::new(0)).collect(),
+        }
     }
 
     pub fn n_chunks(&self) -> usize {
@@ -434,13 +518,17 @@ impl EpochTags {
         self.n
     }
 
-    /// Current epoch of `(rank, chunk)`.
+    /// Current epoch of `(rank, chunk)` (`Acquire`: a reader that
+    /// observes epoch `e` also observes every slab write published with
+    /// it).
     pub fn get(&self, rank: usize, chunk: usize) -> u32 {
-        self.tags[rank * self.k + chunk]
+        self.tags[rank * self.k + chunk].load(std::sync::atomic::Ordering::Acquire)
     }
 
     /// Verify every rank in `ranks` has published `chunk` at exactly
-    /// `epoch` — the read-region precondition of a lane task.
+    /// `epoch` — the read-region precondition of a lane task on the
+    /// in-order driver (the event-driven driver *waits* instead, via
+    /// `lane_exec`).
     pub fn require(
         &self,
         ranks: impl IntoIterator<Item = usize>,
@@ -458,18 +546,18 @@ impl EpochTags {
         Ok(())
     }
 
-    /// Publish `chunk` of every rank in `ranks` at `epoch` (called after
-    /// the lane task's writes complete).
-    pub fn publish(&mut self, ranks: impl IntoIterator<Item = usize>, chunk: usize, epoch: u32) {
+    /// Publish `chunk` of every rank in `ranks` at `epoch` (`Release`;
+    /// called after the lane item's slab writes complete).
+    pub fn publish(&self, ranks: impl IntoIterator<Item = usize>, chunk: usize, epoch: u32) {
         for q in ranks {
-            self.tags[q * self.k + chunk] = epoch;
+            self.tags[q * self.k + chunk].store(epoch, std::sync::atomic::Ordering::Release);
         }
     }
 
     /// True when every tag sits at `epoch` — the post-condition of a
     /// completed lane schedule (every task ran exactly once).
     pub fn all_at(&self, epoch: u32) -> bool {
-        self.tags.iter().all(|&t| t == epoch)
+        self.tags.iter().all(|t| t.load(std::sync::atomic::Ordering::Acquire) == epoch)
     }
 }
 
@@ -735,6 +823,66 @@ mod tests {
     }
 
     #[test]
+    fn frac_bounds_match_chunk_bounds_and_allow_empty() {
+        for len in [0usize, 1, 2, 5, 7, 54, 1000] {
+            for k in [1usize, 2, 3, 5, 16] {
+                let parts: Vec<(usize, usize)> =
+                    (0..k).map(|f| frac_bounds(len, k, f)).collect();
+                // exactly covering, ordered, each part within one of size
+                assert_eq!(parts[0].0, 0);
+                assert_eq!(parts.last().unwrap().1, len, "len={len} k={k}");
+                for w in parts.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "gap at len={len} k={k}");
+                }
+                assert_eq!(parts.iter().map(|&(lo, hi)| hi - lo).sum::<usize>(), len);
+                // coincides with chunk_bounds on its domain
+                if len >= k {
+                    assert_eq!(parts, chunk_bounds(len, k), "len={len} k={k}");
+                }
+            }
+        }
+        // len < k: the first `len` parts carry one element, the rest none
+        assert_eq!(frac_bounds(2, 4, 0), (0, 1));
+        assert_eq!(frac_bounds(2, 4, 1), (1, 2));
+        assert_eq!(frac_bounds(2, 4, 2), (2, 2));
+        assert_eq!(frac_bounds(2, 4, 3), (2, 2));
+    }
+
+    #[test]
+    fn degenerate_cross_chunk_counts_are_clamped() {
+        // cross:1 cannot cross a step boundary — every entry point clamps
+        // it to 2 (the CLI spec parser and Pipeline::cross route through
+        // normalized(); the executor/engine builders are tested in their
+        // own modules)
+        assert_eq!(Pipeline::cross(1).chunks, 2);
+        let c1 = Pipeline::from_spec("cross:1").unwrap();
+        assert!(c1.cross && c1.chunks == 2, "CLI cross:1 must clamp");
+        let hand = Pipeline { chunks: 1, cross: true, ..Pipeline::off() };
+        assert_eq!(hand.normalized().chunks, 2);
+        // non-degenerate and non-cross requests are untouched
+        assert_eq!(Pipeline::cross(3).chunks, 3);
+        assert_eq!(Pipeline::cross(0).chunks, 0, "auto stays auto");
+        assert_eq!(Pipeline::off().normalized(), Pipeline::off());
+        assert_eq!(Pipeline::fixed(1).normalized(), Pipeline::fixed(1));
+    }
+
+    #[test]
+    fn slab_parts_expose_the_live_layout() {
+        let mut a = BufferArena::with_capacity(3, 8);
+        a.load(&[vec![1.0, 2.0], vec![3.0], vec![]]).unwrap();
+        let parts = a.slab_parts();
+        assert_eq!((parts.n, parts.cap, parts.half), (3, 8, 24));
+        assert!(parts.front_is_lower);
+        // the pointer really addresses the front data
+        unsafe {
+            assert_eq!(*parts.ptr, 1.0);
+            assert_eq!(*parts.ptr.add(8), 3.0);
+        }
+        a.flip(vec![0, 0, 0]);
+        assert!(!a.slab_parts().front_is_lower);
+    }
+
+    #[test]
     fn region_chunk_views_disjoint_and_covering() {
         let r = ArenaRegion::new(8, 10);
         let views = r.chunks(4);
@@ -790,7 +938,7 @@ mod tests {
 
     #[test]
     fn epoch_tags_guard_the_lane_order() {
-        let mut e = EpochTags::new(3, 2);
+        let e = EpochTags::new(3, 2);
         assert_eq!((e.n_ranks(), e.n_chunks()), (3, 2));
         assert!(e.all_at(0));
         // step 0 chunk 0 may start; step 1 chunk 0 may not

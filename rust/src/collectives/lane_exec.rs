@@ -1,0 +1,737 @@
+//! Event-driven execution of cross-step lane schedules.
+//!
+//! PR 4's lane driver dispatched `(step, chunk)` tasks **one at a time**
+//! in schedule order: each task fanned its subgroup items out on the pool
+//! and joined before the next task started. The dependency graph already
+//! proves same-wave tasks independent (fraction purity makes their
+//! read/write sets disjoint), so that caller-side serialization threw
+//! away exactly the concurrency the schedule had earned — and paid one
+//! pool fill/drain per task.
+//!
+//! This module runs an entire [`LaneProgram`] as **one** pool fan-out
+//! ([`WorkerPool::run_binned`]): every work item of every task is binned
+//! onto its sticky lane up front, each lane drains its queue FIFO, and an
+//! item fires the instant the [`EpochTags`] it gates on publish — no
+//! wave-level join, no caller in the loop. Progress is guaranteed
+//! because each lane's queue is ordered by the schedule's task order
+//! (a linear extension of the dependency DAG): the earliest unfinished
+//! item in that order is always at the head of some lane with its gates
+//! satisfied, so some lane can always run (no deadlock). Time spent
+//! parked on unpublished epochs is accumulated into the pool's
+//! `lane_blocked_ns` counter. That progress argument covers one
+//! schedule; **concurrent** event-driven fan-outs on one pool serialize
+//! on the pool's blocking token inside [`WorkerPool::run_binned`] —
+//! interleaved, each could occupy every worker with jobs gated on the
+//! other collective's queued-behind items (non-parking keyed fan-outs
+//! interleave freely; their jobs always run to completion).
+//!
+//! ## The atomic epoch protocol
+//!
+//! `epoch[q][c]` counts the completed steps of rank `q`'s chunk-`c` data
+//! (the initial load is epoch 0). An item of step `r` that touches
+//! (reads *or* writes) ranks `G` for chunk `c`:
+//!
+//! 1. **waits** until `epoch[q][c] ≥ r` for every `q ∈ G` (`Acquire`);
+//! 2. runs its plain slab accesses;
+//! 3. **counts down** `pending[q][c]` (`AcqRel`) for every `q ∈ G`; the
+//!    item that brings a rank's count to zero reloads the count for step
+//!    `r+1` and stores `epoch[q][c] = r+1` (`Release`).
+//!
+//! The countdown exists because routed ops (all-to-all / scatter /
+//! gather) read a source rank's regions from *several* items: the epoch
+//! may only advance once **every** step-`r` access to `(q, c)` — not
+//! just `q`'s own writer — has completed. Exchange ops touch each rank
+//! from exactly one subgroup item, so their counts are all 1 and the
+//! protocol degenerates to PR 4's publish-after-task. Why
+//! release/acquire suffices: fraction purity keeps every pair of
+//! concurrent items' plain accesses disjoint (different fractions, or
+//! disjoint write sets within a task), so the *only* ordering the slab
+//! needs is write-then-read across a dependency edge — exactly what the
+//! `Release` store and `Acquire` gating load provide. See
+//! `collectives/README.md` for the full hazard argument.
+//!
+//! The in-order driver ([`LaneDriver::InOrder`]) is retained as the
+//! differential anchor and bench baseline: same items, same epochs, but
+//! tasks dispatched one fan-out at a time with PR 4's exact-epoch
+//! verification before each.
+
+use crate::collectives::arena::{frac_bounds, BufferArena, EpochTags, SlabParts};
+use crate::collectives::kernels::{add2_assign, add_assign, STRIP_ELEMS};
+use crate::collectives::pool::WorkerPool;
+use crate::transcoder::lanes::LaneSchedule;
+use anyhow::{ensure, Result};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+
+/// How a cross-step lane schedule is driven on the executor pool.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LaneDriver {
+    /// One fan-out for the whole schedule: lanes pull from sticky
+    /// per-lane queues and spin/park on atomic epochs, so tasks fire the
+    /// instant their dependencies publish (the production default).
+    #[default]
+    Event,
+    /// PR-4 behavior: tasks dispatched one at a time in schedule order,
+    /// one pool fan-out per task, exact epoch verification before each.
+    /// Kept as the differential anchor and bench baseline.
+    InOrder,
+}
+
+impl LaneDriver {
+    /// Parse the CLI knob: `event` (default) or `inorder`.
+    pub fn from_spec(s: &str) -> Result<Self> {
+        match s {
+            "event" => Ok(Self::Event),
+            "inorder" | "in-order" => Ok(Self::InOrder),
+            _ => anyhow::bail!("bad lane driver {s} (event|inorder)"),
+        }
+    }
+}
+
+/// One strided copy of a metadata-routed op: the whole `len`-element unit
+/// at `src_off` in `src`'s region moves to `dst_off` in `dst`'s region;
+/// chunk lane `f` carries the `frac_bounds(len, k, f)` sub-range of it.
+/// Positions are *position-stable within a step* (pure metadata), which
+/// is what makes the routed chunk geometry fraction-pure.
+#[derive(Clone, Debug)]
+pub struct CopyMove {
+    pub src: usize,
+    pub src_off: usize,
+    pub dst: usize,
+    pub dst_off: usize,
+    pub len: usize,
+}
+
+/// The data movement of one lane work item.
+#[derive(Clone, Debug)]
+pub enum LaneOp {
+    /// Member-order s-to-1 reduction over the item's subgroup
+    /// (`ranks`): member `i` writes the sum of every member's chunk-`i`
+    /// fraction. `out_len` is the per-member output length (a multiple of
+    /// the program's `unit`).
+    Reduce { out_len: usize },
+    /// Member-order concatenation: member `i` writes every member's
+    /// contribution fraction at stride `cur_len` (the per-member input
+    /// length, a multiple of `unit`).
+    Concat { cur_len: usize },
+    /// Metadata-routed strided copies (all-to-all / scatter / gather).
+    Copy { moves: Vec<CopyMove> },
+    /// Publish-only: the rank is untouched by this step's data movement
+    /// but its epoch chain must advance so later steps can gate on it.
+    Noop,
+}
+
+/// One lane work item: part of every `(step, chunk)` task of its step
+/// (the fraction is applied at run time, so items are chunk-invariant).
+#[derive(Clone, Debug)]
+pub struct LaneItem {
+    /// Sticky lane key (subgroup first rank / destination rank) — stable
+    /// across steps and iterations, so the item's regions stay cache-hot
+    /// on one lane.
+    pub key: usize,
+    /// Per-chunk payload weight in elements (size-aware placement).
+    pub weight: usize,
+    /// Gate/touch set: ranks whose `(rank, chunk)` epoch must be at the
+    /// item's step before it runs, and which it counts down after. For
+    /// [`LaneOp::Reduce`]/[`LaneOp::Concat`] this is also the subgroup
+    /// member list **in information order** (the summation order).
+    pub ranks: Vec<usize>,
+    pub op: LaneOp,
+}
+
+/// An executable cross-step lane program: per-step work items plus the
+/// fraction geometry, derived by the executors alongside the plan.
+#[derive(Clone, Debug)]
+pub struct LaneProgram {
+    /// Chunk lanes (fraction count), equal to every plan step's
+    /// `n_chunks`.
+    pub k: usize,
+    /// Invariant low-coordinate unit of the exchange stages (the final
+    /// reduce-scatter slice / all-gather contribution / route-chunk
+    /// payload), in elements.
+    pub unit: usize,
+    /// Fraction partition of `[0, unit)` — length `k`.
+    pub fracs: Vec<(usize, usize)>,
+    /// Work items per plan step (chunk-invariant).
+    pub step_items: Vec<Vec<LaneItem>>,
+    /// Per-rank live front lengths after the last step.
+    pub final_lens: Vec<usize>,
+}
+
+impl LaneProgram {
+    /// Structural validity: fractions partition the unit, every rank is
+    /// touched (hence published) at every step, lengths are
+    /// unit-aligned, and no access can escape a region. Run before
+    /// execution — a violation is a builder bug, surfaced as an error
+    /// instead of an out-of-bounds slab access.
+    pub fn validate(&self, n: usize, region_cap: usize) -> Result<()> {
+        ensure!(self.k >= 1 && self.fracs.len() == self.k, "bad fraction count");
+        ensure!(self.unit >= 1, "degenerate unit");
+        ensure!(self.fracs.first().map(|f| f.0) == Some(0), "fractions must start at 0");
+        ensure!(
+            self.fracs.last().map(|f| f.1) == Some(self.unit),
+            "fractions must cover the unit"
+        );
+        ensure!(
+            self.fracs.windows(2).all(|w| w[0].1 == w[1].0),
+            "fractions must tile contiguously"
+        );
+        ensure!(!self.step_items.is_empty(), "empty lane program");
+        ensure!(self.final_lens.len() == n, "final lengths must cover every rank");
+        ensure!(
+            self.final_lens.iter().all(|&l| l <= region_cap),
+            "final length exceeds the region capacity"
+        );
+        for (r, items) in self.step_items.iter().enumerate() {
+            let mut touched = vec![false; n];
+            for it in items {
+                ensure!(!it.ranks.is_empty(), "item with no ranks at step {r}");
+                for &q in &it.ranks {
+                    ensure!(q < n, "rank {q} out of range at step {r}");
+                    touched[q] = true;
+                }
+                match &it.op {
+                    LaneOp::Reduce { out_len } => ensure!(
+                        *out_len >= 1
+                            && out_len % self.unit == 0
+                            // reads span member positions up to s · out_len
+                            && it.ranks.len() * out_len <= region_cap,
+                        "reduce stage geometry invalid at step {r}"
+                    ),
+                    LaneOp::Concat { cur_len } => ensure!(
+                        *cur_len >= 1
+                            && cur_len % self.unit == 0
+                            && it.ranks.len() * cur_len <= region_cap,
+                        "concat stage geometry invalid at step {r}"
+                    ),
+                    LaneOp::Copy { moves } => {
+                        for mv in moves {
+                            ensure!(
+                                mv.src < n
+                                    && mv.dst < n
+                                    && mv.src_off + mv.len <= region_cap
+                                    && mv.dst_off + mv.len <= region_cap,
+                                "copy move out of range at step {r}"
+                            );
+                        }
+                    }
+                    LaneOp::Noop => {}
+                }
+            }
+            ensure!(
+                touched.iter().all(|&t| t),
+                "step {r} leaves a rank unpublished (missing no-op item)"
+            );
+        }
+        Ok(())
+    }
+
+    /// Total per-chunk payload (elements) — the pool-threshold figure.
+    pub fn total_weight(&self) -> usize {
+        self.step_items.iter().flatten().map(|i| i.weight).sum::<usize>() * self.k
+    }
+}
+
+/// Raw, `Sync` view of the arena slab for one lane-program execution.
+///
+/// Safety contract: all concurrent accesses through this view are
+/// disjoint — writes target the half opposite their step's read half,
+/// concurrent tasks touch disjoint fractions (fraction purity), and
+/// items within a task write disjoint rank regions — with cross-edge
+/// ordering provided by the epoch protocol. The view is created from
+/// `&mut BufferArena`, so no safe reference into the slab coexists with
+/// it.
+pub struct SlabView {
+    ptr: *mut f32,
+    half: usize,
+    cap: usize,
+    read_lower0: bool,
+}
+
+unsafe impl Send for SlabView {}
+unsafe impl Sync for SlabView {}
+
+impl SlabView {
+    pub fn new(parts: SlabParts) -> Self {
+        Self {
+            ptr: parts.ptr,
+            half: parts.half,
+            cap: parts.cap,
+            read_lower0: parts.front_is_lower,
+        }
+    }
+
+    /// Whether step `r` reads the lower half.
+    fn read_lower(&self, step: usize) -> bool {
+        self.read_lower0 ^ (step % 2 == 1)
+    }
+
+    #[inline]
+    fn offset(&self, lower: bool, rank: usize, at: usize) -> usize {
+        (if lower { 0 } else { self.half }) + rank * self.cap + at
+    }
+
+    /// `[lo, hi)` of rank `q`'s region in step `r`'s **read** half.
+    ///
+    /// # Safety
+    /// The range must lie within the region and no concurrent `&mut`
+    /// to any part of it may exist (the epoch protocol guarantees this
+    /// for gated items).
+    #[inline]
+    pub unsafe fn read(&self, step: usize, rank: usize, lo: usize, hi: usize) -> &[f32] {
+        debug_assert!(hi <= self.cap);
+        std::slice::from_raw_parts(
+            self.ptr.add(self.offset(self.read_lower(step), rank, lo)),
+            hi - lo,
+        )
+    }
+
+    /// `[lo, hi)` of rank `q`'s region in step `r`'s **write** half.
+    ///
+    /// # Safety
+    /// As [`Self::read`], plus exclusivity: no other reference to any
+    /// part of the range may exist concurrently.
+    #[inline]
+    #[allow(clippy::mut_from_ref)] // raw-slab view; disjointness by the epoch protocol
+    pub unsafe fn write(&self, step: usize, rank: usize, lo: usize, hi: usize) -> &mut [f32] {
+        debug_assert!(hi <= self.cap);
+        std::slice::from_raw_parts_mut(
+            self.ptr.add(self.offset(!self.read_lower(step), rank, lo)),
+            hi - lo,
+        )
+    }
+}
+
+/// Strip-tiled pair-fused member-order reduction of one fraction — the
+/// same passes, in the same order, as `kernels::reduce_subgroup`, so
+/// results stay byte-identical to the serial oracle.
+///
+/// # Safety
+/// Caller upholds the [`SlabView`] disjointness contract for every
+/// range touched: writes `[lo, hi)` of each member's write region, reads
+/// `i · out_len + [lo, hi)` of every member's read region.
+unsafe fn reduce_frac(slab: &SlabView, step: usize, ranks: &[usize], out_len: usize, lo: usize, hi: usize) {
+    for (i, &dst_rank) in ranks.iter().enumerate() {
+        let base = i * out_len;
+        let dst = slab.write(step, dst_rank, lo, hi);
+        let len = hi - lo;
+        let mut t = 0usize;
+        while t < len {
+            let e = (t + STRIP_ELEMS).min(len);
+            let d = &mut dst[t..e];
+            d.copy_from_slice(slab.read(step, ranks[0], base + lo + t, base + lo + e));
+            let mut peers = ranks[1..].chunks_exact(2);
+            for pair in &mut peers {
+                add2_assign(
+                    d,
+                    slab.read(step, pair[0], base + lo + t, base + lo + e),
+                    slab.read(step, pair[1], base + lo + t, base + lo + e),
+                );
+            }
+            if let &[last] = peers.remainder() {
+                add_assign(d, slab.read(step, last, base + lo + t, base + lo + e));
+            }
+            t = e;
+        }
+    }
+}
+
+/// Member-order concatenation of one fraction: member `i` writes every
+/// member's `[lo, hi)` contribution at stride `cur_len` (pure copies —
+/// bitwise identical to `kernels::concat_subgroup`).
+///
+/// # Safety
+/// As [`reduce_frac`].
+unsafe fn concat_frac(slab: &SlabView, step: usize, ranks: &[usize], cur_len: usize, lo: usize, hi: usize) {
+    for &dst_rank in ranks {
+        for (j, &src) in ranks.iter().enumerate() {
+            let dst = slab.write(step, dst_rank, j * cur_len + lo, j * cur_len + hi);
+            dst.copy_from_slice(slab.read(step, src, lo, hi));
+        }
+    }
+}
+
+/// Execute one item's fraction `chunk` of step `step`.
+///
+/// # Safety
+/// The caller must hold the item's epoch gates (all ranks at `step`) —
+/// that, plus fraction purity, makes every range this touches disjoint
+/// from every concurrently touched range.
+pub(crate) unsafe fn execute_item(
+    slab: &SlabView,
+    prog: &LaneProgram,
+    step: usize,
+    chunk: usize,
+    item: &LaneItem,
+) {
+    let (flo, fhi) = prog.fracs[chunk];
+    match &item.op {
+        LaneOp::Noop => {}
+        LaneOp::Reduce { out_len } => {
+            for u in 0..out_len / prog.unit {
+                reduce_frac(
+                    slab,
+                    step,
+                    &item.ranks,
+                    *out_len,
+                    u * prog.unit + flo,
+                    u * prog.unit + fhi,
+                );
+            }
+        }
+        LaneOp::Concat { cur_len } => {
+            for u in 0..cur_len / prog.unit {
+                concat_frac(
+                    slab,
+                    step,
+                    &item.ranks,
+                    *cur_len,
+                    u * prog.unit + flo,
+                    u * prog.unit + fhi,
+                );
+            }
+        }
+        LaneOp::Copy { moves } => {
+            for mv in moves {
+                let (lo, hi) = frac_bounds(mv.len, prog.k, chunk);
+                if lo >= hi {
+                    continue;
+                }
+                let src = slab.read(step, mv.src, mv.src_off + lo, mv.src_off + hi);
+                let dst = slab.write(step, mv.dst, mv.dst_off + lo, mv.dst_off + hi);
+                dst.copy_from_slice(src);
+            }
+        }
+    }
+}
+
+/// Per-step touch counts: how many items of a step gate on each rank —
+/// the countdown reload values of the epoch protocol.
+pub(crate) fn touch_counts(prog: &LaneProgram, n: usize) -> Vec<Vec<u32>> {
+    prog.step_items
+        .iter()
+        .map(|items| {
+            let mut t = vec![0u32; n];
+            for it in items {
+                for &q in &it.ranks {
+                    t[q] += 1;
+                }
+            }
+            t
+        })
+        .collect()
+}
+
+/// Spin/park until every rank's chunk epoch reaches `step`. Returns
+/// `false` when the run was aborted (a sibling item panicked) — the
+/// caller must then skip its work and publish nothing. Blocked time is
+/// accumulated into `blocked` (ns).
+fn wait_gate(
+    epochs: &EpochTags,
+    ranks: &[usize],
+    chunk: usize,
+    step: u32,
+    aborted: &AtomicBool,
+    blocked: &AtomicU64,
+) -> bool {
+    let mut t0: Option<std::time::Instant> = None;
+    for &q in ranks {
+        let mut spins = 0u32;
+        while epochs.get(q, chunk) < step {
+            if aborted.load(Ordering::Relaxed) {
+                return false;
+            }
+            if t0.is_none() {
+                t0 = Some(std::time::Instant::now());
+            }
+            spins += 1;
+            if spins < 128 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+    }
+    if let Some(t) = t0 {
+        blocked.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+    !aborted.load(Ordering::Relaxed)
+}
+
+/// Count down the item's touched ranks; the last toucher of a rank
+/// reloads the next step's count and publishes the epoch.
+fn complete_item(
+    epochs: &EpochTags,
+    pending: &[AtomicU32],
+    touch: &[Vec<u32>],
+    k: usize,
+    ranks: &[usize],
+    chunk: usize,
+    step: usize,
+) {
+    for &q in ranks {
+        let idx = q * k + chunk;
+        if pending[idx].fetch_sub(1, Ordering::AcqRel) == 1 {
+            let next = step + 1;
+            if next < touch.len() {
+                pending[idx].store(touch[next][q], Ordering::Relaxed);
+            }
+            epochs.publish([q], chunk, next as u32);
+        }
+    }
+}
+
+/// Run a whole lane program as **one** event-driven pool fan-out. The
+/// schedule must already be validated against the plan; `fan_outs()`
+/// grows by exactly one (when the pool has workers).
+pub(crate) fn run_event(
+    pool: &WorkerPool,
+    prog: &LaneProgram,
+    sched: &LaneSchedule,
+    arena: &mut BufferArena,
+) -> Result<()> {
+    let n = arena.n_regions();
+    let k = prog.k;
+    let n_steps = prog.step_items.len();
+    prog.validate(n, arena.region_cap())?;
+    // the epoch gates assume every step runs exactly one task per chunk
+    // lane; a schedule where some step collapsed to a single task (a
+    // non-divisible or non-aligned plan) would leave chunks ≥ 1 of that
+    // step unexecuted and park every dependent lane forever — refuse it
+    // up front instead of livelocking under the blocking token
+    let mut tasks_per_step = vec![0usize; n_steps];
+    for t in &sched.tasks {
+        ensure!(t.step < n_steps, "schedule names step {} beyond the program", t.step);
+        tasks_per_step[t.step] += 1;
+    }
+    let expect = if k > 1 { k } else { 1 };
+    ensure!(
+        tasks_per_step.iter().all(|&c| c == expect),
+        "lane schedule is not uniformly chunked ({tasks_per_step:?} tasks per step, \
+         program has {k} lanes) — event-driven execution requires k tasks per step"
+    );
+    let touch = touch_counts(prog, n);
+    let epochs = EpochTags::new(n, k);
+    let pending: Vec<AtomicU32> =
+        (0..n * k).map(|i| AtomicU32::new(touch[0][i / k])).collect();
+
+    // entries in schedule (task) order — each lane's queue inherits this
+    // order, the linear extension that guarantees progress
+    struct Entry<'a> {
+        step: usize,
+        chunk: usize,
+        item: &'a LaneItem,
+    }
+    let mut entries: Vec<Entry> = Vec::new();
+    for task in &sched.tasks {
+        for item in &prog.step_items[task.step] {
+            entries.push(Entry { step: task.step, chunk: task.chunk, item });
+        }
+    }
+    let pairs: Vec<(usize, usize)> =
+        entries.iter().map(|e| (e.item.key, e.item.weight)).collect();
+    let assignment = pool.sticky_assign(&pairs);
+    let mut bins: Vec<Vec<Entry>> = (0..pool.lanes()).map(|_| Vec::new()).collect();
+    for (e, lane) in entries.into_iter().zip(assignment) {
+        bins[lane].push(e);
+    }
+
+    let slab = SlabView::new(arena.slab_parts());
+    let aborted = AtomicBool::new(false);
+    let blocked = AtomicU64::new(0);
+    {
+        let (epochs, pending, touch, slab) = (&epochs, &pending[..], &touch[..], &slab);
+        let (aborted, blocked) = (&aborted, &blocked);
+        pool.run_binned(bins, move |e: Entry| {
+            if !wait_gate(epochs, &e.item.ranks, e.chunk, e.step as u32, aborted, blocked) {
+                return; // aborted: drain without touching the slab
+            }
+            let run = std::panic::AssertUnwindSafe(|| unsafe {
+                execute_item(slab, prog, e.step, e.chunk, e.item);
+            });
+            match std::panic::catch_unwind(run) {
+                Ok(()) => {
+                    complete_item(epochs, pending, touch, k, &e.item.ranks, e.chunk, e.step);
+                }
+                Err(payload) => {
+                    // wake every parked lane before unwinding, or the
+                    // fan-out's completion latch would wait forever
+                    aborted.store(true, Ordering::SeqCst);
+                    std::panic::resume_unwind(payload);
+                }
+            }
+        });
+    }
+    pool.add_lane_blocked_ns(blocked.load(Ordering::Relaxed));
+    ensure!(
+        epochs.all_at(n_steps as u32),
+        "event-driven lane run finished with unpublished chunks"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::plan::CollectivePlan;
+
+    #[test]
+    fn lane_driver_specs_parse() {
+        assert_eq!(LaneDriver::from_spec("event").unwrap(), LaneDriver::Event);
+        assert_eq!(LaneDriver::from_spec("inorder").unwrap(), LaneDriver::InOrder);
+        assert_eq!(LaneDriver::from_spec("in-order").unwrap(), LaneDriver::InOrder);
+        assert!(LaneDriver::from_spec("bogus").is_err());
+        assert_eq!(LaneDriver::default(), LaneDriver::Event);
+    }
+
+    #[test]
+    fn program_validation_catches_builder_bugs() {
+        let item = |ranks: Vec<usize>, op: LaneOp| LaneItem { key: 0, weight: 1, ranks, op };
+        let good = LaneProgram {
+            k: 2,
+            unit: 4,
+            fracs: vec![(0, 2), (2, 4)],
+            step_items: vec![vec![item(vec![0, 1], LaneOp::Reduce { out_len: 4 })]],
+            final_lens: vec![4, 4],
+        };
+        good.validate(2, 8).unwrap();
+        // a step that leaves rank 1 unpublished
+        let mut bad = good.clone();
+        bad.step_items = vec![vec![item(vec![0], LaneOp::Noop)]];
+        assert!(bad.validate(2, 8).is_err());
+        // fractions that do not tile the unit
+        let mut bad = good.clone();
+        bad.fracs = vec![(0, 1), (2, 4)];
+        assert!(bad.validate(2, 8).is_err());
+        // a copy escaping the region
+        let mut bad = good.clone();
+        bad.step_items = vec![vec![item(
+            vec![0, 1],
+            LaneOp::Copy {
+                moves: vec![CopyMove { src: 0, src_off: 6, dst: 1, dst_off: 0, len: 4 }],
+            },
+        )]];
+        assert!(bad.validate(2, 8).is_err());
+        // out_len not unit-aligned
+        let mut bad = good.clone();
+        bad.step_items = vec![vec![item(vec![0, 1], LaneOp::Reduce { out_len: 6 })]];
+        assert!(bad.validate(2, 8).is_err());
+    }
+
+    #[test]
+    fn slab_view_addresses_both_halves_by_step_parity() {
+        let mut a = BufferArena::with_capacity(2, 4);
+        a.load(&[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        let slab = SlabView::new(a.slab_parts());
+        unsafe {
+            // step 0 reads the front (lower) half
+            assert_eq!(slab.read(0, 0, 0, 2), &[1.0, 2.0]);
+            assert_eq!(slab.read(0, 1, 0, 2), &[3.0, 4.0]);
+            // step 0 writes the upper half; step 1 reads it back
+            slab.write(0, 1, 0, 1)[0] = 9.0;
+            assert_eq!(slab.read(1, 1, 0, 1), &[9.0]);
+            // step 1 writes the lower half again
+            slab.write(1, 0, 1, 2)[0] = 7.0;
+            assert_eq!(slab.read(2, 0, 1, 2), &[7.0]);
+        }
+        // nothing above moved the arena's own bookkeeping
+        assert!(a.front_is_lower());
+    }
+
+    #[test]
+    fn event_run_executes_a_two_step_reduce_program() {
+        use crate::collectives::arena::chunk_bounds;
+        // 4 ranks, one subgroup of all 4, two steps of 2-to-1 style
+        // reduction shape — exercised end to end through the pool with
+        // K = 2 fraction lanes
+        let pool = WorkerPool::new(2);
+        let n = 4;
+        let unit = 2;
+        let m = 8; // per-rank elements, out after step0 = 4, after step1 = 2
+        let mut arena = BufferArena::with_capacity(n, m);
+        let bufs: Vec<Vec<f32>> =
+            (0..n).map(|r| (0..m).map(|i| (r * m + i) as f32).collect()).collect();
+        arena.load(&bufs).unwrap();
+        let groups: Vec<Vec<usize>> = vec![vec![0, 1], vec![2, 3]];
+        let item = |ranks: Vec<usize>, out: usize| LaneItem {
+            key: ranks[0],
+            weight: out,
+            ranks,
+            op: LaneOp::Reduce { out_len: out },
+        };
+        let prog = LaneProgram {
+            k: 2,
+            unit,
+            fracs: chunk_bounds(unit, 2),
+            step_items: vec![
+                groups.iter().map(|g| item(g.clone(), 4)).collect(),
+                groups.iter().map(|g| item(g.clone(), 2)).collect(),
+            ],
+            final_lens: vec![2; n],
+        };
+        // matching 2-step plan for the schedule shape
+        let mut plan = CollectivePlan::default();
+        for _ in 0..2 {
+            plan.steps.push(crate::collectives::plan::PlanStep {
+                rounds: vec![crate::collectives::plan::Round::default(); 2],
+                n_chunks: 2,
+                lane_aligned: true,
+                ..Default::default()
+            });
+        }
+        let sched = LaneSchedule::from_plan(&plan);
+        sched.validate(&plan).unwrap();
+        let fan_outs = pool.fan_outs();
+        run_event(&pool, &prog, &sched, &mut arena).unwrap();
+        assert_eq!(pool.fan_outs(), fan_outs + 1, "one fan-out for the whole program");
+        arena.set_front(true, prog.final_lens.clone());
+        // oracle: step 0 then step 1 member-order reductions
+        let step = |b: &[Vec<f32>], groups: &[Vec<usize>], out: usize| -> Vec<Vec<f32>> {
+            let mut next = vec![vec![0.0f32; out]; b.len()];
+            for g in groups {
+                for (i, &mem) in g.iter().enumerate() {
+                    for e in 0..out {
+                        next[mem][e] = g.iter().map(|&q| b[q][i * out + e]).sum();
+                    }
+                }
+            }
+            next
+        };
+        let expect = step(&step(&bufs, &groups, 4), &groups, 2);
+        for r in 0..n {
+            assert_eq!(arena.front(r), &expect[r][..], "rank {r}");
+        }
+    }
+
+    #[test]
+    fn invalid_programs_are_refused_before_execution() {
+        let pool = WorkerPool::new(2);
+        let n = 2;
+        let mut arena = BufferArena::with_capacity(n, 4);
+        arena.load(&[vec![1.0; 4], vec![1.0; 4]]).unwrap();
+        // a copy that escapes the region would be a builder bug —
+        // validate() refuses to run it rather than fault
+        let prog = LaneProgram {
+            k: 1,
+            unit: 4,
+            fracs: vec![(0, 4)],
+            step_items: vec![vec![LaneItem {
+                key: 0,
+                weight: 1,
+                ranks: vec![0, 1],
+                op: LaneOp::Copy {
+                    moves: vec![CopyMove { src: 0, src_off: 3, dst: 1, dst_off: 0, len: 4 }],
+                },
+            }]],
+            final_lens: vec![4; n],
+        };
+        let mut plan = CollectivePlan::default();
+        plan.steps.push(crate::collectives::plan::PlanStep {
+            rounds: vec![crate::collectives::plan::Round::default()],
+            n_chunks: 1,
+            lane_aligned: true,
+            ..Default::default()
+        });
+        let sched = LaneSchedule::from_plan(&plan);
+        assert!(run_event(&pool, &prog, &sched, &mut arena).is_err());
+    }
+}

@@ -14,6 +14,9 @@
 //! * [`pool`] — the persistent executor pool: long-lived worker threads
 //!   with sticky subgroup→lane assignment; zero thread spawns on the
 //!   steady-state collective path.
+//! * [`lane_exec`] — event-driven execution of cross-step lane
+//!   schedules: a whole schedule runs as one pool fan-out, lanes parking
+//!   on atomic per-(rank, chunk) epochs instead of joining per task.
 //! * [`kernels`] — SIMD-width-aware strip-tiled reduce/concat kernels
 //!   (width probed once, pair-fused peer passes, bulk-copy fast path),
 //!   byte-identical to the scalar reference.
@@ -28,6 +31,7 @@
 pub mod arena;
 pub mod hierarchical;
 pub mod kernels;
+pub mod lane_exec;
 pub mod ops;
 pub mod plan;
 pub mod pool;

@@ -38,10 +38,15 @@
 //! across *steps* of the interleaved schedule, not just within one.
 //! The pool is safe for **concurrent fan-outs** from multiple threads
 //! (binning and sticky assignment are serialized on the sticky map's
-//! mutex; each call owns a private latch): the stress net
-//! (`rust/tests/pool_stress.rs`) runs whole collectives from several
-//! threads against one pool and asserts zero steady-state spawns and a
-//! consistent sticky map.
+//! mutex; each call owns a private latch). Fan-outs whose jobs may
+//! *park* mid-run — the event-driven lane executor's epoch gates —
+//! additionally serialize on the pool's blocking token (see
+//! [`WorkerPool::run_binned`]): two parking fan-outs interleaved on one
+//! pool could each occupy every worker with jobs gated on the other's
+//! queued-behind items. The stress net (`rust/tests/pool_stress.rs`)
+//! runs whole collectives — including concurrent cross-step ones — from
+//! several threads against one pool and asserts zero steady-state
+//! spawns and a consistent sticky map.
 
 use crate::collectives::arena::{host_parallelism, lpt_order, par_threshold};
 use rustc_hash::FxHashMap;
@@ -175,10 +180,24 @@ pub struct WorkerPool {
     /// per-lane loads are rebuilt from scratch inside each call (sticky
     /// items charge their lane first, then fresh keys are LPT-placed).
     sticky: Mutex<FxHashMap<usize, usize>>,
+    /// Exclusive token for **blocking** fan-outs (the event-driven lane
+    /// executor, whose jobs park on epochs published by sibling jobs of
+    /// the same schedule). Two such fan-outs interleaved on one pool
+    /// could each occupy every worker with jobs gated on the other
+    /// collective's queued-behind items — a cross-collective deadlock —
+    /// so blocking fan-outs hold this token for their duration.
+    /// Non-blocking keyed/unkeyed fan-outs never wait inside a job and
+    /// interleave freely with each other and with the token holder.
+    blocking: Mutex<()>,
     n_workers: usize,
     spawns: AtomicUsize,
     fan_outs: AtomicU64,
     sticky_hits: AtomicU64,
+    /// Nanoseconds lanes spent parked on unpublished epochs inside
+    /// event-driven lane fan-outs (`collectives::lane_exec`) — the
+    /// schedule's dependency-wait cost, reported by the bench next to
+    /// the wall-clock columns.
+    lane_blocked_ns: AtomicU64,
 }
 
 impl std::fmt::Debug for WorkerPool {
@@ -205,10 +224,12 @@ impl WorkerPool {
             shared: shared.clone(),
             handles: Mutex::new(Vec::with_capacity(n_workers)),
             sticky: Mutex::new(FxHashMap::default()),
+            blocking: Mutex::new(()),
             n_workers,
             spawns: AtomicUsize::new(0),
             fan_outs: AtomicU64::new(0),
             sticky_hits: AtomicU64::new(0),
+            lane_blocked_ns: AtomicU64::new(0),
         };
         let mut handles = lock_recover(&pool.handles);
         for w in 0..n_workers {
@@ -260,6 +281,18 @@ impl WorkerPool {
         self.sticky_hits.load(Ordering::SeqCst)
     }
 
+    /// Total nanoseconds lanes spent waiting on unpublished epochs in
+    /// event-driven lane fan-outs (the blocked-time counter the bench
+    /// reports; see `collectives::lane_exec`).
+    pub fn lane_blocked_ns(&self) -> u64 {
+        self.lane_blocked_ns.load(Ordering::SeqCst)
+    }
+
+    /// Credit epoch-wait time observed by an event-driven lane fan-out.
+    pub fn add_lane_blocked_ns(&self, ns: u64) {
+        self.lane_blocked_ns.fetch_add(ns, Ordering::SeqCst);
+    }
+
     /// The lane `key` is currently stuck to, if any (test hook).
     pub fn sticky_lane(&self, key: usize) -> Option<usize> {
         lock_recover(&self.sticky).get(&key).copied()
@@ -307,35 +340,82 @@ impl WorkerPool {
             }
             return;
         }
-        // lane `lanes - 1` is the caller itself
+        let pairs: Vec<(usize, usize)> = work.iter().map(|k| (k.key, k.weight)).collect();
+        let assignment = self.sticky_assign(&pairs);
+        let mut bins: Vec<Vec<W>> = (0..self.lanes()).map(|_| Vec::new()).collect();
+        for (k, lane) in work.into_iter().zip(assignment) {
+            bins[lane].push(k.item);
+        }
+        self.dispatch(bins, &f);
+    }
+
+    /// Resolve the sticky lane of every `(key, weight)` item (in input
+    /// order): keys already in the sticky map keep their lane and charge
+    /// it; fresh keys are placed largest-first onto the least-loaded lane
+    /// (LPT) and recorded, so repeated keys — within this call or across
+    /// calls — always land together. This is the one sticky-placement
+    /// implementation, shared by [`Self::run_keyed_forced`] and the
+    /// event-driven lane executor (`collectives::lane_exec`), which bins
+    /// a whole lane schedule in a single call.
+    pub fn sticky_assign(&self, items: &[(usize, usize)]) -> Vec<usize> {
         let lanes = self.lanes();
-        let mut bins: Vec<Vec<W>> = (0..lanes).map(|_| Vec::new()).collect();
-        {
-            let mut sticky = lock_recover(&self.sticky);
-            // per-call loads: sticky items charge their lane first, then
-            // new keys go largest-first onto the least-loaded lane
-            let mut loads = vec![0u64; lanes];
-            let mut fresh: Vec<Keyed<W>> = Vec::new();
-            for k in work {
-                match sticky.get(&k.key) {
-                    Some(&lane) => {
-                        self.sticky_hits.fetch_add(1, Ordering::Relaxed);
-                        loads[lane] += k.weight.max(1) as u64;
-                        bins[lane].push(k.item);
-                    }
-                    None => fresh.push(k),
+        let mut out = vec![0usize; items.len()];
+        let mut sticky = lock_recover(&self.sticky);
+        // per-call loads: sticky items charge their lane first, then new
+        // keys go largest-first onto the least-loaded lane
+        let mut loads = vec![0u64; lanes];
+        let mut fresh: Vec<usize> = Vec::new();
+        for (i, &(key, weight)) in items.iter().enumerate() {
+            match sticky.get(&key) {
+                Some(&lane) => {
+                    self.sticky_hits.fetch_add(1, Ordering::Relaxed);
+                    loads[lane] += weight.max(1) as u64;
+                    out[i] = lane;
                 }
-            }
-            let weights: Vec<usize> = fresh.iter().map(|k| k.weight).collect();
-            let mut slots: Vec<Option<Keyed<W>>> = fresh.into_iter().map(Some).collect();
-            for i in lpt_order(&weights) {
-                let k = slots[i].take().expect("each index placed once");
-                let lane = (0..lanes).min_by_key(|&l| (loads[l], l)).expect("lanes > 0");
-                sticky.insert(k.key, lane);
-                loads[lane] += k.weight.max(1) as u64;
-                bins[lane].push(k.item);
+                None => fresh.push(i),
             }
         }
+        let weights: Vec<usize> = fresh.iter().map(|&i| items[i].1).collect();
+        for j in lpt_order(&weights) {
+            let i = fresh[j];
+            let (key, weight) = items[i];
+            // a duplicate fresh key placed earlier in this loop reuses
+            // its lane instead of re-inserting (keys never split)
+            let lane = match sticky.get(&key) {
+                Some(&lane) => lane,
+                None => {
+                    let lane =
+                        (0..lanes).min_by_key(|&l| (loads[l], l)).expect("lanes > 0");
+                    sticky.insert(key, lane);
+                    lane
+                }
+            };
+            loads[lane] += weight.max(1) as u64;
+            out[i] = lane;
+        }
+        out
+    }
+
+    /// Run pre-binned work: one FIFO queue per lane (`bins.len()` must
+    /// equal [`Self::lanes`]; the last bin is the caller's). This is the
+    /// **single fan-out** of the event-driven lane executor — the whole
+    /// lane schedule's items are binned up front and each lane drains its
+    /// queue in order, waiting on epochs inside `f` — so
+    /// [`Self::fan_outs`] grows by exactly one per call (when any worker
+    /// bin is non-empty). Blocks until every item has completed.
+    ///
+    /// Because `f` may **park** a worker until a sibling item publishes,
+    /// concurrent binned runs hold the pool's blocking token for their
+    /// duration: two interleaved parking fan-outs could otherwise occupy
+    /// every worker with jobs gated on the other's queued-behind items
+    /// (cross-collective deadlock). Non-parking fan-outs
+    /// ([`Self::run_keyed`] / [`Self::run_unkeyed`]) interleave freely
+    /// with the token holder — their jobs always run to completion, so
+    /// the blocked schedule's remaining bins are only *delayed*, never
+    /// starved.
+    pub fn run_binned<W: Send>(&self, bins: Vec<Vec<W>>, f: impl Fn(W) + Sync) {
+        assert_eq!(bins.len(), self.lanes(), "one bin per lane");
+        let _token = lock_recover(&self.blocking);
         self.dispatch(bins, &f);
     }
 
@@ -554,6 +634,45 @@ mod tests {
         }
         for (r, b) in bufs.iter().enumerate() {
             assert!(b.iter().all(|&v| v == 2.0 * r as f32), "rank {r}");
+        }
+    }
+
+    #[test]
+    fn sticky_assign_is_stable_and_never_splits_keys() {
+        let pool = WorkerPool::new(2);
+        // duplicate fresh keys in one call must co-locate
+        let items: Vec<(usize, usize)> =
+            vec![(7, 10), (9, 4), (7, 10), (11, 6), (9, 4), (7, 1)];
+        let lanes = pool.sticky_assign(&items);
+        assert_eq!(lanes[0], lanes[2]);
+        assert_eq!(lanes[0], lanes[5]);
+        assert_eq!(lanes[1], lanes[4]);
+        assert!(lanes.iter().all(|&l| l < pool.lanes()));
+        // a second call re-hits every key with the same lanes
+        let again = pool.sticky_assign(&items);
+        assert_eq!(lanes, again, "sticky assignment drifted");
+        assert_eq!(pool.sticky_hits(), 6, "the second call re-hits every item");
+        assert_eq!(pool.sticky_size(), 3);
+    }
+
+    #[test]
+    fn run_binned_is_one_fan_out_draining_every_bin_fifo() {
+        use std::sync::Mutex;
+        let pool = WorkerPool::new(2);
+        let seen: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+        let bins: Vec<Vec<usize>> = vec![vec![0, 1, 2], vec![10, 11], vec![20]];
+        pool.run_binned(bins, |w| {
+            seen.lock().unwrap().push(w);
+        });
+        assert_eq!(pool.fan_outs(), 1, "one fan-out per binned run");
+        assert_eq!(pool.lane_blocked_ns(), 0, "no epoch waits were recorded");
+        let seen = seen.into_inner().unwrap();
+        assert_eq!(seen.len(), 6);
+        // FIFO within each lane: relative order of a bin's items holds
+        for bin in [vec![0, 1, 2], vec![10, 11], vec![20]] {
+            let pos: Vec<usize> =
+                bin.iter().map(|w| seen.iter().position(|s| s == w).unwrap()).collect();
+            assert!(pos.windows(2).all(|p| p[0] < p[1]), "bin {bin:?} reordered");
         }
     }
 

@@ -26,9 +26,13 @@
 //! the canonical padding.
 
 use crate::collectives::arena::{
-    chunk_bounds, run_parallel_weighted, ArenaRegion, BufferArena, EpochTags, Pipeline,
+    chunk_bounds, frac_bounds, run_parallel_weighted, ArenaRegion, BufferArena, EpochTags,
+    Pipeline,
 };
 use crate::collectives::kernels::{concat_subgroup, reduce_subgroup};
+use crate::collectives::lane_exec::{
+    self, CopyMove, LaneDriver, LaneItem, LaneOp, LaneProgram,
+};
 use crate::collectives::plan::{CollectivePlan, PlanStep, Round, Transfer};
 use crate::collectives::pool::{Keyed, PoolSel, WorkerPool};
 use crate::collectives::subgroups::{
@@ -52,6 +56,7 @@ pub struct RampX<'a> {
     pub p: &'a RampParams,
     pipeline: Pipeline,
     pool: PoolSel,
+    lane_driver: LaneDriver,
 }
 
 impl<'a> RampX<'a> {
@@ -60,22 +65,43 @@ impl<'a> RampX<'a> {
     /// fans out on the process-wide persistent pool
     /// ([`PoolSel::Global`]); see [`Self::with_pool`].
     pub fn new(p: &'a RampParams) -> Self {
-        Self { p, pipeline: Pipeline::off(), pool: PoolSel::default() }
+        Self {
+            p,
+            pipeline: Pipeline::off(),
+            pool: PoolSel::default(),
+            lane_driver: LaneDriver::default(),
+        }
     }
 
     /// Executor with auto-selected chunk pipelining (see
     /// [`crate::collectives::arena::pipeline_chunk_count`]).
     pub fn pipelined(p: &'a RampParams) -> Self {
-        Self { p, pipeline: Pipeline::auto(), pool: PoolSel::default() }
+        Self { pipeline: Pipeline::auto(), ..Self::new(p) }
     }
 
+    /// Degenerate cross-step chunk counts are clamped here
+    /// ([`Pipeline::normalized`]): `cross` with a fixed `K = 1` cannot
+    /// cross a step boundary and silently ran a one-chunk lane schedule.
     pub fn with_pipeline(mut self, pipeline: Pipeline) -> Self {
-        self.pipeline = pipeline;
+        self.pipeline = pipeline.normalized();
         self
     }
 
     pub fn pipeline(&self) -> Pipeline {
         self.pipeline
+    }
+
+    /// Select how cross-step lane schedules are driven: the event-driven
+    /// single-fan-out executor (default) or the PR-4 task-by-task
+    /// in-order driver (`collectives::lane_exec::LaneDriver`). Results
+    /// are bitwise identical in both.
+    pub fn with_lane_driver(mut self, driver: LaneDriver) -> Self {
+        self.lane_driver = driver;
+        self
+    }
+
+    pub fn lane_driver(&self) -> LaneDriver {
+        self.lane_driver
     }
 
     /// Select the execution substrate: the global persistent pool
@@ -130,42 +156,49 @@ impl<'a> RampX<'a> {
         if self.pipeline.cross && matches!(self.pool, PoolSel::Off) {
             self.pipeline.without_cross()
         } else {
-            self.pipeline
+            self.pipeline.normalized()
         }
     }
 
     /// This executor with cross-step lanes stripped (same chunk policy,
-    /// same pool) — the intra-step fallback for ops whose data movement
-    /// is not lane-aligned (metadata-routed all-to-all/scatter/gather,
-    /// broadcast's native Eq-1 pipeline) and for degenerate payloads.
+    /// same pool) — the intra-step fallback for broadcast's native Eq-1
+    /// pipeline and for degenerate payloads (a zero-length unit cannot
+    /// chunk).
     fn as_intra(&self) -> RampX<'a> {
-        RampX { p: self.p, pipeline: self.pipeline.without_cross(), pool: self.pool.clone() }
+        RampX {
+            p: self.p,
+            pipeline: self.pipeline.without_cross(),
+            pool: self.pool.clone(),
+            lane_driver: self.lane_driver,
+        }
     }
 
     /// Dispatch an operation on arena-resident rank regions. Returns the
     /// emitted transfer plan; results land in the arena's front half.
     ///
-    /// With [`Pipeline::cross`] set, the exchange-kernel family
-    /// (reduce-scatter, all-gather, all-reduce, reduce's scatter half,
-    /// barrier's flag all-reduce) runs on the cross-step chunk-lane
-    /// schedule (`transcoder::lanes`); every other op — and every op
-    /// under [`PoolSel::Off`] — degrades to the intra-step barrier path
-    /// with the same chunk policy. Results are bitwise identical in all
-    /// modes.
+    /// With [`Pipeline::cross`] set, **every** op except broadcast runs
+    /// on the cross-step chunk-lane schedule (`transcoder::lanes`): the
+    /// exchange-kernel family by final-output fraction, the
+    /// metadata-routed all-to-all / scatter / gather by route-chunk
+    /// fraction (route positions are position-stable within a step, so a
+    /// fraction-pure variant exists — see `collectives/README.md`), and
+    /// reduce as one fused reduce-scatter + gather lane program.
+    /// Broadcast keeps its native Eq-1 pipeline (a single tree stage has
+    /// no step boundary to cross); [`PoolSel::Off`] degrades every op to
+    /// the intra-step barrier path (no persistent lanes to schedule on).
+    /// Results are bitwise identical in all modes.
     pub fn run_arena(&self, op: MpiOp, arena: &mut BufferArena) -> Result<CollectivePlan> {
         if self.effective_pipeline().cross {
             match op {
                 MpiOp::ReduceScatter => return self.reduce_scatter_cross(arena),
                 MpiOp::AllGather => return self.all_gather_cross(arena),
                 MpiOp::AllReduce => return self.all_reduce_cross(arena),
-                MpiOp::Reduce { root } => {
-                    let mut plan = self.reduce_scatter_cross(arena)?;
-                    let tail = self.gather(arena, root)?;
-                    plan.steps.extend(tail.steps);
-                    return Ok(plan);
-                }
+                MpiOp::AllToAll => return self.all_to_all_cross(arena),
+                MpiOp::Scatter { root } => return self.scatter_cross(arena, root),
+                MpiOp::Gather { root } => return self.gather_cross(arena, root),
+                MpiOp::Reduce { root } => return self.reduce_cross(arena, root),
                 MpiOp::Barrier => return self.barrier(arena),
-                _ => return self.as_intra().run_arena(op, arena),
+                MpiOp::Broadcast { .. } => return self.as_intra().run_arena(op, arena),
             }
         }
         match op {
@@ -634,6 +667,21 @@ impl<'a> RampX<'a> {
         // rank-order the root's concatenation (chunks arrive in step
         // order); everyone else keeps nothing
         let list = std::mem::take(&mut chunks[root]);
+        self.gather_epilogue(arena, root, list)?;
+        Ok(plan)
+    }
+
+    /// Rank-order the root's concatenated holdings — they arrive in step
+    /// order — and publish it as the only live region. The shared tail
+    /// of the serial and cross-step gathers (pure local copies, no
+    /// wire).
+    fn gather_epilogue(
+        &self,
+        arena: &mut BufferArena,
+        root: usize,
+        list: Vec<(usize, usize)>,
+    ) -> Result<()> {
+        let n = self.p.n_nodes();
         let mut offs = Vec::with_capacity(list.len());
         let mut off = 0usize;
         for &(_, len) in &list {
@@ -658,7 +706,7 @@ impl<'a> RampX<'a> {
         let mut lens = vec![0usize; n];
         lens[root] = total;
         arena.flip(lens);
-        Ok(plan)
+        Ok(())
     }
 
     /// Reduce = reduce-scatter ∘ gather (§6.1.5).
@@ -808,94 +856,168 @@ impl<'a> RampX<'a> {
     // chunk 0 of step r+1 waits for chunk K−1 of step r. The cross-step
     // drivers below chunk by **final-output fraction** instead of by
     // contiguous sub-range: with `unit` the invariant low coordinate
-    // (the final per-rank reduce-scatter slice, or the all-gather
-    // contribution), chunk `c` of *every* step touches exactly the slab
-    // positions `u·unit + fracs[c]` — so chunk `c` of step r+1 depends
-    // only on chunk `c` of step r (its own and its peers'), and the
+    // (the final per-rank reduce-scatter slice, the all-gather
+    // contribution, or a metadata-routed op's route-chunk payload),
+    // chunk `c` of *every* step touches exactly the slab positions
+    // `pos·unit + fracs[c]` — so chunk `c` of step r+1 depends only on
+    // chunk `c` of step r (its own and its peers'), and the
     // dependency-aware lane schedule (`transcoder::lanes`) interleaves
-    // steps with no full-pipeline barrier. Fraction purity also makes
-    // concurrent tasks' read/write sets disjoint on both slab halves,
-    // which the per-chunk `EpochTags` verify at dispatch time. The
-    // per-element computation (member-order summation, member-order
-    // concatenation) is untouched, so results stay bitwise identical to
-    // the serial oracle — enforced across the whole op × fabric × size ×
-    // substrate matrix by `rust/tests/differential.rs`.
+    // steps with no full-pipeline barrier. For all-to-all / scatter /
+    // gather the `pos` coordinates are route metadata, position-stable
+    // within a step, which is what makes their chunk geometry
+    // fraction-pure too. Fraction purity also makes concurrent tasks'
+    // read/write sets disjoint on both slab halves, which the atomic
+    // per-chunk `EpochTags` protocol synchronizes (see
+    // `collectives::lane_exec`): the event-driven driver runs the whole
+    // schedule as ONE pool fan-out with items firing as their epochs
+    // publish; the in-order driver keeps PR-4's task-by-task dispatch as
+    // the differential anchor. The per-element computation (member-order
+    // summation, member-order concatenation, pure copies) is untouched,
+    // so results stay bitwise identical to the serial oracle — enforced
+    // across the whole op × fabric × size × substrate × driver matrix by
+    // `rust/tests/differential.rs`.
 
-    /// Execute lane-aligned exchange stages through the dependency-aware
-    /// lane schedule derived from `plan`. `unit` is the invariant low
-    /// coordinate; `fracs` its chunk partition. The arena's halves are
-    /// driven without intermediate flips ([`BufferArena::split_oriented`])
-    /// and published once at the end.
-    fn run_lane_stages(
+    /// Execute a lane program through the dependency-aware schedule of
+    /// `plan`: validate both, pick the driver, run, and publish the
+    /// single flip-equivalent (the last step wrote the half opposite its
+    /// read half).
+    fn run_lane_program(
         &self,
         arena: &mut BufferArena,
+        prog: &LaneProgram,
+        plan: &CollectivePlan,
+    ) -> Result<()> {
+        ensure!(prog.step_items.len() == plan.steps.len(), "program/plan step mismatch");
+        // program validation happens once per path, at the driver entry
+        // (run_event / run_program_in_order) — not here too
+        let sched = crate::transcoder::lanes::LaneSchedule::from_plan(plan);
+        sched.validate(plan)?;
+        let read_lower0 = arena.front_is_lower();
+        match self.lane_driver {
+            LaneDriver::InOrder => self.run_program_in_order(arena, prog, &sched)?,
+            LaneDriver::Event => match &self.pool {
+                // no persistent lanes: sequential task order (cross under
+                // PoolSel::Off normally degrades before reaching here)
+                PoolSel::Off => self.run_program_in_order(arena, prog, &sched)?,
+                PoolSel::Forced(pool) => lane_exec::run_event(&**pool, prog, &sched, arena)?,
+                PoolSel::Global | PoolSel::Handle(_) => {
+                    let pool = match &self.pool {
+                        PoolSel::Handle(pool) => &**pool,
+                        _ => WorkerPool::global(),
+                    };
+                    let threshold = crate::collectives::arena::par_threshold();
+                    if pool.n_workers() == 0 || prog.total_weight() < threshold {
+                        self.run_program_in_order(arena, prog, &sched)?
+                    } else {
+                        lane_exec::run_event(pool, prog, &sched, arena)?
+                    }
+                }
+            },
+        }
+        let last = prog.step_items.len() - 1;
+        let final_read_lower = read_lower0 ^ (last % 2 == 1);
+        arena.set_front(!final_read_lower, prog.final_lens.clone());
+        Ok(())
+    }
+
+    /// The PR-4 in-order lane driver: tasks dispatched one pool fan-out
+    /// at a time in schedule order, with exact epoch verification before
+    /// each task (a violation is a schedule bug, surfaced as an error).
+    /// Kept as the differential anchor and the bench baseline the
+    /// event-driven driver is measured against.
+    fn run_program_in_order(
+        &self,
+        arena: &mut BufferArena,
+        prog: &LaneProgram,
+        sched: &crate::transcoder::lanes::LaneSchedule,
+    ) -> Result<()> {
+        let n = arena.n_regions();
+        let k = prog.k;
+        let n_steps = prog.step_items.len();
+        prog.validate(n, arena.region_cap())?;
+        let touch = lane_exec::touch_counts(prog, n);
+        let epochs = EpochTags::new(n, k);
+        let mut pending: Vec<u32> = (0..n * k).map(|i| touch[0][i / k]).collect();
+        let slab = lane_exec::SlabView::new(arena.slab_parts());
+        for task in &sched.tasks {
+            let (r, c) = (task.step, task.chunk);
+            let items = &prog.step_items[r];
+            // every item's read/write ranks must sit at exactly epoch r
+            for it in items {
+                epochs.require(it.ranks.iter().copied(), c, r as u32)?;
+            }
+            let work: Vec<Keyed<&LaneItem>> = items
+                .iter()
+                .map(|it| Keyed::new(it.key, it.weight.max(1), it))
+                .collect();
+            let total: usize = items.iter().map(|it| it.weight).sum();
+            let slab = &slab;
+            self.fan_out(work, total, |it: &LaneItem| {
+                // SAFETY: the gates above held, so fraction purity makes
+                // every range this item touches disjoint from every
+                // concurrently touched range (items of one task write
+                // disjoint regions; no other task is in flight).
+                unsafe { lane_exec::execute_item(slab, prog, r, c, it) }
+            });
+            for it in items {
+                for &q in &it.ranks {
+                    let idx = q * k + c;
+                    pending[idx] -= 1;
+                    if pending[idx] == 0 {
+                        if r + 1 < n_steps {
+                            pending[idx] = touch[r + 1][q];
+                        }
+                        epochs.publish([q], c, r as u32 + 1);
+                    }
+                }
+            }
+        }
+        ensure!(
+            epochs.all_at(n_steps as u32),
+            "lane schedule finished with unpublished chunks"
+        );
+        Ok(())
+    }
+
+    /// Lane items of a sequence of exchange stages (one subgroup item
+    /// per stage; subgroups partition the ranks, so touch counts are all
+    /// one and the epoch protocol degenerates to publish-after-task).
+    fn exchange_program(
+        &self,
         stages: &[LaneStage],
         unit: usize,
         fracs: &[(usize, usize)],
-        plan: &CollectivePlan,
-    ) -> Result<()> {
-        let n = self.p.n_nodes();
-        ensure!(!stages.is_empty() && unit > 0, "degenerate lane stages");
-        ensure!(
-            stages.iter().all(|st| st.cur.max(st.out) <= arena.region_cap()),
-            "arena region ({}) too small for a lane stage",
-            arena.region_cap()
-        );
-        let sched = crate::transcoder::lanes::LaneSchedule::from_plan(plan);
-        sched.validate(plan)?;
-        let mut epochs = EpochTags::new(n, fracs.len());
-        let read_lower0 = arena.front_is_lower();
-        for task in &sched.tasks {
-            let (r, c) = (task.step, task.chunk);
-            let stage = &stages[r];
-            // a lane may only start once its read regions are published:
-            // chunk c of every rank must sit at epoch r (fraction purity
-            // extends this single check to the write-after-read and
-            // write-after-write hazards of driving both halves at once)
-            epochs.require(0..n, c, r as u32)?;
-            let (flo, fhi) = fracs[c];
-            let flen = fhi - flo;
-            // interval space: the reduce walks output slots, the concat
-            // walks input-contribution slots
-            let span = if stage.reduce { stage.out } else { stage.cur };
-            let slots = span / unit;
-            {
-                let cap = arena.region_cap();
-                let (front, back) = arena.split_oriented(read_lower0 ^ (r % 2 == 1));
-                let bundles = bundle_regions(back, &stage.rank_groups);
-                let work: Vec<Keyed<(Vec<usize>, Vec<&mut [f32]>)>> = stage
-                    .rank_groups
+    ) -> LaneProgram {
+        let k = fracs.len().max(1);
+        let step_items: Vec<Vec<LaneItem>> = stages
+            .iter()
+            .map(|st| {
+                st.rank_groups
                     .iter()
-                    .cloned()
-                    .zip(bundles)
-                    .map(|(ranks, outs)| {
-                        Keyed::new(ranks[0], slots * flen * ranks.len(), (ranks, outs))
-                    })
-                    .collect();
-                let (reduce, out_len, cur_len) = (stage.reduce, stage.out, stage.cur);
-                self.fan_out(work, slots * flen * n, |(ranks, mut outs)| {
-                    for u in 0..slots {
-                        let (lo, hi) = (u * unit + flo, u * unit + fhi);
-                        if reduce {
-                            reduce_subgroup(front, cap, &ranks, &mut outs, out_len, lo, hi);
-                        } else {
-                            concat_subgroup(front, cap, &ranks, &mut outs, cur_len, lo, hi);
+                    .map(|ranks| {
+                        let span = if st.reduce { st.out } else { st.cur };
+                        LaneItem {
+                            key: ranks[0],
+                            weight: ((span * ranks.len()) / k).max(1),
+                            ranks: ranks.clone(),
+                            op: if st.reduce {
+                                LaneOp::Reduce { out_len: st.out }
+                            } else {
+                                LaneOp::Concat { cur_len: st.cur }
+                            },
                         }
-                    }
-                });
-            }
-            epochs.publish(0..n, c, r as u32 + 1);
+                    })
+                    .collect()
+            })
+            .collect();
+        let out = stages.last().map(|st| st.out).unwrap_or(0);
+        LaneProgram {
+            k,
+            unit,
+            fracs: fracs.to_vec(),
+            step_items,
+            final_lens: vec![out; self.p.n_nodes()],
         }
-        ensure!(
-            epochs.all_at(stages.len() as u32),
-            "lane schedule finished with unpublished chunks"
-        );
-        // single flip-equivalent: the last stage wrote the half opposite
-        // its read half
-        let last = stages.len() - 1;
-        let final_read_lower = read_lower0 ^ (last % 2 == 1);
-        arena.set_front(!final_read_lower, vec![stages[last].out; n]);
-        Ok(())
     }
 
     /// Lane stages of a reduce-scatter of `m` elements per rank.
@@ -977,7 +1099,8 @@ impl<'a> RampX<'a> {
         for st in &stages {
             plan.steps.push(self.lane_plan_step(st, unit, &fracs));
         }
-        self.run_lane_stages(arena, &stages, unit, &fracs, &plan)?;
+        let prog = self.exchange_program(&stages, unit, &fracs);
+        self.run_lane_program(arena, &prog, &plan)?;
         Ok(plan)
     }
 
@@ -998,7 +1121,8 @@ impl<'a> RampX<'a> {
         for st in &stages {
             plan.steps.push(self.lane_plan_step(st, unit, &fracs));
         }
-        self.run_lane_stages(arena, &stages, unit, &fracs, &plan)?;
+        let prog = self.exchange_program(&stages, unit, &fracs);
+        self.run_lane_program(arena, &prog, &plan)?;
         Ok(plan)
     }
 
@@ -1025,9 +1149,441 @@ impl<'a> RampX<'a> {
         for st in &stages {
             plan.steps.push(self.lane_plan_step(st, unit, &fracs));
         }
-        self.run_lane_stages(arena, &stages, unit, &fracs, &plan)?;
+        let prog = self.exchange_program(&stages, unit, &fracs);
+        self.run_lane_program(arena, &prog, &plan)?;
         Ok(plan)
     }
+
+    /// Reduce on **one** end-to-end cross-step lane schedule: the gather
+    /// tail's chunk `c` starts as soon as the final reduce-scatter stage
+    /// publishes chunk `c` — the per-rank reduced slice streams toward
+    /// the root while later fractions are still reducing. Bitwise
+    /// identical to [`Self::reduce`].
+    pub fn reduce_cross(&self, arena: &mut BufferArena, root: usize) -> Result<CollectivePlan> {
+        let p = self.p;
+        let n = p.n_nodes();
+        ensure!(arena.n_regions() == n && root < n, "bad buffers/root");
+        let m = arena.uniform_len()?;
+        ensure!(m % n == 0, "message length {m} not divisible by N={n} (pad with padded_len)");
+        let unit = m / n;
+        if unit == 0 {
+            return self.as_intra().reduce(arena, root);
+        }
+        let k = self.pipeline.without_cross().chunks_for(p, unit);
+        let fracs = chunk_bounds(unit, k);
+        let stages = self.lane_stages_reduce_scatter(m);
+        let mut plan = CollectivePlan::default();
+        for st in &stages {
+            plan.steps.push(self.lane_plan_step(st, unit, &fracs));
+        }
+        let mut prog = self.exchange_program(&stages, unit, &fracs);
+        // the gather tail routes every rank's `unit`-element slice; its
+        // per-contribution fractions coincide with `fracs`, so the
+        // composition boundary is lane-aligned
+        let route = self.gather_route(vec![unit; n], root, k)?;
+        plan.steps.extend(route.plan_steps);
+        prog.step_items.extend(route.step_items);
+        prog.final_lens = vec![0; n];
+        prog.final_lens[root] = m;
+        self.run_lane_program(arena, &prog, &plan)?;
+        self.gather_epilogue(arena, root, route.root_list)?;
+        Ok(plan)
+    }
+
+    // ---- metadata-routed cross-step executors -----------------------
+    //
+    // All-to-all, scatter and gather move *route chunks*: payload units
+    // whose (source offset, destination offset) coordinates are pure
+    // metadata, fixed before any data moves. Sub-dividing every unit by
+    // one fraction partition therefore yields a fraction-pure chunk
+    // geometry — lane `f` of step r+1 reads exactly the positions lane
+    // `f` of step r wrote — and the same lane schedule / epoch protocol
+    // as the exchange family applies. Copies are order-independent, so
+    // results are bitwise identical to the serial executors.
+
+    /// All-to-all on cross-step chunk lanes — bitwise identical to
+    /// [`Self::all_to_all`].
+    pub fn all_to_all_cross(&self, arena: &mut BufferArena) -> Result<CollectivePlan> {
+        let p = self.p;
+        let n = p.n_nodes();
+        ensure!(arena.n_regions() == n, "need {n} regions, got {}", arena.n_regions());
+        let m = arena.uniform_len()?;
+        ensure!(m % n == 0, "message length {m} not divisible by N={n}");
+        let c = m / n;
+        if c == 0 {
+            return self.as_intra().all_to_all(arena);
+        }
+        let k = self.pipeline.without_cross().chunks_for(p, c);
+        let fracs = chunk_bounds(c, k);
+
+        let mut chunks: Vec<Vec<(usize, usize)>> =
+            (0..n).map(|r| (0..n).map(|d| (r, d)).collect()).collect();
+        let mut plan = CollectivePlan::default();
+        let mut step_items: Vec<Vec<LaneItem>> = Vec::new();
+        let active = Step::active(p);
+        for (si, &step) in active.iter().enumerate() {
+            let final_step = si + 1 == active.len();
+            let groups = subgroup_list(p, step);
+            let s = step.size(p);
+            let rank_groups = subgroup_ranks(p, &groups);
+            let rounds_pairs = exchange_rounds(s, step);
+
+            // metadata pass: identical routing to the serial executor —
+            // route chunks never leave their subgroup within a step, so
+            // one lane item per subgroup covers all its ranks
+            let mut new_chunks: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n];
+            let mut items: Vec<LaneItem> = Vec::new();
+            let mut sent_counts: Vec<Vec<Vec<u64>>> = Vec::with_capacity(groups.len());
+            for gr in &rank_groups {
+                let mut mat = vec![vec![0u64; s]; s];
+                let mut moves: Vec<CopyMove> = Vec::new();
+                for (i, &r) in gr.iter().enumerate() {
+                    for (ci, &(src, dst)) in chunks[r].iter().enumerate() {
+                        let kd = rank_digit(p, step, dst);
+                        if kd != i {
+                            mat[i][kd] += 1;
+                        }
+                        let dr = gr[kd];
+                        let pos = if final_step { src } else { new_chunks[dr].len() };
+                        moves.push(CopyMove {
+                            src: r,
+                            src_off: ci * c,
+                            dst: dr,
+                            dst_off: pos * c,
+                            len: c,
+                        });
+                        new_chunks[dr].push((src, dst));
+                    }
+                }
+                items.push(LaneItem {
+                    key: gr[0],
+                    weight: ((moves.len() * c) / k).max(1),
+                    ranks: gr.clone(),
+                    op: LaneOp::Copy { moves },
+                });
+                sent_counts.push(mat);
+            }
+            chunks = new_chunks;
+            step_items.push(items);
+
+            let mut pstep = PlanStep {
+                label: step_label(step),
+                rounds: Vec::new(),
+                reduce_sources: 0,
+                reduce_bytes: 0,
+                trx_q: crate::collectives::ops::trx_groups_per_peer(p, step),
+                step: Some(step),
+                n_chunks: fracs.len(),
+                lane_aligned: true,
+            };
+            for pairs in &rounds_pairs {
+                for &(flo, fhi) in &fracs {
+                    let mut round = Round::default();
+                    for (gi, g) in groups.iter().enumerate() {
+                        for &(from, to) in pairs {
+                            let bytes = sent_counts[gi][from][to] * ((fhi - flo) * 4) as u64;
+                            if bytes > 0 {
+                                round.transfers.push(Transfer::unicast(g[from], g[to], bytes));
+                            }
+                        }
+                    }
+                    pstep.rounds.push(round);
+                }
+            }
+            plan.steps.push(pstep);
+        }
+        for (r, list) in chunks.iter().enumerate() {
+            for &(_, dst) in list {
+                debug_assert_eq!(dst, r, "chunk routed to wrong rank");
+            }
+        }
+        let prog = LaneProgram {
+            k: fracs.len(),
+            unit: c,
+            fracs,
+            step_items,
+            final_lens: vec![m; n],
+        };
+        self.run_lane_program(arena, &prog, &plan)?;
+        Ok(plan)
+    }
+
+    /// Scatter on cross-step chunk lanes — bitwise identical to
+    /// [`Self::scatter`].
+    pub fn scatter_cross(&self, arena: &mut BufferArena, root: usize) -> Result<CollectivePlan> {
+        let p = self.p;
+        let n = p.n_nodes();
+        ensure!(arena.n_regions() == n && root < n, "bad buffers/root");
+        let m = arena.len_of(root);
+        ensure!(m % n == 0, "message length {m} not divisible by N={n}");
+        let c = m / n;
+        if c == 0 {
+            return self.as_intra().scatter(arena, root);
+        }
+        let k = self.pipeline.without_cross().chunks_for(p, c);
+        let fracs = chunk_bounds(c, k);
+
+        let mut chunks: Vec<Vec<usize>> = vec![Vec::new(); n];
+        chunks[root] = (0..n).collect();
+        let mut plan = CollectivePlan::default();
+        let mut step_items: Vec<Vec<LaneItem>> = Vec::new();
+        for step in Step::active(p) {
+            let groups = subgroup_list(p, step);
+            let s = step.size(p);
+            let rank_groups = subgroup_ranks(p, &groups);
+            let n_rounds = if step == Step::S4 && s > 2 { s - 1 } else { 1 };
+            let mut pstep = PlanStep {
+                label: step_label(step),
+                rounds: vec![Round::default(); n_rounds * fracs.len()],
+                reduce_sources: 0,
+                reduce_bytes: 0,
+                trx_q: crate::collectives::ops::trx_groups_per_peer(p, step),
+                step: Some(step),
+                n_chunks: fracs.len(),
+                lane_aligned: true,
+            };
+            let mut new_chunks: Vec<Vec<usize>> = vec![Vec::new(); n];
+            let mut per_dst: Vec<Vec<CopyMove>> = vec![Vec::new(); n];
+            for (g, gr) in groups.iter().zip(&rank_groups) {
+                for (i, (mem, &r)) in g.iter().zip(gr).enumerate() {
+                    if chunks[r].is_empty() {
+                        continue;
+                    }
+                    let mut out_counts = vec![0u64; s];
+                    for (ci, &dst) in chunks[r].iter().enumerate() {
+                        let kd = rank_digit(p, step, dst);
+                        if kd != i {
+                            out_counts[kd] += 1;
+                        }
+                        let dr = gr[kd];
+                        per_dst[dr].push(CopyMove {
+                            src: r,
+                            src_off: ci * c,
+                            dst: dr,
+                            dst_off: new_chunks[dr].len() * c,
+                            len: c,
+                        });
+                        new_chunks[dr].push(dst);
+                    }
+                    for (kd, &cnt) in out_counts.iter().enumerate() {
+                        if cnt > 0 {
+                            let ri = if n_rounds > 1 { (kd + s - i) % s - 1 } else { 0 };
+                            for (f, &(flo, fhi)) in fracs.iter().enumerate() {
+                                pstep.rounds[ri * fracs.len() + f].transfers.push(
+                                    Transfer::unicast(*mem, g[kd], cnt * ((fhi - flo) * 4) as u64),
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            step_items.push(routed_items(n, per_dst, fracs.len()));
+            chunks = new_chunks;
+            plan.steps.push(pstep);
+        }
+        for (r, list) in chunks.iter().enumerate() {
+            ensure!(list.len() == 1 && list[0] == r, "scatter routing failed at rank {r}");
+        }
+        let prog = LaneProgram {
+            k: fracs.len(),
+            unit: c,
+            fracs,
+            step_items,
+            final_lens: vec![c; n],
+        };
+        self.run_lane_program(arena, &prog, &plan)?;
+        Ok(plan)
+    }
+
+    /// Gather on cross-step chunk lanes — bitwise identical to
+    /// [`Self::gather`].
+    ///
+    /// Fraction purity needs every per-contribution move's positions to
+    /// be congruent mod one unit, which holds exactly when all (nonzero)
+    /// contributions are the same length — the MPI-standard gather shape,
+    /// and what reduce's tail routes. **Mixed-length** holdings have
+    /// incongruent per-length fraction sets (lane `f` of a long
+    /// contribution overlaps lane `f′ ≠ f` of a short one laid out
+    /// elsewhere), so they run the schedule as a single lane — still one
+    /// event-driven fan-out, just without cross-chunk concurrency
+    /// (caught by the PR-5 Python protocol mirror; regression-tested).
+    pub fn gather_cross(&self, arena: &mut BufferArena, root: usize) -> Result<CollectivePlan> {
+        let p = self.p;
+        let n = p.n_nodes();
+        ensure!(arena.n_regions() == n && root < n, "bad buffers/root");
+        let lens: Vec<usize> = (0..n).map(|r| arena.len_of(r)).collect();
+        let m_max = lens.iter().copied().max().unwrap_or(0);
+        if m_max == 0 {
+            return self.as_intra().gather(arena, root);
+        }
+        let uniform = lens.iter().copied().filter(|&l| l > 0).all(|l| l == m_max);
+        let (unit, k) = if uniform {
+            (m_max, self.pipeline.without_cross().chunks_for(p, m_max))
+        } else {
+            (m_max, 1)
+        };
+        let total: usize = lens.iter().sum();
+        let route = self.gather_route(lens, root, k)?;
+        let plan = CollectivePlan { steps: route.plan_steps };
+        let mut final_lens = vec![0usize; n];
+        final_lens[root] = total;
+        let prog = LaneProgram {
+            k,
+            unit,
+            fracs: chunk_bounds(unit, k),
+            step_items: route.step_items,
+            final_lens,
+        };
+        self.run_lane_program(arena, &prog, &plan)?;
+        self.gather_epilogue(arena, root, route.root_list)?;
+        Ok(plan)
+    }
+
+    /// Route metadata for a cross-step gather of per-rank holdings
+    /// `lens` toward `root` under `k` fraction lanes: per-step plan
+    /// steps, lane items (one per destination sink, plus no-op
+    /// publishers for untouched ranks) and the root's final holding list
+    /// in arrival order. Mirrors the serial executor's digit routing
+    /// exactly; moves are emitted **per original contribution**, so every
+    /// contribution keeps one fixed fraction partition across all steps
+    /// (the fraction-pure property).
+    fn gather_route(&self, lens: Vec<usize>, root: usize, k: usize) -> Result<GatherRoute> {
+        let p = self.p;
+        let n = p.n_nodes();
+        let root_node = node_of_rank(p, root);
+        let mut chunks: Vec<Vec<(usize, usize)>> = lens
+            .iter()
+            .enumerate()
+            .map(|(r, &l)| if l > 0 { vec![(r, l)] } else { Vec::new() })
+            .collect();
+        let mut plan_steps = Vec::new();
+        let mut step_items = Vec::new();
+        for step in Step::active(p) {
+            let groups = subgroup_list(p, step);
+            let target = member_index(p, step, root_node);
+            let s = step.size(p);
+            let rank_groups = subgroup_ranks(p, &groups);
+            let n_rounds = if step == Step::S4 && s > 2 { s - 1 } else { 1 };
+            let mut new_chunks: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n];
+            let mut per_dst: Vec<Vec<CopyMove>> = vec![Vec::new(); n];
+            // (src, sink, contribution lens, base round) for the wire plan
+            let mut xfers: Vec<(NodeCoord, NodeCoord, Vec<usize>, usize)> = Vec::new();
+            for (g, gr) in groups.iter().zip(&rank_groups) {
+                let sink_rank = gr[target];
+                let sink = g[target];
+                let mut cursor = 0usize;
+                for (i, (mem, &r)) in g.iter().zip(gr).enumerate() {
+                    if chunks[r].is_empty() {
+                        continue;
+                    }
+                    let total: usize = chunks[r].iter().map(|&(_, l)| l).sum();
+                    if i != target && total > 0 {
+                        let ri = if n_rounds > 1 { (i + s - target) % s - 1 } else { 0 };
+                        xfers.push((
+                            *mem,
+                            sink,
+                            chunks[r].iter().map(|&(_, l)| l).collect(),
+                            ri,
+                        ));
+                    }
+                    // the holding moves as one block to `cursor`;
+                    // contribution j keeps its prefix offset within it
+                    let mut off = 0usize;
+                    for &(_, l) in &chunks[r] {
+                        per_dst[sink_rank].push(CopyMove {
+                            src: r,
+                            src_off: off,
+                            dst: sink_rank,
+                            dst_off: cursor + off,
+                            len: l,
+                        });
+                        off += l;
+                    }
+                    cursor += total;
+                    new_chunks[sink_rank].append(&mut chunks[r]);
+                }
+            }
+            let mut pstep = PlanStep {
+                label: step_label(step),
+                rounds: vec![Round::default(); n_rounds * k],
+                reduce_sources: 0,
+                reduce_bytes: 0,
+                trx_q: crate::collectives::ops::trx_groups_per_peer(p, step),
+                step: Some(step),
+                n_chunks: k,
+                lane_aligned: true,
+            };
+            for (src, sink, hold_lens, ri) in xfers {
+                for f in 0..k {
+                    let bytes: u64 = hold_lens
+                        .iter()
+                        .map(|&l| {
+                            let (lo, hi) = frac_bounds(l, k, f);
+                            ((hi - lo) * 4) as u64
+                        })
+                        .sum();
+                    if bytes > 0 {
+                        pstep.rounds[ri * k + f].transfers.push(Transfer::unicast(
+                            src, sink, bytes,
+                        ));
+                    }
+                }
+            }
+            plan_steps.push(pstep);
+            step_items.push(routed_items(n, per_dst, k));
+            chunks = new_chunks;
+        }
+        let root_list = std::mem::take(&mut chunks[root]);
+        ensure!(
+            chunks.iter().all(Vec::is_empty),
+            "gather routing left holdings away from the root"
+        );
+        Ok(GatherRoute { plan_steps, step_items, root_list })
+    }
+}
+
+/// Route metadata of a cross-step gather (see `RampX::gather_route`).
+struct GatherRoute {
+    plan_steps: Vec<PlanStep>,
+    step_items: Vec<Vec<LaneItem>>,
+    /// The root's holdings after the last step, in arrival order.
+    root_list: Vec<(usize, usize)>,
+}
+
+/// Lane items of one metadata-routed step: one [`LaneOp::Copy`] item per
+/// destination rank (it owns that back region; its gate set is the
+/// destination plus every source it reads), and a [`LaneOp::Noop`]
+/// publisher for every rank the step's data movement does not touch —
+/// the epoch chain must advance for all `n` ranks every step so later
+/// steps can gate on them.
+fn routed_items(n: usize, per_dst: Vec<Vec<CopyMove>>, k: usize) -> Vec<LaneItem> {
+    let mut touched = vec![false; n];
+    let mut items: Vec<LaneItem> = Vec::new();
+    for (dr, moves) in per_dst.into_iter().enumerate() {
+        if moves.is_empty() {
+            continue;
+        }
+        let mut ranks: Vec<usize> = moves.iter().map(|mv| mv.src).collect();
+        ranks.push(dr);
+        ranks.sort_unstable();
+        ranks.dedup();
+        for &q in &ranks {
+            touched[q] = true;
+        }
+        let payload: usize = moves.iter().map(|mv| mv.len).sum();
+        items.push(LaneItem {
+            key: dr,
+            weight: (payload / k.max(1)).max(1),
+            ranks,
+            op: LaneOp::Copy { moves },
+        });
+    }
+    for (q, &t) in touched.iter().enumerate() {
+        if !t {
+            items.push(LaneItem { key: q, weight: 1, ranks: vec![q], op: LaneOp::Noop });
+        }
+    }
+    items
 }
 
 /// One lane-aligned exchange stage of a cross-step schedule: one
@@ -1518,9 +2074,17 @@ mod tests {
         use crate::transcoder::lanes::LaneSchedule;
         for p in params_under_test() {
             let n = p.n_nodes();
-            for op in [MpiOp::ReduceScatter, MpiOp::AllGather, MpiOp::AllReduce] {
+            for op in [
+                MpiOp::ReduceScatter,
+                MpiOp::AllGather,
+                MpiOp::AllReduce,
+                MpiOp::AllToAll,
+                MpiOp::Scatter { root: 1 },
+                MpiOp::Gather { root: n - 1 },
+                MpiOp::Reduce { root: 0 },
+            ] {
                 let elems = match op {
-                    MpiOp::AllGather => 6,
+                    MpiOp::AllGather | MpiOp::Gather { .. } => 6,
                     _ => 2 * n,
                 };
                 let mut a = random_inputs(&p, elems, 62);
@@ -1586,6 +2150,121 @@ mod tests {
             .unwrap();
         assert_eq!(serial, crossed);
         assert!(cplan.steps.iter().all(|s| s.lane_aligned));
+    }
+
+    #[test]
+    fn every_op_runs_cross_as_exactly_one_event_fanout() {
+        // the acceptance criterion: on the event-driven path a whole
+        // LaneSchedule — and hence a whole collective — is ONE pool
+        // fan-out, for every op in the nine-op suite (broadcast's native
+        // Eq-1 path is also a single replicate fan-out)
+        use std::sync::Arc;
+        let p = RampParams::new(2, 2, 4, 1);
+        let n = p.n_nodes();
+        let pool = Arc::new(WorkerPool::new(3));
+        let x = RampX::new(&p)
+            .with_pool(PoolSel::Forced(pool.clone()))
+            .with_pipeline(Pipeline::cross(2));
+        for op in MpiOp::all() {
+            let elems = match op {
+                MpiOp::AllGather | MpiOp::Gather { .. } => 4,
+                _ => 2 * n,
+            };
+            let inputs = random_inputs(&p, elems, 91);
+            let mut got = inputs.clone();
+            let before = pool.fan_outs();
+            x.run(op, &mut got).unwrap();
+            assert_eq!(
+                pool.fan_outs() - before,
+                1,
+                "{} must be exactly one fan-out on the event path",
+                op.name()
+            );
+            let mut want = inputs.clone();
+            RampX::new(&p).with_pool(PoolSel::Off).run(op, &mut want).unwrap();
+            assert_eq!(got, want, "{} diverged on the event path", op.name());
+        }
+        assert_eq!(pool.spawn_count(), 3, "steady state must not spawn");
+    }
+
+    #[test]
+    fn event_and_in_order_drivers_agree_bitwise() {
+        use crate::collectives::lane_exec::LaneDriver;
+        use std::sync::Arc;
+        let pool = Arc::new(WorkerPool::new(2));
+        for p in params_under_test() {
+            let n = p.n_nodes();
+            for op in MpiOp::all() {
+                let elems = match op {
+                    MpiOp::AllGather | MpiOp::Gather { .. } => 5,
+                    _ => 2 * n,
+                };
+                let inputs = random_inputs(&p, elems, 93);
+                let mut event = inputs.clone();
+                RampX::new(&p)
+                    .with_pool(PoolSel::Forced(pool.clone()))
+                    .with_pipeline(Pipeline::cross(3))
+                    .with_lane_driver(LaneDriver::Event)
+                    .run(op, &mut event)
+                    .unwrap();
+                let mut inorder = inputs.clone();
+                RampX::new(&p)
+                    .with_pool(PoolSel::Forced(pool.clone()))
+                    .with_pipeline(Pipeline::cross(3))
+                    .with_lane_driver(LaneDriver::InOrder)
+                    .run(op, &mut inorder)
+                    .unwrap();
+                assert_eq!(event, inorder, "{} driver divergence on {p:?}", op.name());
+            }
+        }
+    }
+
+    #[test]
+    fn routed_cross_ops_bitwise_match_serial_and_lane_align() {
+        // the PR-5 tentpole satellite: the metadata-routed ops no longer
+        // fall back to the barrier path — their cross plans are
+        // lane-aligned throughout and results stay bitwise identical
+        for p in params_under_test() {
+            let n = p.n_nodes();
+            for (op, elems) in [
+                (MpiOp::AllToAll, 2 * n),
+                (MpiOp::Scatter { root: n / 2 }, 2 * n),
+                (MpiOp::Gather { root: 1 }, 5),
+                (MpiOp::Reduce { root: n - 1 }, 2 * n),
+            ] {
+                let inputs = random_inputs(&p, elems, 95);
+                let mut serial = inputs.clone();
+                RampX::new(&p).run(op, &mut serial).unwrap();
+                let mut crossed = inputs.clone();
+                let plan = RampX::new(&p)
+                    .with_pipeline(Pipeline::cross(2))
+                    .run(op, &mut crossed)
+                    .unwrap();
+                assert_eq!(serial, crossed, "{} diverged on {p:?}", op.name());
+                assert!(
+                    plan.steps.iter().all(|s| s.lane_aligned),
+                    "{} fell back to the barrier path on {p:?}",
+                    op.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn with_pipeline_clamps_degenerate_cross_chunks() {
+        // satellite regression: cross:1 is clamped at every entry point
+        let p = RampParams::new(2, 2, 4, 1);
+        let x = RampX::new(&p).with_pipeline(Pipeline { chunks: 1, cross: true, ..Pipeline::off() });
+        assert_eq!(x.pipeline().chunks, 2, "executor entry point must clamp cross:1");
+        assert_eq!(Pipeline::from_spec("cross:1").unwrap().chunks, 2);
+        // and the clamped pipeline still runs correctly end to end
+        let n = p.n_nodes();
+        let inputs = random_inputs(&p, 2 * n, 97);
+        let mut got = inputs.clone();
+        x.run(MpiOp::AllReduce, &mut got).unwrap();
+        let mut want = inputs.clone();
+        RampX::new(&p).run(MpiOp::AllReduce, &mut want).unwrap();
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -59,6 +59,24 @@ pub struct TrainConfig {
     /// Pool threads are created once and reused by every training
     /// iteration — the steady-state path spawns nothing.
     pub pool_threads: usize,
+    /// Lane-schedule driver for cross-step runs (CLI `--lane-driver
+    /// event|inorder`): the event-driven single-fan-out executor
+    /// (default) or the PR-4 task-by-task in-order driver. Bitwise
+    /// identical results either way.
+    pub lane_driver: crate::collectives::lane_exec::LaneDriver,
+}
+
+impl TrainConfig {
+    /// The effective executor pipeline: chunk knob + cross flag,
+    /// normalized so a degenerate `cross:1` request is clamped exactly
+    /// like the CLI-spec and engine entry points
+    /// ([`crate::collectives::arena::Pipeline::normalized`]).
+    pub fn pipeline(&self) -> crate::collectives::arena::Pipeline {
+        let mut pipeline =
+            crate::collectives::arena::Pipeline::from_knob(self.pipeline_chunks);
+        pipeline.cross = self.pipeline_cross;
+        pipeline.normalized()
+    }
 }
 
 impl Default for TrainConfig {
@@ -75,6 +93,7 @@ impl Default for TrainConfig {
             pipeline_chunks: 1,
             pipeline_cross: false,
             pool_threads: 0,
+            lane_driver: crate::collectives::lane_exec::LaneDriver::default(),
         }
     }
 }
@@ -237,11 +256,10 @@ fn spawn_worker(
 /// Run a data-parallel training job end to end. See module docs.
 pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     let fabric = fabric_for_workers(cfg.n_workers)?;
-    let mut pipeline = crate::collectives::arena::Pipeline::from_knob(cfg.pipeline_chunks);
-    pipeline.cross = cfg.pipeline_cross;
     let engine = RampEngine::new(fabric)
-        .with_pipeline(pipeline)
-        .with_pool_threads(cfg.pool_threads);
+        .with_pipeline(cfg.pipeline())
+        .with_pool_threads(cfg.pool_threads)
+        .with_lane_driver(cfg.lane_driver);
     let rt = Runtime::open(&cfg.artifacts)?;
     let n_params = rt.manifest.get_usize(&format!("model.{}.n_params", cfg.model))?;
     let vocab = rt.manifest.get_usize(&format!("model.{}.vocab", cfg.model))?;
@@ -365,4 +383,26 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         total_comm_virtual_s: total_comm,
         baseline_comm_virtual_s: baseline_per_step * cfg.steps as f64,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn train_config_pipeline_clamps_degenerate_cross() {
+        // satellite regression: the TrainConfig entry point normalizes
+        // cross:1 exactly like the CLI spec and the engine builders
+        let cfg = TrainConfig { pipeline_chunks: 1, pipeline_cross: true, ..Default::default() };
+        let pl = cfg.pipeline();
+        assert!(pl.cross);
+        assert_eq!(pl.chunks, 2, "TrainConfig must clamp cross:1");
+        // non-degenerate requests pass through unchanged
+        let cfg = TrainConfig { pipeline_chunks: 3, pipeline_cross: true, ..Default::default() };
+        assert_eq!(cfg.pipeline().chunks, 3);
+        let cfg = TrainConfig { pipeline_chunks: 1, pipeline_cross: false, ..Default::default() };
+        assert_eq!(cfg.pipeline(), crate::collectives::arena::Pipeline::off());
+        let cfg = TrainConfig { pipeline_chunks: 0, pipeline_cross: true, ..Default::default() };
+        assert_eq!(cfg.pipeline().chunks, 0, "auto stays auto under cross");
+    }
 }

@@ -11,6 +11,7 @@
 //! (topology, op, message) — there is no runtime scheduler (§6.3).
 
 use crate::collectives::arena::{BufferArena, Pipeline};
+use crate::collectives::lane_exec::LaneDriver;
 use crate::collectives::plan::CollectivePlan;
 use crate::collectives::pool::{PoolSel, WorkerPool};
 use crate::collectives::ramp_x::{padded_len, RampX};
@@ -53,18 +54,37 @@ pub struct RampEngine {
     /// [`Self::with_pool_threads`], or the spawn-per-step fallback.
     /// Results are bitwise identical in all three.
     pub pool: PoolSel,
+    /// How cross-step lane schedules are driven: the event-driven
+    /// single-fan-out executor (default) or the PR-4 task-by-task
+    /// in-order driver. Results are bitwise identical in both.
+    pub lane_driver: LaneDriver,
 }
 
 impl RampEngine {
     pub fn new(p: RampParams) -> Self {
         let fabric = OpticalFabric::new(p.clone());
-        Self { p, fabric, strict: true, pipeline: Pipeline::off(), pool: PoolSel::default() }
+        Self {
+            p,
+            fabric,
+            strict: true,
+            pipeline: Pipeline::off(),
+            pool: PoolSel::default(),
+            lane_driver: LaneDriver::default(),
+        }
     }
 
     /// Engine with chunk-pipelined executors (`Pipeline::auto()` /
-    /// `Pipeline::fixed(k)`).
+    /// `Pipeline::fixed(k)`). Degenerate cross-step chunk counts are
+    /// clamped ([`Pipeline::normalized`]) so `cross:1` cannot silently
+    /// run a one-chunk lane schedule.
     pub fn with_pipeline(mut self, pipeline: Pipeline) -> Self {
-        self.pipeline = pipeline;
+        self.pipeline = pipeline.normalized();
+        self
+    }
+
+    /// Engine with an explicit lane driver (the `--lane-driver` knob).
+    pub fn with_lane_driver(mut self, driver: LaneDriver) -> Self {
+        self.lane_driver = driver;
         self
     }
 
@@ -112,6 +132,7 @@ impl RampEngine {
         let plan = RampX::new(&self.p)
             .with_pipeline(self.pipeline)
             .with_pool(self.pool.clone())
+            .with_lane_driver(self.lane_driver)
             .run_arena(op, arena)?;
         let schedule = if plan.steps.iter().any(|s| s.lane_aligned) {
             crate::transcoder::transcode_plan_lanes(&self.p, &plan)?
@@ -302,6 +323,61 @@ mod tests {
             .execute(MpiOp::AllReduce, &mut d)
             .unwrap();
         assert_eq!(c, d);
+    }
+
+    #[test]
+    fn engine_clamps_degenerate_cross_and_honors_lane_driver() {
+        // satellite regression: cross:1 through the engine entry point
+        let p = fabric_for_workers(16).unwrap();
+        let engine = RampEngine::new(p.clone())
+            .with_pipeline(Pipeline { chunks: 1, cross: true, ..Pipeline::off() });
+        assert_eq!(engine.pipeline.chunks, 2, "engine must clamp cross:1");
+        // both lane drivers produce identical results through the engine
+        let mut r = Xoshiro256::seed_from(41);
+        let inputs: Vec<Vec<f32>> =
+            (0..16).map(|_| (0..64).map(|_| r.next_f32()).collect()).collect();
+        let mut a = inputs.clone();
+        engine.execute(MpiOp::AllReduce, &mut a).unwrap();
+        let mut b = inputs;
+        RampEngine::new(p)
+            .with_pipeline(Pipeline::cross(2))
+            .with_lane_driver(crate::collectives::lane_exec::LaneDriver::InOrder)
+            .execute(MpiOp::AllReduce, &mut b)
+            .unwrap();
+        assert_eq!(a, b, "engine lane drivers diverged");
+    }
+
+    #[test]
+    fn routed_ops_run_cross_through_the_engine_and_stay_clean() {
+        // the lane-transcoded routed plans must execute violation-free
+        // on the fabric referee (strict mode errors otherwise)
+        let p = fabric_for_workers(16).unwrap();
+        let serial = RampEngine::new(p.clone());
+        let crossed = RampEngine::new(p).with_pipeline(Pipeline::cross(3));
+        let mut r = Xoshiro256::seed_from(43);
+        for op in [
+            MpiOp::AllToAll,
+            MpiOp::Scatter { root: 3 },
+            MpiOp::Gather { root: 2 },
+            MpiOp::Reduce { root: 5 },
+        ] {
+            let elems = match op {
+                MpiOp::Gather { .. } => 4,
+                _ => 32,
+            };
+            let inputs: Vec<Vec<f32>> = (0..16)
+                .map(|_| (0..elems).map(|_| r.next_f32()).collect())
+                .collect();
+            let mut a = inputs.clone();
+            let run_a = serial.execute(op, &mut a).unwrap();
+            let mut b = inputs;
+            let run_b = crossed.execute(op, &mut b).unwrap();
+            assert_eq!(a, b, "{} diverged through the engine", op.name());
+            assert!(run_b.report.ok(), "{} violated the fabric", op.name());
+            assert_eq!(run_a.report.wire_bytes, run_b.report.wire_bytes, "{}", op.name());
+            assert_eq!(run_b.schedule.h2h_rounds, run_a.schedule.h2h_rounds, "{}", op.name());
+            assert!(run_b.plan.steps.iter().all(|s| s.lane_aligned), "{}", op.name());
+        }
     }
 
     #[test]

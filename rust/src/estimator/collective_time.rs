@@ -347,11 +347,42 @@ impl CollectiveEstimator {
         // one K for the whole lane-aligned sequence: the deepest chunking
         // any reduce-carrying phase selects (the executors likewise pick
         // one fraction partition for the whole schedule)
-        let k = phases
+        let mut k = phases
             .iter()
             .map(|ph| crate::collectives::ops::phase_chunks(p, ph, pipeline))
             .max()
             .unwrap_or(1);
+        if k <= 1 {
+            // movement-only sequences (the metadata-routed all-to-all /
+            // scatter / gather and all-gather, which PR 5 runs on
+            // fraction-pure lanes too): there is no compute to hide, but
+            // consecutive steps' *wire* overlaps — chunk c of step r+1
+            // streams while chunk c+1 of step r streams. Chunking pays
+            // only when every stage can stream K chunks profitably, so
+            // take the min over phases of the auto selection (capped by
+            // the requested fixed count). With K ≤ √(W_ph / T_slot) for
+            // every phase and ≥ 2 phases, the fill/drain plus slot
+            // overhead never exceeds the overlap savings, keeping
+            // cross ≤ intra (= serial for movement-only ops) — asserted
+            // across the op grid in the tests below. Single-phase plans
+            // have nothing to overlap and stay serial.
+            k = if phases.len() < 2 {
+                1
+            } else {
+                phases
+                    .iter()
+                    .map(|ph| {
+                        pipeline
+                            .chunks_for(p, (ph.per_peer_bytes / 4) as usize)
+                            .min(crate::collectives::arena::pipeline_chunk_count(
+                                p,
+                                ph.per_peer_bytes,
+                            ))
+                    })
+                    .min()
+                    .unwrap_or(1)
+            };
+        }
         if k <= 1 {
             return self.completion_time(op, m, n);
         }
@@ -679,6 +710,55 @@ mod tests {
                     cmp.pipelined.total()
                 );
                 assert!(cmp.cross_speedup() > 1.0, "{mib} MiB @ {n}: no cross-step gain");
+            }
+        }
+    }
+
+    #[test]
+    fn crossstep_prices_routed_ops_below_intra_step() {
+        // PR-5 acceptance satellite: the metadata-routed ops (and the
+        // movement-only all-gather) now run on fraction-pure lanes, so
+        // the cross-step model must price them at or below the
+        // intra-step figure — and strictly below serial at large message
+        // sizes, where the wire of consecutive steps genuinely overlaps
+        for (p, n) in [
+            (RampParams::fig8_example(), 54usize),
+            (RampParams::new(4, 4, 8, 1), 128usize),
+            (RampParams::max_scale(), 65_536usize),
+        ] {
+            let est = CollectiveEstimator::ramp(&p);
+            for op in [
+                MpiOp::AllToAll,
+                MpiOp::Scatter { root: 0 },
+                MpiOp::Gather { root: 0 },
+                MpiOp::AllGather,
+            ] {
+                let cmp = est.pipeline_comparison(op, GB, n, Pipeline::auto());
+                assert!(
+                    cmp.crossstep.total() <= cmp.pipelined.total() * (1.0 + 1e-9),
+                    "{} @ {n}: cross {} > intra {}",
+                    op.name(),
+                    cmp.crossstep.total(),
+                    cmp.pipelined.total()
+                );
+                assert_eq!(cmp.crossstep.h2h, cmp.serial.h2h, "H2H is K-invariant");
+            }
+            // at the bench scales (54/128 nodes, ≥ MBs per peer per
+            // step) the routed ops whose per-step message stays above
+            // the chunking floor genuinely gain from the wire overlap
+            // (at max scale 1 GB shreds to ~16 KiB per peer, below the
+            // profitable-chunk floor, and the model correctly declines
+            // to chunk — covered by the ≤ assertions above)
+            if n <= 128 {
+                for op in [MpiOp::AllToAll, MpiOp::AllGather] {
+                    let cmp = est.pipeline_comparison(op, GB, n, Pipeline::auto());
+                    assert!(
+                        cmp.cross_speedup() > 1.0,
+                        "{} @ {n}: no cross-step gain ({})",
+                        op.name(),
+                        cmp.cross_speedup()
+                    );
+                }
             }
         }
     }

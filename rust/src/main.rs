@@ -4,14 +4,18 @@
 //! ramp info                         architecture summary (Table 2)
 //! ramp repro <figN|tableN|all>      regenerate a paper table/figure
 //! ramp train [--workers N] [--steps N] [--model tiny] [--lr X]
-//!            [--pipeline P] [--pool-threads T]
+//!            [--pipeline P] [--pool-threads T] [--lane-driver D]
 //!                                    real DDP training through the fabric
 //!                                    (P: 0/auto = auto chunk pipelining,
 //!                                     1/off = off, K = fixed chunk count
 //!                                     capped at 16, cross / cross:K =
 //!                                     cross-step chunk lanes; T: 0 = the
 //!                                     global persistent executor pool,
-//!                                     1 = inline, T = a pool of T lanes)
+//!                                     1 = inline, T = a pool of T lanes;
+//!                                     D: event = one fan-out per lane
+//!                                     schedule with atomic epoch waits
+//!                                     (default), inorder = the PR-4
+//!                                     task-by-task driver)
 //! ramp collective <op> [--nodes N] [--mb M] [--oversub S] [--pipeline P]
 //!                                   completion-time comparison for one op,
 //!                                   with a serial vs intra-step vs
@@ -54,7 +58,7 @@ fn run() -> Result<()> {
             println!(
                 "RAMP — flat nanosecond optical network + MPI operations for DDL\n\n\
                  usage:\n  ramp info\n  ramp repro <fig6|fig7|table3|table4|fig15..fig23|all>\n  \
-                 ramp train [--workers N] [--steps N] [--model tiny] [--lr X] [--momentum X] [--pipeline off|auto|cross|K] [--pool-threads T]\n  \
+                 ramp train [--workers N] [--steps N] [--model tiny] [--lr X] [--momentum X] [--pipeline off|auto|cross|K] [--pool-threads T] [--lane-driver event|inorder]\n  \
                  ramp collective <op> [--nodes N] [--mb M] [--oversub S] [--pipeline off|auto|cross|K]\n\n\
                  ops: reduce-scatter all-gather all-reduce all-to-all scatter gather reduce broadcast"
             );
@@ -100,6 +104,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         pipeline_chunks: pipeline.chunks,
         pipeline_cross: pipeline.cross,
         pool_threads: args.get_usize("pool-threads", 0)?,
+        lane_driver: ramp::collectives::lane_exec::LaneDriver::from_spec(
+            &args.get_or("lane-driver", "event"),
+        )?,
     };
     println!(
         "training {} with {} workers for {} steps (lr {}, momentum {})",

@@ -70,21 +70,58 @@ impl FabricReport {
     }
 }
 
-/// The fabric executor. Stateless between runs; `execute` is a pure
-/// function of (params, schedule).
+/// Reusable per-execution occupancy scratch: the four flat interval
+/// lists `execute` builds (subnet in/out, transmitter, receiver). They
+/// were reallocated on every `transcode`/`execute` call on the hot path
+/// (`rust/benches/fabric_bench.rs`); holding them on the fabric and
+/// clearing between schedules keeps their capacity warm across the
+/// thousands of executions a training run performs.
+#[derive(Default)]
+struct OccupancyScratch {
+    subnet_in: Vec<(u64, u64, u64, u32)>,
+    subnet_out: Vec<(u64, u64, u64, u32)>,
+    tx: Vec<(u64, u64, u64, u32)>,
+    rx: Vec<(u64, u64, u64, u32)>,
+}
+
+impl OccupancyScratch {
+    fn clear(&mut self) {
+        self.subnet_in.clear();
+        self.subnet_out.clear();
+        self.tx.clear();
+        self.rx.clear();
+    }
+}
+
+/// The fabric executor. `execute` is a pure function of
+/// (params, schedule) — the only state between runs is the reusable
+/// occupancy scratch, which never affects results.
 pub struct OpticalFabric {
     pub p: RampParams,
+    scratch: std::sync::Mutex<OccupancyScratch>,
 }
 
 impl OpticalFabric {
     pub fn new(p: RampParams) -> Self {
-        Self { p }
+        Self { p, scratch: std::sync::Mutex::new(OccupancyScratch::default()) }
     }
 
     /// Execute a schedule: check every physical rule, compute statistics.
     /// Interval-based (no per-slot grid) so million-slot schedules are
-    /// cheap — see `rust/benches/fabric_bench.rs`.
+    /// cheap — see `rust/benches/fabric_bench.rs`. Reuses the fabric's
+    /// occupancy scratch; a concurrent caller (or a poisoned lock) falls
+    /// back to fresh local buffers, so results never depend on sharing.
     pub fn execute(&self, sched: &Schedule) -> FabricReport {
+        match self.scratch.try_lock() {
+            Ok(mut scratch) => {
+                scratch.clear();
+                self.execute_with(&mut scratch, sched)
+            }
+            Err(_) => self.execute_with(&mut OccupancyScratch::default(), sched),
+        }
+    }
+
+    fn execute_with(&self, scratch: &mut OccupancyScratch, sched: &Schedule) -> FabricReport {
         let p = &self.p;
         let mut report = FabricReport::default();
         let payload = group_slot_payload(p);
@@ -110,10 +147,11 @@ impl OpticalFabric {
         fn endpoint_key(flat: usize, t: usize) -> u64 {
             ((flat as u64) << 12) | t as u64
         }
-        let mut subnet_in: Vec<(u64, u64, u64, u32)> = Vec::with_capacity(n_ins);
-        let mut subnet_out: Vec<(u64, u64, u64, u32)> = Vec::with_capacity(n_ins);
-        let mut tx: Vec<(u64, u64, u64, u32)> = Vec::with_capacity(n_ins);
-        let mut rx: Vec<(u64, u64, u64, u32)> = Vec::with_capacity(n_ins);
+        let OccupancyScratch { subnet_in, subnet_out, tx, rx } = scratch;
+        subnet_in.reserve(n_ins);
+        subnet_out.reserve(n_ins);
+        tx.reserve(n_ins);
+        rx.reserve(n_ins);
 
         for (idx, ins) in sched.instructions.iter().enumerate() {
             self.check_ranges(ins, &mut report);
@@ -154,22 +192,22 @@ impl OpticalFabric {
             }
         }
 
-        check_overlaps(&mut subnet_in, |a, b| Violation::SubnetWavelengthCollision {
+        check_overlaps(subnet_in, |a, b| Violation::SubnetWavelengthCollision {
             detail: format!("instructions #{a} and #{b} share a (subnet, λ, src rack, slot)"),
         })
         .into_iter()
         .for_each(|v| report.violations.push(v));
-        check_overlaps(&mut subnet_out, |a, b| Violation::SubnetWavelengthCollision {
+        check_overlaps(subnet_out, |a, b| Violation::SubnetWavelengthCollision {
             detail: format!("instructions #{a} and #{b} share a (subnet, λ, dst rack, slot)"),
         })
         .into_iter()
         .for_each(|v| report.violations.push(v));
-        check_overlaps(&mut tx, |a, b| Violation::TransmitterBusy {
+        check_overlaps(tx, |a, b| Violation::TransmitterBusy {
             detail: format!("instructions #{a} and #{b} share a transmitter slot"),
         })
         .into_iter()
         .for_each(|v| report.violations.push(v));
-        check_overlaps(&mut rx, |a, b| Violation::ReceiverBusy {
+        check_overlaps(rx, |a, b| Violation::ReceiverBusy {
             detail: format!("instructions #{a} and #{b} share a receiver slot"),
         })
         .into_iter()
@@ -180,7 +218,7 @@ impl OpticalFabric {
         report.subnets_used = {
             let mut c = 0usize;
             let mut last = u64::MAX;
-            for (k, _, _, _) in &subnet_in {
+            for (k, _, _, _) in subnet_in.iter() {
                 let sk = k >> 24;
                 if sk != last {
                     c += 1;
@@ -484,6 +522,41 @@ mod tests {
         let naive = report.makespan_slots as f64 * p.slot_time
             + (p.propagation + p.io_latency) * sched.round_ends.len() as f64;
         assert!(report.completion_time < naive, "chunking must not multiply H2H");
+    }
+
+    #[test]
+    fn scratch_reuse_never_leaks_state_between_schedules() {
+        // one fabric executing many (different) schedules must report
+        // exactly what a fresh fabric reports for each — the reusable
+        // occupancy scratch is capacity-only state
+        let p = RampParams::fig8_example();
+        let reused = OpticalFabric::new(p.clone());
+        let n = p.n_nodes();
+        let mut reports = Vec::new();
+        for (elems, seed) in [(64usize, 1u64), (4 * n, 2), (2 * n, 3)] {
+            for op in [MpiOp::AllReduce, MpiOp::AllToAll, MpiOp::Gather { root: 1 }] {
+                let mut bufs = random_inputs(n, elems.max(n), seed);
+                let plan = RampX::new(&p).run(op, &mut bufs).unwrap();
+                let sched = transcode_plan(&p, &plan).unwrap();
+                let a = reused.execute(&sched);
+                let b = OpticalFabric::new(p.clone()).execute(&sched);
+                assert_eq!(a.violations, b.violations);
+                assert_eq!(a.makespan_slots, b.makespan_slots);
+                assert_eq!(a.wire_bytes, b.wire_bytes);
+                assert_eq!(a.subnets_used, b.subnets_used);
+                assert_eq!(a.slot_transmissions, b.slot_transmissions);
+                reports.push(a);
+            }
+        }
+        assert!(reports.iter().all(FabricReport::ok));
+        // and a repeat of the first schedule still matches itself
+        let mut bufs = random_inputs(n, n, 1);
+        let plan = RampX::new(&p).run(MpiOp::AllReduce, &mut bufs).unwrap();
+        let sched = transcode_plan(&p, &plan).unwrap();
+        let a = reused.execute(&sched);
+        let b = reused.execute(&sched);
+        assert_eq!(a.wire_bytes, b.wire_bytes);
+        assert_eq!(a.violations, b.violations);
     }
 
     #[test]

@@ -321,6 +321,29 @@ mod tests {
     }
 
     #[test]
+    fn multi_base_round_routed_steps_lane_align() {
+        // the scatter/gather shape after PR 5: a step-4 stage with s−1
+        // serialized base rounds, each split into K chunk sub-rounds,
+        // still forms per-chunk edges against its neighbours — a task
+        // owns its chunk of *every* base round
+        let mut plan = CollectivePlan::default();
+        plan.steps.push(chunked_step(3, 1, true)); // steps 1–3 shape
+        plan.steps.push(chunked_step(3, 4, true)); // step 4, DG=5 ⇒ 4 base rounds
+        plan.steps.push(chunked_step(3, 1, true));
+        let s = LaneSchedule::from_plan(&plan);
+        s.validate(&plan).unwrap();
+        assert_eq!(s.tasks.len(), 9);
+        assert_eq!(s.aligned_boundaries(&plan), 2);
+        for (i, t) in s.tasks.iter().enumerate() {
+            if t.step > 0 {
+                assert_eq!(s.deps[i].len(), 1, "per-chunk edge for task {i}");
+                let d = s.deps[i][0];
+                assert_eq!((s.tasks[d].step, s.tasks[d].chunk), (t.step - 1, t.chunk));
+            }
+        }
+    }
+
+    #[test]
     fn unchunked_plan_degenerates_to_step_sequence() {
         let mut plan = CollectivePlan::default();
         for _ in 0..4 {

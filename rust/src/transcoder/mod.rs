@@ -491,9 +491,17 @@ mod tests {
         use crate::collectives::arena::Pipeline;
         for p in [RampParams::fig8_example(), RampParams::new(2, 2, 8, 1)] {
             let n = p.n_nodes();
-            for op in [MpiOp::ReduceScatter, MpiOp::AllGather, MpiOp::AllReduce] {
+            for op in [
+                MpiOp::ReduceScatter,
+                MpiOp::AllGather,
+                MpiOp::AllReduce,
+                MpiOp::AllToAll,
+                MpiOp::Scatter { root: 2 },
+                MpiOp::Gather { root: 1 },
+                MpiOp::Reduce { root: 0 },
+            ] {
                 let elems = match op {
-                    MpiOp::AllGather => 6,
+                    MpiOp::AllGather | MpiOp::Gather { .. } => 6,
                     _ => 2 * n,
                 };
                 let mut bufs = random_inputs(n, elems, 29);

