@@ -39,5 +39,18 @@ fn main() {
             "    -> scratch reuse: {:.2}x vs per-call allocation",
             cold.mean_s / res.mean_s
         );
+        // contention fallbacks: executions that found the scratch mutex
+        // held and paid a fresh allocation instead of the warm map — a
+        // single-threaded bench must never take that path, so a non-zero
+        // count here means the warm column above is quietly mispriced
+        println!(
+            "    -> scratch contention fallbacks: {}",
+            fabric.scratch_fallbacks()
+        );
+        assert_eq!(
+            fabric.scratch_fallbacks(),
+            0,
+            "single-threaded bench hit the scratch try_lock fallback"
+        );
     }
 }

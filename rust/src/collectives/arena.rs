@@ -559,6 +559,67 @@ impl EpochTags {
     pub fn all_at(&self, epoch: u32) -> bool {
         self.tags.iter().all(|t| t.load(std::sync::atomic::Ordering::Acquire) == epoch)
     }
+
+    /// First `(rank, chunk)` not yet at `epoch`, if any — names the
+    /// stalled resource when a lane schedule ends incomplete.
+    pub fn first_below(&self, epoch: u32) -> Option<(usize, usize, u32)> {
+        for rank in 0..self.n {
+            for chunk in 0..self.k {
+                let got = self.get(rank, chunk);
+                if got < epoch {
+                    return Some((rank, chunk, got));
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Condvar parking for [`EpochTags`] waiters. PR 5's event-driven driver
+/// spun-then-yielded on the atomic tags, which burns a hardware thread
+/// for the whole idle (ROADMAP flagged it) and gives the waiter no
+/// deadline to act on. The parker adds a blocking path:
+///
+/// * **waiters** spin briefly, then park on the condvar in bounded
+///   slices ([`EpochParker::PARK_SLICE`]), re-checking their gate under
+///   the mutex before each wait so a publish between check and park can
+///   never be missed;
+/// * **publishers** call [`EpochParker::wake_all`] after storing the
+///   epoch: the empty lock/unlock of the mutex orders the `Release`
+///   epoch store before the notification, closing the lost-wakeup race.
+///
+/// The bounded slices double as the lane watchdog's tick: a waiter
+/// wakes at least every slice, checks progress, and can repair a
+/// recorded dropped publish or fail with a typed error when its
+/// deadline passes (`collectives::lane_exec`).
+#[derive(Debug, Default)]
+pub struct EpochParker {
+    lock: std::sync::Mutex<()>,
+    cv: std::sync::Condvar,
+}
+
+impl EpochParker {
+    /// Upper bound on one parked wait: watchdog tick granularity, and
+    /// the worst-case extra latency should a wakeup ever be lost.
+    pub const PARK_SLICE: std::time::Duration = std::time::Duration::from_millis(1);
+
+    /// Park until notified or the slice elapses — but only if `gate`
+    /// still holds under the mutex (a publish that raced the caller's
+    /// last check makes this a no-op).
+    pub fn park_while(&self, gate: impl Fn() -> bool) {
+        let guard = self.lock.lock().unwrap_or_else(|e| e.into_inner());
+        if gate() {
+            let _ = self.cv.wait_timeout(guard, Self::PARK_SLICE);
+        }
+    }
+
+    /// Wake every parked waiter. Taking (and immediately releasing) the
+    /// mutex first guarantees any waiter between its gate re-check and
+    /// its wait observes this notification.
+    pub fn wake_all(&self) {
+        drop(self.lock.lock().unwrap_or_else(|e| e.into_inner()));
+        self.cv.notify_all();
+    }
 }
 
 /// Payload threshold (total f32 elements written by a step) below which

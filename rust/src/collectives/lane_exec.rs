@@ -54,13 +54,41 @@
 //! differential anchor and bench baseline: same items, same epochs, but
 //! tasks dispatched one fan-out at a time with PR 4's exact-epoch
 //! verification before each.
+//!
+//! ## Self-healing and the lane watchdog (PR 6)
+//!
+//! Waiters no longer spin/yield indefinitely: after a short spin they
+//! park on the arena's [`EpochParker`] in bounded slices, and every
+//! gate carries a **deadline** (the fault plan's watchdog, or
+//! `RAMP_WATCHDOG_MS`, or [`crate::fault::DEFAULT_WATCHDOG_MS`]),
+//! reset whenever the gated epoch makes progress. On deadline expiry
+//! the waiter consults the [`FaultInjector`]'s dropped-publish log:
+//!
+//! * a **recorded** drop is repaired in place — the waiter performs the
+//!   exact countdown-reload + publish the completing item skipped, so
+//!   the run finishes bitwise-identical to the fault-free anchor;
+//! * an **unrecorded** stall (lost publish, dead worker, schedule bug)
+//!   fails the collective with [`RampError::StalledEpoch`] naming the
+//!   exact `(rank, chunk)` epoch that never published — a typed error
+//!   within one watchdog deadline instead of a hang.
+//!
+//! Item panics (injected or real) are **contained**: the first failure
+//! is parked in a shared slot as [`RampError::WorkerPanic`], the run
+//! flips `aborted` so every lane drains without touching the slab, and
+//! [`run_event`] returns the typed error. The pool, its lanes and its
+//! latches all stay healthy — the next fan-out on the same pool runs
+//! normally (see `pool.rs` for the last-resort worker-loop containment
+//! and lane respawn).
 
-use crate::collectives::arena::{frac_bounds, BufferArena, EpochTags, SlabParts};
+use crate::collectives::arena::{frac_bounds, BufferArena, EpochParker, EpochTags, SlabParts};
 use crate::collectives::kernels::{add2_assign, add_assign, STRIP_ELEMS};
 use crate::collectives::pool::WorkerPool;
+use crate::fault::{FaultInjector, FaultPlan, RampError};
 use crate::transcoder::lanes::LaneSchedule;
 use anyhow::{ensure, Result};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 /// How a cross-step lane schedule is driven on the executor pool.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -421,73 +449,165 @@ pub(crate) fn touch_counts(prog: &LaneProgram, n: usize) -> Vec<Vec<u32>> {
         .collect()
 }
 
-/// Spin/park until every rank's chunk epoch reaches `step`. Returns
-/// `false` when the run was aborted (a sibling item panicked) — the
-/// caller must then skip its work and publish nothing. Blocked time is
-/// accumulated into `blocked` (ns).
-fn wait_gate(
-    epochs: &EpochTags,
-    ranks: &[usize],
-    chunk: usize,
-    step: u32,
-    aborted: &AtomicBool,
-    blocked: &AtomicU64,
-) -> bool {
-    let mut t0: Option<std::time::Instant> = None;
+/// Shared state of one event-driven run, threaded through every lane
+/// item: the epoch protocol's tags/countdowns, the parker, the abort
+/// flag plus first-failure slot, and the (optional) fault injector with
+/// the effective watchdog deadline.
+struct EventCtx<'a> {
+    epochs: &'a EpochTags,
+    parker: &'a EpochParker,
+    pending: &'a [AtomicU32],
+    touch: &'a [Vec<u32>],
+    k: usize,
+    aborted: &'a AtomicBool,
+    blocked: &'a AtomicU64,
+    failure: &'a Mutex<Option<RampError>>,
+    faults: Option<&'a FaultInjector>,
+    watchdog: Duration,
+}
+
+impl EventCtx<'_> {
+    /// Record the run's first failure, flip the abort flag and wake
+    /// every parked lane so the fan-out drains promptly.
+    fn fail(&self, err: RampError) {
+        let mut slot = self.failure.lock().unwrap_or_else(|e| e.into_inner());
+        if slot.is_none() {
+            *slot = Some(err);
+        }
+        drop(slot);
+        self.aborted.store(true, Ordering::SeqCst);
+        self.parker.wake_all();
+    }
+
+    /// Watchdog repair: if the publish `(q, chunk) → epoch` was dropped
+    /// *with a trace*, perform the exact countdown-reload + publish the
+    /// completing item skipped. Returns `true` when repaired (the stall
+    /// is resolved; deadlines reset).
+    fn repair(&self, q: usize, chunk: usize, epoch: u32) -> bool {
+        let Some(inj) = self.faults else { return false };
+        if !inj.take_dropped(q, chunk, epoch) {
+            return false;
+        }
+        let next = epoch as usize;
+        if next < self.touch.len() {
+            self.pending[q * self.k + chunk].store(self.touch[next][q], Ordering::Relaxed);
+        }
+        self.epochs.publish([q], chunk, epoch);
+        self.parker.wake_all();
+        true
+    }
+}
+
+/// Wait until every rank's chunk epoch reaches `step`: spin briefly,
+/// then park on the condvar in bounded slices. Returns `false` when the
+/// run was aborted — the caller must then skip its work and publish
+/// nothing. Each rank's gate carries a watchdog deadline (reset on any
+/// epoch progress): on expiry a recorded dropped publish is repaired in
+/// place, anything else fails the run with a typed
+/// [`RampError::StalledEpoch`]. Blocked time is accumulated into the
+/// ctx's `blocked` counter (ns).
+fn wait_gate(ctx: &EventCtx, ranks: &[usize], chunk: usize, step: u32) -> bool {
+    let mut t0: Option<Instant> = None;
     for &q in ranks {
         let mut spins = 0u32;
-        while epochs.get(q, chunk) < step {
-            if aborted.load(Ordering::Relaxed) {
+        let mut deadline: Option<Instant> = None;
+        let mut last = ctx.epochs.get(q, chunk);
+        while last < step {
+            if ctx.aborted.load(Ordering::Relaxed) {
                 return false;
             }
             if t0.is_none() {
-                t0 = Some(std::time::Instant::now());
+                t0 = Some(Instant::now());
             }
             spins += 1;
             if spins < 128 {
                 std::hint::spin_loop();
             } else {
-                std::thread::yield_now();
+                let now = Instant::now();
+                let dl = *deadline.get_or_insert(now + ctx.watchdog);
+                if now >= dl {
+                    if ctx.repair(q, chunk, last + 1) {
+                        deadline = None;
+                    } else {
+                        let waited = t0.map(|t| t.elapsed().as_millis() as u64).unwrap_or(0);
+                        ctx.fail(RampError::StalledEpoch {
+                            rank: q,
+                            chunk,
+                            epoch: last + 1,
+                            waited_ms: waited,
+                        });
+                        return false;
+                    }
+                } else {
+                    ctx.parker.park_while(|| {
+                        ctx.epochs.get(q, chunk) < step && !ctx.aborted.load(Ordering::Relaxed)
+                    });
+                }
+            }
+            let cur = ctx.epochs.get(q, chunk);
+            if cur > last {
+                last = cur;
+                deadline = None;
             }
         }
     }
     if let Some(t) = t0 {
-        blocked.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        ctx.blocked.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
     }
-    !aborted.load(Ordering::Relaxed)
+    !ctx.aborted.load(Ordering::Relaxed)
 }
 
 /// Count down the item's touched ranks; the last toucher of a rank
-/// reloads the next step's count and publishes the epoch.
-fn complete_item(
-    epochs: &EpochTags,
-    pending: &[AtomicU32],
-    touch: &[Vec<u32>],
-    k: usize,
-    ranks: &[usize],
-    chunk: usize,
-    step: usize,
-) {
+/// reloads the next step's count and publishes the epoch (then wakes
+/// parked waiters). An injected publish fault swallows the reload *and*
+/// the publish atomically from the waiters' perspective — either both
+/// happen (normally or via watchdog repair) or neither does.
+fn complete_item(ctx: &EventCtx, ranks: &[usize], chunk: usize, step: usize) {
+    let mut published = false;
     for &q in ranks {
-        let idx = q * k + chunk;
-        if pending[idx].fetch_sub(1, Ordering::AcqRel) == 1 {
+        let idx = q * ctx.k + chunk;
+        if ctx.pending[idx].fetch_sub(1, Ordering::AcqRel) == 1 {
             let next = step + 1;
-            if next < touch.len() {
-                pending[idx].store(touch[next][q], Ordering::Relaxed);
+            if let Some(inj) = ctx.faults {
+                if inj.swallow_publish(q, chunk, next as u32) {
+                    continue;
+                }
             }
-            epochs.publish([q], chunk, next as u32);
+            if next < ctx.touch.len() {
+                ctx.pending[idx].store(ctx.touch[next][q], Ordering::Relaxed);
+            }
+            ctx.epochs.publish([q], chunk, next as u32);
+            published = true;
         }
+    }
+    if published {
+        ctx.parker.wake_all();
+    }
+}
+
+/// Render a contained panic payload for the typed error.
+fn panic_detail(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
 /// Run a whole lane program as **one** event-driven pool fan-out. The
 /// schedule must already be validated against the plan; `fan_outs()`
-/// grows by exactly one (when the pool has workers).
+/// grows by exactly one (when the pool has workers). With a
+/// [`FaultInjector`] attached, injected faults are either survived
+/// bitwise (stragglers, jitter, recorded drops) or surfaced as a typed
+/// [`RampError`] within the watchdog deadline — never a hang.
 pub(crate) fn run_event(
     pool: &WorkerPool,
     prog: &LaneProgram,
     sched: &LaneSchedule,
     arena: &mut BufferArena,
+    faults: Option<&FaultInjector>,
 ) -> Result<()> {
     let n = arena.n_regions();
     let k = prog.k;
@@ -536,36 +656,72 @@ pub(crate) fn run_event(
     }
 
     let slab = SlabView::new(arena.slab_parts());
+    let parker = EpochParker::default();
     let aborted = AtomicBool::new(false);
     let blocked = AtomicU64::new(0);
+    let failure: Mutex<Option<RampError>> = Mutex::new(None);
+    let watchdog = faults.map(|f| f.plan().watchdog()).unwrap_or_else(|| FaultPlan::default().watchdog());
+    let ctx = EventCtx {
+        epochs: &epochs,
+        parker: &parker,
+        pending: &pending,
+        touch: &touch,
+        k,
+        aborted: &aborted,
+        blocked: &blocked,
+        failure: &failure,
+        faults,
+        watchdog,
+    };
     {
-        let (epochs, pending, touch, slab) = (&epochs, &pending[..], &touch[..], &slab);
-        let (aborted, blocked) = (&aborted, &blocked);
+        let (ctx, slab) = (&ctx, &slab);
         pool.run_binned(bins, move |e: Entry| {
-            if !wait_gate(epochs, &e.item.ranks, e.chunk, e.step as u32, aborted, blocked) {
+            if !wait_gate(ctx, &e.item.ranks, e.chunk, e.step as u32) {
                 return; // aborted: drain without touching the slab
             }
-            let run = std::panic::AssertUnwindSafe(|| unsafe {
-                execute_item(slab, prog, e.step, e.chunk, e.item);
+            if let Some(inj) = ctx.faults {
+                inj.jitter(e.step, e.chunk, e.item.key);
+                inj.straggle(e.step, e.chunk, e.item.key);
+            }
+            let run = std::panic::AssertUnwindSafe(|| {
+                if let Some(inj) = ctx.faults {
+                    if inj.should_panic(e.step, e.chunk, e.item.key) {
+                        panic!("injected worker panic");
+                    }
+                }
+                unsafe {
+                    execute_item(slab, prog, e.step, e.chunk, e.item);
+                }
             });
             match std::panic::catch_unwind(run) {
-                Ok(()) => {
-                    complete_item(epochs, pending, touch, k, &e.item.ranks, e.chunk, e.step);
-                }
-                Err(payload) => {
-                    // wake every parked lane before unwinding, or the
-                    // fan-out's completion latch would wait forever
-                    aborted.store(true, Ordering::SeqCst);
-                    std::panic::resume_unwind(payload);
-                }
+                Ok(()) => complete_item(ctx, &e.item.ranks, e.chunk, e.step),
+                // containment: park the typed error, drain every lane —
+                // the pool, its latch and its sibling fan-outs survive
+                Err(payload) => ctx.fail(RampError::WorkerPanic {
+                    step: e.step,
+                    chunk: e.chunk,
+                    key: e.item.key,
+                    detail: panic_detail(payload.as_ref()),
+                }),
             }
         });
     }
     pool.add_lane_blocked_ns(blocked.load(Ordering::Relaxed));
-    ensure!(
-        epochs.all_at(n_steps as u32),
-        "event-driven lane run finished with unpublished chunks"
-    );
+    if let Some(err) = failure.lock().unwrap_or_else(|e| e.into_inner()).take() {
+        return Err(err.into());
+    }
+    // a dropped publish of the *final* step has no later gate to repair
+    // it mid-run — sweep the log before declaring the run incomplete
+    if faults.is_some() {
+        while let Some((q, c, got)) = epochs.first_below(n_steps as u32) {
+            if !ctx.repair(q, c, got + 1) {
+                break;
+            }
+        }
+    }
+    if let Some((q, c, got)) = epochs.first_below(n_steps as u32) {
+        return Err(RampError::StalledEpoch { rank: q, chunk: c, epoch: got + 1, waited_ms: 0 }.into());
+    }
     Ok(())
 }
 
@@ -681,7 +837,7 @@ mod tests {
         let sched = LaneSchedule::from_plan(&plan);
         sched.validate(&plan).unwrap();
         let fan_outs = pool.fan_outs();
-        run_event(&pool, &prog, &sched, &mut arena).unwrap();
+        run_event(&pool, &prog, &sched, &mut arena, None).unwrap();
         assert_eq!(pool.fan_outs(), fan_outs + 1, "one fan-out for the whole program");
         arena.set_front(true, prog.final_lens.clone());
         // oracle: step 0 then step 1 member-order reductions
@@ -732,6 +888,137 @@ mod tests {
             ..Default::default()
         });
         let sched = LaneSchedule::from_plan(&plan);
-        assert!(run_event(&pool, &prog, &sched, &mut arena).is_err());
+        assert!(run_event(&pool, &prog, &sched, &mut arena, None).is_err());
+    }
+
+    /// Build the two-subgroup reduce fixture of
+    /// `event_run_executes_a_two_step_reduce_program` (4 ranks, 2 steps,
+    /// K = 2 lanes) plus its fault-free expected fronts.
+    fn reduce_fixture() -> (LaneProgram, LaneSchedule, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        use crate::collectives::arena::chunk_bounds;
+        let (n, unit, m) = (4usize, 2usize, 8usize);
+        let bufs: Vec<Vec<f32>> =
+            (0..n).map(|r| (0..m).map(|i| (r * m + i) as f32).collect()).collect();
+        let groups: Vec<Vec<usize>> = vec![vec![0, 1], vec![2, 3]];
+        let item = |ranks: Vec<usize>, out: usize| LaneItem {
+            key: ranks[0],
+            weight: out,
+            ranks,
+            op: LaneOp::Reduce { out_len: out },
+        };
+        let prog = LaneProgram {
+            k: 2,
+            unit,
+            fracs: chunk_bounds(unit, 2),
+            step_items: vec![
+                groups.iter().map(|g| item(g.clone(), 4)).collect(),
+                groups.iter().map(|g| item(g.clone(), 2)).collect(),
+            ],
+            final_lens: vec![2; n],
+        };
+        let mut plan = CollectivePlan::default();
+        for _ in 0..2 {
+            plan.steps.push(crate::collectives::plan::PlanStep {
+                rounds: vec![crate::collectives::plan::Round::default(); 2],
+                n_chunks: 2,
+                lane_aligned: true,
+                ..Default::default()
+            });
+        }
+        let sched = LaneSchedule::from_plan(&plan);
+        sched.validate(&plan).unwrap();
+        let step = |b: &[Vec<f32>], out: usize| -> Vec<Vec<f32>> {
+            let mut next = vec![vec![0.0f32; out]; b.len()];
+            for g in &groups {
+                for (i, &mem) in g.iter().enumerate() {
+                    for e in 0..out {
+                        next[mem][e] = g.iter().map(|&q| b[q][i * out + e]).sum();
+                    }
+                }
+            }
+            next
+        };
+        let expect = step(&step(&bufs, 4), 2);
+        (prog, sched, bufs, expect)
+    }
+
+    #[test]
+    fn dropped_publishes_are_watchdog_repaired_bitwise() {
+        let pool = WorkerPool::new(2);
+        let (prog, sched, bufs, expect) = reduce_fixture();
+        // drop *every* publish: each gate stalls to its (short) deadline,
+        // repairs the recorded drop, and the final sweep repairs the
+        // last step's unobserved publishes — results stay bitwise
+        let plan = FaultPlan { seed: 5, drop_permille: 1000, watchdog_ms: 40, ..FaultPlan::default() };
+        let inj = FaultInjector::new(plan);
+        let mut arena = BufferArena::with_capacity(4, 8);
+        arena.load(&bufs).unwrap();
+        run_event(&pool, &prog, &sched, &mut arena, Some(&inj)).unwrap();
+        arena.set_front(true, prog.final_lens.clone());
+        for r in 0..4 {
+            assert_eq!(arena.front(r), &expect[r][..], "rank {r} diverged under drop repair");
+        }
+        assert!(inj.drops() > 0, "the plan must actually drop publishes");
+        assert_eq!(inj.repairs(), inj.drops(), "every drop must be repaired exactly once");
+    }
+
+    #[test]
+    fn lost_publishes_fail_typed_within_the_deadline() {
+        let pool = WorkerPool::new(2);
+        let (prog, sched, bufs, _) = reduce_fixture();
+        let plan = FaultPlan { seed: 5, lose_permille: 1000, watchdog_ms: 40, ..FaultPlan::default() };
+        let inj = FaultInjector::new(plan);
+        let mut arena = BufferArena::with_capacity(4, 8);
+        arena.load(&bufs).unwrap();
+        let t0 = std::time::Instant::now();
+        let err = run_event(&pool, &prog, &sched, &mut arena, Some(&inj)).unwrap_err();
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(5),
+            "typed failure must arrive near the watchdog deadline, not hang"
+        );
+        let ramp = err.downcast_ref::<RampError>().expect("typed error");
+        assert!(
+            matches!(ramp, RampError::StalledEpoch { .. }),
+            "lost publish must surface as StalledEpoch, got {ramp}"
+        );
+        assert!(inj.losses() > 0);
+        // the pool survives: a clean rerun on the same pool is bitwise
+        let (prog, sched, bufs, expect) = reduce_fixture();
+        let mut arena = BufferArena::with_capacity(4, 8);
+        arena.load(&bufs).unwrap();
+        run_event(&pool, &prog, &sched, &mut arena, None).unwrap();
+        arena.set_front(true, prog.final_lens.clone());
+        for r in 0..4 {
+            assert_eq!(arena.front(r), &expect[r][..], "rank {r} diverged after typed failure");
+        }
+    }
+
+    #[test]
+    fn injected_panics_are_contained_and_typed() {
+        let pool = WorkerPool::new(2);
+        let (prog, sched, bufs, _) = reduce_fixture();
+        let plan = FaultPlan { seed: 9, panic_permille: 1000, watchdog_ms: 40, ..FaultPlan::default() };
+        let inj = FaultInjector::new(plan);
+        let mut arena = BufferArena::with_capacity(4, 8);
+        arena.load(&bufs).unwrap();
+        let err = run_event(&pool, &prog, &sched, &mut arena, Some(&inj)).unwrap_err();
+        let ramp = err.downcast_ref::<RampError>().expect("typed error");
+        match ramp {
+            RampError::WorkerPanic { detail, .. } => {
+                assert!(detail.contains("injected worker panic"), "detail: {detail}")
+            }
+            other => panic!("panic must surface as WorkerPanic, got {other}"),
+        }
+        assert!(inj.panics() > 0);
+        // zero poisoned pools: the very next fan-out on this pool succeeds
+        let (prog, sched, bufs, expect) = reduce_fixture();
+        let mut arena = BufferArena::with_capacity(4, 8);
+        arena.load(&bufs).unwrap();
+        run_event(&pool, &prog, &sched, &mut arena, None).unwrap();
+        arena.set_front(true, prog.final_lens.clone());
+        for r in 0..4 {
+            assert_eq!(arena.front(r), &expect[r][..], "rank {r} diverged after contained panic");
+        }
+        assert_eq!(pool.contained_panics(), 0, "lane containment must beat the pool's last resort");
     }
 }

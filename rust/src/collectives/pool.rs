@@ -99,11 +99,23 @@ struct WorkerShared {
 struct Shared {
     workers: Vec<WorkerShared>,
     shutdown: AtomicBool,
+    /// Panics that unwound past a job's own handling and were contained
+    /// by the worker loop's last-resort `catch_unwind` (each one means a
+    /// layer above lost its guard — worth surfacing, hence the counter).
+    contained_panics: AtomicU64,
 }
 
 /// Completion latch for one fan-out call: counts outstanding jobs and
 /// wakes the caller when the last one finishes. Jobs decrement through a
 /// drop guard, so a panicking kernel still releases the caller.
+///
+/// Latch repair under panics: the counter's mutex is only ever held for
+/// the increment/decrement itself (never across a job body), every
+/// acquisition goes through [`lock_recover`] (poisoning cannot stick),
+/// and the decrement rides a drop guard that runs even while unwinding
+/// — so a panicking job can never leave the latch over-counted and park
+/// the caller, and the *next* fan-out always starts from a fresh latch
+/// on its own stack frame. One poisoned job poisons nothing.
 ///
 /// The counter lives **under the mutex**: the latch itself sits on the
 /// fan-out call's stack frame and workers reach it through a
@@ -219,6 +231,7 @@ impl WorkerPool {
                 .map(|_| WorkerShared { queue: Mutex::new(Vec::new()), ready: Condvar::new() })
                 .collect(),
             shutdown: AtomicBool::new(false),
+            contained_panics: AtomicU64::new(0),
         });
         let pool = Self {
             shared: shared.clone(),
@@ -291,6 +304,41 @@ impl WorkerPool {
     /// Credit epoch-wait time observed by an event-driven lane fan-out.
     pub fn add_lane_blocked_ns(&self, ns: u64) {
         self.lane_blocked_ns.fetch_add(ns, Ordering::SeqCst);
+    }
+
+    /// Panics contained by the worker loop's last-resort
+    /// `catch_unwind` (see [`worker_loop`]); zero in a healthy run —
+    /// job-level guards are expected to win.
+    pub fn contained_panics(&self) -> u64 {
+        self.shared.contained_panics.load(Ordering::SeqCst)
+    }
+
+    /// Join and respawn any worker whose OS thread has died (a panic
+    /// that escaped even the worker loop's containment, or a `tsan`/OOM
+    /// kill). Each respawn re-attaches the same worker index, so queue
+    /// ownership and sticky lanes are unchanged; `spawn_count` grows by
+    /// the number of repairs (the zero-steady-state-spawn assertions
+    /// treat any growth as a red flag, which a respawn is). Called at
+    /// the top of every blocking fan-out — an `is_finished` probe per
+    /// worker, free in the healthy case.
+    pub fn respawn_dead(&self) -> usize {
+        let mut handles = lock_recover(&self.handles);
+        let mut repaired = 0usize;
+        for (w, h) in handles.iter_mut().enumerate() {
+            if !h.is_finished() {
+                continue;
+            }
+            let shared = self.shared.clone();
+            let fresh = std::thread::Builder::new()
+                .name(format!("ramp-pool-{w}"))
+                .spawn(move || worker_loop(&shared, w))
+                .expect("respawning pool worker");
+            self.spawns.fetch_add(1, Ordering::SeqCst);
+            let dead = std::mem::replace(h, fresh);
+            let _ = dead.join();
+            repaired += 1;
+        }
+        repaired
     }
 
     /// The lane `key` is currently stuck to, if any (test hook).
@@ -416,6 +464,9 @@ impl WorkerPool {
     pub fn run_binned<W: Send>(&self, bins: Vec<Vec<W>>, f: impl Fn(W) + Sync) {
         assert_eq!(bins.len(), self.lanes(), "one bin per lane");
         let _token = lock_recover(&self.blocking);
+        // lane repair: a parking fan-out onto a dead lane would wait on
+        // that lane's queued items forever — re-attach dead workers first
+        self.respawn_dead();
         self.dispatch(bins, &f);
     }
 
@@ -525,7 +576,16 @@ fn worker_loop(shared: &Shared, idx: usize) {
             }
         };
         match job {
-            Some(j) => j(),
+            // last-resort containment: every job built by `dispatch`
+            // already catches its own panics (and lane items catch
+            // theirs), but a panic escaping here would kill the worker
+            // and deadlock every later fan-out binned onto its queue —
+            // contain it, count it, keep the lane alive
+            Some(j) => {
+                if std::panic::catch_unwind(std::panic::AssertUnwindSafe(j)).is_err() {
+                    shared.contained_panics.fetch_add(1, Ordering::SeqCst);
+                }
+            }
             None => return,
         }
     }
@@ -674,6 +734,28 @@ mod tests {
                 bin.iter().map(|w| seen.iter().position(|s| s == w).unwrap()).collect();
             assert!(pos.windows(2).all(|p| p[0] < p[1]), "bin {bin:?} reordered");
         }
+    }
+
+    #[test]
+    fn a_panicking_fanout_does_not_poison_the_pool() {
+        let pool = WorkerPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_keyed_forced((0..8).map(|i| Keyed::new(i, 1, i)).collect(), |w| {
+                if w == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "the caller still sees the panic");
+        assert_eq!(pool.respawn_dead(), 0, "workers survive a contained job panic");
+        assert_eq!(pool.contained_panics(), 0, "the job guard wins before the last resort");
+        // the next fan-out on the same pool completes normally
+        let hits = AtomicUsize::new(0);
+        pool.run_keyed_forced((0..8).map(|i| Keyed::new(i, 1, i)).collect(), |w| {
+            hits.fetch_add(w + 1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 36, "post-panic fan-out lost items");
+        assert_eq!(pool.spawn_count(), 2, "no respawn was needed");
     }
 
     #[test]

@@ -57,6 +57,10 @@ pub struct RampX<'a> {
     pipeline: Pipeline,
     pool: PoolSel,
     lane_driver: LaneDriver,
+    /// Fault hooks the event-driven lane executor consults (chaos tests
+    /// and the engine's `--faults` path); `None` runs fault-free with
+    /// the default watchdog.
+    faults: Option<std::sync::Arc<crate::fault::FaultInjector>>,
 }
 
 impl<'a> RampX<'a> {
@@ -70,6 +74,7 @@ impl<'a> RampX<'a> {
             pipeline: Pipeline::off(),
             pool: PoolSel::default(),
             lane_driver: LaneDriver::default(),
+            faults: None,
         }
     }
 
@@ -115,6 +120,15 @@ impl<'a> RampX<'a> {
 
     pub fn pool(&self) -> &PoolSel {
         &self.pool
+    }
+
+    /// Attach a fault injector: the event-driven lane executor consults
+    /// it at every gate/completion and either survives the injected
+    /// faults bitwise or returns a typed [`crate::fault::RampError`]
+    /// within the plan's watchdog deadline.
+    pub fn with_faults(mut self, faults: std::sync::Arc<crate::fault::FaultInjector>) -> Self {
+        self.faults = Some(faults);
+        self
     }
 
     /// Fan keyed subgroup work out on the configured substrate. Items
@@ -170,6 +184,7 @@ impl<'a> RampX<'a> {
             pipeline: self.pipeline.without_cross(),
             pool: self.pool.clone(),
             lane_driver: self.lane_driver,
+            faults: self.faults.clone(),
         }
     }
 
@@ -899,7 +914,9 @@ impl<'a> RampX<'a> {
                 // no persistent lanes: sequential task order (cross under
                 // PoolSel::Off normally degrades before reaching here)
                 PoolSel::Off => self.run_program_in_order(arena, prog, &sched)?,
-                PoolSel::Forced(pool) => lane_exec::run_event(&**pool, prog, &sched, arena)?,
+                PoolSel::Forced(pool) => {
+                    lane_exec::run_event(&**pool, prog, &sched, arena, self.faults.as_deref())?
+                }
                 PoolSel::Global | PoolSel::Handle(_) => {
                     let pool = match &self.pool {
                         PoolSel::Handle(pool) => &**pool,
@@ -909,7 +926,7 @@ impl<'a> RampX<'a> {
                     if pool.n_workers() == 0 || prog.total_weight() < threshold {
                         self.run_program_in_order(arena, prog, &sched)?
                     } else {
-                        lane_exec::run_event(pool, prog, &sched, arena)?
+                        lane_exec::run_event(pool, prog, &sched, arena, self.faults.as_deref())?
                     }
                 }
             },

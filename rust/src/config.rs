@@ -33,6 +33,22 @@ pub fn fuzz_replay_seed() -> Option<u64> {
     std::env::var("RAMP_FUZZ_REPLAY").ok()?.parse().ok()
 }
 
+/// `RAMP_FAULT_SEED` — override the seed of every fault plan
+/// (`--faults` specs and the chaos suite's built-in plans). The CI
+/// chaos job sweeps this to replay the suite under a seed matrix; a
+/// failing chaos case replays exactly by exporting the seed it printed.
+pub fn fault_seed_override() -> Option<u64> {
+    std::env::var("RAMP_FAULT_SEED").ok()?.parse().ok()
+}
+
+/// `RAMP_WATCHDOG_MS` — override the lane-execution watchdog deadline
+/// (milliseconds) for fault plans that don't set their own. Unset or
+/// unparsable values fall back to
+/// [`crate::fault::DEFAULT_WATCHDOG_MS`].
+pub fn watchdog_ms_override() -> Option<u64> {
+    std::env::var("RAMP_WATCHDOG_MS").ok()?.parse().ok()
+}
+
 /// Message sizes swept by the comparison harness (Fig 20–22).
 pub const SWEEP_MESSAGES: [u64; 4] = [
     10 * crate::units::MB,

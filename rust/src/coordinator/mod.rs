@@ -64,6 +64,13 @@ pub struct TrainConfig {
     /// (default) or the PR-4 task-by-task in-order driver. Bitwise
     /// identical results either way.
     pub lane_driver: crate::collectives::lane_exec::LaneDriver,
+    /// Deterministic fault plan for the gradient all-reduce data plane
+    /// (CLI `--faults <spec>`): seeded stragglers/jitter/dropped
+    /// publishes are absorbed (results stay bitwise), failed transceiver
+    /// groups trigger degraded-fabric replanning, and unrecoverable
+    /// faults surface as typed [`crate::fault::RampError`]s instead of
+    /// hangs. `None` = fault-free.
+    pub faults: Option<crate::fault::FaultPlan>,
 }
 
 impl TrainConfig {
@@ -94,6 +101,7 @@ impl Default for TrainConfig {
             pipeline_cross: false,
             pool_threads: 0,
             lane_driver: crate::collectives::lane_exec::LaneDriver::default(),
+            faults: None,
         }
     }
 }
@@ -256,10 +264,13 @@ fn spawn_worker(
 /// Run a data-parallel training job end to end. See module docs.
 pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     let fabric = fabric_for_workers(cfg.n_workers)?;
-    let engine = RampEngine::new(fabric)
+    let mut engine = RampEngine::new(fabric)
         .with_pipeline(cfg.pipeline())
         .with_pool_threads(cfg.pool_threads)
         .with_lane_driver(cfg.lane_driver);
+    if let Some(plan) = &cfg.faults {
+        engine = engine.with_faults(plan.clone());
+    }
     let rt = Runtime::open(&cfg.artifacts)?;
     let n_params = rt.manifest.get_usize(&format!("model.{}.n_params", cfg.model))?;
     let vocab = rt.manifest.get_usize(&format!("model.{}.vocab", cfg.model))?;

@@ -16,6 +16,7 @@ use crate::collectives::plan::CollectivePlan;
 use crate::collectives::pool::{PoolSel, WorkerPool};
 use crate::collectives::ramp_x::{padded_len, RampX};
 use crate::collectives::MpiOp;
+use crate::fault::{FaultInjector, FaultPlan};
 use crate::simulator::{FabricReport, OpticalFabric};
 use crate::topology::ramp::RampParams;
 use crate::transcoder::{transcode_plan, Schedule};
@@ -58,6 +59,11 @@ pub struct RampEngine {
     /// single-fan-out executor (default) or the PR-4 task-by-task
     /// in-order driver. Results are bitwise identical in both.
     pub lane_driver: LaneDriver,
+    /// The seeded fault plan (`--faults <spec>`), if any: its injector
+    /// is threaded into every executor run, its failed transceiver
+    /// groups mark the fabric degraded, and every schedule is replanned
+    /// onto the surviving groups before the referee executes it.
+    faults: Option<(FaultPlan, Arc<FaultInjector>)>,
 }
 
 impl RampEngine {
@@ -70,7 +76,33 @@ impl RampEngine {
             pipeline: Pipeline::off(),
             pool: PoolSel::default(),
             lane_driver: LaneDriver::default(),
+            faults: None,
         }
+    }
+
+    /// Engine under a seeded fault plan: execution-layer faults
+    /// (stragglers, jitter, drops, panics) flow into the lane executor
+    /// through a shared [`FaultInjector`]; failed transceiver groups are
+    /// marked on the fabric referee (so un-replanned use is a
+    /// violation) and every transcoded schedule is regenerated on the
+    /// surviving groups — bytes conserved, completion time degraded.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.fabric =
+            OpticalFabric::new(self.p.clone()).with_failed_trx(plan.failed_trx.clone());
+        let injector = FaultInjector::new(plan.clone());
+        self.faults = Some((plan, injector));
+        self
+    }
+
+    /// The engine's fault plan, if one is attached.
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.faults.as_ref().map(|(plan, _)| plan)
+    }
+
+    /// The shared injector of the engine's fault plan (test hook:
+    /// counters for drops/repairs/panics/straggles).
+    pub fn fault_injector(&self) -> Option<&Arc<FaultInjector>> {
+        self.faults.as_ref().map(|(_, inj)| inj)
     }
 
     /// Engine with chunk-pipelined executors (`Pipeline::auto()` /
@@ -129,16 +161,25 @@ impl RampEngine {
     /// released at its dependencies' completion slot — not the
     /// base-round-major barrier stream.
     pub fn execute_arena(&self, op: MpiOp, arena: &mut BufferArena) -> Result<CollectiveRun> {
-        let plan = RampX::new(&self.p)
+        let mut x = RampX::new(&self.p)
             .with_pipeline(self.pipeline)
             .with_pool(self.pool.clone())
-            .with_lane_driver(self.lane_driver)
-            .run_arena(op, arena)?;
-        let schedule = if plan.steps.iter().any(|s| s.lane_aligned) {
+            .with_lane_driver(self.lane_driver);
+        if let Some((_, injector)) = &self.faults {
+            x = x.with_faults(injector.clone());
+        }
+        let plan = x.run_arena(op, arena)?;
+        let mut schedule = if plan.steps.iter().any(|s| s.lane_aligned) {
             crate::transcoder::transcode_plan_lanes(&self.p, &plan)?
         } else {
             transcode_plan(&self.p, &plan)?
         };
+        if let Some((fault_plan, _)) = &self.faults {
+            if !fault_plan.failed_trx.is_empty() {
+                schedule =
+                    crate::fault::replan_schedule(&self.p, &schedule, &fault_plan.failed_trx)?;
+            }
+        }
         let report = self.fabric.execute(&schedule);
         if self.strict && !report.ok() {
             bail!(
@@ -378,6 +419,53 @@ mod tests {
             assert_eq!(run_b.schedule.h2h_rounds, run_a.schedule.h2h_rounds, "{}", op.name());
             assert!(run_b.plan.steps.iter().all(|s| s.lane_aligned), "{}", op.name());
         }
+    }
+
+    #[test]
+    fn degraded_fabric_replans_conserving_bytes_and_results() {
+        let p = fabric_for_workers(16).unwrap();
+        let clean = RampEngine::new(p.clone());
+        let degraded = RampEngine::new(p)
+            .with_faults(FaultPlan { seed: 3, failed_trx: vec![1], ..FaultPlan::default() });
+        assert_eq!(degraded.fault_plan().unwrap().failed_trx, vec![1]);
+        let mut r = Xoshiro256::seed_from(47);
+        for op in MpiOp::all() {
+            let elems = match op {
+                MpiOp::AllGather | MpiOp::Gather { .. } => 4,
+                _ => 32,
+            };
+            let inputs: Vec<Vec<f32>> =
+                (0..16).map(|_| (0..elems).map(|_| r.next_f32()).collect()).collect();
+            let mut a = inputs.clone();
+            let run_a = clean.execute(op, &mut a).unwrap();
+            let mut b = inputs;
+            let run_b = degraded.execute(op, &mut b).unwrap();
+            assert_eq!(a, b, "{} diverged on the degraded fabric", op.name());
+            // strict mode passed, so the replanned schedule avoided the
+            // failed group; Table-8 byte conservation holds exactly
+            assert!(run_b.report.ok(), "{}: {:?}", op.name(), run_b.report.violations);
+            assert_eq!(run_a.report.wire_bytes, run_b.report.wire_bytes, "{}", op.name());
+            assert!(
+                run_b.schedule.instructions.iter().all(|i| i.trx != 1),
+                "{} still uses the failed transceiver group",
+                op.name()
+            );
+            assert!(
+                run_b.completion_time() >= run_a.completion_time(),
+                "{}: a degraded fabric cannot be faster",
+                op.name()
+            );
+        }
+        // an unplannable fabric (every group failed) is a typed error
+        let x = clean.p.x;
+        let dead = RampEngine::new(clean.p.clone())
+            .with_faults(FaultPlan { failed_trx: (0..x).collect(), ..FaultPlan::default() });
+        let mut bufs: Vec<Vec<f32>> = (0..16).map(|_| vec![1.0; 32]).collect();
+        let err = dead.execute(MpiOp::AllReduce, &mut bufs).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<crate::fault::RampError>(),
+            Some(crate::fault::RampError::NoSurvivingTransceivers { .. })
+        ));
     }
 
     #[test]

@@ -309,6 +309,59 @@ impl CollectiveEstimator {
         }
     }
 
+    /// Completion time on a **degraded fabric** with `failed` transceiver
+    /// groups down — the analytic mirror of
+    /// [`crate::fault::replan_schedule`]. The replanner keeps surviving
+    /// groups' traffic in place and re-issues each failed group's
+    /// instructions time-disjoint after its base round, so per
+    /// latency-bearing phase the wire time stretches by the expected
+    /// number of appended sub-rounds: a phase driving `q` of the `x`
+    /// groups has chance `q/x` of touching each failed group, giving the
+    /// scale factor `1 + q·failed/x` (all groups used ⇒ `1 + failed`,
+    /// one group ⇒ `1 + failed/x`). H2H and compute are unchanged —
+    /// sub-rounds stream back-to-back inside the same algorithmic round
+    /// and the reduction work is byte-conserved (Table 8 still holds on
+    /// the replanned schedule). `failed = 0` reproduces
+    /// [`Self::completion_time`] exactly; baselines have no transceiver
+    /// groups and return their ordinary figure. `failed` is clamped to
+    /// `x − 1`: with every group down there is no plan to price
+    /// (the replanner returns
+    /// [`crate::fault::RampError::NoSurvivingTransceivers`]).
+    pub fn completion_time_degraded(
+        &self,
+        op: MpiOp,
+        m: u64,
+        n: usize,
+        failed: usize,
+    ) -> CollectiveTime {
+        if n <= 1 {
+            return CollectiveTime::default();
+        }
+        let p = match &self.system {
+            System::Ramp(p) => p,
+            _ => return self.completion_time(op, m, n),
+        };
+        let failed = failed.min(p.x.saturating_sub(1));
+        let h2h_per_round = p.propagation + p.io_latency;
+        let mut t = CollectiveTime::default();
+        for ph in job_phases(p, op, m, n) {
+            let rate = if matches!(op, MpiOp::Broadcast { .. }) {
+                p.node_capacity() * p.slot_efficiency()
+            } else {
+                (ph.q * p.b) as f64 * p.line_rate * p.slot_efficiency()
+            };
+            let wire = ph.per_peer_bytes as f64 * 8.0 / rate;
+            let stretch = 1.0 + (ph.q.min(p.x) * failed) as f64 / p.x as f64;
+            let compute = self.device.reduce_pass(ph.reduce_sources, ph.reduce_bytes as f64);
+            t.add(
+                ph.rounds as f64 * h2h_per_round,
+                ph.rounds as f64 * wire * stretch,
+                ph.rounds as f64 * compute,
+            );
+        }
+        t
+    }
+
     /// Completion time with **cross-step chunk lanes**: the whole
     /// lane-aligned phase sequence runs as one software pipeline over
     /// `K` fraction chunks, so the per-step chunk drain of intra-step
@@ -786,6 +839,50 @@ mod tests {
         assert_eq!(
             ramp.completion_time_crossstep(MpiOp::AllReduce, GB, 1, Pipeline::auto()).total(),
             0.0
+        );
+    }
+
+    #[test]
+    fn degraded_pricing_is_anchored_and_monotone() {
+        // failed = 0 is exactly the fault-free model; more failed groups
+        // never price cheaper; H2H and compute are replan-invariant
+        // (sub-rounds stream inside the same algorithmic rounds and the
+        // reduction bytes are conserved); baselines ignore the knob
+        for p in [RampParams::fig8_example(), RampParams::max_scale()] {
+            let est = CollectiveEstimator::ramp(&p);
+            let n = p.n_nodes().min(4096);
+            for op in MpiOp::all() {
+                let base = est.completion_time(op, GB, n);
+                assert_eq!(base, est.completion_time_degraded(op, GB, n, 0), "{}", op.name());
+                let mut prev = base.total();
+                for failed in 1..p.x {
+                    let d = est.completion_time_degraded(op, GB, n, failed);
+                    assert!(
+                        d.total() >= prev - 1e-12,
+                        "{} failed={failed}: {} < {prev}",
+                        op.name(),
+                        d.total()
+                    );
+                    assert_eq!(d.h2h, base.h2h, "H2H is replan-invariant");
+                    assert_eq!(d.compute, base.compute, "reduce bytes conserved");
+                    prev = d.total();
+                }
+                // clamping: "all groups down" prices like x−1 (the
+                // replanner itself errors there; the estimator stays total)
+                assert_eq!(
+                    est.completion_time_degraded(op, GB, n, p.x),
+                    est.completion_time_degraded(op, GB, n, p.x - 1)
+                );
+            }
+            // a reduce-carrying op with real wire time strictly degrades
+            let base = est.completion_time(MpiOp::AllReduce, GB, n);
+            let one = est.completion_time_degraded(MpiOp::AllReduce, GB, n, 1);
+            assert!(one.total() > base.total(), "{} !> {}", one.total(), base.total());
+        }
+        let ring = CollectiveEstimator::fat_tree_ring(1.0);
+        assert_eq!(
+            ring.completion_time(MpiOp::AllReduce, GB, 4096),
+            ring.completion_time_degraded(MpiOp::AllReduce, GB, 4096, 2)
         );
     }
 

@@ -45,6 +45,7 @@ pub mod coordinator;
 pub mod ddl;
 pub mod engine;
 pub mod estimator;
+pub mod fault;
 pub mod metrics;
 pub mod optics;
 pub mod repro;

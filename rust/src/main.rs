@@ -5,6 +5,7 @@
 //! ramp repro <figN|tableN|all>      regenerate a paper table/figure
 //! ramp train [--workers N] [--steps N] [--model tiny] [--lr X]
 //!            [--pipeline P] [--pool-threads T] [--lane-driver D]
+//!            [--faults SPEC]
 //!                                    real DDP training through the fabric
 //!                                    (P: 0/auto = auto chunk pipelining,
 //!                                     1/off = off, K = fixed chunk count
@@ -15,11 +16,17 @@
 //!                                     D: event = one fan-out per lane
 //!                                     schedule with atomic epoch waits
 //!                                     (default), inorder = the PR-4
-//!                                     task-by-task driver)
+//!                                     task-by-task driver; SPEC: a seeded
+//!                                     fault plan, e.g.
+//!                                     `seed=7,trx=0,straggle=100,drop=50`
+//!                                     — see [`ramp::fault::FaultPlan`])
 //! ramp collective <op> [--nodes N] [--mb M] [--oversub S] [--pipeline P]
+//!                      [--faults SPEC]
 //!                                   completion-time comparison for one op,
 //!                                   with a serial vs intra-step vs
-//!                                   cross-step pipelining readout
+//!                                   cross-step pipelining readout, plus a
+//!                                   degraded-fabric price when SPEC fails
+//!                                   transceiver groups
 //! ```
 
 use anyhow::{anyhow, bail, Result};
@@ -58,8 +65,9 @@ fn run() -> Result<()> {
             println!(
                 "RAMP — flat nanosecond optical network + MPI operations for DDL\n\n\
                  usage:\n  ramp info\n  ramp repro <fig6|fig7|table3|table4|fig15..fig23|all>\n  \
-                 ramp train [--workers N] [--steps N] [--model tiny] [--lr X] [--momentum X] [--pipeline off|auto|cross|K] [--pool-threads T] [--lane-driver event|inorder]\n  \
-                 ramp collective <op> [--nodes N] [--mb M] [--oversub S] [--pipeline off|auto|cross|K]\n\n\
+                 ramp train [--workers N] [--steps N] [--model tiny] [--lr X] [--momentum X] [--pipeline off|auto|cross|K] [--pool-threads T] [--lane-driver event|inorder] [--faults SPEC]\n  \
+                 ramp collective <op> [--nodes N] [--mb M] [--oversub S] [--pipeline off|auto|cross|K] [--faults SPEC]\n\n\
+                 fault SPEC: seed=S,trx=A:B,straggle=P,straggle-us=U,jitter=NS,drop=P,lose=P,panic=P,watchdog=MS (permille probabilities)\n\n\
                  ops: reduce-scatter all-gather all-reduce all-to-all scatter gather reduce broadcast"
             );
             Ok(())
@@ -92,6 +100,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     // `--pipeline off|auto|cross|cross:K|K`
     let pipeline =
         ramp::collectives::arena::Pipeline::from_spec(&args.get_or("pipeline", "1"))?;
+    let faults = args.get("faults").map(ramp::fault::FaultPlan::from_spec).transpose()?;
     let cfg = TrainConfig {
         model: args.get_or("model", "tiny"),
         n_workers: args.get_usize("workers", 4)?,
@@ -107,11 +116,20 @@ fn cmd_train(args: &Args) -> Result<()> {
         lane_driver: ramp::collectives::lane_exec::LaneDriver::from_spec(
             &args.get_or("lane-driver", "event"),
         )?,
+        faults,
     };
     println!(
         "training {} with {} workers for {} steps (lr {}, momentum {})",
         cfg.model, cfg.n_workers, cfg.steps, cfg.lr, cfg.momentum
     );
+    if let Some(plan) = &cfg.faults {
+        println!(
+            "fault injection on (seed {}): {} trx group(s) failed, watchdog {:?}",
+            plan.seed,
+            plan.failed_trx.len(),
+            plan.watchdog()
+        );
+    }
     let rep = train(&cfg)?;
     let mut t = Table::new(vec!["step", "loss", "compute", "network (virtual)"]);
     for s in &rep.stats {
@@ -199,6 +217,38 @@ fn cmd_collective(args: &Args) -> Result<()> {
         fmt_time(cmp.crossstep.total()),
         cmp.cross_speedup()
     );
+    if let Some(spec) = args.get("faults") {
+        let plan = ramp::fault::FaultPlan::from_spec(spec)?;
+        let p = RampParams::max_scale();
+        let mut failed = plan.failed_trx.clone();
+        failed.retain(|&g| g < p.x);
+        failed.sort_unstable();
+        failed.dedup();
+        if failed.is_empty() {
+            println!(
+                "faults (seed {}): no transceiver groups down — replan not needed, \
+                 completion unchanged ({})",
+                plan.seed,
+                fmt_time(r.total())
+            );
+        } else if failed.len() >= p.x {
+            println!(
+                "faults (seed {}): all {} transceiver groups down — no surviving \
+                 subnet to replan onto",
+                plan.seed, p.x
+            );
+        } else {
+            let d = ramp.completion_time_degraded(op, m, n, failed.len());
+            println!(
+                "degraded fabric ({} of {} trx groups down): {} — {:.2}x the \
+                 fault-free completion, conservation-clean replan",
+                failed.len(),
+                p.x,
+                fmt_time(d.total()),
+                d.total() / r.total()
+            );
+        }
+    }
     Ok(())
 }
 

@@ -28,6 +28,11 @@ pub enum Violation {
     WavelengthFilterMismatch { detail: String },
     OutOfRange { detail: String },
     PayloadOverrun { detail: String },
+    /// The instruction uses a transceiver group marked failed on this
+    /// fabric ([`OpticalFabric::with_failed_trx`]) — degraded-fabric
+    /// replanning (`fault::replan_schedule`) must have moved it to a
+    /// surviving group.
+    FailedTransceiver { detail: String },
 }
 
 impl std::fmt::Display for Violation {
@@ -39,6 +44,7 @@ impl std::fmt::Display for Violation {
             Violation::WavelengthFilterMismatch { detail } => ("filter mismatch", detail),
             Violation::OutOfRange { detail } => ("out of range", detail),
             Violation::PayloadOverrun { detail } => ("payload overrun", detail),
+            Violation::FailedTransceiver { detail } => ("failed transceiver", detail),
         };
         write!(f, "{k}: {d}")
     }
@@ -94,30 +100,72 @@ impl OccupancyScratch {
 }
 
 /// The fabric executor. `execute` is a pure function of
-/// (params, schedule) — the only state between runs is the reusable
-/// occupancy scratch, which never affects results.
+/// (params, schedule, failed transceivers) — the only mutable state
+/// between runs is the reusable occupancy scratch, which never affects
+/// results.
 pub struct OpticalFabric {
     pub p: RampParams,
     scratch: std::sync::Mutex<OccupancyScratch>,
+    /// Transceiver groups marked failed: any instruction using one is a
+    /// [`Violation::FailedTransceiver`] (degraded fabrics must be
+    /// replanned, not silently driven through dead optics).
+    failed_trx: Vec<usize>,
+    /// Times `execute` could not take the scratch lock and fell back to
+    /// fresh allocations. The fallback is silent by design (results
+    /// never depend on sharing) — but each one is the warm-scratch
+    /// optimisation *not happening*, so it is counted and surfaced in
+    /// `fabric_bench`'s cold-vs-warm readout instead of hidden.
+    scratch_fallbacks: std::sync::atomic::AtomicU64,
 }
 
 impl OpticalFabric {
     pub fn new(p: RampParams) -> Self {
-        Self { p, scratch: std::sync::Mutex::new(OccupancyScratch::default()) }
+        Self {
+            p,
+            scratch: std::sync::Mutex::new(OccupancyScratch::default()),
+            failed_trx: Vec::new(),
+            scratch_fallbacks: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Mark transceiver groups as failed (deduplicated, out-of-range
+    /// indices dropped): every use by an executed schedule becomes a
+    /// [`Violation::FailedTransceiver`].
+    pub fn with_failed_trx(mut self, mut failed: Vec<usize>) -> Self {
+        failed.retain(|&t| t < self.p.x);
+        failed.sort_unstable();
+        failed.dedup();
+        self.failed_trx = failed;
+        self
+    }
+
+    pub fn failed_trx(&self) -> &[usize] {
+        &self.failed_trx
+    }
+
+    /// Times the warm occupancy scratch was unavailable and `execute`
+    /// fell back to cold allocations (concurrent caller or poisoned
+    /// lock) — the previously-silent fallback, now a metric.
+    pub fn scratch_fallbacks(&self) -> u64 {
+        self.scratch_fallbacks.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// Execute a schedule: check every physical rule, compute statistics.
     /// Interval-based (no per-slot grid) so million-slot schedules are
     /// cheap — see `rust/benches/fabric_bench.rs`. Reuses the fabric's
     /// occupancy scratch; a concurrent caller (or a poisoned lock) falls
-    /// back to fresh local buffers, so results never depend on sharing.
+    /// back to fresh local buffers — counted in
+    /// [`Self::scratch_fallbacks`] — so results never depend on sharing.
     pub fn execute(&self, sched: &Schedule) -> FabricReport {
         match self.scratch.try_lock() {
             Ok(mut scratch) => {
                 scratch.clear();
                 self.execute_with(&mut scratch, sched)
             }
-            Err(_) => self.execute_with(&mut OccupancyScratch::default(), sched),
+            Err(_) => {
+                self.scratch_fallbacks.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                self.execute_with(&mut OccupancyScratch::default(), sched)
+            }
         }
     }
 
@@ -265,6 +313,16 @@ impl OpticalFabric {
         }
         if ins.trx >= p.x {
             bad!("transceiver group {} ≥ x={}", ins.trx, p.x);
+        }
+        if self.failed_trx.binary_search(&ins.trx).is_ok()
+            || self.failed_trx.binary_search(&ins.subnet.trx).is_ok()
+        {
+            report.violations.push(Violation::FailedTransceiver {
+                detail: format!(
+                    "transceiver group {} (subnet {:?}) is failed on this fabric",
+                    ins.trx, ins.subnet
+                ),
+            });
         }
         if ins.subnet.src_group >= p.x || ins.subnet.dst_group >= p.x {
             bad!("subnet groups {:?} out of range", ins.subnet);
@@ -557,6 +615,51 @@ mod tests {
         let b = reused.execute(&sched);
         assert_eq!(a.wire_bytes, b.wire_bytes);
         assert_eq!(a.violations, b.violations);
+    }
+
+    #[test]
+    fn scratch_fallbacks_are_counted_not_silent() {
+        let p = RampParams::fig8_example();
+        let fabric = OpticalFabric::new(p.clone());
+        let n = p.n_nodes();
+        let mut bufs = random_inputs(n, 2 * n, 17);
+        let plan = RampX::new(&p).run(MpiOp::AllReduce, &mut bufs).unwrap();
+        let sched = transcode_plan(&p, &plan).unwrap();
+        let warm = fabric.execute(&sched);
+        assert_eq!(fabric.scratch_fallbacks(), 0, "uncontended executes must stay warm");
+        // hold the scratch lock to force the cold-path fallback
+        let guard = fabric.scratch.lock().unwrap();
+        let cold = fabric.execute(&sched);
+        drop(guard);
+        assert_eq!(fabric.scratch_fallbacks(), 1, "the fallback must be counted");
+        // results never depend on which path ran
+        assert_eq!(warm.violations, cold.violations);
+        assert_eq!(warm.wire_bytes, cold.wire_bytes);
+        assert_eq!(warm.makespan_slots, cold.makespan_slots);
+        // back off the lock: warm again, counter unchanged
+        let again = fabric.execute(&sched);
+        assert_eq!(fabric.scratch_fallbacks(), 1);
+        assert_eq!(again.wire_bytes, warm.wire_bytes);
+    }
+
+    #[test]
+    fn failed_trx_flags_use_and_survives_replan() {
+        let p = RampParams::fig8_example();
+        let n = p.n_nodes();
+        let mut bufs = random_inputs(n, 2 * n, 19);
+        let plan = RampX::new(&p).run(MpiOp::AllReduce, &mut bufs).unwrap();
+        let sched = transcode_plan(&p, &plan).unwrap();
+        let fabric = OpticalFabric::new(p.clone()).with_failed_trx(vec![0, 0, 99]);
+        assert_eq!(fabric.failed_trx(), &[0], "dedup + range filter");
+        let flagged = fabric.execute(&sched);
+        assert!(
+            flagged.violations.iter().any(|v| matches!(v, Violation::FailedTransceiver { .. })),
+            "a schedule using a failed group must be flagged"
+        );
+        let degraded = crate::fault::replan_schedule(&p, &sched, &[0]).unwrap();
+        let report = fabric.execute(&degraded);
+        assert!(report.ok(), "replanned schedule still violates: {:?}", report.violations);
+        assert_eq!(report.wire_bytes, flagged.wire_bytes, "replanning must conserve bytes");
     }
 
     #[test]

@@ -12,13 +12,23 @@
 //!   lane, the map never grows beyond the distinct keys dispatched, and
 //!   assignments stay stable once made (a second barrage re-hits them).
 
+//!
+//! The chaos suite below (PR 6) adds seeded fault schedules on top of the
+//! same barrage machinery: recoverable faults (stragglers, jitter,
+//! dropped-then-repaired publishes) must stay bitwise against the scoped
+//! anchor; unrecoverable faults (lost publishes, worker panics) must
+//! return the typed [`ramp::fault::RampError`] — never hang (every chaos
+//! run sits under a test-level timeout guard) and never poison the pool.
+
 use ramp::collectives::arena::Pipeline;
 use ramp::collectives::pool::{PoolSel, WorkerPool};
 use ramp::collectives::ramp_x::RampX;
 use ramp::collectives::MpiOp;
+use ramp::fault::{FaultInjector, FaultPlan, RampError};
 use ramp::rng::Xoshiro256;
 use ramp::topology::ramp::RampParams;
 use std::sync::Arc;
+use std::time::Duration;
 
 fn random_inputs(n: usize, elems: usize, seed: u64) -> Vec<Vec<f32>> {
     let mut r = Xoshiro256::seed_from(seed);
@@ -184,4 +194,182 @@ fn concurrent_callers_on_the_global_pool_stay_correct() {
         "global pool spawned threads under concurrent collectives"
     );
     assert!(WorkerPool::global().sticky_lanes_valid());
+}
+
+// ---------------------------------------------------------------------------
+// chaos suite: seeded fault schedules through the event-driven executors
+// ---------------------------------------------------------------------------
+
+/// Run `f` on a helper thread and panic if it does not finish within
+/// `secs` — the suite's hang guard: a fault must surface as a bitwise
+/// result or a typed error, never as a stuck test.
+fn with_timeout<T: Send + 'static>(
+    secs: u64,
+    what: &str,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let tag = what.to_string();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(v) => v,
+        Err(_) => panic!("{tag}: hung past the {secs}s chaos guard"),
+    }
+}
+
+fn elems_for(op: MpiOp, n: usize) -> usize {
+    match op {
+        MpiOp::AllGather | MpiOp::Gather { .. } => 5,
+        _ => 2 * n,
+    }
+}
+
+#[test]
+fn chaos_recoverable_faults_stay_bitwise_for_every_op() {
+    // Seeded recoverable chaos (stragglers + jitter + dropped publishes
+    // with a hot watchdog) across all nine ops and a seed matrix: every
+    // run must match the fault-free scoped anchor bitwise, and every
+    // recorded drop must have been watchdog-repaired. `RAMP_FAULT_SEED`
+    // (the CI matrix axis) shifts the whole schedule — the fuzz axis
+    // proving stragglers and jitter never influence results.
+    let base = ramp::config::fault_seed_override().unwrap_or(11);
+    with_timeout(240, "recoverable chaos", move || {
+        let pool = Arc::new(WorkerPool::new(3));
+        let p = RampParams::fig8_example();
+        let n = p.n_nodes();
+        let mut fired = (0u64, 0u64, 0u64); // (straggles, jitters, drops)
+        for seed in [base, base.wrapping_add(1), base.wrapping_add(2)] {
+            let inj = FaultInjector::new(FaultPlan::recoverable_chaos(seed));
+            assert!(inj.plan().is_recoverable());
+            let x = RampX::new(&p)
+                .with_pool(PoolSel::Forced(pool.clone()))
+                .with_pipeline(Pipeline::cross(3))
+                .with_faults(inj.clone());
+            for (i, op) in MpiOp::all().into_iter().enumerate() {
+                let inputs =
+                    random_inputs(n, elems_for(op, n), seed.wrapping_mul(31) + 500 + i as u64);
+                let mut got = inputs.clone();
+                x.run(op, &mut got)
+                    .unwrap_or_else(|e| panic!("{} seed {seed}: {e:#}", op.name()));
+                let mut want = inputs.clone();
+                RampX::new(&p).with_pool(PoolSel::Off).run(op, &mut want).unwrap();
+                assert_eq!(got, want, "{} seed {seed} diverged under chaos", op.name());
+            }
+            assert_eq!(
+                inj.repairs(),
+                inj.drops(),
+                "seed {seed}: a dropped publish went unrepaired"
+            );
+            assert_eq!(inj.losses(), 0, "recoverable plan must not lose");
+            assert_eq!(inj.panics(), 0, "recoverable plan must not panic");
+            fired.0 += inj.straggles();
+            fired.1 += inj.jitters();
+            fired.2 += inj.drops();
+        }
+        // the chaos must actually chaos: across the seed matrix every
+        // recoverable fault class fires at least once
+        assert!(fired.0 > 0, "no straggler ever fired");
+        assert!(fired.1 > 0, "no jitter ever fired");
+        assert!(fired.2 > 0, "no publish was ever dropped");
+        assert_eq!(pool.spawn_count(), 3, "chaos must not respawn lanes");
+    });
+}
+
+#[test]
+fn chaos_lost_publishes_return_typed_errors_never_hang() {
+    // Certain loss (lose=1000‰) with a 40 ms watchdog: the collective
+    // must fail with `RampError::StalledEpoch` naming the stalled
+    // (rank, chunk, epoch) — within the guard, never a hang — and the
+    // pool must keep serving fault-free collectives bitwise afterwards.
+    with_timeout(120, "lost publishes", || {
+        let pool = Arc::new(WorkerPool::new(3));
+        let p = RampParams::fig8_example();
+        let n = p.n_nodes();
+        let inj = FaultInjector::new(FaultPlan {
+            seed: 9,
+            lose_permille: 1000,
+            watchdog_ms: 40,
+            ..FaultPlan::default()
+        });
+        let x = RampX::new(&p)
+            .with_pool(PoolSel::Forced(pool.clone()))
+            .with_pipeline(Pipeline::cross(3))
+            .with_faults(inj.clone());
+        let mut bufs = random_inputs(n, 2 * n, 77);
+        let err = x.run(MpiOp::AllReduce, &mut bufs).expect_err("certain loss must fail");
+        match err.downcast_ref::<RampError>() {
+            Some(RampError::StalledEpoch { rank, chunk, epoch, waited_ms }) => {
+                assert!(*rank < n, "stalled rank {rank} out of range");
+                assert!(*epoch > 0, "stalled epoch must be a real step");
+                assert!(
+                    *waited_ms >= 40,
+                    "watchdog fired before its deadline: {waited_ms} ms (chunk {chunk})"
+                );
+            }
+            other => panic!("expected StalledEpoch, got {other:?} ({err:#})"),
+        }
+        assert!(inj.losses() > 0, "the loss schedule never fired");
+        assert_eq!(inj.repairs(), 0, "losses leave no trace to repair");
+        // pool survival: the same pool serves a fault-free run bitwise
+        let clean = RampX::new(&p)
+            .with_pool(PoolSel::Forced(pool.clone()))
+            .with_pipeline(Pipeline::cross(3));
+        let inputs = random_inputs(n, 2 * n, 78);
+        let mut got = inputs.clone();
+        clean.run(MpiOp::AllReduce, &mut got).unwrap();
+        let mut want = inputs.clone();
+        RampX::new(&p).with_pool(PoolSel::Off).run(MpiOp::AllReduce, &mut want).unwrap();
+        assert_eq!(got, want, "pool damaged by a failed collective");
+        assert_eq!(pool.spawn_count(), 3);
+    });
+}
+
+#[test]
+fn chaos_worker_panics_are_contained_and_typed() {
+    // Certain panics: the fan-out must return `RampError::WorkerPanic`
+    // (the injected payload captured in `detail`), the pool must stay
+    // un-poisoned — zero thread deaths, zero steady-state respawns —
+    // and subsequent collectives must be bitwise clean.
+    with_timeout(120, "worker panics", || {
+        let pool = Arc::new(WorkerPool::new(3));
+        let p = RampParams::fig8_example();
+        let n = p.n_nodes();
+        let inj = FaultInjector::new(FaultPlan {
+            seed: 4,
+            panic_permille: 1000,
+            ..FaultPlan::default()
+        });
+        let x = RampX::new(&p)
+            .with_pool(PoolSel::Forced(pool.clone()))
+            .with_pipeline(Pipeline::cross(3))
+            .with_faults(inj.clone());
+        let mut bufs = random_inputs(n, 2 * n, 13);
+        let err = x.run(MpiOp::AllReduce, &mut bufs).expect_err("certain panics must fail");
+        match err.downcast_ref::<RampError>() {
+            Some(RampError::WorkerPanic { detail, .. }) => {
+                assert!(
+                    detail.contains("injected worker panic"),
+                    "panic payload lost: {detail:?}"
+                );
+            }
+            other => panic!("expected WorkerPanic, got {other:?} ({err:#})"),
+        }
+        assert!(inj.panics() > 0);
+        assert_eq!(pool.contained_panics(), 0, "typed containment beat the last resort");
+        // un-poisoned: same pool, fault-free, bitwise
+        let clean = RampX::new(&p)
+            .with_pool(PoolSel::Forced(pool.clone()))
+            .with_pipeline(Pipeline::cross(3));
+        for (i, op) in MpiOp::all().into_iter().enumerate() {
+            let inputs = random_inputs(n, elems_for(op, n), 300 + i as u64);
+            let mut got = inputs.clone();
+            clean.run(op, &mut got).unwrap();
+            let mut want = inputs.clone();
+            RampX::new(&p).with_pool(PoolSel::Off).run(op, &mut want).unwrap();
+            assert_eq!(got, want, "{} diverged after panic containment", op.name());
+        }
+        assert_eq!(pool.spawn_count(), 3, "panic containment must not cost threads");
+    });
 }
