@@ -1,7 +1,9 @@
 //! Bench: RAMP-x collective executors (data movement) + Fig 15/18/23
 //! regeneration, plus the large-message data-plane generations:
 //! pre-refactor Vec-of-Vec vs PR-2 spawn-per-step arena vs the
-//! persistent-pool arena (serial and chunk-pipelined).
+//! persistent-pool arena (serial and chunk-pipelined), and the PR-7
+//! concurrent-load section: multi-tenant collectives/s at 1/2/4/8
+//! tenants vs the removed blocking token's single-file rate.
 //!
 //! `cargo bench --bench collectives_bench -- --json BENCH_collectives.json`
 //! writes machine-readable results. Env knobs:
@@ -231,6 +233,113 @@ fn nine_op_cross_step(json: &mut JsonReporter, p: &RampParams) {
     }
 }
 
+/// Concurrent-load throughput (PR 7): T caller threads, each a tenant
+/// running whole event-driven cross-step all-reduces on ONE shared
+/// pool, against the same callers forced single-file through an
+/// external mutex — the admission policy of the removed blocking token,
+/// kept as the anchor the multi-tenant path must strictly beat at 2+
+/// tenants. Prints collectives/s per tenancy and splits the parked time
+/// per tenant (`TenantStats::blocked_ns`) against the pool aggregate.
+/// The concurrent rows carry the `[arena pooled cross-step]` tag so the
+/// bench-regression gate guards them; the token-era anchor rows exist
+/// to be beaten, not defended, and stay unguarded.
+fn multi_tenant_throughput(json: &mut JsonReporter, p: &RampParams) {
+    let n = p.n_nodes();
+    let elems = 512 * n;
+    let bytes = (n * elems * 4) as f64; // payload of ONE collective
+    let pool = std::sync::Arc::new(WorkerPool::new(WorkerPool::global().n_workers()));
+    let mut single_file_x1 = f64::NAN;
+    for tenants in [1usize, 2, 4, 8] {
+        // one arena per tenant, filled once; repeated all-reduce only
+        // grows the values, which is fine for data-movement timing
+        let mut slots: Vec<BufferArena> = (0..tenants)
+            .map(|t| {
+                let mut a = BufferArena::with_capacity(n, elems);
+                let mut rng = Xoshiro256::seed_from(7 + t as u64);
+                for r in 0..n {
+                    for v in a.front_mut(r).iter_mut() {
+                        *v = rng.next_f32();
+                    }
+                    a.set_len(r, elems);
+                }
+                a
+            })
+            .collect();
+
+        // token-era anchor: whole collectives go single-file through an
+        // external lock on the same pool
+        let token = std::sync::Mutex::new(());
+        let tok = bench(
+            &format!("all-reduce {n} nodes x{tenants} callers [token-era single-file]"),
+            400,
+            || {
+                std::thread::scope(|s| {
+                    for arena in slots.iter_mut() {
+                        let (pool, token) = (&pool, &token);
+                        s.spawn(move || {
+                            let x = RampX::new(p)
+                                .with_pool(PoolSel::Forced(pool.clone()))
+                                .with_pipeline(Pipeline::cross(3));
+                            let _turn = token.lock().unwrap();
+                            x.run_arena(MpiOp::AllReduce, arena).unwrap();
+                        });
+                    }
+                });
+            },
+        );
+        json.push(&tok, Some(tok.throughput(bytes * tenants as f64) / 1e9));
+
+        // the multi-tenant path: same callers, no token — concurrent
+        // parking fan-outs in disjoint epoch namespaces
+        pool.drain_tenant_history();
+        let blocked_before = pool.lane_blocked_ns();
+        let conc = bench(
+            &format!("all-reduce {n} nodes x{tenants} tenants [arena pooled cross-step] multi-tenant"),
+            400,
+            || {
+                std::thread::scope(|s| {
+                    for arena in slots.iter_mut() {
+                        let pool = &pool;
+                        s.spawn(move || {
+                            let x = RampX::new(p)
+                                .with_pool(PoolSel::Forced(pool.clone()))
+                                .with_pipeline(Pipeline::cross(3));
+                            x.run_arena(MpiOp::AllReduce, arena).unwrap();
+                        });
+                    }
+                });
+            },
+        );
+        json.push(&conc, Some(conc.throughput(bytes * tenants as f64) / 1e9));
+
+        // per-tenant blocked time (the history keeps the most recent 64
+        // retirees) next to the pool aggregate for the same window
+        let history = pool.drain_tenant_history();
+        let tenant_blocked_ms: u64 =
+            history.iter().map(|st| st.blocked_ns).sum::<u64>() / 1_000_000;
+        let pool_blocked_ms = (pool.lane_blocked_ns() - blocked_before) / 1_000_000;
+        let peak = history.iter().map(|st| st.peak_tenants).max().unwrap_or(0);
+        let conc_rate = tenants as f64 / conc.mean_s;
+        let tok_rate = tenants as f64 / tok.mean_s;
+        if tenants == 1 {
+            single_file_x1 = tok_rate;
+        }
+        println!(
+            "    -> x{tenants}: {conc_rate:.1} collectives/s concurrent vs {tok_rate:.1} \
+             single-file ({:.2}x), peak {peak} tenants live; last {} tenants parked \
+             {tenant_blocked_ms} ms vs {pool_blocked_ms} ms pool aggregate{}",
+            conc_rate / tok_rate,
+            history.len(),
+            if tenants >= 2 && conc_rate <= single_file_x1 {
+                "  [MULTI-TENANT REGRESSION: not above the token-era single-file rate]"
+            } else {
+                ""
+            }
+        );
+    }
+    assert_eq!(pool.active_tenants(), 0, "bench tenants must all retire");
+}
+
 fn main() {
     let mut json = JsonReporter::from_env_args();
 
@@ -294,6 +403,9 @@ fn main() {
 
     println!("== nine-op cross-step sweep (event-driven lane schedules) ==");
     nine_op_cross_step(&mut json, &p);
+
+    println!("== concurrent load: multi-tenant vs token-era single-file ==");
+    multi_tenant_throughput(&mut json, &p);
 
     println!(
         "== modeled completion: serial vs intra-step vs cross-step chunk lanes \

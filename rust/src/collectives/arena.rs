@@ -592,6 +592,12 @@ impl EpochTags {
 /// wakes at least every slice, checks progress, and can repair a
 /// recorded dropped publish or fail with a typed error when its
 /// deadline passes (`collectives::lane_exec`).
+///
+/// Each parking fan-out builds its own parker next to its own
+/// [`EpochTags`], so concurrent programs sharing one `WorkerPool` run in
+/// disjoint epoch namespaces: a tenant's publishes wake only its own
+/// waiters, and one tenant's stall (or typed abort) never notifies —
+/// or blocks — a neighbor's gates.
 #[derive(Debug, Default)]
 pub struct EpochParker {
     lock: std::sync::Mutex<()>,

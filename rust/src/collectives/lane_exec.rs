@@ -17,13 +17,22 @@
 //! (a linear extension of the dependency DAG): the earliest unfinished
 //! item in that order is always at the head of some lane with its gates
 //! satisfied, so some lane can always run (no deadlock). Time spent
-//! parked on unpublished epochs is accumulated into the pool's
-//! `lane_blocked_ns` counter. That progress argument covers one
-//! schedule; **concurrent** event-driven fan-outs on one pool serialize
-//! on the pool's blocking token inside [`WorkerPool::run_binned`] —
-//! interleaved, each could occupy every worker with jobs gated on the
-//! other collective's queued-behind items (non-parking keyed fan-outs
-//! interleave freely; their jobs always run to completion).
+//! parked on unpublished epochs is accumulated per program and credited
+//! to the pool (`credit_tenant_blocked`): the pool-level
+//! `lane_blocked_ns` aggregate plus a per-tenant entry in the pool's
+//! tenant history.
+//!
+//! **Concurrent** event-driven fan-outs interleave on one pool. Each
+//! program runs in its own epoch namespace — a per-run [`EpochTags`] /
+//! [`EpochParker`] pair keyed by the program id the pool mints at
+//! admission — so gates never observe a neighbor's epochs. The lane
+//! jobs are *cooperative*: a gated item parks at most one bounded
+//! parker slice, then reports `ItemStep::Blocked`, and the pool
+//! re-queues the lane FIFO so the worker can run other programs' jobs
+//! (see `pool.rs` for the progress argument; earlier revisions
+//! serialized all parking fan-outs on an exclusive blocking token
+//! instead). One stalled tenant fails typed in its own namespace —
+//! [`RampError::StalledEpoch`] — without aborting its neighbors.
 //!
 //! ## The atomic epoch protocol
 //!
@@ -58,11 +67,13 @@
 //! ## Self-healing and the lane watchdog (PR 6)
 //!
 //! Waiters no longer spin/yield indefinitely: after a short spin they
-//! park on the arena's [`EpochParker`] in bounded slices, and every
-//! gate carries a **deadline** (the fault plan's watchdog, or
-//! `RAMP_WATCHDOG_MS`, or [`crate::fault::DEFAULT_WATCHDOG_MS`]),
-//! reset whenever the gated epoch makes progress. On deadline expiry
-//! the waiter consults the [`FaultInjector`]'s dropped-publish log:
+//! park on the program's own [`EpochParker`] in bounded slices, and
+//! every rank gate carries its own **fresh deadline** (the fault plan's
+//! watchdog, or `RAMP_WATCHDOG_MS`, or
+//! [`crate::fault::DEFAULT_WATCHDOG_MS`]), re-armed whenever the gated
+//! epoch makes progress and never inherited from an earlier gate (see
+//! [`GateState`]). On deadline expiry the waiter consults the
+//! [`FaultInjector`]'s dropped-publish log:
 //!
 //! * a **recorded** drop is repaired in place — the waiter performs the
 //!   exact countdown-reload + publish the completing item skipped, so
@@ -82,7 +93,7 @@
 
 use crate::collectives::arena::{frac_bounds, BufferArena, EpochParker, EpochTags, SlabParts};
 use crate::collectives::kernels::{add2_assign, add_assign, STRIP_ELEMS};
-use crate::collectives::pool::WorkerPool;
+use crate::collectives::pool::{ItemStep, WorkerPool};
 use crate::fault::{FaultInjector, FaultPlan, RampError};
 use crate::transcoder::lanes::LaneSchedule;
 use anyhow::{ensure, Result};
@@ -498,63 +509,127 @@ impl EventCtx<'_> {
     }
 }
 
-/// Wait until every rank's chunk epoch reaches `step`: spin briefly,
-/// then park on the condvar in bounded slices. Returns `false` when the
-/// run was aborted — the caller must then skip its work and publish
-/// nothing. Each rank's gate carries a watchdog deadline (reset on any
-/// epoch progress): on expiry a recorded dropped publish is repaired in
-/// place, anything else fails the run with a typed
-/// [`RampError::StalledEpoch`]. Blocked time is accumulated into the
-/// ctx's `blocked` counter (ns).
-fn wait_gate(ctx: &EventCtx, ranks: &[usize], chunk: usize, step: u32) -> bool {
-    let mut t0: Option<Instant> = None;
-    for &q in ranks {
-        let mut spins = 0u32;
-        let mut deadline: Option<Instant> = None;
-        let mut last = ctx.epochs.get(q, chunk);
-        while last < step {
-            if ctx.aborted.load(Ordering::Relaxed) {
-                return false;
-            }
-            if t0.is_none() {
-                t0 = Some(Instant::now());
-            }
-            spins += 1;
-            if spins < 128 {
-                std::hint::spin_loop();
-            } else {
-                let now = Instant::now();
-                let dl = *deadline.get_or_insert(now + ctx.watchdog);
-                if now >= dl {
-                    if ctx.repair(q, chunk, last + 1) {
-                        deadline = None;
-                    } else {
-                        let waited = t0.map(|t| t.elapsed().as_millis() as u64).unwrap_or(0);
-                        ctx.fail(RampError::StalledEpoch {
-                            rank: q,
-                            chunk,
-                            epoch: last + 1,
-                            waited_ms: waited,
-                        });
-                        return false;
-                    }
-                } else {
-                    ctx.parker.park_while(|| {
-                        ctx.epochs.get(q, chunk) < step && !ctx.aborted.load(Ordering::Relaxed)
-                    });
-                }
-            }
-            let cur = ctx.epochs.get(q, chunk);
-            if cur > last {
-                last = cur;
-                deadline = None;
-            }
+/// Per-item gate progress, persisted across cooperative yields: an item
+/// that reports blocked hands its worker back to the pool, so the gate
+/// walk must resume where it left off when the lane is re-run.
+///
+/// The watchdog deadline is **per rank gate**, never inherited: it is
+/// cleared both when the gated epoch makes progress and when the walk
+/// advances to the next rank (`rank_idx`). An earlier revision
+/// lazily initialized one deadline per `wait_gate` call, which was
+/// sound only because the whole walk lived inside a single blocking
+/// call; with per-item state outliving each poll, a deadline carried
+/// from one gate to the next would charge rank `r+1`'s wait with the
+/// time already burnt on rank `r` and trip the watchdog on a healthy
+/// (merely wide) gate spacing — the stale-deadline bug the regression
+/// test `gate_deadlines_are_fresh_per_rank_not_inherited` pins down.
+#[derive(Debug, Default)]
+struct GateState {
+    /// Index into the item's rank list of the gate currently walked.
+    rank_idx: usize,
+    /// Spin budget consumed (spins precede the first park, once).
+    spins: u32,
+    /// When the item first observed a closed gate (blocked-time +
+    /// `waited_ms` anchor), cleared when every gate is open.
+    t0: Option<Instant>,
+    /// Watchdog deadline for the current rank gate, with the epoch
+    /// value it was armed at (progress past `last_epoch` re-arms it).
+    deadline: Option<Instant>,
+    last_epoch: u32,
+}
+
+/// What one gate poll concluded.
+enum GatePoll {
+    /// Every rank's epoch reached the step — the item may run.
+    Ready,
+    /// Some gate is still closed; one bounded park slice was spent.
+    /// The lane should yield its worker and retry later.
+    Blocked,
+    /// The run aborted (this poll may itself have failed it typed) —
+    /// drain without touching the slab.
+    Abort,
+}
+
+/// Poll the item's gates: walk ranks from where the last poll stopped,
+/// spin briefly (first poll only), then park **at most one** bounded
+/// parker slice before reporting [`GatePoll::Blocked`] — never hold the
+/// worker, other tenants' lanes are queued behind this one. Each rank
+/// gate carries a fresh watchdog deadline (see [`GateState`]), re-armed
+/// on epoch progress; on expiry a recorded dropped publish is repaired
+/// in place, anything else fails the run typed with
+/// [`RampError::StalledEpoch`]. When the walk completes, the item's
+/// total gate-to-open time is accumulated into the ctx's `blocked`
+/// counter (ns).
+fn gate_step(
+    ctx: &EventCtx,
+    ranks: &[usize],
+    chunk: usize,
+    step: u32,
+    g: &mut GateState,
+) -> GatePoll {
+    while g.rank_idx < ranks.len() {
+        let q = ranks[g.rank_idx];
+        let cur = ctx.epochs.get(q, chunk);
+        if cur >= step {
+            // this gate is open: the next rank starts with a fresh
+            // deadline — time spent here must not count against it
+            g.rank_idx += 1;
+            g.deadline = None;
+            continue;
         }
+        if ctx.aborted.load(Ordering::Relaxed) {
+            return GatePoll::Abort;
+        }
+        if g.t0.is_none() {
+            g.t0 = Some(Instant::now());
+        }
+        if g.spins < 128 {
+            g.spins += 1;
+            std::hint::spin_loop();
+            continue;
+        }
+        let now = Instant::now();
+        match g.deadline {
+            None => {
+                g.deadline = Some(now + ctx.watchdog);
+                g.last_epoch = cur;
+            }
+            Some(_) if cur > g.last_epoch => {
+                // progress on the gated epoch re-arms the watchdog
+                g.deadline = Some(now + ctx.watchdog);
+                g.last_epoch = cur;
+            }
+            Some(dl) if now >= dl => {
+                if ctx.repair(q, chunk, cur + 1) {
+                    g.deadline = None;
+                    continue;
+                }
+                let waited = g.t0.map(|t| t.elapsed().as_millis() as u64).unwrap_or(0);
+                ctx.fail(RampError::StalledEpoch {
+                    rank: q,
+                    chunk,
+                    epoch: cur + 1,
+                    waited_ms: waited,
+                });
+                return GatePoll::Abort;
+            }
+            Some(_) => {}
+        }
+        ctx.parker.park_while(|| {
+            ctx.epochs.get(q, chunk) < step && !ctx.aborted.load(Ordering::Relaxed)
+        });
+        if ctx.epochs.get(q, chunk) >= step {
+            continue; // opened during the park — keep walking
+        }
+        return GatePoll::Blocked;
     }
-    if let Some(t) = t0 {
+    if let Some(t) = g.t0.take() {
         ctx.blocked.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
     }
-    !ctx.aborted.load(Ordering::Relaxed)
+    if ctx.aborted.load(Ordering::Relaxed) {
+        return GatePoll::Abort;
+    }
+    GatePoll::Ready
 }
 
 /// Count down the item's touched ranks; the last toucher of a rank
@@ -616,8 +691,8 @@ pub(crate) fn run_event(
     // the epoch gates assume every step runs exactly one task per chunk
     // lane; a schedule where some step collapsed to a single task (a
     // non-divisible or non-aligned plan) would leave chunks ≥ 1 of that
-    // step unexecuted and park every dependent lane forever — refuse it
-    // up front instead of livelocking under the blocking token
+    // step unexecuted and park every dependent lane until the watchdog
+    // fails the run — refuse it up front instead
     let mut tasks_per_step = vec![0usize; n_steps];
     for t in &sched.tasks {
         ensure!(t.step < n_steps, "schedule names step {} beyond the program", t.step);
@@ -635,16 +710,23 @@ pub(crate) fn run_event(
         (0..n * k).map(|i| AtomicU32::new(touch[0][i / k])).collect();
 
     // entries in schedule (task) order — each lane's queue inherits this
-    // order, the linear extension that guarantees progress
+    // order, the linear extension that guarantees progress; the gate
+    // state persists across cooperative yields of the lane
     struct Entry<'a> {
         step: usize,
         chunk: usize,
         item: &'a LaneItem,
+        gate: GateState,
     }
     let mut entries: Vec<Entry> = Vec::new();
     for task in &sched.tasks {
         for item in &prog.step_items[task.step] {
-            entries.push(Entry { step: task.step, chunk: task.chunk, item });
+            entries.push(Entry {
+                step: task.step,
+                chunk: task.chunk,
+                item,
+                gate: GateState::default(),
+            });
         }
     }
     let pairs: Vec<(usize, usize)> =
@@ -673,11 +755,15 @@ pub(crate) fn run_event(
         faults,
         watchdog,
     };
-    {
+    let stats = {
         let (ctx, slab) = (&ctx, &slab);
-        pool.run_binned(bins, move |e: Entry| {
-            if !wait_gate(ctx, &e.item.ranks, e.chunk, e.step as u32) {
-                return; // aborted: drain without touching the slab
+        pool.run_binned(bins, move |e: &mut Entry| {
+            match gate_step(ctx, &e.item.ranks, e.chunk, e.step as u32, &mut e.gate) {
+                // gated: the lane yields its worker to other tenants
+                GatePoll::Blocked => return ItemStep::Blocked,
+                // aborted: drain without touching the slab
+                GatePoll::Abort => return ItemStep::Done,
+                GatePoll::Ready => {}
             }
             if let Some(inj) = ctx.faults {
                 inj.jitter(e.step, e.chunk, e.item.key);
@@ -704,9 +790,11 @@ pub(crate) fn run_event(
                     detail: panic_detail(payload.as_ref()),
                 }),
             }
-        });
-    }
-    pool.add_lane_blocked_ns(blocked.load(Ordering::Relaxed));
+            ItemStep::Done
+        })
+    };
+    // this program's epoch-wait time: pool aggregate + its tenant entry
+    pool.credit_tenant_blocked(stats.program, blocked.load(Ordering::Relaxed));
     if let Some(err) = failure.lock().unwrap_or_else(|e| e.into_inner()).take() {
         return Err(err.into());
     }
@@ -990,6 +1078,116 @@ mod tests {
         arena.set_front(true, prog.final_lens.clone());
         for r in 0..4 {
             assert_eq!(arena.front(r), &expect[r][..], "rank {r} diverged after typed failure");
+        }
+    }
+
+    /// Minimal [`EventCtx`] scaffold for driving [`gate_step`] directly.
+    struct GateFixture {
+        epochs: EpochTags,
+        parker: EpochParker,
+        pending: Vec<AtomicU32>,
+        touch: Vec<Vec<u32>>,
+        aborted: AtomicBool,
+        blocked: AtomicU64,
+        failure: Mutex<Option<RampError>>,
+        watchdog: Duration,
+    }
+
+    impl GateFixture {
+        fn new(n: usize, watchdog_ms: u64) -> Self {
+            Self {
+                epochs: EpochTags::new(n, 1),
+                parker: EpochParker::default(),
+                pending: (0..n).map(|_| AtomicU32::new(1)).collect(),
+                touch: vec![vec![1u32; n]],
+                aborted: AtomicBool::new(false),
+                blocked: AtomicU64::new(0),
+                failure: Mutex::new(None),
+                watchdog: Duration::from_millis(watchdog_ms),
+            }
+        }
+
+        fn ctx(&self) -> EventCtx<'_> {
+            EventCtx {
+                epochs: &self.epochs,
+                parker: &self.parker,
+                pending: &self.pending,
+                touch: &self.touch,
+                k: 1,
+                aborted: &self.aborted,
+                blocked: &self.blocked,
+                failure: &self.failure,
+                faults: None,
+                watchdog: self.watchdog,
+            }
+        }
+    }
+
+    #[test]
+    fn gate_deadlines_are_fresh_per_rank_not_inherited() {
+        // two widely spaced gates on one item: rank 0 publishes at
+        // ~0.6 × watchdog, rank 1 another ~0.6 × watchdog later. Each
+        // gate individually beats its deadline, but a deadline inherited
+        // from rank 0's wait (the pre-fix lazy `get_or_insert`) would
+        // expire midway through rank 1's healthy wait and fail typed.
+        let fx = GateFixture::new(2, 200);
+        let ctx = fx.ctx();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(Duration::from_millis(120));
+                fx.epochs.publish([0], 0, 1);
+                fx.parker.wake_all();
+                std::thread::sleep(Duration::from_millis(120));
+                fx.epochs.publish([1], 0, 1);
+                fx.parker.wake_all();
+            });
+            let mut g = GateState::default();
+            loop {
+                match gate_step(&ctx, &[0, 1], 0, 1, &mut g) {
+                    GatePoll::Ready => break,
+                    GatePoll::Blocked => continue, // caller-lane style retry
+                    GatePoll::Abort => {
+                        let err = fx.failure.lock().unwrap().take();
+                        panic!("stale deadline tripped the watchdog: {err:?}");
+                    }
+                }
+            }
+        });
+        assert!(fx.failure.lock().unwrap().is_none());
+        assert!(
+            fx.blocked.load(Ordering::Relaxed) > 0,
+            "the walk must account its gate-to-open time"
+        );
+    }
+
+    #[test]
+    fn an_unpublished_gate_still_trips_the_watchdog() {
+        // control for the fresh-deadline fix: rank 0 opens quickly,
+        // rank 1 never publishes — the per-rank deadline must still
+        // fire, typed, naming rank 1
+        let fx = GateFixture::new(2, 60);
+        let ctx = fx.ctx();
+        fx.epochs.publish([0], 0, 1);
+        let mut g = GateState::default();
+        let t0 = std::time::Instant::now();
+        loop {
+            match gate_step(&ctx, &[0, 1], 0, 1, &mut g) {
+                GatePoll::Abort => break,
+                GatePoll::Ready => panic!("gate 1 never published — must not open"),
+                GatePoll::Blocked => {
+                    assert!(
+                        t0.elapsed() < Duration::from_secs(10),
+                        "watchdog never fired"
+                    );
+                }
+            }
+        }
+        match fx.failure.lock().unwrap().take() {
+            Some(RampError::StalledEpoch { rank, epoch, .. }) => {
+                assert_eq!(rank, 1, "the fresh deadline belongs to the stalled rank");
+                assert_eq!(epoch, 1);
+            }
+            other => panic!("expected StalledEpoch, got {other:?}"),
         }
     }
 

@@ -38,18 +38,45 @@
 //! across *steps* of the interleaved schedule, not just within one.
 //! The pool is safe for **concurrent fan-outs** from multiple threads
 //! (binning and sticky assignment are serialized on the sticky map's
-//! mutex; each call owns a private latch). Fan-outs whose jobs may
-//! *park* mid-run — the event-driven lane executor's epoch gates —
-//! additionally serialize on the pool's blocking token (see
-//! [`WorkerPool::run_binned`]): two parking fan-outs interleaved on one
-//! pool could each occupy every worker with jobs gated on the other's
-//! queued-behind items. The stress net (`rust/tests/pool_stress.rs`)
-//! runs whole collectives — including concurrent cross-step ones — from
-//! several threads against one pool and asserts zero steady-state
-//! spawns and a consistent sticky map.
+//! mutex; each call owns a private latch). Fan-outs whose items may
+//! *gate* mid-run — the event-driven lane executor's epoch waits — are
+//! **cooperative**: [`WorkerPool::run_binned`] takes a step function
+//! that reports [`ItemStep::Blocked`] instead of parking the worker
+//! indefinitely, and a blocked lane job re-queues itself FIFO so the
+//! worker can run *other programs'* jobs in the meantime. That retires
+//! the exclusive blocking token earlier revisions serialized on. The
+//! hazard the token papered over: two parking fan-outs interleaved on
+//! one pool could each occupy every worker with monolithic jobs parked
+//! on the other program's queued-behind items — a cross-program
+//! deadlock. The cooperative model discharges it structurally:
+//!
+//! * a gated item parks **at most one bounded slice** before its job
+//!   yields the worker back to the queue (no worker is ever held
+//!   indefinitely by one program);
+//! * each program's **caller lane is dedicated** — the fan-out caller
+//!   drains its own bin with a blocking loop, so every admitted program
+//!   always owns at least one lane (the reserve-one-lane guarantee);
+//! * within a program, lane queues follow schedule order (a linear
+//!   extension of the dependency DAG), so the program's earliest
+//!   unfinished item always has its gates satisfied and sits at the
+//!   cursor of some lane job — a job that is re-queued, re-run within a
+//!   bounded number of slices, and then completes the item.
+//!
+//! Each parking fan-out is a **tenant**: it is minted a program id at
+//! admission, tracked live (so overlap is observable via
+//! `peak_tenants`), and its yields/items/blocked-time are recorded in
+//! [`TenantStats`], retired into a bounded history the stress tests and
+//! the multi-tenant bench read. `max_tenants` (0 = unbounded; the
+//! `RAMP_MAX_TENANTS` / `--max-tenants` knob) adds optional admission
+//! back-pressure — correctness never depends on it. The stress net
+//! (`rust/tests/pool_stress.rs`) runs whole collectives — including 4+
+//! concurrent cross-step ones — from several threads against one pool
+//! and asserts interleaving, bitwise results, zero steady-state spawns
+//! and a consistent sticky map.
 
 use crate::collectives::arena::{host_parallelism, lpt_order, par_threshold};
 use rustc_hash::FxHashMap;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 
@@ -89,12 +116,70 @@ pub enum PoolSel {
     Forced(Arc<WorkerPool>),
 }
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+/// What one invocation of a [`WorkerPool::run_binned`] step function did
+/// with its current item.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ItemStep {
+    /// The item completed; the lane advances to its next queued item.
+    Done,
+    /// The item is gated (e.g. on an unpublished epoch) and already
+    /// parked its bounded slice — the lane job yields the worker so
+    /// other tenants' jobs can run, and retries this item later.
+    Blocked,
+}
+
+/// What a queued job handed back to the worker loop: `Yield` re-queues
+/// the job FIFO behind whatever else is waiting on that worker.
+enum JobOutcome {
+    Done,
+    Yield,
+}
+
+type Job = Box<dyn FnMut() -> JobOutcome + Send + 'static>;
 
 struct WorkerShared {
-    queue: Mutex<Vec<Job>>,
+    queue: Mutex<VecDeque<Job>>,
     ready: Condvar,
 }
+
+/// Per-program (tenant) record of one parking fan-out, retired into the
+/// pool's bounded tenant history when the fan-out completes. `program`
+/// is the id minted at admission; `peak_tenants` is the largest number
+/// of concurrently admitted tenants observed while this one was live
+/// (≥ 2 proves real interleaving); `blocked_ns` is this program's own
+/// epoch-wait time (credited by the lane executor after the fan-out —
+/// the pool-level [`WorkerPool::lane_blocked_ns`] aggregates it across
+/// programs).
+#[derive(Clone, Debug)]
+pub struct TenantStats {
+    pub program: u64,
+    pub items: u64,
+    pub yields: u64,
+    pub peak_tenants: usize,
+    pub blocked_ns: u64,
+}
+
+/// Live counters for an admitted (in-flight) tenant.
+struct LiveTenant {
+    program: u64,
+    items: AtomicU64,
+    yields: AtomicU64,
+    peak: AtomicUsize,
+}
+
+/// Admission state: the live tenant map plus the retired-stats ring.
+struct TenantTable {
+    active: FxHashMap<u64, Arc<LiveTenant>>,
+    history: VecDeque<TenantStats>,
+    /// Admission cap on concurrent parking fan-outs (0 = unbounded).
+    /// Purely back-pressure: the cooperative protocol is deadlock-free
+    /// at any tenancy, but a cap bounds the yield-churn of heavily
+    /// oversubscribed pools.
+    max_tenants: usize,
+}
+
+/// Retired [`TenantStats`] entries kept for tests and the bench readout.
+const TENANT_HISTORY: usize = 64;
 
 struct Shared {
     workers: Vec<WorkerShared>,
@@ -192,23 +277,28 @@ pub struct WorkerPool {
     /// per-lane loads are rebuilt from scratch inside each call (sticky
     /// items charge their lane first, then fresh keys are LPT-placed).
     sticky: Mutex<FxHashMap<usize, usize>>,
-    /// Exclusive token for **blocking** fan-outs (the event-driven lane
-    /// executor, whose jobs park on epochs published by sibling jobs of
-    /// the same schedule). Two such fan-outs interleaved on one pool
-    /// could each occupy every worker with jobs gated on the other
-    /// collective's queued-behind items — a cross-collective deadlock —
-    /// so blocking fan-outs hold this token for their duration.
-    /// Non-blocking keyed/unkeyed fan-outs never wait inside a job and
-    /// interleave freely with each other and with the token holder.
-    blocking: Mutex<()>,
+    /// Tenant admission/accounting for parking fan-outs (the former
+    /// blocking token's slot — see the module docs for why admission
+    /// replaced exclusion).
+    tenants: Mutex<TenantTable>,
+    /// Wakes admission waiters when a tenant retires or the cap moves.
+    tenant_cv: Condvar,
+    /// Program-id mint for parking fan-outs (ids start at 1).
+    next_program: AtomicU64,
+    /// `contained_panics` value as of the last dead-lane probe: the
+    /// `is_finished` sweep ([`Self::respawn_dead`]) runs only when this
+    /// lags the live counter, so healthy concurrent fan-outs never pay
+    /// (or race) the probe.
+    probed_panics: AtomicU64,
     n_workers: usize,
     spawns: AtomicUsize,
     fan_outs: AtomicU64,
     sticky_hits: AtomicU64,
     /// Nanoseconds lanes spent parked on unpublished epochs inside
-    /// event-driven lane fan-outs (`collectives::lane_exec`) — the
-    /// schedule's dependency-wait cost, reported by the bench next to
-    /// the wall-clock columns.
+    /// event-driven lane fan-outs (`collectives::lane_exec`),
+    /// aggregated across every program — the per-program split lives in
+    /// the tenant history ([`Self::tenant_history`]). The bench reports
+    /// both next to the wall-clock columns.
     lane_blocked_ns: AtomicU64,
 }
 
@@ -228,7 +318,10 @@ impl WorkerPool {
     pub fn new(n_workers: usize) -> Self {
         let shared = Arc::new(Shared {
             workers: (0..n_workers)
-                .map(|_| WorkerShared { queue: Mutex::new(Vec::new()), ready: Condvar::new() })
+                .map(|_| WorkerShared {
+                    queue: Mutex::new(VecDeque::new()),
+                    ready: Condvar::new(),
+                })
                 .collect(),
             shutdown: AtomicBool::new(false),
             contained_panics: AtomicU64::new(0),
@@ -237,7 +330,14 @@ impl WorkerPool {
             shared: shared.clone(),
             handles: Mutex::new(Vec::with_capacity(n_workers)),
             sticky: Mutex::new(FxHashMap::default()),
-            blocking: Mutex::new(()),
+            tenants: Mutex::new(TenantTable {
+                active: FxHashMap::default(),
+                history: VecDeque::new(),
+                max_tenants: 0,
+            }),
+            tenant_cv: Condvar::new(),
+            next_program: AtomicU64::new(0),
+            probed_panics: AtomicU64::new(0),
             n_workers,
             spawns: AtomicUsize::new(0),
             fan_outs: AtomicU64::new(0),
@@ -264,7 +364,13 @@ impl WorkerPool {
     /// collectives.
     pub fn global() -> &'static WorkerPool {
         static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
-        GLOBAL.get_or_init(|| WorkerPool::new(host_parallelism().saturating_sub(1)))
+        GLOBAL.get_or_init(|| {
+            let pool = WorkerPool::new(host_parallelism().saturating_sub(1));
+            if let Some(cap) = crate::config::max_tenants_override() {
+                pool.set_max_tenants(cap);
+            }
+            pool
+        })
     }
 
     /// Long-lived worker threads owned by this pool.
@@ -295,15 +401,52 @@ impl WorkerPool {
     }
 
     /// Total nanoseconds lanes spent waiting on unpublished epochs in
-    /// event-driven lane fan-outs (the blocked-time counter the bench
-    /// reports; see `collectives::lane_exec`).
+    /// event-driven lane fan-outs, aggregated across every program (the
+    /// blocked-time counter the bench reports; the per-program split is
+    /// in [`Self::tenant_history`]).
     pub fn lane_blocked_ns(&self) -> u64 {
         self.lane_blocked_ns.load(Ordering::SeqCst)
     }
 
-    /// Credit epoch-wait time observed by an event-driven lane fan-out.
-    pub fn add_lane_blocked_ns(&self, ns: u64) {
+    /// Credit epoch-wait time observed by one program's event-driven
+    /// fan-out: feeds both the pool aggregate and that program's retired
+    /// [`TenantStats`] entry.
+    pub fn credit_tenant_blocked(&self, program: u64, ns: u64) {
         self.lane_blocked_ns.fetch_add(ns, Ordering::SeqCst);
+        let mut t = lock_recover(&self.tenants);
+        if let Some(s) = t.history.iter_mut().rev().find(|s| s.program == program) {
+            s.blocked_ns += ns;
+        }
+    }
+
+    /// Cap on concurrently admitted parking fan-outs (0 = unbounded).
+    pub fn max_tenants(&self) -> usize {
+        lock_recover(&self.tenants).max_tenants
+    }
+
+    /// Set the admission cap (0 = unbounded) and wake any waiters — the
+    /// `RAMP_MAX_TENANTS` / `--max-tenants` back-pressure knob.
+    pub fn set_max_tenants(&self, cap: usize) {
+        lock_recover(&self.tenants).max_tenants = cap;
+        self.tenant_cv.notify_all();
+    }
+
+    /// Parking fan-outs currently admitted (live tenants).
+    pub fn active_tenants(&self) -> usize {
+        lock_recover(&self.tenants).active.len()
+    }
+
+    /// The most recently retired [`TenantStats`] entries (bounded ring,
+    /// oldest first) — the interleaving evidence the stress tests and
+    /// the multi-tenant bench read.
+    pub fn tenant_history(&self) -> Vec<TenantStats> {
+        lock_recover(&self.tenants).history.iter().cloned().collect()
+    }
+
+    /// Drain the tenant history ring (test/bench hook: scope a reading
+    /// to the fan-outs issued after the drain).
+    pub fn drain_tenant_history(&self) -> Vec<TenantStats> {
+        lock_recover(&self.tenants).history.drain(..).collect()
     }
 
     /// Panics contained by the worker loop's last-resort
@@ -318,9 +461,14 @@ impl WorkerPool {
     /// kill). Each respawn re-attaches the same worker index, so queue
     /// ownership and sticky lanes are unchanged; `spawn_count` grows by
     /// the number of repairs (the zero-steady-state-spawn assertions
-    /// treat any growth as a red flag, which a respawn is). Called at
-    /// the top of every blocking fan-out — an `is_finished` probe per
-    /// worker, free in the healthy case.
+    /// treat any growth as a red flag, which a respawn is). Parking
+    /// fan-outs no longer probe unconditionally: [`Self::run_binned`]
+    /// calls this only when `contained_panics()` advanced since the
+    /// last probe (see [`Self::maybe_respawn`]) — with concurrent
+    /// tenants, a per-fan-out `is_finished` sweep would race the other
+    /// tenants' in-flight dispatches for the handle lock on every call.
+    /// Callers that suspect an abrupt, uncounted thread death (no panic
+    /// was contained) can still invoke this directly.
     pub fn respawn_dead(&self) -> usize {
         let mut handles = lock_recover(&self.handles);
         let mut repaired = 0usize;
@@ -444,30 +592,192 @@ impl WorkerPool {
         out
     }
 
+    /// Admit one parking fan-out as a tenant: mint its program id, wait
+    /// out the admission cap (if any), and record the overlap peak on
+    /// every live tenant — including this one — so interleaving is
+    /// observable after the fact.
+    fn admit(&self) -> Arc<LiveTenant> {
+        let program = self.next_program.fetch_add(1, Ordering::SeqCst) + 1;
+        let live = Arc::new(LiveTenant {
+            program,
+            items: AtomicU64::new(0),
+            yields: AtomicU64::new(0),
+            peak: AtomicUsize::new(0),
+        });
+        let mut t = lock_recover(&self.tenants);
+        while t.max_tenants != 0 && t.active.len() >= t.max_tenants {
+            t = self.tenant_cv.wait(t).unwrap_or_else(|e| e.into_inner());
+        }
+        t.active.insert(program, live.clone());
+        let n_active = t.active.len();
+        for lt in t.active.values() {
+            lt.peak.fetch_max(n_active, Ordering::Relaxed);
+        }
+        live
+    }
+
+    /// Retire a tenant into the bounded history ring and wake admission
+    /// waiters; returns the snapshot handed back by `run_binned`.
+    fn retire(&self, live: &Arc<LiveTenant>) -> TenantStats {
+        let stats = TenantStats {
+            program: live.program,
+            items: live.items.load(Ordering::Relaxed),
+            yields: live.yields.load(Ordering::Relaxed),
+            peak_tenants: live.peak.load(Ordering::Relaxed),
+            blocked_ns: 0,
+        };
+        let mut t = lock_recover(&self.tenants);
+        t.active.remove(&live.program);
+        t.history.push_back(stats.clone());
+        while t.history.len() > TENANT_HISTORY {
+            t.history.pop_front();
+        }
+        drop(t);
+        self.tenant_cv.notify_all();
+        stats
+    }
+
+    /// Gated lane repair: run the `is_finished` sweep only when the
+    /// contained-panic counter advanced since the last probe, and only
+    /// under the sticky-map lock so concurrent fan-outs cannot race the
+    /// probe against each other's dispatch. Healthy fan-outs pay one
+    /// relaxed load.
+    fn maybe_respawn(&self) {
+        let seen = self.shared.contained_panics.load(Ordering::SeqCst);
+        if seen == self.probed_panics.load(Ordering::SeqCst) {
+            return;
+        }
+        let _probe = lock_recover(&self.sticky);
+        if self.probed_panics.load(Ordering::SeqCst) < seen {
+            self.respawn_dead();
+            self.probed_panics.store(seen, Ordering::SeqCst);
+        }
+    }
+
     /// Run pre-binned work: one FIFO queue per lane (`bins.len()` must
     /// equal [`Self::lanes`]; the last bin is the caller's). This is the
     /// **single fan-out** of the event-driven lane executor — the whole
-    /// lane schedule's items are binned up front and each lane drains its
-    /// queue in order, waiting on epochs inside `f` — so
-    /// [`Self::fan_outs`] grows by exactly one per call (when any worker
-    /// bin is non-empty). Blocks until every item has completed.
+    /// lane schedule's items are binned up front and each lane drains
+    /// its queue in order — so [`Self::fan_outs`] grows by exactly one
+    /// per call (when any worker bin is non-empty). Blocks until every
+    /// item has completed; returns the fan-out's [`TenantStats`].
     ///
-    /// Because `f` may **park** a worker until a sibling item publishes,
-    /// concurrent binned runs hold the pool's blocking token for their
-    /// duration: two interleaved parking fan-outs could otherwise occupy
-    /// every worker with jobs gated on the other's queued-behind items
-    /// (cross-collective deadlock). Non-parking fan-outs
-    /// ([`Self::run_keyed`] / [`Self::run_unkeyed`]) interleave freely
-    /// with the token holder — their jobs always run to completion, so
-    /// the blocked schedule's remaining bins are only *delayed*, never
-    /// starved.
-    pub fn run_binned<W: Send>(&self, bins: Vec<Vec<W>>, f: impl Fn(W) + Sync) {
+    /// `f` is a **step function**: called with the lane's current item,
+    /// it either completes it ([`ItemStep::Done`] — the lane advances)
+    /// or reports it gated ([`ItemStep::Blocked`]) after parking at most
+    /// one bounded slice. A blocked lane job yields its worker and is
+    /// re-queued FIFO, so any number of parking fan-outs interleave on
+    /// one pool without the cross-program deadlock the old exclusive
+    /// blocking token existed to prevent (see the module docs for the
+    /// progress argument). The caller drains its own bin with a blocking
+    /// loop — the one lane each program is always guaranteed.
+    ///
+    /// A panic thrown by `f` is caught, recorded, and re-raised on the
+    /// caller after every lane finishes; the panicking lane's remaining
+    /// items are skipped (same contract as the keyed paths).
+    pub fn run_binned<W: Send>(
+        &self,
+        bins: Vec<Vec<W>>,
+        f: impl Fn(&mut W) -> ItemStep + Sync,
+    ) -> TenantStats {
         assert_eq!(bins.len(), self.lanes(), "one bin per lane");
-        let _token = lock_recover(&self.blocking);
-        // lane repair: a parking fan-out onto a dead lane would wait on
-        // that lane's queued items forever — re-attach dead workers first
-        self.respawn_dead();
-        self.dispatch(bins, &f);
+        let live = self.admit();
+        self.maybe_respawn();
+        let mut bins = bins;
+        let caller_bin = bins.pop().expect("caller lane exists");
+        let latch = Latch::new();
+        let guard = ScopeGuard(&latch);
+        let latch_ref = &latch;
+        let f_ref = &f;
+        let mut submitted = 0usize;
+        for (w, bin) in bins.into_iter().enumerate() {
+            if bin.is_empty() {
+                continue;
+            }
+            let lane_live = live.clone();
+            let mut bin = bin;
+            let mut at = 0usize;
+            let mut open = Some(LatchGuard(latch_ref));
+            let job: Box<dyn FnMut() -> JobOutcome + Send + '_> = Box::new(move || {
+                while at < bin.len() {
+                    let item = &mut bin[at];
+                    let step = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || f_ref(item),
+                    ));
+                    match step {
+                        Ok(ItemStep::Done) => {
+                            at += 1;
+                            lane_live.items.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Ok(ItemStep::Blocked) => {
+                            lane_live.yields.fetch_add(1, Ordering::Relaxed);
+                            return JobOutcome::Yield;
+                        }
+                        Err(payload) => {
+                            let mut slot = lock_recover(&latch_ref.panic);
+                            slot.get_or_insert(payload);
+                            drop(slot);
+                            break; // skip the lane's remaining items
+                        }
+                    }
+                }
+                // drop the borrowed items *before* the latch opens: the
+                // caller's frame may unwind the moment the count hits
+                // zero, and these items borrow into it
+                bin = Vec::new();
+                drop(open.take());
+                JobOutcome::Done
+            });
+            // SAFETY: the job borrows `f`, `latch` and the arena slices
+            // inside `bin`, all of which outlive this call: `guard`
+            // waits for the latch before this stack frame unwinds, the
+            // job clears its items before releasing its latch guard, and
+            // the guard is released (via Option::take or, last-resort,
+            // the job's drop in the worker loop) exactly once. Erasing
+            // the lifetime is what lets the job travel through — and be
+            // re-queued FIFO by — the pool's 'static queues.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnMut() -> JobOutcome + Send + '_>, Job>(job)
+            };
+            latch.add();
+            let ws = &self.shared.workers[w];
+            lock_recover(&ws.queue).push_back(job);
+            ws.ready.notify_one();
+            submitted += 1;
+        }
+        // the caller lane is dedicated to this program: it may loop on a
+        // blocked item (the step function parks a bounded slice per
+        // call), which is what guarantees every admitted program owns at
+        // least one runnable lane
+        'caller: for mut item in caller_bin {
+            loop {
+                let step =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut item)));
+                match step {
+                    Ok(ItemStep::Done) => {
+                        live.items.fetch_add(1, Ordering::Relaxed);
+                        break;
+                    }
+                    Ok(ItemStep::Blocked) => {
+                        live.yields.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(payload) => {
+                        let mut slot = lock_recover(&latch.panic);
+                        slot.get_or_insert(payload);
+                        break 'caller; // skip the caller's remaining items
+                    }
+                }
+            }
+        }
+        drop(guard); // wait for the workers
+        if submitted > 0 {
+            self.fan_outs.fetch_add(1, Ordering::SeqCst);
+        }
+        let stats = self.retire(&live);
+        if let Some(payload) = lock_recover(&latch.panic).take() {
+            std::panic::resume_unwind(payload);
+        }
+        stats
     }
 
     /// Run **unkeyed** weighted items: size-aware LPT binning per call,
@@ -506,31 +816,38 @@ impl WorkerPool {
             if bin.is_empty() {
                 continue;
             }
-            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
-                let _done = LatchGuard(latch_ref);
-                let run = std::panic::AssertUnwindSafe(|| {
-                    for item in bin {
-                        f(item);
+            // a one-shot job: non-parking fan-outs drain their bin in a
+            // single worker visit and never yield
+            let mut shot = Some((bin, LatchGuard(latch_ref)));
+            let job: Box<dyn FnMut() -> JobOutcome + Send + '_> = Box::new(move || {
+                if let Some((bin, open)) = shot.take() {
+                    let run = std::panic::AssertUnwindSafe(|| {
+                        for item in bin {
+                            f(item);
+                        }
+                    });
+                    if let Err(payload) = std::panic::catch_unwind(run) {
+                        let mut slot = lock_recover(&latch_ref.panic);
+                        slot.get_or_insert(payload);
                     }
-                });
-                if let Err(payload) = std::panic::catch_unwind(run) {
-                    let mut slot = lock_recover(&latch_ref.panic);
-                    slot.get_or_insert(payload);
+                    drop(open);
                 }
+                JobOutcome::Done
             });
             // SAFETY: the job borrows `f`, `latch` and the arena slices
             // inside `bin`, all of which outlive this call: `guard`
             // waits for the latch before this stack frame unwinds, and
-            // the latch is decremented (via LatchGuard) even when the
-            // job body panics. Erasing the lifetime is what lets the job
-            // travel through the pool's 'static queues — the same trick
+            // the latch is decremented (via LatchGuard, after the bin's
+            // items are consumed or unwound) even when the job body
+            // panics. Erasing the lifetime is what lets the job travel
+            // through the pool's 'static queues — the same trick
             // scoped-thread implementations use internally.
             let job: Job = unsafe {
-                std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job)
+                std::mem::transmute::<Box<dyn FnMut() -> JobOutcome + Send + '_>, Job>(job)
             };
             latch.add();
             let ws = &self.shared.workers[w];
-            lock_recover(&ws.queue).push(job);
+            lock_recover(&ws.queue).push_back(job);
             ws.ready.notify_one();
             submitted += 1;
         }
@@ -566,7 +883,7 @@ fn worker_loop(shared: &Shared, idx: usize) {
         let job = {
             let mut q = lock_recover(&me.queue);
             loop {
-                if let Some(j) = q.pop() {
+                if let Some(j) = q.pop_front() {
                     break Some(j);
                 }
                 if shared.shutdown.load(Ordering::SeqCst) {
@@ -576,14 +893,25 @@ fn worker_loop(shared: &Shared, idx: usize) {
             }
         };
         match job {
-            // last-resort containment: every job built by `dispatch`
-            // already catches its own panics (and lane items catch
-            // theirs), but a panic escaping here would kill the worker
-            // and deadlock every later fan-out binned onto its queue —
-            // contain it, count it, keep the lane alive
-            Some(j) => {
-                if std::panic::catch_unwind(std::panic::AssertUnwindSafe(j)).is_err() {
-                    shared.contained_panics.fetch_add(1, Ordering::SeqCst);
+            Some(mut j) => {
+                // last-resort containment: every job already catches its
+                // own panics (and lane items catch theirs), but a panic
+                // escaping here would kill the worker and deadlock every
+                // later fan-out binned onto its queue — contain it,
+                // count it, keep the lane alive (dropping the job
+                // releases its latch guard, so its fan-out still
+                // completes)
+                match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| j())) {
+                    Ok(JobOutcome::Done) => {}
+                    // a parked tenant's lane re-queues FIFO behind any
+                    // other tenant's jobs waiting on this worker — this
+                    // is the interleaving the blocking token forbade
+                    Ok(JobOutcome::Yield) => {
+                        lock_recover(&me.queue).push_back(j);
+                    }
+                    Err(_) => {
+                        shared.contained_panics.fetch_add(1, Ordering::SeqCst);
+                    }
                 }
             }
             None => return,
@@ -721,11 +1049,21 @@ mod tests {
         let pool = WorkerPool::new(2);
         let seen: Mutex<Vec<usize>> = Mutex::new(Vec::new());
         let bins: Vec<Vec<usize>> = vec![vec![0, 1, 2], vec![10, 11], vec![20]];
-        pool.run_binned(bins, |w| {
-            seen.lock().unwrap().push(w);
+        let stats = pool.run_binned(bins, |w: &mut usize| {
+            seen.lock().unwrap().push(*w);
+            ItemStep::Done
         });
         assert_eq!(pool.fan_outs(), 1, "one fan-out per binned run");
         assert_eq!(pool.lane_blocked_ns(), 0, "no epoch waits were recorded");
+        assert_eq!(stats.items, 6, "tenant stats count every item");
+        assert_eq!(stats.yields, 0, "nothing blocked");
+        assert_eq!(stats.peak_tenants, 1, "a lone tenant observes only itself");
+        assert_eq!(pool.active_tenants(), 0, "the tenant retired");
+        let history = pool.tenant_history();
+        assert!(
+            history.iter().any(|t| t.program == stats.program),
+            "the retired tenant is in the history ring"
+        );
         let seen = seen.into_inner().unwrap();
         assert_eq!(seen.len(), 6);
         // FIFO within each lane: relative order of a bin's items holds
@@ -734,6 +1072,126 @@ mod tests {
                 bin.iter().map(|w| seen.iter().position(|s| s == w).unwrap()).collect();
             assert!(pos.windows(2).all(|p| p[0] < p[1]), "bin {bin:?} reordered");
         }
+    }
+
+    #[test]
+    fn blocked_items_yield_the_worker_and_resume() {
+        // the worker lane's item gates on the caller lane's item having
+        // run — under the old monolithic-job model this was exactly a
+        // park; here the lane job yields until the gate opens
+        let pool = WorkerPool::new(1);
+        let gate = AtomicBool::new(false);
+        let bins: Vec<Vec<usize>> = vec![vec![0], vec![1]];
+        let stats = pool.run_binned(bins, |w: &mut usize| {
+            if *w == 0 {
+                if !gate.load(Ordering::SeqCst) {
+                    return ItemStep::Blocked;
+                }
+                ItemStep::Done
+            } else {
+                gate.store(true, Ordering::SeqCst);
+                ItemStep::Done
+            }
+        });
+        assert_eq!(stats.items, 2, "both items completed");
+        assert_eq!(pool.spawn_count(), 1, "yielding never spawns");
+        assert_eq!(pool.contained_panics(), 0);
+    }
+
+    #[test]
+    fn two_parking_fanouts_interleave_without_the_token() {
+        // each tenant's worker-lane item gates on the OTHER tenant's
+        // caller-lane item — under the retired exclusive token the
+        // second tenant could never start and this deadlocked; with
+        // cooperative yielding both admit and both finish
+        let pool = Arc::new(WorkerPool::new(1));
+        let fa = Arc::new(AtomicBool::new(false));
+        let fb = Arc::new(AtomicBool::new(false));
+        let run = |pool: Arc<WorkerPool>,
+                   mine: Arc<AtomicBool>,
+                   theirs: Arc<AtomicBool>| {
+            // bins: worker lane waits on `theirs`, caller lane sets `mine`
+            pool.run_binned(vec![vec![0usize], vec![1usize]], |w: &mut usize| {
+                if *w == 0 {
+                    if !theirs.load(Ordering::SeqCst) {
+                        std::thread::yield_now();
+                        return ItemStep::Blocked;
+                    }
+                    ItemStep::Done
+                } else {
+                    mine.store(true, Ordering::SeqCst);
+                    ItemStep::Done
+                }
+            })
+        };
+        let (sa, sb) = std::thread::scope(|s| {
+            let a = {
+                let (pool, fa, fb) = (pool.clone(), fa.clone(), fb.clone());
+                s.spawn(move || run(pool, fa, fb))
+            };
+            let b = {
+                let (pool, fa, fb) = (pool.clone(), fa.clone(), fb.clone());
+                s.spawn(move || run(pool, fb, fa))
+            };
+            (a.join().unwrap(), b.join().unwrap())
+        });
+        assert_eq!(sa.items + sb.items, 4);
+        assert_eq!(sa.peak_tenants, 2, "tenant A observed the overlap");
+        assert_eq!(sb.peak_tenants, 2, "tenant B observed the overlap");
+        assert_eq!(pool.active_tenants(), 0);
+        assert_eq!(pool.spawn_count(), 1, "interleaving never spawns");
+    }
+
+    #[test]
+    fn admission_cap_bounds_concurrent_tenants() {
+        let pool = Arc::new(WorkerPool::new(2));
+        pool.set_max_tenants(1);
+        assert_eq!(pool.max_tenants(), 1);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = pool.clone();
+                s.spawn(move || {
+                    for _ in 0..8 {
+                        pool.run_binned(
+                            vec![vec![1usize], vec![2], vec![3]],
+                            |_: &mut usize| ItemStep::Done,
+                        );
+                    }
+                });
+            }
+        });
+        assert_eq!(pool.active_tenants(), 0);
+        for t in pool.tenant_history() {
+            assert!(t.peak_tenants <= 1, "cap of 1 admitted {} tenants", t.peak_tenants);
+        }
+    }
+
+    #[test]
+    fn a_panicking_binned_item_skips_its_lane_and_reraises() {
+        let pool = WorkerPool::new(2);
+        let hits = AtomicUsize::new(0);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_binned(
+                vec![vec![0usize, 3], vec![1], vec![2]],
+                |w: &mut usize| {
+                    if *w == 0 {
+                        panic!("boom");
+                    }
+                    hits.fetch_add(1, Ordering::SeqCst);
+                    ItemStep::Done
+                },
+            );
+        }));
+        assert!(caught.is_err(), "the caller still sees the panic");
+        // item 3 (queued behind the panicking item on its lane) is
+        // skipped; the other lanes drain
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+        assert_eq!(pool.contained_panics(), 0, "the job guard wins before the last resort");
+        assert_eq!(pool.active_tenants(), 0, "the panicking tenant still retired");
+        let stats = pool.run_binned(vec![vec![7usize], vec![], vec![]], |_: &mut usize| {
+            ItemStep::Done
+        });
+        assert_eq!(stats.items, 1, "the next binned run is healthy");
     }
 
     #[test]

@@ -49,6 +49,16 @@ pub fn watchdog_ms_override() -> Option<u64> {
     std::env::var("RAMP_WATCHDOG_MS").ok()?.parse().ok()
 }
 
+/// `RAMP_MAX_TENANTS` — admission cap on concurrent parking fan-outs
+/// (multi-tenant event-driven collectives) sharing one `WorkerPool`.
+/// `0` or unset means unbounded; the cap is pure back-pressure — the
+/// cooperative lane protocol is deadlock-free at any tenancy (see
+/// `collectives/pool.rs`). Applied to the global pool at creation and
+/// by `--max-tenants` on engine-owned pools.
+pub fn max_tenants_override() -> Option<usize> {
+    std::env::var("RAMP_MAX_TENANTS").ok()?.parse().ok()
+}
+
 /// Message sizes swept by the comparison harness (Fig 20–22).
 pub const SWEEP_MESSAGES: [u64; 4] = [
     10 * crate::units::MB,

@@ -64,6 +64,12 @@ pub struct TrainConfig {
     /// (default) or the PR-4 task-by-task in-order driver. Bitwise
     /// identical results either way.
     pub lane_driver: crate::collectives::lane_exec::LaneDriver,
+    /// Admission cap on concurrent parking fan-outs (tenants) sharing
+    /// the executor pool (CLI `--max-tenants`): `0` = unbounded
+    /// (default). The cap is pure back-pressure — the cooperative lane
+    /// protocol is deadlock-free at any tenancy — so it only bounds
+    /// memory and tail latency when many jobs share one pool.
+    pub max_tenants: usize,
     /// Deterministic fault plan for the gradient all-reduce data plane
     /// (CLI `--faults <spec>`): seeded stragglers/jitter/dropped
     /// publishes are absorbed (results stay bitwise), failed transceiver
@@ -101,6 +107,7 @@ impl Default for TrainConfig {
             pipeline_cross: false,
             pool_threads: 0,
             lane_driver: crate::collectives::lane_exec::LaneDriver::default(),
+            max_tenants: 0,
             faults: None,
         }
     }
@@ -268,6 +275,9 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         .with_pipeline(cfg.pipeline())
         .with_pool_threads(cfg.pool_threads)
         .with_lane_driver(cfg.lane_driver);
+    if cfg.max_tenants > 0 {
+        engine = engine.with_max_tenants(cfg.max_tenants);
+    }
     if let Some(plan) = &cfg.faults {
         engine = engine.with_faults(plan.clone());
     }

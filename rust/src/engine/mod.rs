@@ -134,6 +134,22 @@ impl RampEngine {
         self
     }
 
+    /// Engine with a tenant admission cap (the `--max-tenants` /
+    /// `RAMP_MAX_TENANTS` knob): at most `cap` concurrent parking
+    /// (event-driven) fan-outs admitted on the engine's pool; `0` is
+    /// unbounded. Back-pressure only — the cooperative lane protocol is
+    /// deadlock-free at any tenancy. Applied to the engine-owned pool
+    /// when one exists; with the global pool the cap is process-wide
+    /// (shared by every `PoolSel::Global` engine).
+    pub fn with_max_tenants(self, cap: usize) -> Self {
+        match &self.pool {
+            PoolSel::Handle(pool) | PoolSel::Forced(pool) => pool.set_max_tenants(cap),
+            PoolSel::Global => WorkerPool::global().set_max_tenants(cap),
+            PoolSel::Off => {}
+        }
+        self
+    }
+
     /// Number of ranks this engine's fabric hosts.
     pub fn n_ranks(&self) -> usize {
         self.p.n_nodes()

@@ -125,6 +125,12 @@ pub struct FaultPlan {
     /// Watchdog deadline in ms (`0` = use `RAMP_WATCHDOG_MS` or
     /// [`DEFAULT_WATCHDOG_MS`]).
     pub watchdog_ms: u64,
+    /// Tenant salt mixed into every site hash (`0` = none; spec key
+    /// `tenant=N`). Concurrent programs on one pool share schedule
+    /// coordinates — without a per-program salt their injectors would
+    /// fire identical fault schedules; with one, each tenant gets its
+    /// own deterministic schedule from the same seed.
+    pub tenant: u64,
 }
 
 impl FaultPlan {
@@ -162,6 +168,7 @@ impl FaultPlan {
                 "lose" => plan.lose_permille = num()? as u32,
                 "panic" => plan.panic_permille = num()? as u32,
                 "watchdog" => plan.watchdog_ms = num()?,
+                "tenant" => plan.tenant = num()?,
                 _ => anyhow::bail!("unknown fault spec key `{key}`"),
             }
         }
@@ -191,6 +198,14 @@ impl FaultPlan {
     /// faults (no lost publishes, no panics, no failed transceivers).
     pub fn is_recoverable(&self) -> bool {
         self.lose_permille == 0 && self.panic_permille == 0 && self.failed_trx.is_empty()
+    }
+
+    /// Salt this plan for one tenant (program) of a multi-tenant pool:
+    /// same seed, distinct per-site decisions per tenant. `0` restores
+    /// the unsalted schedule.
+    pub fn with_tenant(mut self, tenant: u64) -> Self {
+        self.tenant = tenant;
+        self
     }
 
     /// The effective watchdog deadline: the plan's own value, else the
@@ -252,9 +267,10 @@ impl FaultInjector {
     }
 
     fn site(&self, tag: u64, a: usize, b: usize, c: usize) -> u64 {
+        // tenant 0 keeps the historical unsalted schedule bit-for-bit
+        let salt = if self.plan.tenant == 0 { 0 } else { mix64(self.plan.tenant) };
         mix64(
-            self.plan
-                .seed
+            (self.plan.seed ^ salt)
                 .wrapping_add(mix64(tag ^ ((a as u64) << 42) ^ ((b as u64) << 21) ^ c as u64)),
         )
     }
@@ -442,7 +458,7 @@ mod tests {
     #[test]
     fn spec_parses_every_key_and_rejects_unknown() {
         let plan = FaultPlan::from_spec(
-            "seed=7,trx=0:2,straggle=100,straggle-us=200,jitter=500,drop=50,lose=10,panic=5,watchdog=250",
+            "seed=7,trx=0:2,straggle=100,straggle-us=200,jitter=500,drop=50,lose=10,panic=5,watchdog=250,tenant=3",
         )
         .unwrap();
         // RAMP_FAULT_SEED may override the seed in CI; everything else is
@@ -458,6 +474,7 @@ mod tests {
         assert_eq!(plan.lose_permille, 10);
         assert_eq!(plan.panic_permille, 5);
         assert_eq!(plan.watchdog_ms, 250);
+        assert_eq!(plan.tenant, 3);
         assert!(!plan.is_recoverable());
         assert!(FaultPlan::from_spec("bogus=1").is_err());
         assert!(FaultPlan::from_spec("seed").is_err());
@@ -494,6 +511,28 @@ mod tests {
         assert!(inj.take_dropped(3, 1, 2));
         assert!(!inj.take_dropped(3, 1, 2), "double repair of one drop");
         assert_eq!(inj.repairs(), 1);
+    }
+
+    #[test]
+    fn tenant_salt_shifts_the_schedule_deterministically() {
+        let base = FaultPlan { seed: 11, drop_permille: 300, ..FaultPlan::default() };
+        let plain = FaultInjector::new(base.clone());
+        let t1a = FaultInjector::new(base.clone().with_tenant(1));
+        let t1b = FaultInjector::new(base.clone().with_tenant(1));
+        let t2 = FaultInjector::new(base.clone().with_tenant(2));
+        let sites: Vec<(usize, usize, u32)> =
+            (0..8).flat_map(|r| (0..4).map(move |c| (r, c, (r + c) as u32))).collect();
+        let decisions = |inj: &FaultInjector| -> Vec<bool> {
+            sites.iter().map(|&(r, c, e)| inj.swallow_publish(r, c, e)).collect()
+        };
+        let (dp, d1a, d1b, d2) =
+            (decisions(&plain), decisions(&t1a), decisions(&t1b), decisions(&t2));
+        assert_eq!(d1a, d1b, "same tenant salt must replay identically");
+        assert_ne!(dp, d1a, "a salted tenant must not mirror the unsalted schedule");
+        assert_ne!(d1a, d2, "distinct tenants must get distinct schedules");
+        // tenant 0 is exactly the historical unsalted behavior
+        let t0 = FaultInjector::new(base.with_tenant(0));
+        assert_eq!(dp, decisions(&t0));
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! ramp repro <figN|tableN|all>      regenerate a paper table/figure
 //! ramp train [--workers N] [--steps N] [--model tiny] [--lr X]
 //!            [--pipeline P] [--pool-threads T] [--lane-driver D]
-//!            [--faults SPEC]
+//!            [--max-tenants N] [--faults SPEC]
 //!                                    real DDP training through the fabric
 //!                                    (P: 0/auto = auto chunk pipelining,
 //!                                     1/off = off, K = fixed chunk count
@@ -16,7 +16,10 @@
 //!                                     D: event = one fan-out per lane
 //!                                     schedule with atomic epoch waits
 //!                                     (default), inorder = the PR-4
-//!                                     task-by-task driver; SPEC: a seeded
+//!                                     task-by-task driver; N: admission
+//!                                     cap on concurrent parking fan-outs
+//!                                     sharing the pool, 0 = unbounded;
+//!                                     SPEC: a seeded
 //!                                     fault plan, e.g.
 //!                                     `seed=7,trx=0,straggle=100,drop=50`
 //!                                     — see [`ramp::fault::FaultPlan`])
@@ -65,7 +68,7 @@ fn run() -> Result<()> {
             println!(
                 "RAMP — flat nanosecond optical network + MPI operations for DDL\n\n\
                  usage:\n  ramp info\n  ramp repro <fig6|fig7|table3|table4|fig15..fig23|all>\n  \
-                 ramp train [--workers N] [--steps N] [--model tiny] [--lr X] [--momentum X] [--pipeline off|auto|cross|K] [--pool-threads T] [--lane-driver event|inorder] [--faults SPEC]\n  \
+                 ramp train [--workers N] [--steps N] [--model tiny] [--lr X] [--momentum X] [--pipeline off|auto|cross|K] [--pool-threads T] [--lane-driver event|inorder] [--max-tenants N] [--faults SPEC]\n  \
                  ramp collective <op> [--nodes N] [--mb M] [--oversub S] [--pipeline off|auto|cross|K] [--faults SPEC]\n\n\
                  fault SPEC: seed=S,trx=A:B,straggle=P,straggle-us=U,jitter=NS,drop=P,lose=P,panic=P,watchdog=MS (permille probabilities)\n\n\
                  ops: reduce-scatter all-gather all-reduce all-to-all scatter gather reduce broadcast"
@@ -116,6 +119,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         lane_driver: ramp::collectives::lane_exec::LaneDriver::from_spec(
             &args.get_or("lane-driver", "event"),
         )?,
+        max_tenants: args.get_usize("max-tenants", 0)?,
         faults,
     };
     println!(

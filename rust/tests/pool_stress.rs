@@ -19,6 +19,15 @@
 //! anchor; unrecoverable faults (lost publishes, worker panics) must
 //! return the typed [`ramp::fault::RampError`] — never hang (every chaos
 //! run sits under a test-level timeout guard) and never poison the pool.
+//!
+//! PR 7 removes the pool's exclusive blocking token, so parking
+//! (cross-step) fan-outs now run concurrently as tenants in disjoint
+//! epoch namespaces. The multi-tenant cases assert the new contract:
+//! concurrent cross-step collectives truly interleave (`peak_tenants ≥
+//! 2` in the tenant history), a stalled tenant's typed `StalledEpoch`
+//! never perturbs a fault-free neighbor, and four tenants under salted
+//! per-tenant chaos schedules (`FaultPlan::with_tenant`) stay bitwise
+//! across the `RAMP_FAULT_SEED` matrix with zero deadlocks.
 
 use ramp::collectives::arena::Pipeline;
 use ramp::collectives::pool::{PoolSel, WorkerPool};
@@ -118,52 +127,66 @@ fn concurrent_collectives_share_one_pool_without_deadlock_or_spawns() {
 
 #[test]
 fn two_concurrent_cross_step_collectives_share_one_pool_event_driven() {
-    // PR-5 satellite: two whole cross-step collectives dispatched
-    // concurrently onto one pool, each a single event-driven fan-out
-    // with atomic epoch waits (the fan-outs themselves serialize on the
-    // pool's blocking token — two parking fan-outs interleaved on one
-    // pool could deadlock; keyed fan-outs still interleave freely).
-    // Asserts zero steady-state spawns, exactly one fan-out per
-    // collective, bitwise correctness (which implies epoch-tag
-    // consistency under the atomic path — the driver errors if any
-    // (rank, chunk) finishes unpublished), and a sane blocked-time
-    // counter.
+    // PR-7: the pool's exclusive blocking token is gone, so two whole
+    // cross-step collectives dispatched concurrently are two parking
+    // fan-outs in disjoint epoch namespaces — and they must truly
+    // interleave, not take turns. Barrier-synced rounds run until the
+    // tenant history records both programs live at once
+    // (`peak_tenants >= 2`); a pool that secretly serialized parking
+    // fan-outs would never produce such an entry. Cooperative lane jobs
+    // make the overlap safe at any tenancy: a gated item parks at most
+    // one bounded slice and then yields its worker back to the queue.
+    // Still asserts zero steady-state spawns, exactly one fan-out (one
+    // retired tenant) per collective, and bitwise correctness against
+    // scoped anchors.
     let pool = Arc::new(WorkerPool::new(3));
     let p = RampParams::fig8_example();
     let n = p.n_nodes();
     assert_eq!(pool.spawn_count(), 3);
-    let iters = 3usize;
+    pool.drain_tenant_history();
     let fan_outs_before = pool.fan_outs();
-    std::thread::scope(|s| {
-        for t in 0..2usize {
-            let pool = &pool;
-            let p = &p;
-            s.spawn(move || {
-                let op = if t == 0 { MpiOp::AllReduce } else { MpiOp::AllToAll };
-                let x = RampX::new(p)
-                    .with_pool(PoolSel::Forced(pool.clone()))
-                    .with_pipeline(Pipeline::cross(3));
-                for iter in 0..iters {
-                    let inputs = random_inputs(n, 2 * n, 700 + (t * 17 + iter) as u64);
+    let mut rounds = 0usize;
+    let mut interleaved = false;
+    while !interleaved {
+        rounds += 1;
+        assert!(rounds <= 50, "50 barrier-synced rounds never overlapped two tenants");
+        let barrier = std::sync::Barrier::new(2);
+        std::thread::scope(|s| {
+            for t in 0..2usize {
+                let pool = &pool;
+                let p = &p;
+                let barrier = &barrier;
+                s.spawn(move || {
+                    let op = if t == 0 { MpiOp::AllReduce } else { MpiOp::AllToAll };
+                    let x = RampX::new(p)
+                        .with_pool(PoolSel::Forced(pool.clone()))
+                        .with_pipeline(Pipeline::cross(3));
+                    let inputs = random_inputs(n, 2 * n, 700 + (t * 17 + rounds) as u64);
                     let mut got = inputs.clone();
+                    barrier.wait();
                     x.run(op, &mut got).unwrap();
                     let mut want = inputs.clone();
                     RampX::new(p).with_pool(PoolSel::Off).run(op, &mut want).unwrap();
-                    assert_eq!(got, want, "thread {t} iter {iter} diverged");
-                }
-            });
-        }
-    });
+                    assert_eq!(got, want, "tenant {t} round {rounds} diverged");
+                });
+            }
+        });
+        let history = pool.drain_tenant_history();
+        assert_eq!(history.len(), 2, "each cross-step collective retires exactly one tenant");
+        assert!(history.iter().all(|st| st.items > 0), "a tenant retired without running");
+        interleaved = history.iter().any(|st| st.peak_tenants >= 2);
+    }
     assert_eq!(pool.spawn_count(), 3, "steady state must never spawn");
     assert_eq!(
         pool.fan_outs() - fan_outs_before,
-        2 * iters as u64,
+        2 * rounds as u64,
         "each cross-step collective must be exactly one event fan-out"
     );
+    assert_eq!(pool.active_tenants(), 0, "every tenant must have retired");
     assert!(pool.sticky_lanes_valid());
     assert!(pool.sticky_size() <= n, "sticky map leaked keys");
-    // the counter is monotone and readable; concurrent schedules on 3
-    // workers inevitably park at least once across 6 collectives
+    // the aggregate blocked counter is monotone and readable; per-tenant
+    // shares were snapshotted into the drained history above
     let _ = pool.lane_blocked_ns();
 }
 
@@ -371,5 +394,157 @@ fn chaos_worker_panics_are_contained_and_typed() {
             assert_eq!(got, want, "{} diverged after panic containment", op.name());
         }
         assert_eq!(pool.spawn_count(), 3, "panic containment must not cost threads");
+    });
+}
+
+#[test]
+fn chaos_one_stalled_tenant_leaves_neighbors_bitwise() {
+    // Multi-tenant blast radius: tenant A runs under certain loss
+    // (lose=1000‰, 40 ms watchdog) and must fail with its typed
+    // `StalledEpoch`; tenant B shares the same pool concurrently,
+    // fault-free, and must stay bitwise. A's watchdog abort tears down
+    // only A's epoch namespace — B's gates are parked on a different
+    // parker and never hear about it.
+    with_timeout(120, "stalled tenant isolation", || {
+        let pool = Arc::new(WorkerPool::new(3));
+        let p = RampParams::fig8_example();
+        let n = p.n_nodes();
+        let barrier = std::sync::Barrier::new(2);
+        std::thread::scope(|s| {
+            let pool_a = pool.clone();
+            let pool_b = pool.clone();
+            let (pa, pb) = (&p, &p);
+            let (barrier_a, barrier_b) = (&barrier, &barrier);
+            s.spawn(move || {
+                let inj = FaultInjector::new(
+                    FaultPlan {
+                        seed: 9,
+                        lose_permille: 1000,
+                        watchdog_ms: 40,
+                        ..FaultPlan::default()
+                    }
+                    .with_tenant(1),
+                );
+                let x = RampX::new(pa)
+                    .with_pool(PoolSel::Forced(pool_a))
+                    .with_pipeline(Pipeline::cross(3))
+                    .with_faults(inj.clone());
+                let mut bufs = random_inputs(n, 2 * n, 177);
+                barrier_a.wait();
+                let err =
+                    x.run(MpiOp::AllReduce, &mut bufs).expect_err("certain loss must fail");
+                assert!(
+                    matches!(
+                        err.downcast_ref::<RampError>(),
+                        Some(RampError::StalledEpoch { .. })
+                    ),
+                    "tenant A: expected StalledEpoch, got {err:#}"
+                );
+                assert!(inj.losses() > 0, "tenant A's loss schedule never fired");
+            });
+            s.spawn(move || {
+                let x = RampX::new(pb)
+                    .with_pool(PoolSel::Forced(pool_b))
+                    .with_pipeline(Pipeline::cross(3));
+                barrier_b.wait();
+                for iter in 0..3usize {
+                    let inputs = random_inputs(n, 2 * n, 560 + iter as u64);
+                    let mut got = inputs.clone();
+                    x.run(MpiOp::AllReduce, &mut got).unwrap_or_else(|e| {
+                        panic!("tenant B iter {iter} caught A's failure: {e:#}")
+                    });
+                    let mut want = inputs.clone();
+                    RampX::new(pb)
+                        .with_pool(PoolSel::Off)
+                        .run(MpiOp::AllReduce, &mut want)
+                        .unwrap();
+                    assert_eq!(got, want, "tenant B iter {iter} diverged next to a stall");
+                }
+            });
+        });
+        // pool healthy after the stall: fault-free run, still bitwise
+        let inputs = random_inputs(n, 2 * n, 561);
+        let mut got = inputs.clone();
+        RampX::new(&p)
+            .with_pool(PoolSel::Forced(pool.clone()))
+            .with_pipeline(Pipeline::cross(3))
+            .run(MpiOp::AllReduce, &mut got)
+            .unwrap();
+        let mut want = inputs.clone();
+        RampX::new(&p).with_pool(PoolSel::Off).run(MpiOp::AllReduce, &mut want).unwrap();
+        assert_eq!(got, want, "pool damaged by a stalled tenant");
+        assert_eq!(pool.active_tenants(), 0, "the stalled tenant must still retire");
+        assert_eq!(pool.spawn_count(), 3);
+    });
+}
+
+#[test]
+fn chaos_four_tenants_interleave_bitwise_across_seeds() {
+    // Acceptance for the token removal: four concurrent cross-step
+    // collectives on one shared pool — four parking fan-outs the old
+    // blocking token would have run single-file — each tenant under its
+    // own salted recoverable chaos schedule
+    // (`FaultPlan::with_tenant(t)`), swept across a 3-seed matrix
+    // (`RAMP_FAULT_SEED` shifts it in CI). Every run must stay bitwise
+    // against its scoped anchor, every recorded drop must be
+    // watchdog-repaired, nothing may deadlock (timeout guard) and the
+    // pool must never spawn past construction.
+    let base = ramp::config::fault_seed_override().unwrap_or(11);
+    with_timeout(240, "four-tenant chaos", move || {
+        let pool = Arc::new(WorkerPool::new(3));
+        let p = RampParams::fig8_example();
+        let n = p.n_nodes();
+        for seed in [base, base.wrapping_add(1), base.wrapping_add(2)] {
+            pool.drain_tenant_history();
+            let barrier = std::sync::Barrier::new(4);
+            std::thread::scope(|s| {
+                for t in 0..4usize {
+                    let pool = &pool;
+                    let p = &p;
+                    let barrier = &barrier;
+                    s.spawn(move || {
+                        let inj = FaultInjector::new(
+                            FaultPlan::recoverable_chaos(seed).with_tenant(t as u64 + 1),
+                        );
+                        assert!(inj.plan().is_recoverable());
+                        let x = RampX::new(p)
+                            .with_pool(PoolSel::Forced(pool.clone()))
+                            .with_pipeline(Pipeline::cross(3))
+                            .with_faults(inj.clone());
+                        barrier.wait();
+                        for iter in 0..3usize {
+                            let op = op_for(t + iter);
+                            let inputs = random_inputs(
+                                n,
+                                elems_for(op, n),
+                                seed.wrapping_mul(131) + (t * 7 + iter) as u64,
+                            );
+                            let mut got = inputs.clone();
+                            x.run(op, &mut got).unwrap_or_else(|e| {
+                                panic!("tenant {t} seed {seed} {}: {e:#}", op.name())
+                            });
+                            let mut want = inputs.clone();
+                            RampX::new(p).with_pool(PoolSel::Off).run(op, &mut want).unwrap();
+                            assert_eq!(
+                                got, want,
+                                "tenant {t} seed {seed} iter {iter} diverged under chaos"
+                            );
+                        }
+                        assert_eq!(
+                            inj.repairs(),
+                            inj.drops(),
+                            "tenant {t} seed {seed}: a dropped publish went unrepaired"
+                        );
+                    });
+                }
+            });
+            let history = pool.tenant_history();
+            assert!(
+                history.iter().filter(|st| st.items > 0).count() >= 4,
+                "seed {seed}: four tenants must retire with work done"
+            );
+        }
+        assert_eq!(pool.active_tenants(), 0);
+        assert_eq!(pool.spawn_count(), 3, "multi-tenant chaos must not spawn");
     });
 }
