@@ -357,6 +357,48 @@ impl BufferArena {
         (0..self.n).map(|r| self.front(r).to_vec()).collect()
     }
 
+    /// Partial-progress restore for the recovery layer: rewrite only the
+    /// *incomplete* fraction lanes' positions of every front region from
+    /// `backup` (the pre-attempt inputs), leaving every other position —
+    /// in particular a completed chunk's already-final output, which
+    /// lands in the front half when the step count is even — untouched.
+    /// Fraction purity is what makes this sound: chunk `c` of a `unit`-
+    /// tiled lane program only ever reads and writes offsets in
+    /// `fracs[c]` of each unit, so restoring exactly those offsets
+    /// re-arms the incomplete lanes without disturbing carried data in
+    /// either half.
+    pub fn restore_front_fractions(
+        &mut self,
+        backup: &[Vec<f32>],
+        unit: usize,
+        fracs: &[(usize, usize)],
+        done: &[bool],
+    ) -> Result<()> {
+        ensure!(backup.len() == self.n, "need {} backup buffers, got {}", self.n, backup.len());
+        ensure!(unit > 0 && fracs.len() == done.len(), "fraction/done mask mismatch");
+        for (r, b) in backup.iter().enumerate() {
+            ensure!(b.len() <= self.region_cap, "backup rank {r} exceeds region cap");
+            ensure!(
+                b.len() % unit == 0,
+                "backup rank {r} length {} is not unit ({unit}) tiled",
+                b.len()
+            );
+            let base = self.front_base() + r * self.region_cap;
+            for pos in 0..b.len() / unit {
+                for (c, &(flo, fhi)) in fracs.iter().enumerate() {
+                    if done[c] {
+                        continue;
+                    }
+                    let at = pos * unit + flo;
+                    self.slab[base + at..base + at + (fhi - flo)]
+                        .copy_from_slice(&b[at..at + (fhi - flo)]);
+                }
+            }
+            self.lens[r] = b.len();
+        }
+        Ok(())
+    }
+
     /// Split into the read-only front half and per-rank mutable back
     /// regions (each `region_cap` long, rank-indexed). Disjoint rank sets
     /// can then be written from different threads.
@@ -1086,5 +1128,33 @@ mod tests {
         // flipping back exposes the original data unscathed
         a.flip_uniform(10);
         assert!(a.front(1).iter().all(|&x| x == 2.0));
+    }
+
+    #[test]
+    fn restore_front_fractions_rearms_only_incomplete_lanes() {
+        // 2 ranks × 4 elements, unit 2, K = 2 half-unit lanes
+        let mut a = BufferArena::with_capacity(2, 4);
+        let backup: Vec<Vec<f32>> =
+            vec![vec![1.0, 2.0, 3.0, 4.0], vec![5.0, 6.0, 7.0, 8.0]];
+        a.load(&backup).unwrap();
+        // simulate an aborted attempt scribbling over the whole front
+        for r in 0..2 {
+            a.front_mut(r).fill(-1.0);
+        }
+        let fracs = vec![(0usize, 1usize), (1, 2)];
+        // chunk 0 done (its front positions carry final data — here the
+        // -1 sentinels), chunk 1 incomplete — restore re-arms only the
+        // odd offsets of each unit
+        a.restore_front_fractions(&backup, 2, &fracs, &[true, false]).unwrap();
+        assert_eq!(a.front(0), &[-1.0, 2.0, -1.0, 4.0]);
+        assert_eq!(a.front(1), &[-1.0, 6.0, -1.0, 8.0]);
+        // with nothing done, the full inputs come back
+        a.restore_front_fractions(&backup, 2, &fracs, &[false, false]).unwrap();
+        assert_eq!(a.front(0), &backup[0][..]);
+        assert_eq!(a.front(1), &backup[1][..]);
+        // guard rails: mask width and unit tiling are enforced
+        assert!(a.restore_front_fractions(&backup, 2, &fracs, &[true]).is_err());
+        let ragged = vec![vec![1.0, 2.0, 3.0], vec![5.0, 6.0, 7.0]];
+        assert!(a.restore_front_fractions(&ragged, 2, &fracs, &[false, false]).is_err());
     }
 }

@@ -480,6 +480,16 @@ struct EventCtx<'a> {
 impl EventCtx<'_> {
     /// Record the run's first failure, flip the abort flag and wake
     /// every parked lane so the fan-out drains promptly.
+    ///
+    /// Wake-on-abort ordering (audited for PR 8): the abort store
+    /// (`SeqCst`) happens **before** `wake_all`, and `wake_all` takes
+    /// (and drops) the parker mutex before notifying — the same mutex
+    /// every `park_while` holds across its gate re-check. So a parked
+    /// lane either (a) re-checked its gate after the store and saw
+    /// `aborted` (no park), or (b) parked before the notification and is
+    /// woken by it. Either way a lane parked on a never-published gate
+    /// observes the abort within one `PARK_SLICE` — pinned by the
+    /// regression test `parked_lane_drains_within_a_slice_of_abort`.
     fn fail(&self, err: RampError) {
         let mut slot = self.failure.lock().unwrap_or_else(|e| e.into_inner());
         if slot.is_none() {
@@ -683,11 +693,20 @@ pub(crate) fn run_event(
     sched: &LaneSchedule,
     arena: &mut BufferArena,
     faults: Option<&FaultInjector>,
+    probe: Option<&crate::fault::recovery::RecoveryProbe>,
+    done: Option<&[bool]>,
 ) -> Result<()> {
     let n = arena.n_regions();
     let k = prog.k;
     let n_steps = prog.step_items.len();
     prog.validate(n, arena.region_cap())?;
+    if let Some(done) = done {
+        ensure!(
+            done.len() == k,
+            "resume mask covers {} chunks, program has {k} lanes",
+            done.len()
+        );
+    }
     // the epoch gates assume every step runs exactly one task per chunk
     // lane; a schedule where some step collapsed to a single task (a
     // non-divisible or non-aligned plan) would leave chunks ≥ 1 of that
@@ -708,6 +727,18 @@ pub(crate) fn run_event(
     let epochs = EpochTags::new(n, k);
     let pending: Vec<AtomicU32> =
         (0..n * k).map(|i| AtomicU32::new(touch[0][i / k])).collect();
+    // partial-progress resume: chunks the recovery layer proved complete
+    // are pre-published at the final epoch (their output positions
+    // already hold final data — fraction purity keeps every other
+    // chunk's re-execution off them) and their tasks are skipped, so a
+    // resumed run executes — and the transcoder later sends — only the
+    // incomplete fractions
+    let is_done = |c: usize| done.map(|d| d[c]).unwrap_or(false);
+    for c in 0..k {
+        if is_done(c) {
+            epochs.publish(0..n, c, n_steps as u32);
+        }
+    }
 
     // entries in schedule (task) order — each lane's queue inherits this
     // order, the linear extension that guarantees progress; the gate
@@ -719,7 +750,12 @@ pub(crate) fn run_event(
         gate: GateState,
     }
     let mut entries: Vec<Entry> = Vec::new();
+    let mut skipped_items = 0u64;
     for task in &sched.tasks {
+        if is_done(task.chunk) {
+            skipped_items += prog.step_items[task.step].len() as u64;
+            continue;
+        }
         for item in &prog.step_items[task.step] {
             entries.push(Entry {
                 step: task.step,
@@ -766,6 +802,14 @@ pub(crate) fn run_event(
                 GatePoll::Ready => {}
             }
             if let Some(inj) = ctx.faults {
+                // mid-flight transceiver death: the armed step has been
+                // reached — abort typed before touching the slab (the
+                // error carries the ARMED step, so any observing lane
+                // reports the same failure)
+                if let Some((trx, at)) = inj.trx_death(e.step) {
+                    ctx.fail(RampError::TransceiverDied { trx, step: at });
+                    return ItemStep::Done;
+                }
                 inj.jitter(e.step, e.chunk, e.item.key);
                 inj.straggle(e.step, e.chunk, e.item.key);
             }
@@ -795,7 +839,28 @@ pub(crate) fn run_event(
     };
     // this program's epoch-wait time: pool aggregate + its tenant entry
     pool.credit_tenant_blocked(stats.program, blocked.load(Ordering::Relaxed));
+    if skipped_items > 0 {
+        pool.credit_tenant_skipped(stats.program, skipped_items);
+    }
+    // abort snapshot for the recovery layer: the per-(rank, chunk)
+    // epochs at failure, from which chunk-granular resume is derived
+    let record_abort = || {
+        if let Some(probe) = probe {
+            probe.record(crate::fault::recovery::AbortSnapshot {
+                k,
+                unit: prog.unit,
+                fracs: prog.fracs.clone(),
+                n_steps,
+                n,
+                epochs: (0..n)
+                    .flat_map(|q| (0..k).map(move |c| (q, c)))
+                    .map(|(q, c)| epochs.get(q, c))
+                    .collect(),
+            });
+        }
+    };
     if let Some(err) = failure.lock().unwrap_or_else(|e| e.into_inner()).take() {
+        record_abort();
         return Err(err.into());
     }
     // a dropped publish of the *final* step has no later gate to repair
@@ -808,6 +873,7 @@ pub(crate) fn run_event(
         }
     }
     if let Some((q, c, got)) = epochs.first_below(n_steps as u32) {
+        record_abort();
         return Err(RampError::StalledEpoch { rank: q, chunk: c, epoch: got + 1, waited_ms: 0 }.into());
     }
     Ok(())
@@ -925,7 +991,7 @@ mod tests {
         let sched = LaneSchedule::from_plan(&plan);
         sched.validate(&plan).unwrap();
         let fan_outs = pool.fan_outs();
-        run_event(&pool, &prog, &sched, &mut arena, None).unwrap();
+        run_event(&pool, &prog, &sched, &mut arena, None, None, None).unwrap();
         assert_eq!(pool.fan_outs(), fan_outs + 1, "one fan-out for the whole program");
         arena.set_front(true, prog.final_lens.clone());
         // oracle: step 0 then step 1 member-order reductions
@@ -976,7 +1042,7 @@ mod tests {
             ..Default::default()
         });
         let sched = LaneSchedule::from_plan(&plan);
-        assert!(run_event(&pool, &prog, &sched, &mut arena, None).is_err());
+        assert!(run_event(&pool, &prog, &sched, &mut arena, None, None, None).is_err());
     }
 
     /// Build the two-subgroup reduce fixture of
@@ -1041,7 +1107,7 @@ mod tests {
         let inj = FaultInjector::new(plan);
         let mut arena = BufferArena::with_capacity(4, 8);
         arena.load(&bufs).unwrap();
-        run_event(&pool, &prog, &sched, &mut arena, Some(&inj)).unwrap();
+        run_event(&pool, &prog, &sched, &mut arena, Some(&inj), None, None).unwrap();
         arena.set_front(true, prog.final_lens.clone());
         for r in 0..4 {
             assert_eq!(arena.front(r), &expect[r][..], "rank {r} diverged under drop repair");
@@ -1059,7 +1125,7 @@ mod tests {
         let mut arena = BufferArena::with_capacity(4, 8);
         arena.load(&bufs).unwrap();
         let t0 = std::time::Instant::now();
-        let err = run_event(&pool, &prog, &sched, &mut arena, Some(&inj)).unwrap_err();
+        let err = run_event(&pool, &prog, &sched, &mut arena, Some(&inj), None, None).unwrap_err();
         assert!(
             t0.elapsed() < std::time::Duration::from_secs(5),
             "typed failure must arrive near the watchdog deadline, not hang"
@@ -1074,7 +1140,7 @@ mod tests {
         let (prog, sched, bufs, expect) = reduce_fixture();
         let mut arena = BufferArena::with_capacity(4, 8);
         arena.load(&bufs).unwrap();
-        run_event(&pool, &prog, &sched, &mut arena, None).unwrap();
+        run_event(&pool, &prog, &sched, &mut arena, None, None, None).unwrap();
         arena.set_front(true, prog.final_lens.clone());
         for r in 0..4 {
             assert_eq!(arena.front(r), &expect[r][..], "rank {r} diverged after typed failure");
@@ -1199,7 +1265,7 @@ mod tests {
         let inj = FaultInjector::new(plan);
         let mut arena = BufferArena::with_capacity(4, 8);
         arena.load(&bufs).unwrap();
-        let err = run_event(&pool, &prog, &sched, &mut arena, Some(&inj)).unwrap_err();
+        let err = run_event(&pool, &prog, &sched, &mut arena, Some(&inj), None, None).unwrap_err();
         let ramp = err.downcast_ref::<RampError>().expect("typed error");
         match ramp {
             RampError::WorkerPanic { detail, .. } => {
@@ -1212,11 +1278,122 @@ mod tests {
         let (prog, sched, bufs, expect) = reduce_fixture();
         let mut arena = BufferArena::with_capacity(4, 8);
         arena.load(&bufs).unwrap();
-        run_event(&pool, &prog, &sched, &mut arena, None).unwrap();
+        run_event(&pool, &prog, &sched, &mut arena, None, None, None).unwrap();
         arena.set_front(true, prog.final_lens.clone());
         for r in 0..4 {
             assert_eq!(arena.front(r), &expect[r][..], "rank {r} diverged after contained panic");
         }
         assert_eq!(pool.contained_panics(), 0, "lane containment must beat the pool's last resort");
+    }
+
+    #[test]
+    fn parked_lane_drains_within_a_slice_of_abort() {
+        // satellite fix pin: a lane parked on a never-published gate must
+        // observe a neighbor's typed failure within ~one PARK_SLICE. The
+        // ordering that guarantees it — `aborted` flips (SeqCst) before
+        // `wake_all`, and `park_while` re-checks `!aborted` under the
+        // parker mutex — lives in `EventCtx::fail`; a long watchdog keeps
+        // the deadline path out of the picture
+        let fx = GateFixture::new(2, 30_000);
+        // rank 0 opens; rank 1 never publishes, so the walker parks on it
+        fx.epochs.publish([0], 0, 1);
+        let drain_latency = std::thread::scope(|s| {
+            let waiter = s.spawn(|| {
+                let ctx = fx.ctx();
+                let mut g = GateState::default();
+                loop {
+                    match gate_step(&ctx, &[0, 1], 0, 1, &mut g) {
+                        GatePoll::Abort => return std::time::Instant::now(),
+                        GatePoll::Ready => panic!("rank 1 never published — gate must not open"),
+                        GatePoll::Blocked => continue,
+                    }
+                }
+            });
+            // let the waiter reach the parked state, then fail from the
+            // "neighbor" (this thread), exactly as a faulted lane would
+            std::thread::sleep(Duration::from_millis(50));
+            let t_fail = std::time::Instant::now();
+            fx.ctx().fail(RampError::WorkerPanic {
+                step: 0,
+                chunk: 0,
+                key: 7,
+                detail: "neighbor failure".into(),
+            });
+            waiter.join().expect("waiter must not panic") - t_fail
+        });
+        // PARK_SLICE is 1 ms; allow generous scheduler slack, but nothing
+        // near the 30 s watchdog — a missed wake would sit a full slice
+        // loop or the whole deadline
+        assert!(
+            drain_latency < Duration::from_millis(500),
+            "parked lane took {drain_latency:?} to observe the abort"
+        );
+        match fx.failure.lock().unwrap().take() {
+            Some(RampError::WorkerPanic { key, .. }) => assert_eq!(key, 7),
+            other => panic!("the neighbor's typed error must be preserved, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mid_flight_trx_death_aborts_typed_with_the_armed_step() {
+        let pool = WorkerPool::new(2);
+        let (prog, sched, bufs, _) = reduce_fixture();
+        // group 1 dies at step 1: step 0 completes clean, any lane
+        // reaching step 1 trips the armed death and aborts typed
+        let plan = FaultPlan { seed: 3, trx_at: vec![(1, 1)], watchdog_ms: 200, ..FaultPlan::default() };
+        let inj = FaultInjector::new(plan);
+        let mut arena = BufferArena::with_capacity(4, 8);
+        arena.load(&bufs).unwrap();
+        let probe = crate::fault::recovery::RecoveryProbe::default();
+        let t0 = std::time::Instant::now();
+        let err =
+            run_event(&pool, &prog, &sched, &mut arena, Some(&inj), Some(&probe), None).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(5), "typed death must not hang");
+        match err.downcast_ref::<RampError>() {
+            Some(RampError::TransceiverDied { trx, step }) => {
+                assert_eq!(*trx, 1, "the armed group is reported");
+                assert_eq!(*step, 1, "the ARMED step is reported, not the observer's");
+            }
+            other => panic!("expected TransceiverDied, got {other:?}"),
+        }
+        assert_eq!(inj.trx_deaths(), 1, "the death fires exactly once");
+        // the abort snapshot feeds chunk-granular resume
+        let snap = probe.take().expect("abort must record an epoch snapshot");
+        assert_eq!(snap.k, 2);
+        assert_eq!(snap.n, 4);
+        assert_eq!(snap.n_steps, 2);
+        assert_eq!(snap.epochs.len(), 8);
+        assert_eq!(snap.done_mask().len(), 2);
+    }
+
+    #[test]
+    fn resume_mask_skips_completed_chunks_and_stays_bitwise() {
+        let pool = WorkerPool::new(2);
+        let (prog, sched, bufs, expect) = reduce_fixture();
+        let mut arena = BufferArena::with_capacity(4, 8);
+        arena.load(&bufs).unwrap();
+        // chunk 0 is declared already complete: its tasks must never
+        // execute (its slab positions keep their pre-resume content —
+        // here the original inputs stand in for the carried outputs)
+        // while chunk 1 runs to its exact fault-free values
+        run_event(&pool, &prog, &sched, &mut arena, None, None, Some(&[true, false])).unwrap();
+        arena.set_front(true, prog.final_lens.clone());
+        for r in 0..4 {
+            let front = arena.front(r);
+            assert_eq!(
+                front[0],
+                bufs[r][0],
+                "rank {r}: done chunk 0's fraction must be untouched"
+            );
+            assert_eq!(
+                front[1], expect[r][1],
+                "rank {r}: resumed chunk 1 must be bitwise vs the fault-free oracle"
+            );
+        }
+        // a mask of the wrong width is a recovery-layer bug — refused
+        let (prog, sched, bufs, _) = reduce_fixture();
+        let mut arena = BufferArena::with_capacity(4, 8);
+        arena.load(&bufs).unwrap();
+        assert!(run_event(&pool, &prog, &sched, &mut arena, None, None, Some(&[true])).is_err());
     }
 }

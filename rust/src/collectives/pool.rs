@@ -157,6 +157,10 @@ pub struct TenantStats {
     pub yields: u64,
     pub peak_tenants: usize,
     pub blocked_ns: u64,
+    /// Items this program's fan-out *elided* because their chunk was
+    /// already complete at admission (partial-progress resume) —
+    /// credited by the lane executor, like `blocked_ns`.
+    pub skipped_items: u64,
 }
 
 /// Live counters for an admitted (in-flight) tenant.
@@ -419,6 +423,16 @@ impl WorkerPool {
         }
     }
 
+    /// Credit items elided by a resumed (partial-progress) fan-out to
+    /// that program's retired [`TenantStats`] entry — the per-tenant
+    /// side of the recovery layer's resumed-vs-replayed accounting.
+    pub fn credit_tenant_skipped(&self, program: u64, items: u64) {
+        let mut t = lock_recover(&self.tenants);
+        if let Some(s) = t.history.iter_mut().rev().find(|s| s.program == program) {
+            s.skipped_items += items;
+        }
+    }
+
     /// Cap on concurrently admitted parking fan-outs (0 = unbounded).
     pub fn max_tenants(&self) -> usize {
         lock_recover(&self.tenants).max_tenants
@@ -625,6 +639,7 @@ impl WorkerPool {
             yields: live.yields.load(Ordering::Relaxed),
             peak_tenants: live.peak.load(Ordering::Relaxed),
             blocked_ns: 0,
+            skipped_items: 0,
         };
         let mut t = lock_recover(&self.tenants);
         t.active.remove(&live.program);

@@ -61,6 +61,14 @@ pub struct RampX<'a> {
     /// and the engine's `--faults` path); `None` runs fault-free with
     /// the default watchdog.
     faults: Option<std::sync::Arc<crate::fault::FaultInjector>>,
+    /// Abort-snapshot sink for the recovery layer: a typed abort of the
+    /// event-driven driver records the per-(rank, chunk) epochs here,
+    /// from which chunk-granular resume is derived.
+    probe: Option<std::sync::Arc<crate::fault::recovery::RecoveryProbe>>,
+    /// Partial-progress resume mask (one flag per chunk lane, `true` =
+    /// already complete): done chunks are pre-published and their tasks
+    /// skipped, so a resumed run executes only incomplete fractions.
+    resume: Option<Vec<bool>>,
 }
 
 impl<'a> RampX<'a> {
@@ -75,6 +83,8 @@ impl<'a> RampX<'a> {
             pool: PoolSel::default(),
             lane_driver: LaneDriver::default(),
             faults: None,
+            probe: None,
+            resume: None,
         }
     }
 
@@ -128,6 +138,30 @@ impl<'a> RampX<'a> {
     /// within the plan's watchdog deadline.
     pub fn with_faults(mut self, faults: std::sync::Arc<crate::fault::FaultInjector>) -> Self {
         self.faults = Some(faults);
+        self
+    }
+
+    /// Attach a recovery probe: a typed abort of the event-driven lane
+    /// executor records an [`crate::fault::recovery::AbortSnapshot`]
+    /// (per-(rank, chunk) epochs) into it, from which the recovery layer
+    /// derives chunk-granular resume.
+    pub fn with_probe(
+        mut self,
+        probe: std::sync::Arc<crate::fault::recovery::RecoveryProbe>,
+    ) -> Self {
+        self.probe = Some(probe);
+        self
+    }
+
+    /// Resume a previously aborted run: `done[c] = true` marks chunk
+    /// lane `c` as already complete — its output positions must still
+    /// hold the carried data (see
+    /// [`BufferArena::restore_front_fractions`]) and its tasks are
+    /// skipped. The mask must match the lane program's chunk count; it
+    /// only applies to the cross-step lane path (intra fallbacks have no
+    /// chunk lanes to resume and run full).
+    pub fn with_resume(mut self, done: Vec<bool>) -> Self {
+        self.resume = Some(done);
         self
     }
 
@@ -185,6 +219,10 @@ impl<'a> RampX<'a> {
             pool: self.pool.clone(),
             lane_driver: self.lane_driver,
             faults: self.faults.clone(),
+            probe: self.probe.clone(),
+            // intra fallbacks run no chunk-lane program — a resume mask
+            // sized for the cross program must not leak into them
+            resume: None,
         }
     }
 
@@ -908,15 +946,23 @@ impl<'a> RampX<'a> {
         let sched = crate::transcoder::lanes::LaneSchedule::from_plan(plan);
         sched.validate(plan)?;
         let read_lower0 = arena.front_is_lower();
+        let probe = self.probe.as_deref();
+        let done = self.resume.as_deref();
         match self.lane_driver {
-            LaneDriver::InOrder => self.run_program_in_order(arena, prog, &sched)?,
+            LaneDriver::InOrder => self.run_program_in_order(arena, prog, &sched, done)?,
             LaneDriver::Event => match &self.pool {
                 // no persistent lanes: sequential task order (cross under
                 // PoolSel::Off normally degrades before reaching here)
-                PoolSel::Off => self.run_program_in_order(arena, prog, &sched)?,
-                PoolSel::Forced(pool) => {
-                    lane_exec::run_event(&**pool, prog, &sched, arena, self.faults.as_deref())?
-                }
+                PoolSel::Off => self.run_program_in_order(arena, prog, &sched, done)?,
+                PoolSel::Forced(pool) => lane_exec::run_event(
+                    &**pool,
+                    prog,
+                    &sched,
+                    arena,
+                    self.faults.as_deref(),
+                    probe,
+                    done,
+                )?,
                 PoolSel::Global | PoolSel::Handle(_) => {
                     let pool = match &self.pool {
                         PoolSel::Handle(pool) => &**pool,
@@ -924,9 +970,17 @@ impl<'a> RampX<'a> {
                     };
                     let threshold = crate::collectives::arena::par_threshold();
                     if pool.n_workers() == 0 || prog.total_weight() < threshold {
-                        self.run_program_in_order(arena, prog, &sched)?
+                        self.run_program_in_order(arena, prog, &sched, done)?
                     } else {
-                        lane_exec::run_event(pool, prog, &sched, arena, self.faults.as_deref())?
+                        lane_exec::run_event(
+                            pool,
+                            prog,
+                            &sched,
+                            arena,
+                            self.faults.as_deref(),
+                            probe,
+                            done,
+                        )?
                     }
                 }
             },
@@ -947,17 +1001,37 @@ impl<'a> RampX<'a> {
         arena: &mut BufferArena,
         prog: &LaneProgram,
         sched: &crate::transcoder::lanes::LaneSchedule,
+        done: Option<&[bool]>,
     ) -> Result<()> {
         let n = arena.n_regions();
         let k = prog.k;
         let n_steps = prog.step_items.len();
         prog.validate(n, arena.region_cap())?;
+        if let Some(done) = done {
+            ensure!(
+                done.len() == k,
+                "resume mask covers {} chunks, program has {k} lanes",
+                done.len()
+            );
+        }
+        let is_done = |c: usize| done.map(|d| d[c]).unwrap_or(false);
         let touch = lane_exec::touch_counts(prog, n);
         let epochs = EpochTags::new(n, k);
+        // partial-progress resume mirrors the event driver: completed
+        // chunks are pre-published at the final epoch and their tasks
+        // skipped (fraction purity keeps their carried data untouched)
+        for c in 0..k {
+            if is_done(c) {
+                epochs.publish(0..n, c, n_steps as u32);
+            }
+        }
         let mut pending: Vec<u32> = (0..n * k).map(|i| touch[0][i / k]).collect();
         let slab = lane_exec::SlabView::new(arena.slab_parts());
         for task in &sched.tasks {
             let (r, c) = (task.step, task.chunk);
+            if is_done(c) {
+                continue;
+            }
             let items = &prog.step_items[r];
             // every item's read/write ranks must sit at exactly epoch r
             for it in items {

@@ -49,6 +49,23 @@ pub fn watchdog_ms_override() -> Option<u64> {
     std::env::var("RAMP_WATCHDOG_MS").ok()?.parse().ok()
 }
 
+/// `RAMP_RETRY` — enable the supervisory recovery loop on every
+/// collective/training execution, with an optional policy spec (same
+/// grammar as `--retry`: `on` / `retries=N,backoff-ms=M,seed=S`; see
+/// `fault::recovery::RecoveryPolicy::from_spec`). Unset means no
+/// recovery — typed aborts propagate as before. The CI chaos matrix
+/// toggles this against the seeded fault sweeps.
+pub fn retry_override() -> Option<String> {
+    // an exported-but-empty variable means unset (matrix legs that do
+    // not arm recovery), not "default policy"
+    let spec = std::env::var("RAMP_RETRY").ok()?;
+    if spec.trim().is_empty() {
+        None
+    } else {
+        Some(spec)
+    }
+}
+
 /// `RAMP_MAX_TENANTS` — admission cap on concurrent parking fan-outs
 /// (multi-tenant event-driven collectives) sharing one `WorkerPool`.
 /// `0` or unset means unbounded; the cap is pure back-pressure — the

@@ -77,6 +77,13 @@ pub struct TrainConfig {
     /// faults surface as typed [`crate::fault::RampError`]s instead of
     /// hangs. `None` = fault-free.
     pub faults: Option<crate::fault::FaultPlan>,
+    /// Supervisory recovery policy for the gradient all-reduce (CLI
+    /// `--retry <spec>` / `RAMP_RETRY`): retryable aborts (stalled
+    /// epochs, contained worker panics, mid-flight transceiver deaths)
+    /// trigger quarantine → degraded-fabric replan → partial-progress
+    /// re-execution instead of failing the step. `None` = no recovery;
+    /// typed aborts propagate and the run fails.
+    pub retry: Option<crate::fault::recovery::RecoveryPolicy>,
 }
 
 impl TrainConfig {
@@ -109,6 +116,7 @@ impl Default for TrainConfig {
             lane_driver: crate::collectives::lane_exec::LaneDriver::default(),
             max_tenants: 0,
             faults: None,
+            retry: None,
         }
     }
 }
@@ -123,6 +131,9 @@ pub struct StepStat {
     /// Virtual optical-network time of the gradient all-reduce, s.
     pub comm_virtual_s: f64,
     pub wire_bytes: u64,
+    /// Recovery retries this iteration absorbed (0 on fault-free steps
+    /// or when no `--retry` policy is armed).
+    pub retries: u64,
 }
 
 /// Full training run result.
@@ -137,6 +148,9 @@ pub struct TrainReport {
     /// The same collectives priced on the oversubscribed fat-tree
     /// baseline (per-step virtual seconds), for the speed-up readout.
     pub baseline_comm_virtual_s: f64,
+    /// Aggregate recovery accounting across every training iteration
+    /// (all-zero unless a `--retry` policy was armed and faults fired).
+    pub recovery: crate::fault::recovery::RecoveryStats,
 }
 
 impl TrainReport {
@@ -281,6 +295,18 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     if let Some(plan) = &cfg.faults {
         engine = engine.with_faults(plan.clone());
     }
+    // flag wins over env so a test harness can pin the policy; unset
+    // both and the loop below is the plain (non-recovering) path
+    let retry_policy = match &cfg.retry {
+        Some(p) => Some(p.clone()),
+        None => match crate::config::retry_override() {
+            Some(spec) => Some(
+                crate::fault::recovery::RecoveryPolicy::from_spec(&spec)
+                    .context("RAMP_RETRY")?,
+            ),
+            None => None,
+        },
+    };
     let rt = Runtime::open(&cfg.artifacts)?;
     let n_params = rt.manifest.get_usize(&format!("model.{}.n_params", cfg.model))?;
     let vocab = rt.manifest.get_usize(&format!("model.{}.vocab", cfg.model))?;
@@ -306,6 +332,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     let mut stats = Vec::new();
     let mut total_compute = 0.0;
     let mut total_comm = 0.0;
+    let mut recovery = crate::fault::recovery::RecoveryStats::default();
     let inv_n = 1.0 / cfg.n_workers as f32;
 
     // one arena for the whole run: the gradient all-reduce reads/writes
@@ -342,9 +369,28 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         }
 
         // the paper's system contribution: gradient all-reduce over the
-        // optical fabric — real bytes, transcoded, contention-verified
-        let run = engine.all_reduce_arena(&mut arena)?;
-        total_comm += run.completion_time();
+        // optical fabric — real bytes, transcoded, contention-verified;
+        // with a retry policy armed, retryable aborts are absorbed here
+        // (quarantine → replan → partial-progress resume) and the
+        // iteration's recovery cost lands in the per-step accounting
+        let (run, step_retries, step_backoff_s) = match &retry_policy {
+            Some(policy) => {
+                let (run, rs) = engine
+                    .execute_arena_with_recovery(
+                        crate::collectives::MpiOp::AllReduce,
+                        &mut arena,
+                        policy,
+                    )
+                    .with_context(|| format!("training step {step}"))?;
+                let (retries, backoff) = (rs.retries, rs.backoff_virtual_s);
+                recovery.absorb(&rs);
+                (run, retries, backoff)
+            }
+            None => (engine.all_reduce_arena(&mut arena)?, 0, 0.0),
+        };
+        // recovery backoff is priced in virtual time, so it lands on the
+        // network side of the compute/network decomposition
+        total_comm += run.completion_time() + step_backoff_s;
 
         // distribute reduced (averaged) gradients; every worker updates
         for (r, (w, mut grads)) in workers.iter().zip(grad_store).enumerate() {
@@ -366,8 +412,9 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 step,
                 loss: loss_sum * inv_n,
                 compute_s,
-                comm_virtual_s: run.completion_time(),
+                comm_virtual_s: run.completion_time() + step_backoff_s,
                 wire_bytes: run.report.wire_bytes,
+                retries: step_retries,
             });
         }
     }
@@ -403,6 +450,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         total_compute_s: total_compute,
         total_comm_virtual_s: total_comm,
         baseline_comm_virtual_s: baseline_per_step * cfg.steps as f64,
+        recovery,
     })
 }
 

@@ -34,6 +34,56 @@ impl TrainingEstimate {
     pub fn total_s(&self) -> f64 {
         self.iteration_s() * self.steps as f64
     }
+
+    /// Per-iteration time under the supervisory recovery loop: each
+    /// iteration's collective aborts with probability
+    /// `m.failure_rate_per_iteration` per attempt and is retried until
+    /// it lands, so the expected number of *failed* attempts is
+    /// `p/(1−p)`. A failed attempt costs the resume-discounted
+    /// communication replay `(1 − resume_fraction)·comm_s` (partial-
+    /// progress resume re-sends only the chunks whose final epoch was
+    /// never published) plus one virtual backoff. Compute is not
+    /// replayed — gradients are regenerated only when a worker dies,
+    /// which this elastic model treats as a quarantine, not a recompute.
+    /// A zero failure rate reproduces [`Self::iteration_s`] exactly.
+    pub fn iteration_s_recovered(&self, m: &RecoveryModel) -> f64 {
+        self.iteration_s() + m.expected_failures() * ((1.0 - m.resume_fraction.clamp(0.0, 1.0)) * self.comm_s + m.backoff_s)
+    }
+
+    /// Time to target accuracy under recovery.
+    pub fn total_s_recovered(&self, m: &RecoveryModel) -> f64 {
+        self.iteration_s_recovered(m) * self.steps as f64
+    }
+}
+
+/// Elastic-training recovery model: the analytic mirror of the
+/// coordinator's iteration-level retry loop
+/// ([`crate::coordinator::train`] with `TrainConfig::retry` armed) for
+/// the §7 training-time estimates.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RecoveryModel {
+    /// Probability that one attempt of an iteration's collective aborts
+    /// retryably (stalled epoch, contained panic, mid-flight
+    /// transceiver death). Clamped below 1 — the supervisory loop
+    /// bounds retries, so a saturating rate is a configuration error,
+    /// not an infinite expectation.
+    pub failure_rate_per_iteration: f64,
+    /// Fraction of an aborted attempt's communication carried across
+    /// the abort by partial-progress resume (`0` = full replay, e.g.
+    /// mid-flight transceiver deaths, which fire before any chunk
+    /// completes).
+    pub resume_fraction: f64,
+    /// Mean virtual backoff priced per retry, s.
+    pub backoff_s: f64,
+}
+
+impl RecoveryModel {
+    /// Expected failed attempts per iteration under retry-until-success:
+    /// `p/(1−p)`, with `p` clamped to `[0, 0.99]`.
+    pub fn expected_failures(&self) -> f64 {
+        let p = self.failure_rate_per_iteration.clamp(0.0, 0.99);
+        p / (1.0 - p)
+    }
 }
 
 /// Megatron training time on `est`'s system (§7.2.1 partitioning: MP
@@ -182,6 +232,47 @@ mod tests {
             max_speedup = max_speedup.max(f.iteration_s() / r.iteration_s());
         }
         assert!(max_speedup > 3.0, "DLRM max speedup {max_speedup}");
+    }
+
+    #[test]
+    fn recovery_model_anchors_and_orders() {
+        let prof = ComputeProfile::a100();
+        let est = ramp();
+        let cfg = megatron::table9().into_iter().find(|c| c.ce == 1.5).unwrap();
+        let e = megatron_training(&cfg, &est, &prof);
+        // zero failure rate reproduces the fault-free iteration exactly
+        let clean = RecoveryModel {
+            failure_rate_per_iteration: 0.0,
+            resume_fraction: 0.5,
+            backoff_s: 0.01,
+        };
+        assert_eq!(e.iteration_s_recovered(&clean), e.iteration_s());
+        assert_eq!(e.total_s_recovered(&clean), e.total_s());
+        // resumed failures price strictly cheaper than full replays,
+        // and both strictly above the fault-free figure
+        let replay = RecoveryModel {
+            failure_rate_per_iteration: 0.1,
+            resume_fraction: 0.0,
+            backoff_s: 0.01,
+        };
+        let resume = RecoveryModel { resume_fraction: 0.9, ..replay.clone() };
+        assert!(e.iteration_s_recovered(&replay) > e.iteration_s_recovered(&resume));
+        assert!(e.iteration_s_recovered(&resume) > e.iteration_s());
+        // p/(1−p): at 50% failure rate, one expected failure per success
+        let half = RecoveryModel {
+            failure_rate_per_iteration: 0.5,
+            resume_fraction: 0.0,
+            backoff_s: 0.0,
+        };
+        assert!((half.expected_failures() - 1.0).abs() < 1e-12);
+        assert!((e.iteration_s_recovered(&half) - e.iteration_s() - e.comm_s).abs() < 1e-9);
+        // a saturating rate stays finite (clamped), never an infinite bar
+        let sat = RecoveryModel {
+            failure_rate_per_iteration: 1.0,
+            resume_fraction: 0.0,
+            backoff_s: 0.0,
+        };
+        assert!(e.iteration_s_recovered(&sat).is_finite());
     }
 
     #[test]

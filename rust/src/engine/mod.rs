@@ -16,7 +16,10 @@ use crate::collectives::plan::CollectivePlan;
 use crate::collectives::pool::{PoolSel, WorkerPool};
 use crate::collectives::ramp_x::{padded_len, RampX};
 use crate::collectives::MpiOp;
-use crate::fault::{FaultInjector, FaultPlan};
+use crate::fault::recovery::{
+    chunk_step_bytes, AbortSnapshot, ErrorClass, RecoveryPolicy, RecoveryProbe, RecoveryStats,
+};
+use crate::fault::{FaultInjector, FaultPlan, RampError};
 use crate::simulator::{FabricReport, OpticalFabric};
 use crate::topology::ramp::RampParams;
 use crate::transcoder::{transcode_plan, Schedule};
@@ -177,6 +180,22 @@ impl RampEngine {
     /// released at its dependencies' completion slot — not the
     /// base-round-major barrier stream.
     pub fn execute_arena(&self, op: MpiOp, arena: &mut BufferArena) -> Result<CollectiveRun> {
+        self.execute_arena_inner(op, arena, None, None)
+    }
+
+    /// One engine attempt, with the recovery layer's hooks threaded in:
+    /// `probe` receives the abort snapshot on a typed failure, and a
+    /// `resume` mask (chunks already complete from an aborted attempt)
+    /// makes both the data plane and the wire schedule carry only the
+    /// incomplete fractions — the transcoded schedule of a resumed run
+    /// holds exactly `full − carried` bytes.
+    fn execute_arena_inner(
+        &self,
+        op: MpiOp,
+        arena: &mut BufferArena,
+        resume: Option<&[bool]>,
+        probe: Option<&Arc<RecoveryProbe>>,
+    ) -> Result<CollectiveRun> {
         let mut x = RampX::new(&self.p)
             .with_pipeline(self.pipeline)
             .with_pool(self.pool.clone())
@@ -184,11 +203,20 @@ impl RampEngine {
         if let Some((_, injector)) = &self.faults {
             x = x.with_faults(injector.clone());
         }
+        if let Some(probe) = probe {
+            x = x.with_probe(probe.clone());
+        }
+        if let Some(done) = resume {
+            x = x.with_resume(done.to_vec());
+        }
         let plan = x.run_arena(op, arena)?;
-        let mut schedule = if plan.steps.iter().any(|s| s.lane_aligned) {
-            crate::transcoder::transcode_plan_lanes(&self.p, &plan)?
-        } else {
-            transcode_plan(&self.p, &plan)?
+        let lane_aligned = plan.steps.iter().any(|s| s.lane_aligned);
+        let mut schedule = match (lane_aligned, resume) {
+            (true, Some(done)) => {
+                crate::transcoder::transcode_plan_lanes_partial(&self.p, &plan, done)?
+            }
+            (true, None) => crate::transcoder::transcode_plan_lanes(&self.p, &plan)?,
+            (false, _) => transcode_plan(&self.p, &plan)?,
         };
         if let Some((fault_plan, _)) = &self.faults {
             if !fault_plan.failed_trx.is_empty() {
@@ -205,6 +233,159 @@ impl RampEngine {
             );
         }
         Ok(CollectiveRun { plan, schedule, report })
+    }
+
+    /// Quarantine a transceiver group after a mid-flight death: move it
+    /// into the fault plan's `failed_trx` (so every later schedule is
+    /// replanned around it and un-replanned use is a fabric violation),
+    /// disarm its pending `trx-at` entries, and rebuild the degraded
+    /// fabric referee. Errs typed when no group survives.
+    pub fn quarantine_trx(&mut self, trx: usize) -> Result<()> {
+        let mut plan = self.faults.as_ref().map(|(p, _)| p.clone()).unwrap_or_default();
+        if !plan.failed_trx.contains(&trx) {
+            plan.failed_trx.push(trx);
+        }
+        plan.trx_at.retain(|&(g, _)| g != trx);
+        if plan.failed_trx.len() >= self.p.x {
+            return Err(RampError::NoSurvivingTransceivers {
+                failed: plan.failed_trx.len(),
+                x: self.p.x,
+            }
+            .into());
+        }
+        self.fabric =
+            OpticalFabric::new(self.p.clone()).with_failed_trx(plan.failed_trx.clone());
+        let injector = FaultInjector::new(plan.clone());
+        self.faults = Some((plan, injector));
+        Ok(())
+    }
+
+    /// Rebuild the fault injector with a per-attempt salt: the site
+    /// schedule of seeded faults shifts every retry (attempt 0 is
+    /// bitwise-identical to the historical unsalted stream), so a
+    /// deterministic fault plan cannot kill every retry at the same site.
+    fn rearm_faults(&mut self, attempt: u64) {
+        if let Some((plan, _)) = &self.faults {
+            let injector = FaultInjector::new(plan.clone().with_attempt(attempt));
+            self.faults = Some((plan.clone(), injector));
+        }
+    }
+
+    /// Supervised execution: [`Self::execute_arena`] wrapped in the
+    /// recovery loop of `policy`. A retryable typed abort ([`RampError::
+    /// StalledEpoch`], contained [`RampError::WorkerPanic`], mid-flight
+    /// [`RampError::TransceiverDied`]) triggers quarantine (for a dead
+    /// transceiver group) → partial-progress resume when the abort
+    /// snapshot proves chunks complete (their fractions are never
+    /// restored, re-executed, or re-sent) or a full replay from the
+    /// pre-attempt backup otherwise → re-execution with a salted
+    /// injector. Fatal errors and exhausted budgets surface the typed
+    /// error unchanged — never a hang, never a silent partial result.
+    ///
+    /// Backoff is priced in **virtual** seconds (accrued in the returned
+    /// [`RecoveryStats`], fed to the estimator's recovery-overhead term)
+    /// — the engine never sleeps.
+    pub fn execute_arena_with_recovery(
+        &mut self,
+        op: MpiOp,
+        arena: &mut BufferArena,
+        policy: &RecoveryPolicy,
+    ) -> Result<(CollectiveRun, RecoveryStats)> {
+        let backup = arena.copy_out();
+        let mut stats = RecoveryStats::default();
+        let mut resume: Option<Vec<bool>> = None;
+        // aborted attempts' snapshots: their wasted (sent-then-re-sent)
+        // bytes are priced against the successful attempt's plan, which
+        // is deterministically identical in shape
+        let mut aborted: Vec<AbortSnapshot> = Vec::new();
+        let mut attempt: u32 = 0;
+        loop {
+            let probe = Arc::new(RecoveryProbe::new());
+            match self.execute_arena_inner(op, arena, resume.as_deref(), Some(&probe)) {
+                Ok(run) => {
+                    if let Some(done) = &resume {
+                        stats.resumed_chunks += done.iter().filter(|&&d| d).count() as u64;
+                        stats.replayed_chunks += done.iter().filter(|&&d| !d).count() as u64;
+                        if let Some(split) = chunk_step_bytes(&run.plan, done.len()) {
+                            stats.carried_bytes += done
+                                .iter()
+                                .enumerate()
+                                .filter(|&(_, &d)| d)
+                                .map(|(c, _)| split[c].iter().sum::<u64>())
+                                .sum::<u64>();
+                        }
+                    } else if stats.recovered() {
+                        stats.replayed_chunks +=
+                            aborted.last().map(|s| s.k as u64).unwrap_or(1);
+                    }
+                    for snap in &aborted {
+                        let Some(split) = chunk_step_bytes(&run.plan, snap.k) else {
+                            continue;
+                        };
+                        let done = snap.done_mask();
+                        for c in 0..snap.k {
+                            if done[c] {
+                                continue; // sent once, carried — not wasted
+                            }
+                            let sent = snap.completed_steps(c).min(split[c].len());
+                            stats.wasted_bytes += split[c][..sent].iter().sum::<u64>();
+                        }
+                    }
+                    return Ok((run, stats));
+                }
+                Err(err) => {
+                    let fatal = RecoveryPolicy::classify(&err) == ErrorClass::Fatal;
+                    if fatal || attempt >= policy.max_retries {
+                        return Err(err);
+                    }
+                    if let Some(RampError::TransceiverDied { trx, .. }) =
+                        err.downcast_ref::<RampError>()
+                    {
+                        self.quarantine_trx(*trx)?;
+                        stats.quarantined_trx.push(*trx);
+                    }
+                    stats.backoff_virtual_s += policy.backoff_s(attempt);
+                    stats.retries += 1;
+                    resume = None;
+                    if let Some(snap) = probe.take() {
+                        let done = snap.done_mask();
+                        // chunk-granular resume needs real lanes and at
+                        // least one completed chunk (an all-done mask
+                        // cannot abort; guard anyway)
+                        if snap.k > 1
+                            && done.iter().any(|&d| d)
+                            && !done.iter().all(|&d| d)
+                        {
+                            arena.restore_front_fractions(
+                                &backup, snap.unit, &snap.fracs, &done,
+                            )?;
+                            resume = Some(done);
+                        }
+                        aborted.push(snap);
+                    }
+                    if resume.is_none() {
+                        arena.load(&backup)?;
+                    }
+                    attempt += 1;
+                    self.rearm_faults(attempt as u64);
+                }
+            }
+        }
+    }
+
+    /// [`Self::execute`] under the recovery loop (the CLI's
+    /// `--retry` path): owned buffers in, recovered results + accounting
+    /// out.
+    pub fn execute_with_recovery(
+        &mut self,
+        op: MpiOp,
+        bufs: &mut Vec<Vec<f32>>,
+        policy: &RecoveryPolicy,
+    ) -> Result<(CollectiveRun, RecoveryStats)> {
+        let mut arena = BufferArena::for_op(&self.p, op, bufs)?;
+        let out = self.execute_arena_with_recovery(op, &mut arena, policy)?;
+        *bufs = arena.copy_out();
+        Ok(out)
     }
 
     /// An arena sized for repeated gradient all-reduces of `len` f32
@@ -481,6 +662,119 @@ mod tests {
         assert!(matches!(
             err.downcast_ref::<crate::fault::RampError>(),
             Some(crate::fault::RampError::NoSurvivingTransceivers { .. })
+        ));
+    }
+
+    #[test]
+    fn strict_mode_flags_unreplanned_degraded_execution_and_recovery_clears_it() {
+        use crate::simulator::Violation;
+        let p = fabric_for_workers(16).unwrap();
+        let mut r = Xoshiro256::seed_from(53);
+        let inputs: Vec<Vec<f32>> =
+            (0..16).map(|_| (0..64).map(|_| r.next_f32()).collect()).collect();
+        // anchor: fault-free run, its schedule and its results
+        let mut anchor = inputs.clone();
+        let clean_run = RampEngine::new(p.clone())
+            .with_pipeline(Pipeline::cross(2))
+            .execute(MpiOp::AllReduce, &mut anchor)
+            .unwrap();
+        // executing that un-replanned schedule against a degraded fabric
+        // is flagged as Violation::FailedTransceiver (the exposure the
+        // recovery layer exists to close)
+        let degraded = OpticalFabric::new(p.clone()).with_failed_trx(vec![1]);
+        let flagged = degraded.execute(&clean_run.schedule);
+        assert!(!flagged.ok(), "un-replanned schedule must be flagged");
+        assert!(
+            flagged
+                .violations
+                .iter()
+                .any(|v| matches!(v, Violation::FailedTransceiver { .. })),
+            "expected FailedTransceiver, got {:?}",
+            flagged.violations
+        );
+        // now let the engine *discover* the death mid-flight: group 1
+        // dies at step 1, recovery quarantines it, replans the remaining
+        // work, and the post-recovery run passes the same strict referee
+        let mut engine = RampEngine::new(p)
+            .with_pipeline(Pipeline::cross(2))
+            .with_faults(FaultPlan {
+                seed: 7,
+                trx_at: vec![(1, 1)],
+                watchdog_ms: 400,
+                ..FaultPlan::default()
+            });
+        engine.pool = PoolSel::Forced(Arc::new(WorkerPool::new(2)));
+        let mut bufs = inputs;
+        let (run, stats) = engine
+            .execute_with_recovery(MpiOp::AllReduce, &mut bufs, &Default::default())
+            .unwrap();
+        assert!(stats.recovered(), "the armed death must force a retry");
+        assert_eq!(stats.quarantined_trx, vec![1]);
+        assert!(run.report.ok(), "post-recovery replan must clear the violation");
+        assert!(
+            run.schedule.instructions.iter().all(|i| i.trx != 1),
+            "replanned schedule still uses the quarantined group"
+        );
+        assert_eq!(bufs, anchor, "recovered result diverged from the fault-free anchor");
+        // the degraded completion cannot beat the clean fabric
+        assert!(run.completion_time() >= clean_run.completion_time());
+    }
+
+    #[test]
+    fn recovery_exhaustion_and_fatal_errors_surface_typed() {
+        use crate::fault::recovery::RecoveryPolicy;
+        let p = fabric_for_workers(16).unwrap();
+        // every group armed to die: each retry quarantines one more until
+        // the fabric is unplannable — the typed fatal error surfaces
+        let x = p.x;
+        let mut engine = RampEngine::new(p.clone())
+            .with_pipeline(Pipeline::cross(2))
+            .with_faults(FaultPlan {
+                seed: 11,
+                trx_at: (0..x).map(|g| (g, 0)).collect(),
+                watchdog_ms: 400,
+                ..FaultPlan::default()
+            });
+        engine.pool = PoolSel::Forced(Arc::new(WorkerPool::new(2)));
+        let mut bufs: Vec<Vec<f32>> = (0..16).map(|_| vec![1.0; 64]).collect();
+        let err = engine
+            .execute_with_recovery(
+                MpiOp::AllReduce,
+                &mut bufs,
+                &RecoveryPolicy { max_retries: 8, ..Default::default() },
+            )
+            .unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<RampError>(),
+                Some(
+                    RampError::NoSurvivingTransceivers { .. }
+                        | RampError::TransceiverDied { .. }
+                )
+            ),
+            "expected a typed fabric-death error, got {err:#}"
+        );
+        // zero retry budget: the first retryable abort surfaces unchanged
+        let mut engine = RampEngine::new(p)
+            .with_pipeline(Pipeline::cross(2))
+            .with_faults(FaultPlan {
+                seed: 7,
+                trx_at: vec![(1, 1)],
+                watchdog_ms: 400,
+                ..FaultPlan::default()
+            });
+        engine.pool = PoolSel::Forced(Arc::new(WorkerPool::new(2)));
+        let mut bufs: Vec<Vec<f32>> = (0..16).map(|_| vec![1.0; 64]).collect();
+        let err = engine
+            .execute_with_recovery(
+                MpiOp::AllReduce,
+                &mut bufs,
+                &RecoveryPolicy { max_retries: 0, ..Default::default() },
+            )
+            .unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<RampError>(),
+            Some(RampError::TransceiverDied { trx: 1, step: 1 })
         ));
     }
 

@@ -51,6 +51,49 @@ impl CollectiveTime {
     }
 }
 
+/// Analytic recovery-overhead term for
+/// [`CollectiveEstimator::completion_time_degraded_recovered`]: how many
+/// retries the supervisory loop spent, what fraction of each aborted
+/// attempt's work was *carried* across the abort by partial-progress
+/// resume (fraction-pure chunk lanes re-send only incomplete chunks),
+/// and the total virtual backoff the policy priced in. All-zero means
+/// no recovery happened and the degraded figure stands unchanged.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RecoveryOverhead {
+    /// Retries spent before the run completed.
+    pub retries: u32,
+    /// Fraction of an aborted attempt's work resumed rather than
+    /// replayed, clamped to `[0, 1]`: `0` = every retry is a full
+    /// replay (e.g. a mid-flight transceiver death, which always fires
+    /// before any chunk can complete), `(k−1)/k` = a `k`-chunk lane run
+    /// that aborted with all but one chunk already published.
+    pub resume_fraction: f64,
+    /// Total virtual backoff time across the retries, s.
+    pub backoff_virtual_s: f64,
+}
+
+impl RecoveryOverhead {
+    /// Price `retries` attempts of `policy`'s seeded exponential
+    /// backoff, with `resume_fraction` of each aborted attempt carried.
+    pub fn from_policy(
+        policy: &crate::fault::recovery::RecoveryPolicy,
+        retries: u32,
+        resume_fraction: f64,
+    ) -> Self {
+        Self {
+            retries,
+            resume_fraction,
+            backoff_virtual_s: (0..retries).map(|a| policy.backoff_s(a)).sum(),
+        }
+    }
+
+    /// Work replayed on top of the successful attempt, in units of one
+    /// full attempt: `retries · (1 − resume_fraction)`.
+    pub fn replay_factor(&self) -> f64 {
+        self.retries as f64 * (1.0 - self.resume_fraction.clamp(0.0, 1.0))
+    }
+}
+
 /// A (topology, strategy) pair under estimation.
 #[derive(Clone, Debug)]
 pub enum System {
@@ -360,6 +403,35 @@ impl CollectiveEstimator {
             );
         }
         t
+    }
+
+    /// [`Self::completion_time_degraded`] extended with a
+    /// **recovery-overhead** term — the analytic mirror of
+    /// [`crate::engine::RampEngine::execute_arena_with_recovery`]. Each
+    /// of the `overhead.retries` aborted attempts replays
+    /// `1 − resume_fraction` of the degraded run's wire, H2H and
+    /// reduction work (partial-progress resume carries the published
+    /// fraction across the abort, so resumed chunks are never re-sent
+    /// or re-reduced), and the policy's virtual backoff lands on the
+    /// latency (H2H) side — it is pure waiting, no bytes move. An
+    /// all-zero `overhead` reproduces the degraded figure exactly, and
+    /// `failed = 0` with zero overhead reproduces
+    /// [`Self::completion_time`].
+    pub fn completion_time_degraded_recovered(
+        &self,
+        op: MpiOp,
+        m: u64,
+        n: usize,
+        failed: usize,
+        overhead: &RecoveryOverhead,
+    ) -> CollectiveTime {
+        let d = self.completion_time_degraded(op, m, n, failed);
+        let replay = 1.0 + overhead.replay_factor();
+        CollectiveTime {
+            h2h: d.h2h * replay + overhead.backoff_virtual_s,
+            h2t: d.h2t * replay,
+            compute: d.compute * replay,
+        }
     }
 
     /// Completion time with **cross-step chunk lanes**: the whole
@@ -884,6 +956,50 @@ mod tests {
             ring.completion_time(MpiOp::AllReduce, GB, 4096),
             ring.completion_time_degraded(MpiOp::AllReduce, GB, 4096, 2)
         );
+    }
+
+    #[test]
+    fn recovery_overhead_pricing_is_anchored_and_monotone() {
+        use crate::fault::recovery::RecoveryPolicy;
+        let p = RampParams::fig8_example();
+        let est = CollectiveEstimator::ramp(&p);
+        let n = p.n_nodes();
+        let policy = RecoveryPolicy::default();
+        for op in MpiOp::all() {
+            let d = est.completion_time_degraded(op, GB, n, 1);
+            // zero overhead reproduces the degraded figure exactly
+            let zero = RecoveryOverhead::default();
+            assert_eq!(
+                est.completion_time_degraded_recovered(op, GB, n, 1, &zero),
+                d,
+                "{}",
+                op.name()
+            );
+            // full-replay retries scale every component; resumed retries
+            // price strictly cheaper than replayed ones (that's the whole
+            // point of partial-progress resume), and never below one
+            // attempt plus the backoff
+            let replay = RecoveryOverhead::from_policy(&policy, 2, 0.0);
+            let resume = RecoveryOverhead::from_policy(&policy, 2, 0.75);
+            assert!(replay.backoff_virtual_s > 0.0);
+            assert_eq!(replay.backoff_virtual_s, resume.backoff_virtual_s);
+            let tr = est.completion_time_degraded_recovered(op, GB, n, 1, &replay);
+            let ts = est.completion_time_degraded_recovered(op, GB, n, 1, &resume);
+            assert!((tr.h2t - d.h2t * 3.0).abs() < 1e-12, "{}", op.name());
+            if d.total() > 0.0 {
+                assert!(ts.total() < tr.total(), "{}", op.name());
+            }
+            assert!(ts.total() >= d.total() + resume.backoff_virtual_s - 1e-12);
+            // a fully-resumed retry pays only the backoff
+            let pure = RecoveryOverhead::from_policy(&policy, 3, 1.0);
+            let tp = est.completion_time_degraded_recovered(op, GB, n, 1, &pure);
+            assert!((tp.total() - d.total() - pure.backoff_virtual_s).abs() < 1e-9);
+        }
+        // the backoff sum follows the policy's seeded exponential curve
+        let ov1 = RecoveryOverhead::from_policy(&policy, 1, 0.0);
+        let ov2 = RecoveryOverhead::from_policy(&policy, 2, 0.0);
+        assert_eq!(ov1.backoff_virtual_s, policy.backoff_s(0));
+        assert_eq!(ov2.backoff_virtual_s, policy.backoff_s(0) + policy.backoff_s(1));
     }
 
     #[test]

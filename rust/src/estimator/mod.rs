@@ -7,5 +7,5 @@
 pub mod collective_time;
 pub mod roofline;
 
-pub use collective_time::{CollectiveEstimator, CollectiveTime, System};
+pub use collective_time::{CollectiveEstimator, CollectiveTime, RecoveryOverhead, System};
 pub use roofline::RooflineDevice;

@@ -44,6 +44,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+pub mod recovery;
+
 /// Typed failure taxonomy of the execution stack. Engine and executor
 /// entry points return these (wrapped in `anyhow::Error`, so callers can
 /// `downcast_ref::<RampError>()`) instead of hanging or panicking.
@@ -61,6 +63,13 @@ pub enum RampError {
     /// Every transceiver group is failed — no surviving subnet exists to
     /// replan onto.
     NoSurvivingTransceivers { failed: usize, x: usize },
+    /// A transceiver group died **mid-flight** (injector spec
+    /// `trx-at=G:S`): the event driver observed the armed death while
+    /// executing and aborted typed. `step` is the step the death was
+    /// armed at — not the step of the observing item — so the error is
+    /// deterministic under any lane interleaving. Retryable: the
+    /// recovery layer quarantines the group and replans onto survivors.
+    TransceiverDied { trx: usize, step: usize },
 }
 
 impl std::fmt::Display for RampError {
@@ -78,6 +87,11 @@ impl std::fmt::Display for RampError {
             RampError::NoSurvivingTransceivers { failed, x } => write!(
                 f,
                 "degraded replanning impossible: {failed} of {x} transceiver groups failed"
+            ),
+            RampError::TransceiverDied { trx, step } => write!(
+                f,
+                "transceiver group {trx} died mid-flight at step {step}; \
+                 quarantine + replan required"
             ),
         }
     }
@@ -131,6 +145,18 @@ pub struct FaultPlan {
     /// fire identical fault schedules; with one, each tenant gets its
     /// own deterministic schedule from the same seed.
     pub tenant: u64,
+    /// Mid-flight transceiver deaths: `(group, step)` pairs armed by the
+    /// spec key `trx-at=G:S` (repeatable). When the event driver reaches
+    /// step `S`, group `G` dies: the run aborts with
+    /// [`RampError::TransceiverDied`] and the recovery layer is expected
+    /// to quarantine the group (moving it into `failed_trx`) and retry.
+    pub trx_at: Vec<(usize, usize)>,
+    /// Retry-attempt salt (`0` = first attempt, bit-for-bit historical).
+    /// Set by the recovery layer — not a spec key — so a retried run
+    /// does not deterministically re-hit the identical panic/loss sites
+    /// forever: each attempt draws a fresh (but seeded, replayable)
+    /// fault schedule from the same plan.
+    pub attempt: u64,
 }
 
 impl FaultPlan {
@@ -169,6 +195,17 @@ impl FaultPlan {
                 "panic" => plan.panic_permille = num()? as u32,
                 "watchdog" => plan.watchdog_ms = num()?,
                 "tenant" => plan.tenant = num()?,
+                "trx-at" => {
+                    let (g, s) = val.split_once(':').ok_or_else(|| {
+                        anyhow::anyhow!("fault spec trx-at expects G:S, got {val}")
+                    })?;
+                    let parse = |t: &str| -> anyhow::Result<usize> {
+                        t.parse().map_err(|_| {
+                            anyhow::anyhow!("fault spec trx-at expects integers, got {t}")
+                        })
+                    };
+                    plan.trx_at.push((parse(g)?, parse(s)?));
+                }
                 _ => anyhow::bail!("unknown fault spec key `{key}`"),
             }
         }
@@ -195,9 +232,14 @@ impl FaultPlan {
     }
 
     /// True when the plan contains only result-invariant or repairable
-    /// faults (no lost publishes, no panics, no failed transceivers).
+    /// faults (no lost publishes, no panics, no failed transceivers, no
+    /// armed mid-flight deaths): a single attempt must complete bitwise
+    /// without the recovery layer.
     pub fn is_recoverable(&self) -> bool {
-        self.lose_permille == 0 && self.panic_permille == 0 && self.failed_trx.is_empty()
+        self.lose_permille == 0
+            && self.panic_permille == 0
+            && self.failed_trx.is_empty()
+            && self.trx_at.is_empty()
     }
 
     /// Salt this plan for one tenant (program) of a multi-tenant pool:
@@ -205,6 +247,13 @@ impl FaultPlan {
     /// the unsalted schedule.
     pub fn with_tenant(mut self, tenant: u64) -> Self {
         self.tenant = tenant;
+        self
+    }
+
+    /// Salt this plan for retry attempt `attempt` (the recovery layer's
+    /// hook; `0` restores the first attempt's schedule bit-for-bit).
+    pub fn with_attempt(mut self, attempt: u64) -> Self {
+        self.attempt = attempt;
         self
     }
 
@@ -240,25 +289,33 @@ pub struct FaultInjector {
     /// `collectives::lane_exec`. Keyed `(rank, chunk, epoch)` where
     /// `epoch` is the publish that never happened.
     dropped: Mutex<BTreeSet<(usize, usize, u32)>>,
+    /// Mid-flight transceiver deaths still armed (from `plan.trx_at`).
+    /// Checked by the event driver at every item start; firing removes
+    /// the entry, so each armed death aborts exactly one attempt.
+    armed: Mutex<Vec<(usize, usize)>>,
     straggles: AtomicU64,
     jitters: AtomicU64,
     drops: AtomicU64,
     losses: AtomicU64,
     panics: AtomicU64,
     repairs: AtomicU64,
+    trx_deaths: AtomicU64,
 }
 
 impl FaultInjector {
     pub fn new(plan: FaultPlan) -> Arc<Self> {
+        let armed = plan.trx_at.clone();
         Arc::new(Self {
             plan,
             dropped: Mutex::new(BTreeSet::new()),
+            armed: Mutex::new(armed),
             straggles: AtomicU64::new(0),
             jitters: AtomicU64::new(0),
             drops: AtomicU64::new(0),
             losses: AtomicU64::new(0),
             panics: AtomicU64::new(0),
             repairs: AtomicU64::new(0),
+            trx_deaths: AtomicU64::new(0),
         })
     }
 
@@ -267,10 +324,15 @@ impl FaultInjector {
     }
 
     fn site(&self, tag: u64, a: usize, b: usize, c: usize) -> u64 {
-        // tenant 0 keeps the historical unsalted schedule bit-for-bit
-        let salt = if self.plan.tenant == 0 { 0 } else { mix64(self.plan.tenant) };
+        // tenant 0 / attempt 0 keep the historical unsalted schedule
+        // bit-for-bit; the attempt salt makes each retry draw a fresh
+        // deterministic schedule (a retried run must not re-hit the
+        // identical panic/loss sites forever)
+        let tenant = if self.plan.tenant == 0 { 0 } else { mix64(self.plan.tenant) };
+        let attempt =
+            if self.plan.attempt == 0 { 0 } else { mix64(self.plan.attempt ^ 0xA77E) };
         mix64(
-            (self.plan.seed ^ salt)
+            (self.plan.seed ^ tenant ^ attempt)
                 .wrapping_add(mix64(tag ^ ((a as u64) << 42) ^ ((b as u64) << 21) ^ c as u64)),
         )
     }
@@ -343,6 +405,20 @@ impl FaultInjector {
         hit
     }
 
+    /// Mid-flight death hook: has a transceiver death armed at or before
+    /// `step` fired? Fire-once: the winning caller removes the armed
+    /// entry, so every armed death aborts exactly one attempt. Returns
+    /// `(group, armed_step)` — the **armed** step, not the observing
+    /// item's, so the resulting [`RampError::TransceiverDied`] is
+    /// identical under any lane interleaving.
+    pub fn trx_death(&self, step: usize) -> Option<(usize, usize)> {
+        let mut armed = self.armed.lock().unwrap_or_else(|e| e.into_inner());
+        let i = armed.iter().position(|&(_, s)| s <= step)?;
+        let (group, at) = armed.remove(i);
+        self.trx_deaths.fetch_add(1, Ordering::Relaxed);
+        Some((group, at))
+    }
+
     pub fn straggles(&self) -> u64 {
         self.straggles.load(Ordering::Relaxed)
     }
@@ -365,6 +441,10 @@ impl FaultInjector {
 
     pub fn repairs(&self) -> u64 {
         self.repairs.load(Ordering::Relaxed)
+    }
+
+    pub fn trx_deaths(&self) -> u64 {
+        self.trx_deaths.load(Ordering::Relaxed)
     }
 }
 
@@ -479,6 +559,46 @@ mod tests {
         assert!(FaultPlan::from_spec("bogus=1").is_err());
         assert!(FaultPlan::from_spec("seed").is_err());
         assert!(FaultPlan::recoverable_chaos(3).is_recoverable());
+    }
+
+    #[test]
+    fn trx_at_parses_and_marks_the_plan_unrecoverable() {
+        let plan = FaultPlan::from_spec("trx-at=1:2,trx-at=0:3").unwrap();
+        assert_eq!(plan.trx_at, vec![(1, 2), (0, 3)]);
+        assert!(!plan.is_recoverable(), "an armed death needs the recovery layer");
+        assert!(FaultPlan::from_spec("trx-at=5").is_err());
+        assert!(FaultPlan::from_spec("trx-at=a:b").is_err());
+    }
+
+    #[test]
+    fn armed_trx_death_fires_exactly_once_at_its_step() {
+        let plan = FaultPlan { trx_at: vec![(1, 2)], ..FaultPlan::default() };
+        let inj = FaultInjector::new(plan);
+        assert_eq!(inj.trx_death(0), None, "step below the armed step must not fire");
+        assert_eq!(inj.trx_death(1), None);
+        // fires at (or past — a lane may first observe a later step) the
+        // armed step, reporting the ARMED step for determinism
+        assert_eq!(inj.trx_death(3), Some((1, 2)));
+        assert_eq!(inj.trx_death(3), None, "each armed death fires once");
+        assert_eq!(inj.trx_deaths(), 1);
+    }
+
+    #[test]
+    fn attempt_salt_shifts_the_schedule_and_zero_is_historical() {
+        let base = FaultPlan { seed: 11, drop_permille: 300, ..FaultPlan::default() };
+        let sites: Vec<(usize, usize, u32)> =
+            (0..8).flat_map(|r| (0..4).map(move |c| (r, c, (r + c) as u32))).collect();
+        let decisions = |inj: &FaultInjector| -> Vec<bool> {
+            sites.iter().map(|&(r, c, e)| inj.swallow_publish(r, c, e)).collect()
+        };
+        let plain = decisions(&FaultInjector::new(base.clone()));
+        let a1 = decisions(&FaultInjector::new(base.clone().with_attempt(1)));
+        let a1b = decisions(&FaultInjector::new(base.clone().with_attempt(1)));
+        let a2 = decisions(&FaultInjector::new(base.clone().with_attempt(2)));
+        assert_eq!(a1, a1b, "same attempt must replay identically");
+        assert_ne!(plain, a1, "a retry must draw a fresh schedule");
+        assert_ne!(a1, a2, "distinct attempts must differ");
+        assert_eq!(plain, decisions(&FaultInjector::new(base.with_attempt(0))));
     }
 
     #[test]

@@ -1,0 +1,380 @@
+//! Supervisory failure recovery for collective execution (PR 8).
+//!
+//! PR 6/7 made failures *detectable* — typed [`RampError`]s, a per-gate
+//! watchdog, degraded-fabric replanning — but every typed abort still
+//! propagated to the caller and the collective was lost. This module is
+//! the layer that *recovers*:
+//!
+//! * [`RecoveryPolicy`] — retry budget, retryable-vs-fatal error
+//!   classification, and a deterministic seeded exponential backoff
+//!   priced in **virtual** seconds (the engine never sleeps; backoff is
+//!   an accounting term fed to the estimator, like every other latency
+//!   in this repo).
+//! * [`RecoveryProbe`] / [`AbortSnapshot`] — the partial-progress hook:
+//!   the event-driven lane driver snapshots the per-(rank, chunk)
+//!   `EpochTags` at abort. Fraction purity makes chunk-granular resume
+//!   sound: a chunk whose final epoch was published on **every** rank is
+//!   complete, its output positions are never touched by any other
+//!   chunk's re-execution, and it never needs re-sending. Incomplete
+//!   chunks restart from epoch 0 with their input fractions restored
+//!   from the pre-attempt backup (step r's reads are exactly step r−1's
+//!   outputs, so no mid-step resume point exists — but the per-chunk
+//!   epoch protocol makes the chunk boundary an exact one).
+//! * [`chunk_step_bytes`] — exact per-(chunk, step) wire-byte
+//!   attribution of a uniformly chunked plan, so the recovery layer can
+//!   report carried (never re-sent) and wasted (sent, then re-sent)
+//!   bytes against the Table-8 totals.
+//!
+//! The engine-side driver is `RampEngine::execute_arena_with_recovery`:
+//! classify → quarantine (a [`RampError::TransceiverDied`] moves the
+//! group into `failed_trx`, so the replanner routes the *remaining* work
+//! around it) → restore/resume → re-execute, with per-attempt injector
+//! salts so a seeded fault schedule cannot deterministically kill every
+//! retry at the same site.
+
+use super::RampError;
+use crate::collectives::plan::CollectivePlan;
+use std::sync::Mutex;
+
+/// Retry policy of the supervisory recovery loop.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RecoveryPolicy {
+    /// Retry budget: total attempts are `max_retries + 1`. When the
+    /// budget is exhausted the last typed error surfaces unchanged.
+    pub max_retries: u32,
+    /// Base backoff in virtual seconds; retry `i` (0-based) accrues
+    /// `base · 2^i · (1 + u)` with `u ∈ [0, 1)` drawn from the seed —
+    /// deterministic full jitter, never slept, only accounted.
+    pub backoff_base_s: f64,
+    /// Seed of the backoff jitter stream (decoupled from the fault seed:
+    /// the same fault schedule under two policies may back off
+    /// differently, and vice versa).
+    pub seed: u64,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        Self { max_retries: 3, backoff_base_s: 5e-3, seed: 1 }
+    }
+}
+
+impl RecoveryPolicy {
+    /// Parse the CLI `--retry` / `RAMP_RETRY` spec: comma-separated
+    /// `key=value` with keys `retries`, `backoff-ms`, `seed` — or one of
+    /// the bare literals `on` / `1` / `default` selecting the default
+    /// policy (the CI chaos matrix toggles recovery with `RAMP_RETRY=on`).
+    pub fn from_spec(spec: &str) -> anyhow::Result<Self> {
+        let mut policy = Self::default();
+        let spec = spec.trim();
+        if matches!(spec, "on" | "1" | "default" | "") {
+            return Ok(policy);
+        }
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("retry spec entry `{part}` is not key=value"))?;
+            match key {
+                "retries" => {
+                    policy.max_retries = val
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("retry spec retries expects a number"))?
+                }
+                "backoff-ms" => {
+                    let ms: f64 = val
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("retry spec backoff-ms expects a number"))?;
+                    anyhow::ensure!(ms >= 0.0, "retry spec backoff-ms must be >= 0");
+                    policy.backoff_base_s = ms / 1e3;
+                }
+                "seed" => {
+                    policy.seed = val
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("retry spec seed expects a number"))?
+                }
+                _ => anyhow::bail!("unknown retry spec key `{key}`"),
+            }
+        }
+        Ok(policy)
+    }
+
+    /// Virtual backoff before retry `attempt` (0-based): seeded
+    /// exponential with deterministic full jitter. Pure function of
+    /// `(seed, attempt)` — replays exactly.
+    pub fn backoff_s(&self, attempt: u32) -> f64 {
+        let jitter = super::mix64(self.seed ^ ((attempt as u64) << 17) ^ 0xB0FF) % 1000;
+        self.backoff_base_s * (1u64 << attempt.min(32)) as f64 * (1.0 + jitter as f64 / 1e3)
+    }
+
+    /// Classify a failed attempt: retry, or surface typed.
+    pub fn classify(err: &anyhow::Error) -> ErrorClass {
+        match err.downcast_ref::<RampError>() {
+            Some(
+                RampError::StalledEpoch { .. }
+                | RampError::WorkerPanic { .. }
+                | RampError::TransceiverDied { .. },
+            ) => ErrorClass::Retryable,
+            // an unplannable fabric cannot improve by retrying; anything
+            // untyped (validation errors, schedule bugs, strict-mode
+            // fabric violations) is a programming error, not a fault
+            Some(RampError::NoSurvivingTransceivers { .. }) | None => ErrorClass::Fatal,
+        }
+    }
+}
+
+/// Retryable-vs-fatal verdict of [`RecoveryPolicy::classify`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorClass {
+    /// Transient or quarantinable: stalled epoch (lost publish, dead
+    /// worker), contained worker panic, mid-flight transceiver death.
+    Retryable,
+    /// No retry can succeed: unplannable fabric, validation/schedule
+    /// bugs, strict-mode violations.
+    Fatal,
+}
+
+/// Recovery accounting of one supervised execution (or an aggregate of
+/// many — see [`RecoveryStats::absorb`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RecoveryStats {
+    /// Failed attempts that were retried.
+    pub retries: u64,
+    /// Chunks carried across a resume (complete at abort; never
+    /// re-executed, never re-sent).
+    pub resumed_chunks: u64,
+    /// Chunks re-executed from epoch 0 (incomplete at abort, or a full
+    /// replay when no snapshot / no completed chunk existed).
+    pub replayed_chunks: u64,
+    /// Wire bytes of carried chunks — the bytes a resume saved vs a full
+    /// replay. `resumed wire bytes + carried_bytes` equals the fault-free
+    /// Table-8 total (asserted in the chaos tests).
+    pub carried_bytes: u64,
+    /// Wire bytes of steps that completed in aborted attempts but
+    /// belonged to incomplete chunks — sent, then sent again.
+    pub wasted_bytes: u64,
+    /// Accrued virtual backoff (never slept; priced into
+    /// `completion_time_degraded_recovered`).
+    pub backoff_virtual_s: f64,
+    /// Transceiver groups quarantined by mid-flight deaths, in
+    /// quarantine order.
+    pub quarantined_trx: Vec<usize>,
+}
+
+impl RecoveryStats {
+    /// True when at least one retry happened.
+    pub fn recovered(&self) -> bool {
+        self.retries > 0
+    }
+
+    /// Fold another execution's accounting into this one (the training
+    /// loop's per-iteration aggregate).
+    pub fn absorb(&mut self, other: &RecoveryStats) {
+        self.retries += other.retries;
+        self.resumed_chunks += other.resumed_chunks;
+        self.replayed_chunks += other.replayed_chunks;
+        self.carried_bytes += other.carried_bytes;
+        self.wasted_bytes += other.wasted_bytes;
+        self.backoff_virtual_s += other.backoff_virtual_s;
+        self.quarantined_trx.extend(other.quarantined_trx.iter().copied());
+    }
+}
+
+/// Frozen per-(rank, chunk) epoch state of an aborted lane run — what
+/// the event driver knows at the moment it fails typed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AbortSnapshot {
+    /// Chunk-lane count of the aborted program.
+    pub k: usize,
+    /// Invariant low coordinate (the fraction unit) of the program.
+    pub unit: usize,
+    /// Fraction bounds `[lo, hi)` per chunk, tiling `[0, unit)`.
+    pub fracs: Vec<(usize, usize)>,
+    /// Steps of the aborted program (the final epoch).
+    pub n_steps: usize,
+    /// Rank count.
+    pub n: usize,
+    /// Epochs at abort, rank-major: `epochs[q * k + c]`.
+    pub epochs: Vec<u32>,
+}
+
+impl AbortSnapshot {
+    /// Chunk completion mask: chunk `c` is complete iff **every** rank
+    /// published its final epoch — the exact condition under which its
+    /// output positions hold final data and nothing of it remains to
+    /// send.
+    pub fn done_mask(&self) -> Vec<bool> {
+        (0..self.k)
+            .map(|c| (0..self.n).all(|q| self.epochs[q * self.k + c] == self.n_steps as u32))
+            .collect()
+    }
+
+    /// Steps of chunk `c` that completed on every rank before the abort
+    /// (its wire rounds already streamed; for an incomplete chunk these
+    /// are the wasted — re-sent — rounds).
+    pub fn completed_steps(&self, c: usize) -> usize {
+        (0..self.n).map(|q| self.epochs[q * self.k + c]).min().unwrap_or(0) as usize
+    }
+}
+
+/// Abort-state mailbox between one engine attempt and the recovery loop.
+/// The lane driver records at most one snapshot (the first abort wins —
+/// there is exactly one typed failure per attempt); the recovery loop
+/// takes it after the attempt returns.
+#[derive(Debug, Default)]
+pub struct RecoveryProbe {
+    snap: Mutex<Option<AbortSnapshot>>,
+}
+
+impl RecoveryProbe {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record the abort snapshot (first writer wins).
+    pub fn record(&self, snap: AbortSnapshot) {
+        let mut g = self.snap.lock().unwrap_or_else(|e| e.into_inner());
+        g.get_or_insert(snap);
+    }
+
+    /// Take the recorded snapshot, leaving the probe empty.
+    pub fn take(&self) -> Option<AbortSnapshot> {
+        self.snap.lock().unwrap_or_else(|e| e.into_inner()).take()
+    }
+}
+
+/// Per-(chunk, step) wire bytes of a plan whose every step is cleanly
+/// chunked into `k` lanes (`rounds.len() % k == 0`, base-round-major):
+/// `out[c][r]` is the bytes chunk `c` moves in plan step `r`. Returns
+/// `None` when any step is not uniformly `k`-chunked (then per-chunk
+/// byte attribution is undefined and the recovery layer falls back to
+/// whole-plan accounting).
+pub fn chunk_step_bytes(plan: &CollectivePlan, k: usize) -> Option<Vec<Vec<u64>>> {
+    if k < 2 {
+        return None;
+    }
+    let mut out = vec![vec![0u64; plan.steps.len()]; k];
+    for (r, step) in plan.steps.iter().enumerate() {
+        if step.n_chunks.max(1) != k || step.rounds.len() % k != 0 {
+            return None;
+        }
+        for b in 0..step.rounds.len() / k {
+            for (c, per_chunk) in out.iter_mut().enumerate() {
+                per_chunk[r] += plan.steps[r].rounds[b * k + c]
+                    .transfers
+                    .iter()
+                    .map(|t| t.bytes)
+                    .sum::<u64>();
+            }
+        }
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_keys_literals_and_rejects_unknown() {
+        let p = RecoveryPolicy::from_spec("retries=5,backoff-ms=2.5,seed=9").unwrap();
+        assert_eq!(p.max_retries, 5);
+        assert!((p.backoff_base_s - 2.5e-3).abs() < 1e-12);
+        assert_eq!(p.seed, 9);
+        assert_eq!(RecoveryPolicy::from_spec("on").unwrap(), RecoveryPolicy::default());
+        assert_eq!(RecoveryPolicy::from_spec("1").unwrap(), RecoveryPolicy::default());
+        assert!(RecoveryPolicy::from_spec("bogus=1").is_err());
+        assert!(RecoveryPolicy::from_spec("retries").is_err());
+    }
+
+    #[test]
+    fn backoff_is_deterministic_exponential_with_jitter() {
+        let p = RecoveryPolicy::default();
+        let q = RecoveryPolicy::default();
+        for i in 0..6 {
+            assert_eq!(p.backoff_s(i), q.backoff_s(i), "backoff must replay");
+            // exponential envelope: base·2^i ≤ b < base·2^(i+1)
+            let b = p.backoff_s(i);
+            let lo = p.backoff_base_s * (1u64 << i) as f64;
+            assert!(b >= lo && b < 2.0 * lo, "backoff {b} outside [{lo}, {})", 2.0 * lo);
+        }
+        assert!(p.backoff_s(3) > p.backoff_s(0), "later retries wait longer");
+    }
+
+    #[test]
+    fn classification_is_retryable_vs_fatal() {
+        let retryable = [
+            RampError::StalledEpoch { rank: 0, chunk: 0, epoch: 1, waited_ms: 10 },
+            RampError::WorkerPanic { step: 0, chunk: 0, key: 0, detail: "boom".into() },
+            RampError::TransceiverDied { trx: 1, step: 2 },
+        ];
+        for e in retryable {
+            assert_eq!(
+                RecoveryPolicy::classify(&anyhow::Error::new(e.clone())),
+                ErrorClass::Retryable,
+                "{e}"
+            );
+            // anyhow context must not defeat the downcast
+            let wrapped = anyhow::Error::new(e).context("while executing");
+            assert_eq!(RecoveryPolicy::classify(&wrapped), ErrorClass::Retryable);
+        }
+        let fatal = anyhow::Error::new(RampError::NoSurvivingTransceivers { failed: 4, x: 4 });
+        assert_eq!(RecoveryPolicy::classify(&fatal), ErrorClass::Fatal);
+        assert_eq!(
+            RecoveryPolicy::classify(&anyhow::anyhow!("validation failed")),
+            ErrorClass::Fatal
+        );
+    }
+
+    #[test]
+    fn snapshot_done_mask_requires_every_rank_final() {
+        // 2 ranks × 3 chunks, 2 steps: chunk 0 complete, chunk 1 complete
+        // on one rank only, chunk 2 untouched
+        let snap = AbortSnapshot {
+            k: 3,
+            unit: 3,
+            fracs: vec![(0, 1), (1, 2), (2, 3)],
+            n_steps: 2,
+            n: 2,
+            epochs: vec![2, 2, 0, 2, 1, 0],
+        };
+        assert_eq!(snap.done_mask(), vec![true, false, false]);
+        assert_eq!(snap.completed_steps(0), 2);
+        assert_eq!(snap.completed_steps(1), 1);
+        assert_eq!(snap.completed_steps(2), 0);
+    }
+
+    #[test]
+    fn probe_first_record_wins_and_take_drains() {
+        let probe = RecoveryProbe::new();
+        assert!(probe.take().is_none());
+        let mk = |e: u32| AbortSnapshot {
+            k: 1,
+            unit: 1,
+            fracs: vec![(0, 1)],
+            n_steps: 1,
+            n: 1,
+            epochs: vec![e],
+        };
+        probe.record(mk(0));
+        probe.record(mk(1));
+        assert_eq!(probe.take().unwrap().epochs, vec![0], "first abort wins");
+        assert!(probe.take().is_none());
+    }
+
+    #[test]
+    fn stats_absorb_accumulates() {
+        let mut a = RecoveryStats { retries: 1, carried_bytes: 10, ..Default::default() };
+        let b = RecoveryStats {
+            retries: 2,
+            wasted_bytes: 5,
+            backoff_virtual_s: 0.25,
+            quarantined_trx: vec![3],
+            ..Default::default()
+        };
+        a.absorb(&b);
+        assert_eq!(a.retries, 3);
+        assert_eq!(a.carried_bytes, 10);
+        assert_eq!(a.wasted_bytes, 5);
+        assert_eq!(a.quarantined_trx, vec![3]);
+        assert!(a.recovered());
+    }
+}

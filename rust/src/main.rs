@@ -5,7 +5,7 @@
 //! ramp repro <figN|tableN|all>      regenerate a paper table/figure
 //! ramp train [--workers N] [--steps N] [--model tiny] [--lr X]
 //!            [--pipeline P] [--pool-threads T] [--lane-driver D]
-//!            [--max-tenants N] [--faults SPEC]
+//!            [--max-tenants N] [--faults SPEC] [--retry RSPEC]
 //!                                    real DDP training through the fabric
 //!                                    (P: 0/auto = auto chunk pipelining,
 //!                                     1/off = off, K = fixed chunk count
@@ -22,14 +22,21 @@
 //!                                     SPEC: a seeded
 //!                                     fault plan, e.g.
 //!                                     `seed=7,trx=0,straggle=100,drop=50`
-//!                                     — see [`ramp::fault::FaultPlan`])
+//!                                     or `trx-at=1:2` for a mid-flight
+//!                                     transceiver death at step 2 — see
+//!                                     [`ramp::fault::FaultPlan`];
+//!                                     RSPEC: the supervisory recovery
+//!                                     policy, `on` or
+//!                                     `retries=N,backoff-ms=M,seed=S` —
+//!                                     see [`ramp::fault::recovery::RecoveryPolicy`])
 //! ramp collective <op> [--nodes N] [--mb M] [--oversub S] [--pipeline P]
-//!                      [--faults SPEC]
+//!                      [--faults SPEC] [--retry RSPEC]
 //!                                   completion-time comparison for one op,
 //!                                   with a serial vs intra-step vs
 //!                                   cross-step pipelining readout, plus a
 //!                                   degraded-fabric price when SPEC fails
-//!                                   transceiver groups
+//!                                   transceiver groups and a recovery-
+//!                                   overhead price when RSPEC arms retries
 //! ```
 
 use anyhow::{anyhow, bail, Result};
@@ -68,9 +75,10 @@ fn run() -> Result<()> {
             println!(
                 "RAMP — flat nanosecond optical network + MPI operations for DDL\n\n\
                  usage:\n  ramp info\n  ramp repro <fig6|fig7|table3|table4|fig15..fig23|all>\n  \
-                 ramp train [--workers N] [--steps N] [--model tiny] [--lr X] [--momentum X] [--pipeline off|auto|cross|K] [--pool-threads T] [--lane-driver event|inorder] [--max-tenants N] [--faults SPEC]\n  \
-                 ramp collective <op> [--nodes N] [--mb M] [--oversub S] [--pipeline off|auto|cross|K] [--faults SPEC]\n\n\
-                 fault SPEC: seed=S,trx=A:B,straggle=P,straggle-us=U,jitter=NS,drop=P,lose=P,panic=P,watchdog=MS (permille probabilities)\n\n\
+                 ramp train [--workers N] [--steps N] [--model tiny] [--lr X] [--momentum X] [--pipeline off|auto|cross|K] [--pool-threads T] [--lane-driver event|inorder] [--max-tenants N] [--faults SPEC] [--retry RSPEC]\n  \
+                 ramp collective <op> [--nodes N] [--mb M] [--oversub S] [--pipeline off|auto|cross|K] [--faults SPEC] [--retry RSPEC]\n\n\
+                 fault SPEC: seed=S,trx=A:B,trx-at=G:S,straggle=P,straggle-us=U,jitter=NS,drop=P,lose=P,panic=P,watchdog=MS (permille probabilities; trx-at=G:S kills group G mid-flight at step S)\n\
+                 retry RSPEC: on | retries=N,backoff-ms=M,seed=S (supervisory recovery: quarantine, degraded replan, partial-progress resume; RAMP_RETRY env equivalent)\n\n\
                  ops: reduce-scatter all-gather all-reduce all-to-all scatter gather reduce broadcast"
             );
             Ok(())
@@ -104,6 +112,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     let pipeline =
         ramp::collectives::arena::Pipeline::from_spec(&args.get_or("pipeline", "1"))?;
     let faults = args.get("faults").map(ramp::fault::FaultPlan::from_spec).transpose()?;
+    // the flag pins the policy; when absent, the coordinator still
+    // honors RAMP_RETRY so the CI chaos matrix can arm recovery
+    let retry = args
+        .get("retry")
+        .map(|s| ramp::fault::recovery::RecoveryPolicy::from_spec(s))
+        .transpose()?;
     let cfg = TrainConfig {
         model: args.get_or("model", "tiny"),
         n_workers: args.get_usize("workers", 4)?,
@@ -121,6 +135,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         )?,
         max_tenants: args.get_usize("max-tenants", 0)?,
         faults,
+        retry,
     };
     println!(
         "training {} with {} workers for {} steps (lr {}, momentum {})",
@@ -134,17 +149,41 @@ fn cmd_train(args: &Args) -> Result<()> {
             plan.watchdog()
         );
     }
+    if let Some(policy) = &cfg.retry {
+        println!(
+            "recovery armed: up to {} retries, backoff base {} (virtual, seed {})",
+            policy.max_retries,
+            fmt_time(policy.backoff_base_s),
+            policy.seed
+        );
+    }
     let rep = train(&cfg)?;
-    let mut t = Table::new(vec!["step", "loss", "compute", "network (virtual)"]);
+    let mut t = Table::new(vec!["step", "loss", "compute", "network (virtual)", "retries"]);
     for s in &rep.stats {
         t.row(vec![
             s.step.to_string(),
             format!("{:.4}", s.loss),
             fmt_time(s.compute_s),
             fmt_time(s.comm_virtual_s),
+            s.retries.to_string(),
         ]);
     }
     println!("{t}");
+    let rec = &rep.recovery;
+    if rec.retries > 0 {
+        println!(
+            "recovery: {} retries absorbed — {} chunks resumed / {} replayed, \
+             {} carried vs {} wasted on the wire, {} virtual backoff, \
+             quarantined trx groups {:?}",
+            rec.retries,
+            rec.resumed_chunks,
+            rec.replayed_chunks,
+            ramp::units::fmt_bytes(rec.carried_bytes),
+            ramp::units::fmt_bytes(rec.wasted_bytes),
+            fmt_time(rec.backoff_virtual_s),
+            rec.quarantined_trx,
+        );
+    }
     println!(
         "loss {:.4} → {:.4} over {} steps; {} params, gradient all-reduce of {} per step",
         rep.first_loss(),
@@ -221,6 +260,10 @@ fn cmd_collective(args: &Args) -> Result<()> {
         fmt_time(cmp.crossstep.total()),
         cmp.cross_speedup()
     );
+    let retry = args
+        .get("retry")
+        .map(|s| ramp::fault::recovery::RecoveryPolicy::from_spec(s))
+        .transpose()?;
     if let Some(spec) = args.get("faults") {
         let plan = ramp::fault::FaultPlan::from_spec(spec)?;
         let p = RampParams::max_scale();
@@ -228,30 +271,68 @@ fn cmd_collective(args: &Args) -> Result<()> {
         failed.retain(|&g| g < p.x);
         failed.sort_unstable();
         failed.dedup();
-        if failed.is_empty() {
+        // mid-flight deaths (`trx-at=G:S`) abort a run in progress: with
+        // a retry policy armed each one costs a quarantine + full replay
+        // (the death fires before any chunk can complete), so they join
+        // the degraded head-count AND the priced retry count
+        let mut mid_flight: Vec<usize> =
+            plan.trx_at.iter().map(|&(g, _)| g).filter(|&g| g < p.x).collect();
+        mid_flight.sort_unstable();
+        mid_flight.dedup();
+        mid_flight.retain(|g| !failed.contains(g));
+        let all_down = failed.len() + mid_flight.len();
+        if failed.is_empty() && mid_flight.is_empty() {
             println!(
                 "faults (seed {}): no transceiver groups down — replan not needed, \
                  completion unchanged ({})",
                 plan.seed,
                 fmt_time(r.total())
             );
-        } else if failed.len() >= p.x {
+        } else if all_down >= p.x {
             println!(
                 "faults (seed {}): all {} transceiver groups down — no surviving \
                  subnet to replan onto",
                 plan.seed, p.x
             );
         } else {
-            let d = ramp.completion_time_degraded(op, m, n, failed.len());
+            let d = ramp.completion_time_degraded(op, m, n, all_down);
             println!(
-                "degraded fabric ({} of {} trx groups down): {} — {:.2}x the \
+                "degraded fabric ({} of {} trx groups down{}): {} — {:.2}x the \
                  fault-free completion, conservation-clean replan",
-                failed.len(),
+                all_down,
                 p.x,
+                if mid_flight.is_empty() {
+                    String::new()
+                } else {
+                    format!(", {} mid-flight", mid_flight.len())
+                },
                 fmt_time(d.total()),
                 d.total() / r.total()
             );
+            if let Some(policy) = &retry {
+                // each mid-flight death costs one quarantine + full
+                // replay before the run lands on the degraded fabric
+                let retries = (mid_flight.len() as u32).min(policy.max_retries);
+                let ov = ramp::estimator::collective_time::RecoveryOverhead::from_policy(
+                    policy, retries, 0.0,
+                );
+                let rec = ramp.completion_time_degraded_recovered(op, m, n, all_down, &ov);
+                println!(
+                    "with recovery ({} retries, {} virtual backoff): {} — {:.2}x the \
+                     fault-free completion",
+                    retries,
+                    fmt_time(ov.backoff_virtual_s),
+                    fmt_time(rec.total()),
+                    rec.total() / r.total()
+                );
+            }
         }
+    } else if retry.is_some() {
+        println!(
+            "recovery armed with no fault plan: nothing to retry — completion \
+             unchanged ({})",
+            fmt_time(r.total())
+        );
     }
     Ok(())
 }

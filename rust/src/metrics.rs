@@ -37,6 +37,24 @@ impl Metrics {
         self.counters.get(name).copied().unwrap_or(0)
     }
 
+    /// Fold one recovery episode's accounting into the registry under
+    /// the canonical `recovery.*` names: `retries`, `resumed_chunks`,
+    /// `replayed_chunks`, `carried_bytes`, `wasted_bytes` as counters
+    /// and `backoff_virtual_s` as a timing sample. A zero-retry episode
+    /// (clean run) records nothing, so the counters read as totals over
+    /// the runs that actually recovered.
+    pub fn record_recovery(&mut self, stats: &crate::fault::recovery::RecoveryStats) {
+        if stats.retries == 0 {
+            return;
+        }
+        self.inc("recovery.retries", stats.retries);
+        self.inc("recovery.resumed_chunks", stats.resumed_chunks);
+        self.inc("recovery.replayed_chunks", stats.replayed_chunks);
+        self.inc("recovery.carried_bytes", stats.carried_bytes);
+        self.inc("recovery.wasted_bytes", stats.wasted_bytes);
+        self.record("recovery.backoff_virtual_s", stats.backoff_virtual_s);
+    }
+
     pub fn mean_seconds(&self, name: &str) -> Option<f64> {
         self.timings.get(name).map(|(t, n)| t / (*n).max(1) as f64)
     }
@@ -69,5 +87,33 @@ mod tests {
         assert!(m.mean_seconds("work").unwrap() > 0.0);
         assert!(m.report().contains("steps: 5"));
         assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn recovery_episodes_fold_into_canonical_counters() {
+        use crate::fault::recovery::RecoveryStats;
+        let mut m = Metrics::new();
+        // a clean episode records nothing
+        m.record_recovery(&RecoveryStats::default());
+        assert_eq!(m.counter("recovery.retries"), 0);
+        assert!(m.mean_seconds("recovery.backoff_virtual_s").is_none());
+        let episode = RecoveryStats {
+            retries: 2,
+            resumed_chunks: 3,
+            replayed_chunks: 1,
+            carried_bytes: 4096,
+            wasted_bytes: 512,
+            backoff_virtual_s: 0.02,
+            quarantined_trx: vec![1],
+        };
+        m.record_recovery(&episode);
+        m.record_recovery(&episode);
+        assert_eq!(m.counter("recovery.retries"), 4);
+        assert_eq!(m.counter("recovery.resumed_chunks"), 6);
+        assert_eq!(m.counter("recovery.replayed_chunks"), 2);
+        assert_eq!(m.counter("recovery.carried_bytes"), 8192);
+        assert_eq!(m.counter("recovery.wasted_bytes"), 1024);
+        let mean = m.mean_seconds("recovery.backoff_virtual_s").unwrap();
+        assert!((mean - 0.02).abs() < 1e-12);
     }
 }

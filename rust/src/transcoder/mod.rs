@@ -243,6 +243,56 @@ impl<'a> Transcoder<'a> {
         Ok(out)
     }
 
+    /// [`Self::transcode_lanes`] restricted to the *incomplete* chunk
+    /// lanes: tasks whose chunk is marked done in `skip` emit no
+    /// instructions and complete at their release slot (they gate
+    /// nothing — their data already sits in the arena), so a resumed
+    /// run's wire schedule carries exactly the bytes of the work that
+    /// actually re-executes. Requires every step to be uniformly
+    /// `skip.len()`-chunked (the same shape the event-driven lane
+    /// executor demands of a resumable run).
+    pub fn transcode_lanes_partial(
+        &mut self,
+        plan: &CollectivePlan,
+        sched: &lanes::LaneSchedule,
+        skip: &[bool],
+    ) -> Result<Schedule> {
+        sched.validate(plan)?;
+        let k = skip.len();
+        ensure!(k >= 1, "empty resume mask");
+        for (i, step) in plan.steps.iter().enumerate() {
+            ensure!(
+                step.n_chunks.max(1) == k && step.rounds.len() % k == 0,
+                "partial transcode of step {i}: plan is not uniformly {k}-chunked"
+            );
+        }
+        let mut out = Schedule::default();
+        let mut task_end = vec![0u64; sched.tasks.len()];
+        for (ti, task) in sched.tasks.iter().enumerate() {
+            let release =
+                sched.deps[ti].iter().map(|&d| task_end[d]).max().unwrap_or(0);
+            if skip[task.chunk] {
+                task_end[ti] = release;
+                continue;
+            }
+            let step = &plan.steps[task.step];
+            let q = step.trx_q.max(1);
+            let mut clock = release;
+            for b in 0..step.rounds.len() / k {
+                let round = &step.rounds[b * k + task.chunk];
+                clock = self.transcode_round(round, q, step.step, clock, &mut out)?;
+                out.round_ends.push(clock);
+            }
+            task_end[ti] = clock;
+            out.total_slots = out.total_slots.max(clock);
+        }
+        // with any lane incomplete, every base round still streams (just
+        // with fewer chunk sub-rounds), so the latency-bearing count is
+        // unchanged
+        out.h2h_rounds = plan.steps.iter().map(|s| s.base_rounds()).sum();
+        Ok(out)
+    }
+
     /// Transcode one synchronous round starting at `start`; returns the
     /// round's completion slot.
     fn transcode_round(
@@ -337,6 +387,18 @@ pub fn transcode_plan(p: &RampParams, plan: &CollectivePlan) -> Result<Schedule>
 pub fn transcode_plan_lanes(p: &RampParams, plan: &CollectivePlan) -> Result<Schedule> {
     let sched = lanes::LaneSchedule::from_plan(plan);
     Transcoder::new(p).transcode_lanes(plan, &sched)
+}
+
+/// Convenience: partial (resume) lane transcode with a fresh transcoder —
+/// chunks flagged in `skip` send nothing (see
+/// [`Transcoder::transcode_lanes_partial`]).
+pub fn transcode_plan_lanes_partial(
+    p: &RampParams,
+    plan: &CollectivePlan,
+    skip: &[bool],
+) -> Result<Schedule> {
+    let sched = lanes::LaneSchedule::from_plan(plan);
+    Transcoder::new(p).transcode_lanes_partial(plan, &sched, skip)
 }
 
 /// Effective number of stripes a transfer of a given plan step gets.
@@ -558,6 +620,51 @@ mod tests {
             "cross-step lanes must overlap one sub-round per aligned boundary"
         );
         assert_eq!(laned.h2h_rounds, step_major.h2h_rounds);
+    }
+
+    #[test]
+    fn partial_lane_transcode_conserves_bytes_against_the_chunk_split() {
+        use crate::collectives::arena::Pipeline;
+        use crate::fault::recovery::chunk_step_bytes;
+        let p = RampParams::fig8_example();
+        let n = p.n_nodes();
+        for op in [MpiOp::ReduceScatter, MpiOp::AllGather, MpiOp::AllReduce, MpiOp::AllToAll] {
+            let elems = match op {
+                MpiOp::AllGather => 6,
+                _ => 2 * n,
+            };
+            let mut bufs = random_inputs(n, elems, 31);
+            let plan = RampX::new(&p)
+                .with_pipeline(Pipeline::cross(3))
+                .run(op, &mut bufs)
+                .unwrap();
+            let k = plan.steps[0].n_chunks.max(1);
+            if k < 2 {
+                continue;
+            }
+            let full = transcode_plan_lanes(&p, &plan).unwrap();
+            let bytes = |s: &Schedule| s.instructions.iter().map(|i| i.bytes).sum::<u64>();
+            let split = chunk_step_bytes(&plan, k).expect("uniformly chunked plan");
+            // resume with chunk 0 done: the partial schedule must carry
+            // exactly the full bytes minus chunk 0's share, and stay
+            // physically clean on the fabric
+            let mut skip = vec![false; k];
+            skip[0] = true;
+            let partial = transcode_plan_lanes_partial(&p, &plan, &skip).unwrap();
+            check_no_double_booking(&p, &partial);
+            let carried: u64 = split[0].iter().sum();
+            assert_eq!(
+                bytes(&partial) + carried,
+                bytes(&full),
+                "{}: resumed + carried bytes must conserve Table-8 totals",
+                op.name()
+            );
+            assert!(bytes(&partial) < bytes(&full), "{}: resume must send less", op.name());
+            assert_eq!(partial.h2h_rounds, full.h2h_rounds, "{}", op.name());
+            // all chunks done → nothing to send at all
+            let none = transcode_plan_lanes_partial(&p, &plan, &vec![true; k]).unwrap();
+            assert_eq!(bytes(&none), 0, "{}", op.name());
+        }
     }
 
     #[test]

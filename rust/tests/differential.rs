@@ -552,6 +552,128 @@ fn fuzz_differential_matrix_long() {
     run_fuzz(ramp::config::fuzz_cases_override().unwrap_or(2000));
 }
 
+// ---- recovery fuzz axis (PR 8) -------------------------------------------
+
+/// One randomly drawn **recovery** case: a seeded mid-flight fault
+/// (worker panics, lost publishes, or a `trx-at` transceiver death) ×
+/// op × fabric × chunk count, executed under the supervisory retry
+/// loop. The contract fuzzed: the run either completes **bitwise
+/// identical to the fault-free anchor** (recovered — possibly via
+/// quarantine + degraded replan + partial-progress resume) or surfaces
+/// a typed [`ramp::fault::RampError`] after exhausting the budget.
+/// Anything else — divergent floats, an untyped error — fails with the
+/// case seed for replay.
+fn run_recovery_fuzz_case(seed: u64) {
+    use ramp::engine::RampEngine;
+    use ramp::fault::recovery::RecoveryPolicy;
+    use ramp::fault::{FaultPlan, RampError};
+
+    let mut rng = Lcg::new(seed ^ 0x5afe_c0de);
+    let fabric_set = fabrics();
+    let p = rng.pick(&fabric_set).clone();
+    let n = p.n_nodes();
+    let oi = rng.below(op_instances(n).len());
+    let op = op_instances(n)[oi];
+    let sizes = match op {
+        MpiOp::AllGather | MpiOp::Gather { .. } => vec![3, 8, 13],
+        MpiOp::Broadcast { .. } => vec![2, 64, 257],
+        MpiOp::Barrier => vec![1],
+        _ => vec![n, 2 * n, 3 * n],
+    };
+    let elems = *rng.pick(&sizes);
+    let pl = *rng.pick(&[Pipeline::cross(2), Pipeline::cross(3), Pipeline::fixed(3)]);
+    let plan = match rng.below(3) {
+        0 => FaultPlan {
+            seed,
+            panic_permille: *rng.pick(&[5u32, 20, 60]),
+            ..FaultPlan::default()
+        },
+        1 => FaultPlan {
+            seed,
+            lose_permille: *rng.pick(&[5u32, 20, 60]),
+            watchdog_ms: 40,
+            ..FaultPlan::default()
+        },
+        _ => FaultPlan {
+            seed,
+            trx_at: vec![(rng.below(p.x), rng.below(3))],
+            watchdog_ms: 400,
+            ..FaultPlan::default()
+        },
+    };
+    let inputs = random_inputs(n, elems, seed ^ 0xbeef);
+
+    let mut anchor = inputs.clone();
+    RampEngine::new(p.clone()).with_pipeline(pl).execute(op, &mut anchor).unwrap();
+
+    let policy = RecoveryPolicy { max_retries: 6, ..RecoveryPolicy::default() };
+    let mut engine = RampEngine::new(p.clone()).with_pipeline(pl).with_faults(plan);
+    let mut got = inputs.clone();
+    match engine.execute_with_recovery(op, &mut got, &policy) {
+        Ok((run, stats)) => {
+            assert_eq!(
+                got,
+                anchor,
+                "recovery fuzz seed {seed}: {} recovered non-bitwise under {pl:?} \
+                 m={elems} on {p:?} (retries {})",
+                op.name(),
+                stats.retries
+            );
+            assert!(
+                run.report.ok(),
+                "recovery fuzz seed {seed}: recovered schedule violates the fabric: {:?}",
+                run.report.violations
+            );
+        }
+        Err(err) => {
+            assert!(
+                err.downcast_ref::<RampError>().is_some(),
+                "recovery fuzz seed {seed}: exhaustion must stay typed, got {err:#}"
+            );
+        }
+    }
+}
+
+/// Drive `cases` recovery fuzz cases. Mirrors [`run_fuzz`]: a failing
+/// case seed is written to `target/fuzz-recovery-failing-seed.txt` and
+/// replayed exactly with `RAMP_FUZZ_REPLAY=<seed> cargo test -q
+/// fuzz_recovery_matrix`.
+fn run_recovery_fuzz(cases: usize) {
+    if let Some(seed) = ramp::config::fuzz_replay_seed() {
+        run_recovery_fuzz_case(seed);
+        return;
+    }
+    let _ = std::fs::remove_file("target/fuzz-recovery-failing-seed.txt");
+    let mut master = Lcg::new(0x5eed_8008);
+    for i in 0..cases {
+        let seed = master.next();
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_recovery_fuzz_case(seed);
+        }));
+        if let Err(payload) = outcome {
+            let _ = std::fs::create_dir_all("target");
+            let _ = std::fs::write(
+                "target/fuzz-recovery-failing-seed.txt",
+                format!("case {i} of {cases}: seed {seed}\n"),
+            );
+            eprintln!(
+                "recovery fuzz case {i} FAILED — replay with: RAMP_FUZZ_REPLAY={seed} \
+                 cargo test -q fuzz_recovery_matrix"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+#[test]
+fn fuzz_recovery_matrix() {
+    // tier-1 profile: recovery cases cost several engine attempts each,
+    // so the budget sits an order below the differential matrix (scale
+    // with RAMP_FUZZ_CASES, floored so the axis never vanishes)
+    let cases = ramp::config::fuzz_cases_override().map(|c| (c / 8).max(5)).unwrap_or(25);
+    run_recovery_fuzz(cases);
+}
+
 // ---- cross-step lane-schedule validity ----------------------------------
 
 #[test]

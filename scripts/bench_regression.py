@@ -11,10 +11,20 @@ substring are guarded (default: the `[arena pooled cross-step]` columns —
 the perf this PR series defends). A guarded row regresses when its
 ns_per_iter exceeds the baseline by more than the threshold fraction.
 
+Unguarded sections ride along without gating. In particular the
+`[recovery]` rows (the PR-8 supervisory retry loop: clean engine vs
+supervised fault-free vs trx-death + replan + retry) measure fault-path
+latency, which is noisy by design and absent from the committed
+placeholder baseline — they are listed informationally when present in
+both files, and their absence from either file is never an error.
+
 Exits 0 (with a note) when the baseline is still the placeholder no
 toolchain host has replaced yet, when it contains no guarded rows, or when
 nothing regressed; exits 1 listing every regressed row otherwise.
 """
+
+# unguarded-but-listed sections: shown for the record, never gated
+INFORMATIONAL_SECTIONS = ["[recovery]"]
 
 import argparse
 import json
@@ -77,6 +87,22 @@ def main():
         print(f"bench-regression: {len(missing)} guarded rows missing — "
               "update the committed baseline together with any rename")
         return 1
+
+    # informational sections: print the comparison when a row exists in
+    # both files, stay silent (and green) otherwise — the committed
+    # placeholder predates these sections entirely
+    for tag in INFORMATIONAL_SECTIONS:
+        info = {row["name"]: row for row in baseline
+                if tag in str(row.get("name", ""))
+                and row.get("ns_per_iter") is not None}
+        for name, brow in sorted(info.items()):
+            nrow = new.get(name)
+            if nrow is None:
+                continue
+            b, n = float(brow["ns_per_iter"]), float(nrow["ns_per_iter"])
+            ratio = n / b if b > 0 else float("inf")
+            print(f"bench-regression: {name}: {b:.0f} -> {n:.0f} ns/iter "
+                  f"({ratio:.3f}x) informational (not gated)")
 
     if regressed:
         print(f"bench-regression: {len(regressed)} of {checked} guarded rows "
