@@ -1,9 +1,11 @@
 //! Bench: RAMP-x collective executors (data movement) + Fig 15/18/23
 //! regeneration, plus the large-message data-plane generations:
 //! pre-refactor Vec-of-Vec vs PR-2 spawn-per-step arena vs the
-//! persistent-pool arena (serial and chunk-pipelined), and the PR-7
+//! persistent-pool arena (serial and chunk-pipelined), the PR-7
 //! concurrent-load section: multi-tenant collectives/s at 1/2/4/8
-//! tenants vs the removed blocking token's single-file rate.
+//! tenants vs the removed blocking token's single-file rate, and the
+//! PR-9 `[plan-gen]` section: lazy sharded plan generation + streaming
+//! transcode throughput at 4,096 / 16,384 / 65,536 ranks.
 //!
 //! `cargo bench --bench collectives_bench -- --json BENCH_collectives.json`
 //! writes machine-readable results. Env knobs:
@@ -12,7 +14,7 @@
 //!   (default 64; the 128-node case then peaks at ~16 GB of RAM for the
 //!   arena slab, ~12 GB for the pre-refactor baseline's buffers).
 
-use ramp::benchutil::{bench, JsonReporter};
+use ramp::benchutil::{bench, BenchResult, JsonReporter};
 use ramp::collectives::arena::{BufferArena, Pipeline};
 use ramp::collectives::lane_exec::LaneDriver;
 use ramp::collectives::pool::{PoolSel, WorkerPool};
@@ -437,6 +439,71 @@ fn recovery_overhead(json: &mut JsonReporter) {
     );
 }
 
+/// Plan-generation throughput (PR 9): the lazy sharded scale path.
+/// Closed-form `StreamPlan` construction + folded summary at 4,096 /
+/// 16,384 / 65,536 ranks, the shard-streaming transcode fold at the two
+/// benchable scales, and one exact timed pass of the full 65,536-rank
+/// plan → transcode → estimate pipeline (~16M folded instructions —
+/// minutes of repeat-bench budget, so the single measurement is the
+/// useful number). `[plan-gen]` rows are informational in
+/// `scripts/bench_regression.py`: listed, not gated.
+fn plan_gen_throughput(json: &mut JsonReporter) {
+    use ramp::collectives::stream::StreamPlan;
+    use ramp::estimator::collective_time::streamed_schedule_time;
+    use ramp::transcoder::transcode_stream;
+
+    let scales = [
+        (RampParams::new(16, 16, 16, 1), "4096"),
+        (RampParams::new(16, 16, 64, 1), "16384"),
+        (RampParams::max_scale(), "65536"),
+    ];
+    // closed-form plan + folded totals: O(steps) work, no rounds behind it
+    for (p, label) in &scales {
+        let m = p.n_nodes() * 16;
+        let r = bench(
+            &format!("plan-gen all-reduce {label} ranks [plan-gen] stream plan+summary"),
+            400,
+            || StreamPlan::all_reduce(p, m, Pipeline::off()).unwrap().summary(),
+        );
+        json.push(&r, None);
+    }
+    // the shard-streaming transcode fold, repeat-benched where feasible
+    for (p, label) in &scales[..2] {
+        let m = p.n_nodes() * 16;
+        let plan = StreamPlan::all_reduce(p, m, Pipeline::off()).unwrap();
+        let bytes = plan.summary().total_wire_bytes as f64;
+        let r = bench(
+            &format!("plan-gen all-reduce {label} ranks [plan-gen] stream transcode"),
+            1000,
+            || transcode_stream(p, &plan, |_| {}).unwrap(),
+        );
+        json.push(&r, Some(r.throughput(bytes) / 1e9));
+    }
+    // the paper's full machine: one exact pass, plan through priced time
+    let p = RampParams::max_scale();
+    let m = p.n_nodes() * 16;
+    let t0 = std::time::Instant::now();
+    let plan = StreamPlan::all_reduce(&p, m, Pipeline::off()).unwrap();
+    let sum = transcode_stream(&p, &plan, |_| {}).unwrap();
+    let time = streamed_schedule_time(&p, &sum);
+    let dt = t0.elapsed().as_secs_f64().max(1e-9);
+    let r = BenchResult {
+        name: "plan-gen all-reduce 65536 ranks [plan-gen] stream transcode (single pass)".into(),
+        iters: 1,
+        mean_s: dt,
+        min_s: dt,
+        p50_s: dt,
+    };
+    json.push(&r, Some(r.throughput(sum.total_bytes as f64) / 1e9));
+    println!(
+        "    -> 65,536 ranks: {} NIC instructions folded in {dt:.2} s \
+         ({:.1} M instr/s) at bounded memory; modeled completion {:.3} ms",
+        sum.n_instructions,
+        sum.n_instructions as f64 / dt / 1e6,
+        time.total() * 1e3
+    );
+}
+
 fn main() {
     let mut json = JsonReporter::from_env_args();
 
@@ -503,6 +570,9 @@ fn main() {
 
     println!("== concurrent load: multi-tenant vs token-era single-file ==");
     multi_tenant_throughput(&mut json, &p);
+
+    println!("== plan-gen throughput: lazy sharded scale path ==");
+    plan_gen_throughput(&mut json);
 
     println!(
         "== modeled completion: serial vs intra-step vs cross-step chunk lanes \

@@ -44,9 +44,12 @@ impl ArenaRegion {
         Self { offset, len }
     }
 
-    /// Wire size of the view (f32 payload).
+    /// Wire size of the view (f32 payload). Widened *before* the
+    /// multiply: `len * 4` in usize would truncate beyond 2^30 elements
+    /// on 32-bit hosts (and 2^62 on 64-bit) — the 65k-rank × multi-GiB
+    /// scale path hits the former range legitimately.
     pub fn bytes(&self) -> u64 {
-        (self.len * 4) as u64
+        self.len as u64 * 4
     }
 
     /// Split the view into (at most) `k` contiguous, disjoint sub-views
@@ -228,7 +231,7 @@ impl Pipeline {
             return 1;
         }
         let k = match self.chunks {
-            0 => pipeline_chunk_count(p, (elems * 4) as u64)
+            0 => pipeline_chunk_count(p, elems as u64 * 4)
                 .min(elems / self.min_chunk_elems.max(1))
                 .max(1),
             k => k,
@@ -493,12 +496,14 @@ pub struct SlabParts {
 /// `per_peer_bytes · s` of buffer — all-gather/gather grow to `m·N`,
 /// reduce-scatter/scatter shrink, all-to-all stays at `m`).
 pub fn arena_capacity(p: &RampParams, op: MpiOp, input_elems: usize) -> usize {
-    let m_bytes = (input_elems * 4) as u64;
+    // widen before multiplying: usize products truncate at 2^30
+    // elements on 32-bit hosts, inside the scale path's input range
+    let m_bytes = input_elems as u64 * 4;
     let phase_bytes = match op {
         // broadcast replicates the root buffer — regions never grow
         MpiOp::Broadcast { .. } => m_bytes,
         // barrier runs a 1-per-node flag all-reduce padded to N elements
-        MpiOp::Barrier => (p.n_nodes() * 4) as u64,
+        MpiOp::Barrier => p.n_nodes() as u64 * 4,
         _ => ramp_phases(p, op, m_bytes)
             .iter()
             .map(|ph| ph.per_peer_bytes * ph.size as u64)

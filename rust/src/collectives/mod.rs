@@ -25,6 +25,11 @@
 //!   simulator and the estimator.
 //! * [`ramp_x`] — data-moving executors for every RAMP-x operation,
 //!   verified element-wise against naive references.
+//! * [`stream`] — lazy sharded plan generation: closed-form
+//!   [`stream::StreamPlan`] shapes, a lazy subgroup iterator, and a
+//!   per-shard-slab executor, for bounded-memory plan + transcode +
+//!   estimate at the paper's 65,536-node scale (see
+//!   `collectives/README.md`, "Sharded plan generation").
 //! * [`ring`], [`hierarchical`], [`torus_strategy`] — baseline strategies.
 //! * [`reference`] — naive single-process oracles for correctness tests.
 
@@ -38,6 +43,7 @@ pub mod pool;
 pub mod ramp_x;
 pub mod reference;
 pub mod ring;
+pub mod stream;
 pub mod subgroups;
 pub mod torus_strategy;
 

@@ -158,6 +158,33 @@ impl CollectivePlan {
     pub fn n_transfers(&self) -> usize {
         self.steps.iter().flat_map(|s| &s.rounds).map(|r| r.transfers.len()).sum()
     }
+
+    /// Folded whole-plan totals, comparable against the closed forms of
+    /// `stream::StreamPlan::summary` (the streaming-vs-eager equivalence
+    /// anchor). Counts are u64: at the paper's 65,536-node scale a plan
+    /// holds tens of millions of transfers and the byte totals clear
+    /// 32-bit arithmetic by orders of magnitude.
+    pub fn summary(&self) -> PlanSummary {
+        PlanSummary {
+            n_steps: self.steps.len(),
+            n_rounds: self.n_rounds(),
+            n_base_rounds: self.n_base_rounds(),
+            n_transfers: self.n_transfers() as u64,
+            total_wire_bytes: self.total_wire_bytes(),
+        }
+    }
+}
+
+/// Whole-plan totals in folded form: what the streamed builders compute
+/// in closed form and the eager plans by summation — equal by
+/// construction, asserted by the differential tests.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanSummary {
+    pub n_steps: usize,
+    pub n_rounds: usize,
+    pub n_base_rounds: usize,
+    pub n_transfers: u64,
+    pub total_wire_bytes: u64,
 }
 
 #[cfg(test)]

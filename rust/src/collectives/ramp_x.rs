@@ -1743,7 +1743,7 @@ fn bundle_regions<'s>(
 /// * step 4 (`s > 2`): one-to-one rounds at offsets γ = 1..s−1 (the
 ///   rack-broadcast constraint allows one transceiver group per rack —
 ///   §6.2.2, deviation note in DESIGN.md).
-fn exchange_rounds(s: usize, step: Step) -> Vec<Vec<(usize, usize)>> {
+pub(crate) fn exchange_rounds(s: usize, step: Step) -> Vec<Vec<(usize, usize)>> {
     if s == 2 {
         return vec![vec![(0, 1), (1, 0)]];
     }
@@ -1765,7 +1765,7 @@ fn exchange_rounds(s: usize, step: Step) -> Vec<Vec<(usize, usize)>> {
 /// views actually exchanged, not a separately recomputed count. One
 /// sub-round per chunk view, base-round-major; chunk byte counts sum
 /// exactly to the whole region's.
-fn exchange_plan_step(
+pub(crate) fn exchange_plan_step(
     p: &RampParams,
     step: Step,
     groups: &[Vec<NodeCoord>],

@@ -1,0 +1,482 @@
+//! Lazy sharded plan generation: bounded-memory collectives at the
+//! paper's 65,536-node scale.
+//!
+//! The eager builders in [`super::ramp_x`] materialize a full
+//! [`CollectivePlan`] — every subgroup, every round, every
+//! [`Transfer`](crate::collectives::plan::Transfer) — before anything
+//! downstream runs. At the paper's Table-8 scale (`x = J = 32`, `Λ = 64`,
+//! N = 65,536) one all-reduce plan holds tens of millions of transfer
+//! records: the memory wall, not compute, is the binding constraint.
+//!
+//! This module keeps the *structure* of a plan and streams the rest:
+//!
+//! * [`StreamPlan`] — per algorithmic step, only the closed-form shape
+//!   (step, subgroup size and count, arena chunk views, reduce arity,
+//!   stripe quota). O(steps · chunks) memory, independent of N.
+//! * [`shards`] — a lazy iterator over a step's subgroups in the exact
+//!   order `ramp_x::subgroup_list` materializes them; at most one
+//!   subgroup (`s` node coordinates) is live at a time.
+//! * [`StreamPlan::materialize`] — expands back to the eager
+//!   [`CollectivePlan`], byte-identical to what the eager builders emit
+//!   (the small-scale equivalence anchor).
+//! * [`ShardedExchange`] — a data-moving executor that drives the
+//!   reduce-scatter / all-gather / all-reduce kernels one shard batch at
+//!   a time on the pool lanes, staging each subgroup into a private
+//!   per-shard slab of `s · cur` elements (sized from the same closed
+//!   forms that size the arena) instead of addressing the whole front
+//!   slab per lane. Results are bitwise identical to the eager path.
+//!
+//! The streaming transcoder half lives in
+//! [`crate::transcoder::transcode_stream`]; the folded schedule it
+//! returns is priced by
+//! [`crate::estimator::collective_time::streamed_schedule_time`].
+
+use crate::collectives::arena::{ArenaRegion, BufferArena, Pipeline};
+use crate::collectives::kernels::{concat_subgroup, reduce_subgroup};
+use crate::collectives::plan::{CollectivePlan, PlanSummary};
+use crate::collectives::pool::{Keyed, PoolSel, WorkerPool};
+use crate::collectives::ramp_x::{exchange_plan_step, exchange_rounds, subgroup_list};
+use crate::collectives::subgroups::{member_index, members, node_rank, Step};
+use crate::collectives::MpiOp;
+use crate::topology::ramp::{NodeCoord, RampParams};
+use anyhow::{bail, ensure, Result};
+
+/// One algorithmic step of a streamed plan: the closed-form shape from
+/// which rounds, transfers and byte totals all fold, with no per-rank
+/// state.
+#[derive(Clone, Debug)]
+pub struct StreamStep {
+    /// Which RAMP-x subgroup step this is.
+    pub step: Step,
+    /// Subgroup size `s` of the step.
+    pub size: usize,
+    /// Number of subgroups (they partition the N ranks: `N / s`).
+    pub n_subgroups: usize,
+    /// Per-member input length (elements) this step reads — the Table-8
+    /// recurrence value entering the step.
+    pub cur: usize,
+    /// Pipeline chunk views over the exchanged region, in wire order.
+    /// Mirrors the eager builders exactly, including the single empty
+    /// view substituted for a zero-length exchange.
+    pub views: Vec<ArenaRegion>,
+    /// `s` for a reduce-scatter step (s-to-1 member-order reduction
+    /// after the exchange), 0 for all-gather concat.
+    pub reduce_sources: usize,
+    /// Transceiver groups usable per peer communication (Eqs 3–4).
+    pub trx_q: usize,
+}
+
+impl StreamStep {
+    /// Latency-bearing round count: 1 for the single all-to-all-within-
+    /// subgroup round of steps 1–3 (and any pair), `s − 1` serialized
+    /// one-to-one rounds for step 4 — identical to
+    /// `PlanStep::base_rounds()` of the materialized step.
+    pub fn base_rounds(&self) -> usize {
+        if self.size <= 1 {
+            if self.step == Step::S4 { 0 } else { 1 }
+        } else if self.size == 2 {
+            1
+        } else if self.step == Step::S4 {
+            self.size - 1
+        } else {
+            1
+        }
+    }
+
+    /// Total rounds including chunk sub-rounds.
+    pub fn n_rounds(&self) -> usize {
+        self.base_rounds() * self.views.len()
+    }
+
+    /// Ordered (src, dst) member-index pairs per base round.
+    pub fn pair_rounds(&self) -> Vec<Vec<(usize, usize)>> {
+        exchange_rounds(self.size, self.step)
+    }
+
+    /// Total directed pairs across all base rounds: `s(s−1)` in every
+    /// active shape (one dense round, or `s − 1` one-to-one rounds).
+    pub fn total_pairs(&self) -> u64 {
+        let s = self.size as u64;
+        s * s.saturating_sub(1)
+    }
+
+    /// Bytes of one full per-peer exchange (sum of the chunk views).
+    pub fn view_bytes(&self) -> u64 {
+        self.views.iter().map(ArenaRegion::bytes).sum()
+    }
+
+    /// Transfers this step puts on the wire, in closed form.
+    pub fn n_transfers(&self) -> u64 {
+        self.n_subgroups as u64 * self.total_pairs() * self.views.len() as u64
+    }
+
+    /// Wire bytes this step moves, in closed form.
+    pub fn wire_bytes(&self) -> u64 {
+        self.n_subgroups as u64 * self.total_pairs() * self.view_bytes()
+    }
+}
+
+/// A streamed collective plan: per-step closed-form shapes only. The
+/// eager equivalent is recovered by [`Self::materialize`]; totals fold
+/// without materializing via [`Self::summary`].
+#[derive(Clone, Debug, Default)]
+pub struct StreamPlan {
+    pub steps: Vec<StreamStep>,
+}
+
+impl StreamPlan {
+    /// Streamed reduce-scatter shape: the exact recurrence of
+    /// `RampX::reduce_scatter` (per active step: exchange `cur / s`, then
+    /// the s-to-1 reduce shrinks the live region to `cur / s`).
+    pub fn reduce_scatter(p: &RampParams, m: usize, pipeline: Pipeline) -> Result<Self> {
+        let n = p.n_nodes();
+        ensure!(m % n == 0, "message length {m} not divisible by N={n} (pad with padded_len)");
+        let mut steps = Vec::new();
+        let mut cur = m;
+        for step in Step::active(p) {
+            let s = step.size(p);
+            let chunk = cur / s;
+            steps.push(Self::step_shape(p, step, cur, chunk, pipeline, s));
+            cur = chunk;
+        }
+        Ok(Self { steps })
+    }
+
+    /// Streamed all-gather shape: steps run 4 → 1, each growing the live
+    /// region `s`-fold (the exact recurrence of `RampX::all_gather`).
+    pub fn all_gather(p: &RampParams, contrib: usize, pipeline: Pipeline) -> Result<Self> {
+        let mut steps = Vec::new();
+        let mut cur = contrib;
+        for step in Step::active(p).into_iter().rev() {
+            let s = step.size(p);
+            steps.push(Self::step_shape(p, step, cur, cur, pipeline, 0));
+            cur *= s;
+        }
+        Ok(Self { steps })
+    }
+
+    /// Streamed all-reduce = reduce-scatter ∘ all-gather (Rabenseifner).
+    pub fn all_reduce(p: &RampParams, m: usize, pipeline: Pipeline) -> Result<Self> {
+        let n = p.n_nodes();
+        let mut plan = Self::reduce_scatter(p, m, pipeline)?;
+        let tail = Self::all_gather(p, m / n, pipeline)?;
+        plan.steps.extend(tail.steps);
+        Ok(plan)
+    }
+
+    /// Dispatch on the exchange-kernel family (the scale path's ops).
+    pub fn for_op(p: &RampParams, op: MpiOp, m: usize, pipeline: Pipeline) -> Result<Self> {
+        match op {
+            MpiOp::ReduceScatter => Self::reduce_scatter(p, m, pipeline),
+            MpiOp::AllGather => Self::all_gather(p, m, pipeline),
+            MpiOp::AllReduce => Self::all_reduce(p, m, pipeline),
+            _ => bail!("streamed plan generation covers the exchange family \
+                        (reduce-scatter / all-gather / all-reduce), not {op:?}"),
+        }
+    }
+
+    /// One step's shape. `exchanged` is the per-member region length on
+    /// the wire, `cur` the live input length; the chunk views come from
+    /// the same `Pipeline::chunks_for` policy the eager builders use
+    /// (with the same empty-region substitution, so `n_chunks` agrees).
+    fn step_shape(
+        p: &RampParams,
+        step: Step,
+        cur: usize,
+        exchanged: usize,
+        pipeline: Pipeline,
+        reduce_sources: usize,
+    ) -> StreamStep {
+        let k = pipeline.chunks_for(p, exchanged);
+        let mut views = ArenaRegion::new(0, exchanged).chunks(k);
+        if views.is_empty() {
+            views.push(ArenaRegion::new(0, 0));
+        }
+        StreamStep {
+            step,
+            size: step.size(p),
+            n_subgroups: step.n_subgroups(p),
+            cur,
+            views,
+            reduce_sources,
+            trx_q: crate::collectives::ops::trx_groups_per_peer(p, step),
+        }
+    }
+
+    /// Folded whole-plan totals, closed form — no rounds, no transfers.
+    pub fn summary(&self) -> PlanSummary {
+        let mut s = PlanSummary { n_steps: self.steps.len(), ..Default::default() };
+        for st in &self.steps {
+            s.n_rounds += st.n_rounds();
+            s.n_base_rounds += st.base_rounds();
+            s.n_transfers += st.n_transfers();
+            s.total_wire_bytes += st.wire_bytes();
+        }
+        s
+    }
+
+    /// Per-step shapes for the lane scheduler: a streamed plan is
+    /// base-round-major (never fraction-pure), so its lane schedule is
+    /// derivable from counts alone via `LaneSchedule::from_shapes` —
+    /// no rounds materialized.
+    pub fn lane_shapes(&self) -> Vec<crate::transcoder::lanes::StepShape> {
+        self.steps
+            .iter()
+            .map(|st| crate::transcoder::lanes::StepShape {
+                rounds: st.n_rounds(),
+                n_chunks: st.views.len(),
+                lane_aligned: false,
+            })
+            .collect()
+    }
+
+    /// Expand to the eager plan — byte-identical to what
+    /// `RampX::reduce_scatter` / `all_gather` / `all_reduce` emit for the
+    /// same pipeline (the small-scale equivalence anchor; O(N·rounds)
+    /// memory, so small fabrics only).
+    pub fn materialize(&self, p: &RampParams) -> CollectivePlan {
+        let mut plan = CollectivePlan::default();
+        for st in &self.steps {
+            let groups = subgroup_list(p, st.step);
+            plan.steps.push(exchange_plan_step(p, st.step, &groups, &st.views, st.reduce_sources));
+        }
+        plan
+    }
+}
+
+/// Lazy subgroup iterator: yields each subgroup of `step` (member-ordered
+/// by information index) in the exact sequence `subgroup_list`
+/// materializes, holding only the current subgroup's `s` coordinates.
+pub fn shards(p: &RampParams, step: Step) -> impl Iterator<Item = Vec<NodeCoord>> + '_ {
+    p.nodes().filter(move |n| member_index(p, step, *n) == 0).map(move |n| members(p, step, n))
+}
+
+/// Sharded data-moving executor for the exchange-kernel family.
+///
+/// Where [`super::ramp_x::RampX`] hands every lane the whole front slab
+/// and dispatches all `N / s` subgroups in one fan-out, this executor
+/// walks [`shards`] lazily in pool-lane-sized batches and stages each
+/// subgroup into a private slab of `s · cur` elements before reducing /
+/// concatenating — the per-lane working set is the closed-form shard
+/// size, independent of N. Member order (and therefore float summation
+/// order) is identical, so results are bitwise equal to the eager path.
+pub struct ShardedExchange<'a> {
+    p: &'a RampParams,
+    pipeline: Pipeline,
+    pool: PoolSel,
+    batch: usize,
+}
+
+impl<'a> ShardedExchange<'a> {
+    pub fn new(p: &'a RampParams) -> Self {
+        Self { p, pipeline: Pipeline::off(), pool: PoolSel::Global, batch: 0 }
+    }
+
+    /// Chunk policy. Cross-step lanes need the fraction-pure eager
+    /// executors; the sharded path strips them to the intra-step shape.
+    pub fn with_pipeline(mut self, pipeline: Pipeline) -> Self {
+        self.pipeline = pipeline.without_cross();
+        self
+    }
+
+    pub fn with_pool(mut self, pool: PoolSel) -> Self {
+        self.pool = pool;
+        self
+    }
+
+    /// Shards dispatched per fan-out (0 = auto: a few per pool lane).
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    fn effective_batch(&self) -> usize {
+        if self.batch > 0 {
+            return self.batch;
+        }
+        let lanes = match &self.pool {
+            PoolSel::Global => WorkerPool::global().lanes(),
+            PoolSel::Handle(pool) | PoolSel::Forced(pool) => pool.lanes(),
+            PoolSel::Off => std::thread::available_parallelism().map_or(8, |n| n.get()),
+        };
+        (lanes * 4).max(8)
+    }
+
+    fn fan_out<W: Send>(&self, work: Vec<Keyed<W>>, total_elems: usize, f: impl Fn(W) + Sync) {
+        match &self.pool {
+            PoolSel::Global => WorkerPool::global().run_keyed(work, total_elems, f),
+            PoolSel::Handle(pool) => pool.run_keyed(work, total_elems, f),
+            PoolSel::Forced(pool) => pool.run_keyed_forced(work, f),
+            PoolSel::Off => crate::collectives::arena::run_parallel_weighted(
+                work.into_iter().map(|k| (k.weight, k.item)).collect(),
+                total_elems,
+                f,
+            ),
+        }
+    }
+
+    /// Owned-buffer entry point (mirrors `RampX::run`).
+    pub fn run(&self, op: MpiOp, bufs: &mut Vec<Vec<f32>>) -> Result<StreamPlan> {
+        let mut arena = BufferArena::for_op(self.p, op, bufs)?;
+        let plan = self.run_arena(op, &mut arena)?;
+        *bufs = arena.copy_out();
+        Ok(plan)
+    }
+
+    /// Arena entry point: builds the streamed plan and drives its steps
+    /// shard batch by shard batch. Results land in the front half.
+    pub fn run_arena(&self, op: MpiOp, arena: &mut BufferArena) -> Result<StreamPlan> {
+        let p = self.p;
+        let n = p.n_nodes();
+        ensure!(arena.n_regions() == n, "need {n} regions, got {}", arena.n_regions());
+        let m = arena.uniform_len()?;
+        let plan = StreamPlan::for_op(p, op, m, self.pipeline)?;
+        for st in &plan.steps {
+            let reduce = st.reduce_sources > 1;
+            let cur = st.cur;
+            ensure!(
+                arena.uniform_len()? == cur,
+                "streamed step expects live region {cur}, arena holds {}",
+                arena.uniform_len()?
+            );
+            if !reduce {
+                ensure!(
+                    cur * st.size <= arena.region_cap(),
+                    "arena region ({}) too small for all-gather growth to {}",
+                    arena.region_cap(),
+                    cur * st.size
+                );
+            }
+            self.exchange_step(arena, st, reduce);
+            arena.flip_uniform(if reduce { cur / st.size } else { cur * st.size });
+        }
+        Ok(plan)
+    }
+
+    /// One algorithmic step over all shards, in lane-batch slices. Each
+    /// work item stages its subgroup's live regions into a contiguous
+    /// `s · cur` slab (local member ranks 0..s, member order preserved)
+    /// and runs the shared kernels against it — the same summation /
+    /// concat order as the eager whole-slab pass, so bitwise identical.
+    fn exchange_step(&self, arena: &mut BufferArena, st: &StreamStep, reduce: bool) {
+        let p = self.p;
+        let cur = st.cur;
+        let chunk = if st.size > 0 { cur / st.size } else { cur };
+        let cap = arena.region_cap();
+        let (front, back) = arena.split();
+        let mut slots: Vec<Option<&mut [f32]>> = back.into_iter().map(Some).collect();
+        let views = &st.views;
+        let batch_cap = self.effective_batch();
+        let mut it = shards(p, st.step);
+        loop {
+            let mut work: Vec<Keyed<(Vec<usize>, Vec<&mut [f32]>)>> =
+                Vec::with_capacity(batch_cap);
+            let mut batch_elems = 0usize;
+            for g in it.by_ref().take(batch_cap) {
+                let ranks: Vec<usize> = g.iter().map(|m| node_rank(p, *m)).collect();
+                let outs: Vec<&mut [f32]> = ranks
+                    .iter()
+                    .map(|&r| slots[r].take().expect("rank appears in exactly one subgroup"))
+                    .collect();
+                let weight = if reduce { chunk * ranks.len() } else { cur * st.size * ranks.len() };
+                batch_elems += cur * ranks.len();
+                work.push(Keyed::new(ranks[0], weight.max(1), (ranks, outs)));
+            }
+            if work.is_empty() {
+                break;
+            }
+            self.fan_out(work, batch_elems.max(1), |(ranks, mut outs)| {
+                let s = ranks.len();
+                // per-shard slab: the closed-form working set (s · cur)
+                let mut slab = vec![0f32; s * cur];
+                for (i, &r) in ranks.iter().enumerate() {
+                    slab[i * cur..(i + 1) * cur].copy_from_slice(&front[r * cap..r * cap + cur]);
+                }
+                let local: Vec<usize> = (0..s).collect();
+                for v in views {
+                    if reduce {
+                        reduce_subgroup(
+                            &slab, cur, &local, &mut outs, chunk, v.offset, v.offset + v.len,
+                        );
+                    } else {
+                        concat_subgroup(
+                            &slab, cur, &local, &mut outs, cur, v.offset, v.offset + v.len,
+                        );
+                    }
+                }
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::reference as oracle;
+    use crate::rng::Xoshiro256;
+
+    fn params_under_test() -> Vec<RampParams> {
+        vec![
+            RampParams::new(2, 2, 4, 1),
+            RampParams::fig8_example(),
+            RampParams::new(4, 2, 4, 1),
+            RampParams::new(3, 1, 3, 1),
+            RampParams::new(2, 2, 8, 1),
+        ]
+    }
+
+    fn random_inputs(p: &RampParams, elems: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut r = Xoshiro256::seed_from(seed);
+        (0..p.n_nodes())
+            .map(|_| (0..elems).map(|_| (r.next_below(1000) as f32) - 500.0).collect())
+            .collect()
+    }
+
+    #[test]
+    fn shards_match_subgroup_list_order() {
+        for p in params_under_test() {
+            for step in Step::active(&p) {
+                let lazy: Vec<Vec<NodeCoord>> = shards(&p, step).collect();
+                assert_eq!(lazy, subgroup_list(&p, step), "{p:?} {step:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_executor_matches_oracle() {
+        for p in params_under_test() {
+            let n = p.n_nodes();
+            for (op, elems, seed) in [
+                (MpiOp::ReduceScatter, 2 * n, 11),
+                (MpiOp::AllGather, 3, 12),
+                (MpiOp::AllReduce, n, 13),
+            ] {
+                let mut bufs = random_inputs(&p, elems, seed);
+                let expect = match op {
+                    MpiOp::ReduceScatter => oracle::reduce_scatter(&bufs),
+                    MpiOp::AllGather => oracle::all_gather(&bufs),
+                    _ => oracle::all_reduce(&bufs),
+                };
+                let plan =
+                    ShardedExchange::new(&p).with_batch(3).run(op, &mut bufs).unwrap();
+                assert_eq!(bufs, expect, "sharded {op:?} mismatch for {p:?}");
+                assert!(plan.summary().n_transfers > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn summary_closed_forms_match_materialized_plan() {
+        for p in params_under_test() {
+            let n = p.n_nodes();
+            for pipeline in [Pipeline::off(), Pipeline::fixed(3)] {
+                for op in [MpiOp::ReduceScatter, MpiOp::AllGather, MpiOp::AllReduce] {
+                    let m = if matches!(op, MpiOp::AllGather) { 4 } else { 2 * n };
+                    let splan = StreamPlan::for_op(&p, op, m, pipeline).unwrap();
+                    let eager = splan.materialize(&p);
+                    assert_eq!(splan.summary(), eager.summary(), "{op:?} {p:?}");
+                }
+            }
+        }
+    }
+}

@@ -40,6 +40,16 @@ impl CollectiveRun {
     }
 }
 
+/// What [`RampEngine::probe_scale`] produces: folded plan totals, the
+/// folded wire schedule, and the priced completion-time decomposition —
+/// a few hundred bytes regardless of fabric size.
+#[derive(Clone, Copy, Debug)]
+pub struct ScaleProbe {
+    pub plan: crate::collectives::plan::PlanSummary,
+    pub schedule: crate::transcoder::ScheduleSummary,
+    pub time: crate::estimator::collective_time::CollectiveTime,
+}
+
 /// The engine: owns the network parameters and the fabric referee.
 pub struct RampEngine {
     pub p: RampParams,
@@ -399,6 +409,28 @@ impl RampEngine {
     /// [`BufferArena::load_padded`] to a common padded length.
     pub fn all_reduce_arena(&self, arena: &mut BufferArena) -> Result<CollectiveRun> {
         self.execute_arena(MpiOp::AllReduce, arena)
+    }
+
+    /// The full-scale probe: plan + transcode + estimate for an
+    /// exchange-family collective of `m_elems` f32 per rank, in bounded
+    /// memory — the streamed plan holds per-step shapes only, the
+    /// transcoder folds one rank-shard at a time, and the estimator
+    /// prices the folded summary. No data moves and no fabric run
+    /// happens: this is the entry point that turns the paper's Table-8
+    /// 65,536-node claims into an executable artifact on a laptop
+    /// (peak allocation is sub-linear in ranks — asserted by the
+    /// `scale` test's counting allocator).
+    pub fn probe_scale(&self, op: MpiOp, m_elems: usize) -> Result<ScaleProbe> {
+        let plan = crate::collectives::stream::StreamPlan::for_op(
+            &self.p,
+            op,
+            m_elems,
+            self.pipeline.without_cross(),
+        )?;
+        let schedule = crate::transcoder::transcode_stream(&self.p, &plan, |_| {})?;
+        let time =
+            crate::estimator::collective_time::streamed_schedule_time(&self.p, &schedule);
+        Ok(ScaleProbe { plan: plan.summary(), schedule, time })
     }
 
     /// Gradient all-reduce with automatic padding to a multiple of N

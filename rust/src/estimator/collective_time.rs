@@ -619,6 +619,25 @@ impl PipelineComparison {
     }
 }
 
+/// Price a folded streamed schedule
+/// ([`crate::transcoder::ScheduleSummary`]): wire time from the slot
+/// count, H2H from the latency-bearing round count — the same per-round
+/// `propagation + io_latency` charge the closed-form RAMP model applies.
+/// The scale path's estimator leg: at 65,536 nodes the summary is five
+/// words where the instruction-level [`crate::transcoder::Schedule`]
+/// would be gigabytes. Compute is not represented in a wire schedule and
+/// reads 0 here; the closed-form `completion_time` covers it.
+pub fn streamed_schedule_time(
+    p: &RampParams,
+    s: &crate::transcoder::ScheduleSummary,
+) -> CollectiveTime {
+    CollectiveTime {
+        h2h: s.h2h_rounds as f64 * (p.propagation + p.io_latency),
+        h2t: s.total_slots as f64 * p.slot_time,
+        compute: 0.0,
+    }
+}
+
 /// The best-performing baseline for an operation — Fig 18's comparison
 /// basis ("best strategy on the best EPS and OCS topologies").
 pub fn best_baseline(

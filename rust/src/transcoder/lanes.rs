@@ -61,39 +61,67 @@ pub struct LaneSchedule {
     pub waves: Vec<Vec<usize>>,
 }
 
-/// Lane task count of a plan step: `n_chunks` when the step is cleanly
-/// chunked (rounds divisible base-round-major), else one task covering
-/// the whole step.
-fn step_tasks(plan: &CollectivePlan, r: usize) -> usize {
-    let s = &plan.steps[r];
-    let k = s.n_chunks.max(1);
-    if k > 1 && s.rounds.len() % k == 0 {
-        k
-    } else {
-        1
+/// The lane-relevant shape of one plan step: everything the scheduler
+/// reads, decoupled from the materialized rounds so streamed plans
+/// (`collectives::stream::StreamPlan::lane_shapes`) derive their lane
+/// structure from counts alone — no `Vec<Round>` behind it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StepShape {
+    /// Total wire rounds of the step (chunk sub-rounds included).
+    pub rounds: usize,
+    /// Pipeline chunk count (0 / 1 = unchunked).
+    pub n_chunks: usize,
+    /// Fraction-pure chunk geometry (see `PlanStep::lane_aligned`).
+    pub lane_aligned: bool,
+}
+
+impl StepShape {
+    fn of(s: &crate::collectives::plan::PlanStep) -> Self {
+        Self { rounds: s.rounds.len(), n_chunks: s.n_chunks, lane_aligned: s.lane_aligned }
+    }
+
+    /// Lane task count: `n_chunks` when the step is cleanly chunked
+    /// (rounds divisible base-round-major), else one task covering the
+    /// whole step.
+    fn tasks(&self) -> usize {
+        let k = self.n_chunks.max(1);
+        if k > 1 && self.rounds % k == 0 {
+            k
+        } else {
+            1
+        }
     }
 }
 
-/// Whether steps `r−1` and `r` of `plan` are lane-aligned: both
+fn step_tasks(plan: &CollectivePlan, r: usize) -> usize {
+    StepShape::of(&plan.steps[r]).tasks()
+}
+
+/// Whether two consecutive step shapes are lane-aligned: both
 /// fraction-pure with the same chunk count, so per-chunk edges replace
 /// the step barrier.
+fn aligned_pair(a: &StepShape, b: &StepShape) -> bool {
+    a.lane_aligned && b.lane_aligned && a.tasks() == b.tasks() && b.tasks() > 1
+}
+
+/// Whether steps `r−1` and `r` of `plan` are lane-aligned.
 pub fn aligned_boundary(plan: &CollectivePlan, r: usize) -> bool {
-    if r == 0 {
-        return false;
-    }
-    let (a, b) = (&plan.steps[r - 1], &plan.steps[r]);
-    a.lane_aligned
-        && b.lane_aligned
-        && step_tasks(plan, r - 1) == step_tasks(plan, r)
-        && step_tasks(plan, r) > 1
+    r > 0 && aligned_pair(&StepShape::of(&plan.steps[r - 1]), &StepShape::of(&plan.steps[r]))
 }
 
 impl LaneSchedule {
     /// Build the dependency-aware lane schedule of `plan`.
     pub fn from_plan(plan: &CollectivePlan) -> Self {
+        Self::from_shapes(&plan.steps.iter().map(StepShape::of).collect::<Vec<_>>())
+    }
+
+    /// Build the schedule from per-step shapes alone — the
+    /// bounded-memory entry point for streamed plans (a shape is three
+    /// words per step; nothing scales with N or with round count).
+    pub fn from_shapes(shapes: &[StepShape]) -> Self {
         // first index of each step's tasks in the (step, chunk)-major id
         // space used while wiring dependencies
-        let counts: Vec<usize> = (0..plan.steps.len()).map(|r| step_tasks(plan, r)).collect();
+        let counts: Vec<usize> = shapes.iter().map(StepShape::tasks).collect();
         let mut base = Vec::with_capacity(counts.len());
         let mut total = 0;
         for &c in &counts {
@@ -108,7 +136,7 @@ impl LaneSchedule {
         }
         let mut deps: Vec<Vec<usize>> = vec![Vec::new(); total];
         for r in 1..counts.len() {
-            if aligned_boundary(plan, r) {
+            if aligned_pair(&shapes[r - 1], &shapes[r]) {
                 // per-chunk edge: (r, c) ← (r−1, c)
                 for c in 0..counts[r] {
                     deps[base[r] + c].push(base[r - 1] + c);

@@ -303,70 +303,105 @@ impl<'a> Transcoder<'a> {
         start: u64,
         sched: &mut Schedule,
     ) -> Result<u64> {
-        let p = self.p;
         let mut end = start;
         for t in &round.transfers {
-            ensure!(!t.dsts.is_empty(), "transfer without destinations");
-            ensure!(
-                t.dsts.iter().all(|d| *d != t.src),
-                "self-transfer from {}",
-                t.src
-            );
-            // a multicast shares one wavelength: all dsts must be tuned to
-            // the same channel and live in the same destination group
-            let w = rx_wavelength(t.dsts[0]);
-            let dg = t.dsts[0].g;
-            ensure!(
-                t.dsts.iter().all(|d| rx_wavelength(*d) == w && d.g == dg),
-                "multicast destinations must share wavelength and group"
-            );
-            let dense = step == Some(crate::collectives::subgroups::Step::S4)
-                && p.subnet_kind == crate::topology::ramp::SubnetKind::RouteSelect;
-            let groups =
-                trx_groups_from_base(p, base_trx_for(p, step, t.src, t.dsts[0]), q, dense);
-            let stripes = split_bytes(t.bytes, groups.len() as u64);
-            for (trx, bytes) in groups.iter().zip(stripes) {
-                if bytes == 0 {
-                    continue;
-                }
-                let n_slots = bytes.div_ceil(group_slot_payload(p)).max(1);
-                let subnet = SubnetId {
-                    src_group: t.src.g,
-                    dst_group: dg,
-                    trx: *trx,
-                };
-                // earliest slot ≥ start where the subnet wavelength space,
-                // the transmitter and every receiver are free
-                let mut slot = start;
-                slot = slot.max(*self.tx_free.get(&(t.src.flat(p), *trx)).unwrap_or(&0));
-                for d in &t.dsts {
-                    let (in_k, out_k) = rack_keys(p, t.src, d.j);
-                    slot = slot.max(*self.subnet_in_free.get(&(subnet, w, in_k)).unwrap_or(&0));
-                    slot = slot.max(*self.subnet_out_free.get(&(subnet, w, out_k)).unwrap_or(&0));
-                    slot = slot.max(*self.rx_free.get(&(d.flat(p), *trx)).unwrap_or(&0));
-                }
-                let done = slot + n_slots;
-                self.tx_free.insert((t.src.flat(p), *trx), done);
-                for d in &t.dsts {
-                    let (in_k, out_k) = rack_keys(p, t.src, d.j);
-                    self.subnet_in_free.insert((subnet, w, in_k), done);
-                    self.subnet_out_free.insert((subnet, w, out_k), done);
-                    self.rx_free.insert((d.flat(p), *trx), done);
-                }
-                end = end.max(done);
-                sched.instructions.push(NicInstruction {
-                    src: t.src,
-                    dsts: t.dsts.clone(),
-                    trx: *trx,
-                    subnet,
-                    wavelength: w,
-                    slot,
-                    n_slots,
-                    bytes,
-                });
-            }
+            let done = self.place_transfer(t.src, &t.dsts, t.bytes, q, step, start, &mut |i| {
+                sched.instructions.push(i)
+            })?;
+            end = end.max(done);
         }
         Ok(end)
+    }
+
+    /// Place one transfer against the occupancy state: stripe it across
+    /// its transceiver groups, find each stripe's earliest
+    /// contention-free slot ≥ `start`, record the occupancy, and emit
+    /// one [`NicInstruction`] per non-empty stripe. Returns the
+    /// transfer's completion slot. This is the single placement routine
+    /// behind both the eager round paths and the shard-streaming
+    /// [`transcode_stream`], so the two can never drift.
+    fn place_transfer(
+        &mut self,
+        src: NodeCoord,
+        dsts: &[NodeCoord],
+        bytes: u64,
+        q: usize,
+        step: Option<crate::collectives::subgroups::Step>,
+        start: u64,
+        emit: &mut dyn FnMut(NicInstruction),
+    ) -> Result<u64> {
+        let p = self.p;
+        let mut end = start;
+        ensure!(!dsts.is_empty(), "transfer without destinations");
+        ensure!(dsts.iter().all(|d| *d != src), "self-transfer from {}", src);
+        // a multicast shares one wavelength: all dsts must be tuned to
+        // the same channel and live in the same destination group
+        let w = rx_wavelength(dsts[0]);
+        let dg = dsts[0].g;
+        ensure!(
+            dsts.iter().all(|d| rx_wavelength(*d) == w && d.g == dg),
+            "multicast destinations must share wavelength and group"
+        );
+        let dense = step == Some(crate::collectives::subgroups::Step::S4)
+            && p.subnet_kind == crate::topology::ramp::SubnetKind::RouteSelect;
+        let groups = trx_groups_from_base(p, base_trx_for(p, step, src, dsts[0]), q, dense);
+        let stripes = split_bytes(bytes, groups.len() as u64);
+        for (trx, bytes) in groups.iter().zip(stripes) {
+            if bytes == 0 {
+                continue;
+            }
+            let n_slots = bytes.div_ceil(group_slot_payload(p)).max(1);
+            let subnet = SubnetId {
+                src_group: src.g,
+                dst_group: dg,
+                trx: *trx,
+            };
+            // earliest slot ≥ start where the subnet wavelength space,
+            // the transmitter and every receiver are free
+            let mut slot = start;
+            slot = slot.max(*self.tx_free.get(&(src.flat(p), *trx)).unwrap_or(&0));
+            for d in dsts {
+                let (in_k, out_k) = rack_keys(p, src, d.j);
+                slot = slot.max(*self.subnet_in_free.get(&(subnet, w, in_k)).unwrap_or(&0));
+                slot = slot.max(*self.subnet_out_free.get(&(subnet, w, out_k)).unwrap_or(&0));
+                slot = slot.max(*self.rx_free.get(&(d.flat(p), *trx)).unwrap_or(&0));
+            }
+            let done = slot + n_slots;
+            self.tx_free.insert((src.flat(p), *trx), done);
+            for d in dsts {
+                let (in_k, out_k) = rack_keys(p, src, d.j);
+                self.subnet_in_free.insert((subnet, w, in_k), done);
+                self.subnet_out_free.insert((subnet, w, out_k), done);
+                self.rx_free.insert((d.flat(p), *trx), done);
+            }
+            end = end.max(done);
+            emit(NicInstruction {
+                src,
+                dsts: dsts.to_vec(),
+                trx: *trx,
+                subnet,
+                wavelength: w,
+                slot,
+                n_slots,
+                bytes,
+            });
+        }
+        Ok(end)
+    }
+
+    /// Drop all recorded occupancy, keeping map capacity. The
+    /// shard-streaming path calls this per (round, shard): all frees
+    /// recorded in earlier rounds are ≤ the current round's start slot
+    /// (rounds are synchronous), and within a round distinct shards
+    /// touch disjoint transmitters, receivers and (subnet, λ, rack)
+    /// keys (the co-designed schedule-less property), so clearing
+    /// changes no placement — asserted instruction-for-instruction by
+    /// the differential stream tests.
+    fn clear_occupancy(&mut self) {
+        self.subnet_in_free.clear();
+        self.subnet_out_free.clear();
+        self.tx_free.clear();
+        self.rx_free.clear();
     }
 }
 
@@ -399,6 +434,81 @@ pub fn transcode_plan_lanes_partial(
 ) -> Result<Schedule> {
     let sched = lanes::LaneSchedule::from_plan(plan);
     Transcoder::new(p).transcode_lanes_partial(plan, &sched, skip)
+}
+
+/// The folded accounting of a streamed transcode: everything the
+/// estimator and the conservation checks need from a schedule, with no
+/// instruction list behind it. Field-for-field comparable with an eager
+/// [`Schedule`] of the same plan.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScheduleSummary {
+    /// NIC instructions emitted (one per non-empty stripe).
+    pub n_instructions: u64,
+    /// Total bytes on the wire (stripe bytes sum exactly to transfer
+    /// bytes, so this equals the plan's `total_wire_bytes`).
+    pub total_bytes: u64,
+    /// Total timeslots from first transmission to completion.
+    pub total_slots: u64,
+    /// Latency-bearing round count (chunk sub-rounds share one H2H).
+    pub h2h_rounds: usize,
+    /// Synchronous wire rounds (chunk sub-rounds counted individually).
+    pub n_rounds: usize,
+}
+
+/// Transcode a streamed plan one rank-shard at a time, folding slot,
+/// round and byte totals without materializing rounds, transfers or the
+/// instruction list. Peak memory is O(shard): one subgroup's
+/// coordinates plus that shard's occupancy entries, independent of N.
+///
+/// Every instruction still flows through `visit` in the exact order the
+/// eager [`Transcoder::transcode`] would push it (rounds are
+/// group-major, and [`crate::collectives::stream::shards`] yields
+/// subgroups in `subgroup_list` order), so callers can stream
+/// instructions to a sink — or pass `|_| {}` for accounting only.
+pub fn transcode_stream(
+    p: &RampParams,
+    plan: &crate::collectives::stream::StreamPlan,
+    mut visit: impl FnMut(NicInstruction),
+) -> Result<ScheduleSummary> {
+    let mut tc = Transcoder::new(p);
+    let mut sum = ScheduleSummary::default();
+    let mut clock = 0u64;
+    for st in &plan.steps {
+        let q = st.trx_q.max(1);
+        sum.h2h_rounds += st.base_rounds();
+        for pairs in st.pair_rounds() {
+            for view in &st.views {
+                let bytes = view.bytes();
+                let start = clock;
+                let mut end = start;
+                for shard in crate::collectives::stream::shards(p, st.step) {
+                    // exact despite the per-shard reset: see
+                    // `Transcoder::clear_occupancy`
+                    tc.clear_occupancy();
+                    for &(from, to) in &pairs {
+                        let done = tc.place_transfer(
+                            shard[from],
+                            &[shard[to]],
+                            bytes,
+                            q,
+                            Some(st.step),
+                            start,
+                            &mut |ins| {
+                                sum.n_instructions += 1;
+                                sum.total_bytes += ins.bytes;
+                                visit(ins);
+                            },
+                        )?;
+                        end = end.max(done);
+                    }
+                }
+                clock = end;
+                sum.n_rounds += 1;
+            }
+        }
+    }
+    sum.total_slots = clock;
+    Ok(sum)
 }
 
 /// Effective number of stripes a transfer of a given plan step gets.

@@ -1,0 +1,102 @@
+//! Overflow-boundary regression net for the 65,536-rank scale path:
+//! byte accounting must stay exact when rank counts and buffer sizes
+//! push products past `u32` (and, on 32-bit hosts, `usize`) range.
+//! These pin the widened `u64` arithmetic in the arena capacity
+//! planner, the per-node phase accounting, and the estimators.
+
+use ramp::collectives::arena::{arena_capacity, ArenaRegion, Pipeline};
+use ramp::collectives::ops::{node_tx_bytes, ramp_phases};
+use ramp::collectives::stream::StreamPlan;
+use ramp::collectives::MpiOp;
+use ramp::engine::RampEngine;
+use ramp::estimator::collective_time::CollectiveEstimator;
+use ramp::topology::ramp::RampParams;
+
+const GIB: u64 = 1 << 30;
+
+#[test]
+fn arena_region_bytes_exact_past_u32() {
+    // 2^33 + 5 elements → 2^35 + 20 bytes; a 32-bit (or f64-rounded)
+    // multiply would mangle this
+    let r = ArenaRegion::new(0, (1usize << 33) + 5);
+    assert_eq!(r.bytes(), (1u64 << 35) + 20);
+}
+
+#[test]
+fn arena_capacity_exact_at_full_scale() {
+    let p = RampParams::max_scale();
+    assert_eq!(p.n_nodes(), 65536);
+
+    // all-gather grows each contribution by N: 1 MiB/node → 64 GiB of
+    // result elements; the elem count (2^24 * 2^16 = 2^40 … /4) must
+    // survive the byte math without truncation
+    let contrib = 1 << 18; // elems: 1 MiB per node
+    let cap = arena_capacity(&p, MpiOp::AllGather, contrib);
+    assert_eq!(cap, contrib * 65536);
+
+    // all-reduce at 4 GiB input: capacity covers input + exchange
+    // scratch and is phase-accurate, not saturated or wrapped
+    let m = (4 * GIB / 4) as usize; // 1 Gi elems
+    let cap = arena_capacity(&p, MpiOp::AllReduce, m);
+    assert!(cap >= m, "capacity {cap} lost the input");
+    assert!((cap as u64) < 64 * GIB / 4, "capacity {cap} wrapped or exploded");
+}
+
+#[test]
+fn phase_accounting_exact_at_scale_times_multi_gib() {
+    let p = RampParams::max_scale();
+    // 16 GiB all-reduce on 65,536 nodes: per-node wire bytes fit u64
+    // comfortably but overflow u32 per phase
+    let phases = ramp_phases(&p, MpiOp::AllReduce, 16 * GIB);
+    assert!(!phases.is_empty());
+    let tx = node_tx_bytes(&phases);
+    // reduce-scatter + all-gather each move < 2 * m per node; exact
+    // zero or u32-wrapped values would violate these bounds
+    assert!(tx > 16 * GIB, "tx {tx} undercounts a 16 GiB all-reduce");
+    assert!(tx < 64 * GIB, "tx {tx} overflowed");
+
+    // all-to-all is the worst case: per-peer bytes * 65k peers
+    let phases = ramp_phases(&p, MpiOp::AllToAll, 16 * GIB);
+    let tx = node_tx_bytes(&phases);
+    assert!(tx > 8 * GIB && tx < 1024 * GIB, "all-to-all tx {tx}");
+}
+
+#[test]
+fn stream_summary_wire_bytes_exact_at_scale() {
+    let p = RampParams::max_scale();
+    let n = p.n_nodes();
+    // 4 GiB all-reduce: total wire bytes across 65k nodes run to
+    // hundreds of TiB — far past u32 * u32 territory
+    let m = GIB as usize; // elems → 4 GiB buffer
+    let plan = StreamPlan::all_reduce(&p, m, Pipeline::off()).unwrap();
+    let s = plan.summary();
+    assert!(s.n_transfers > 1_000_000, "n_transfers {}", s.n_transfers);
+    // each node wires ~2 * m bytes total across RS + AG; the fabric
+    // total must land between N*m and 4*N*m bytes
+    let nm = n as u64 * 4 * GIB;
+    assert!(s.total_wire_bytes > nm / 4, "wire bytes {} undercount", s.total_wire_bytes);
+    assert!(s.total_wire_bytes < 4 * nm, "wire bytes {} overflowed", s.total_wire_bytes);
+}
+
+#[test]
+fn estimator_finite_at_scale_boundaries() {
+    let p = RampParams::max_scale();
+    let est = CollectiveEstimator::ramp(&p);
+    for m in [4u64, GIB, 16 * GIB] {
+        for op in [MpiOp::AllReduce, MpiOp::AllGather, MpiOp::AllToAll] {
+            let t = est.completion_time(op, m, 65536);
+            assert!(t.total().is_finite() && t.total() > 0.0, "{op:?} m={m}");
+        }
+    }
+}
+
+#[test]
+fn probe_scale_reports_consistent_totals() {
+    // the engine-level entry point used by benches and callers: one
+    // call plans + transcodes + prices in bounded memory
+    let p = RampParams::new(16, 16, 16, 1); // 4,096 ranks
+    let probe = RampEngine::new(p).probe_scale(MpiOp::AllReduce, 4096 * 4).unwrap();
+    assert_eq!(probe.plan.total_wire_bytes, probe.schedule.total_bytes);
+    assert!(probe.schedule.n_instructions > 0);
+    assert!(probe.time.total().is_finite() && probe.time.total() > 0.0);
+}

@@ -1,0 +1,216 @@
+//! Streaming-vs-eager differential net for lazy sharded plan generation:
+//! the bounded-memory scale path (`collectives::stream` +
+//! `transcoder::transcode_stream`) must agree with the eager builders
+//! **exactly** on the 5 differential fabrics — materialized plans
+//! field-for-field, folded summaries against materialized totals, NIC
+//! instruction streams instruction-for-instruction (a claim strictly
+//! stronger than the multiset equality the scale work needs), and the
+//! sharded per-slab executor bitwise on the data plane.
+
+use ramp::collectives::arena::Pipeline;
+use ramp::collectives::plan::CollectivePlan;
+use ramp::collectives::ramp_x::RampX;
+use ramp::collectives::stream::{ShardedExchange, StreamPlan};
+use ramp::collectives::MpiOp;
+use ramp::estimator::collective_time::streamed_schedule_time;
+use ramp::rng::Xoshiro256;
+use ramp::topology::ramp::RampParams;
+use ramp::transcoder::{transcode_plan, transcode_stream, NicInstruction};
+
+/// The 5 differential fabrics of the executor test net (16–54 nodes,
+/// covering inactive step-3/4 shapes and multi-round step 4).
+fn fabrics() -> Vec<RampParams> {
+    vec![
+        RampParams::new(2, 2, 4, 1),
+        RampParams::fig8_example(),
+        RampParams::new(4, 2, 4, 1),
+        RampParams::new(3, 1, 3, 1),
+        RampParams::new(2, 2, 8, 1),
+    ]
+}
+
+fn pipelines() -> Vec<Pipeline> {
+    vec![Pipeline::off(), Pipeline::fixed(3), Pipeline::auto()]
+}
+
+fn exchange_cases(n: usize) -> Vec<(MpiOp, usize)> {
+    vec![
+        (MpiOp::ReduceScatter, 2 * n),
+        (MpiOp::AllGather, 3),
+        (MpiOp::AllReduce, n),
+    ]
+}
+
+fn random_inputs(p: &RampParams, elems: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut r = Xoshiro256::seed_from(seed);
+    (0..p.n_nodes())
+        .map(|_| (0..elems).map(|_| (r.next_below(1000) as f32) - 500.0).collect())
+        .collect()
+}
+
+/// Run the eager executor purely to harvest its emitted plan.
+fn eager_plan(p: &RampParams, op: MpiOp, m: usize, pipeline: Pipeline) -> CollectivePlan {
+    let mut bufs = random_inputs(p, m, 7);
+    RampX::new(p).with_pipeline(pipeline).run(op, &mut bufs).unwrap()
+}
+
+fn assert_plans_equal(a: &CollectivePlan, b: &CollectivePlan, ctx: &str) {
+    assert_eq!(a.steps.len(), b.steps.len(), "{ctx}: step count");
+    for (i, (sa, sb)) in a.steps.iter().zip(&b.steps).enumerate() {
+        assert_eq!(sa.label, sb.label, "{ctx}: step {i} label");
+        assert_eq!(sa.step, sb.step, "{ctx}: step {i} step id");
+        assert_eq!(sa.reduce_sources, sb.reduce_sources, "{ctx}: step {i} reduce_sources");
+        assert_eq!(sa.reduce_bytes, sb.reduce_bytes, "{ctx}: step {i} reduce_bytes");
+        assert_eq!(sa.trx_q, sb.trx_q, "{ctx}: step {i} trx_q");
+        assert_eq!(sa.n_chunks, sb.n_chunks, "{ctx}: step {i} n_chunks");
+        assert_eq!(sa.lane_aligned, sb.lane_aligned, "{ctx}: step {i} lane_aligned");
+        assert_eq!(sa.rounds.len(), sb.rounds.len(), "{ctx}: step {i} round count");
+        for (r, (ra, rb)) in sa.rounds.iter().zip(&sb.rounds).enumerate() {
+            assert_eq!(ra.transfers, rb.transfers, "{ctx}: step {i} round {r}");
+        }
+    }
+}
+
+type InsKey = (usize, usize, usize, usize, (usize, usize, usize), usize, u64, u64, u64, Vec<usize>);
+
+fn ins_key(p: &RampParams, i: &NicInstruction) -> InsKey {
+    (
+        i.src.g,
+        i.src.j,
+        i.src.lambda,
+        i.trx,
+        (i.subnet.src_group, i.subnet.dst_group, i.subnet.trx),
+        i.wavelength,
+        i.slot,
+        i.n_slots,
+        i.bytes,
+        i.dsts.iter().map(|d| d.flat(p)).collect(),
+    )
+}
+
+#[test]
+fn materialized_stream_plans_equal_eager_plans() {
+    for p in fabrics() {
+        let n = p.n_nodes();
+        for pipeline in pipelines() {
+            for (op, m) in exchange_cases(n) {
+                let eager = eager_plan(&p, op, m, pipeline);
+                let stream = StreamPlan::for_op(&p, op, m, pipeline).unwrap();
+                let ctx = format!("{op:?} {p:?} pipeline {pipeline:?}");
+                assert_plans_equal(&stream.materialize(&p), &eager, &ctx);
+                assert_eq!(stream.summary(), eager.summary(), "{ctx}: folded summary");
+            }
+        }
+    }
+}
+
+#[test]
+fn streamed_transcode_matches_eager_instruction_for_instruction() {
+    for p in fabrics() {
+        let n = p.n_nodes();
+        for pipeline in pipelines() {
+            for (op, m) in exchange_cases(n) {
+                let ctx = format!("{op:?} {p:?} pipeline {pipeline:?}");
+                let eager = transcode_plan(&p, &eager_plan(&p, op, m, pipeline)).unwrap();
+                let stream = StreamPlan::for_op(&p, op, m, pipeline).unwrap();
+                let mut streamed = Vec::new();
+                let sum = transcode_stream(&p, &stream, |i| streamed.push(i)).unwrap();
+                // folded accounting vs the eager schedule
+                assert_eq!(sum.total_slots, eager.total_slots, "{ctx}: total_slots");
+                assert_eq!(sum.h2h_rounds, eager.h2h_rounds, "{ctx}: h2h_rounds");
+                assert_eq!(sum.n_rounds, eager.round_ends.len(), "{ctx}: n_rounds");
+                assert_eq!(
+                    sum.n_instructions,
+                    eager.instructions.len() as u64,
+                    "{ctx}: instruction count"
+                );
+                let eager_bytes: u64 = eager.instructions.iter().map(|i| i.bytes).sum();
+                assert_eq!(sum.total_bytes, eager_bytes, "{ctx}: byte total");
+                assert_eq!(
+                    sum.total_bytes,
+                    stream.summary().total_wire_bytes,
+                    "{ctx}: schedule bytes vs plan closed form"
+                );
+                // the instruction stream itself: same order, same content
+                let ek: Vec<_> = eager.instructions.iter().map(|i| ins_key(&p, i)).collect();
+                let sk: Vec<_> = streamed.iter().map(|i| ins_key(&p, i)).collect();
+                assert_eq!(sk, ek, "{ctx}: instruction stream");
+            }
+        }
+    }
+}
+
+#[test]
+fn streamed_transcode_matches_under_broadcast_and_select() {
+    // RouteSelect is the default, so the tests above exercise the dense
+    // step-4 striping; pin the Broadcast&Select trx-group formula too
+    for p in fabrics() {
+        let p = p.with_broadcast_select();
+        let n = p.n_nodes();
+        let stream = StreamPlan::all_reduce(&p, n, Pipeline::off()).unwrap();
+        let eager = transcode_plan(&p, &eager_plan(&p, MpiOp::AllReduce, n, Pipeline::off()))
+            .unwrap();
+        let mut streamed = Vec::new();
+        let sum = transcode_stream(&p, &stream, |i| streamed.push(i)).unwrap();
+        assert_eq!(sum.total_slots, eager.total_slots, "{p:?}");
+        assert_eq!(sum.n_instructions, eager.instructions.len() as u64, "{p:?}");
+        let ek: Vec<_> = eager.instructions.iter().map(|i| ins_key(&p, i)).collect();
+        let sk: Vec<_> = streamed.iter().map(|i| ins_key(&p, i)).collect();
+        assert_eq!(sk, ek, "{p:?}: R&S instruction stream");
+    }
+}
+
+#[test]
+fn sharded_executor_is_bitwise_equal_to_eager() {
+    for p in fabrics() {
+        let n = p.n_nodes();
+        for pipeline in [Pipeline::off(), Pipeline::fixed(4)] {
+            for (op, m) in exchange_cases(n) {
+                let inputs = random_inputs(&p, m, 21);
+                let mut eager = inputs.clone();
+                RampX::new(&p).with_pipeline(pipeline).run(op, &mut eager).unwrap();
+                let mut sharded = inputs.clone();
+                ShardedExchange::new(&p)
+                    .with_pipeline(pipeline)
+                    .with_batch(2)
+                    .run(op, &mut sharded)
+                    .unwrap();
+                assert_eq!(sharded, eager, "{op:?} {p:?} pipeline {pipeline:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn lane_shapes_reproduce_from_plan_schedules() {
+    use ramp::transcoder::lanes::LaneSchedule;
+    for p in fabrics() {
+        let n = p.n_nodes();
+        for pipeline in pipelines() {
+            for (op, m) in exchange_cases(n) {
+                let stream = StreamPlan::for_op(&p, op, m, pipeline).unwrap();
+                let of_shapes = LaneSchedule::from_shapes(&stream.lane_shapes());
+                let materialized = stream.materialize(&p);
+                let of_plan = LaneSchedule::from_plan(&materialized);
+                of_shapes.validate(&materialized).unwrap();
+                assert_eq!(of_shapes.tasks, of_plan.tasks, "{op:?} {p:?}");
+                assert_eq!(of_shapes.deps, of_plan.deps, "{op:?} {p:?}");
+                assert_eq!(of_shapes.waves, of_plan.waves, "{op:?} {p:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn streamed_estimate_is_finite_and_consistent() {
+    for p in fabrics() {
+        let n = p.n_nodes();
+        let stream = StreamPlan::all_reduce(&p, 4 * n, Pipeline::off()).unwrap();
+        let sum = transcode_stream(&p, &stream, |_| {}).unwrap();
+        let t = streamed_schedule_time(&p, &sum);
+        assert!(t.h2h > 0.0 && t.h2t > 0.0 && t.total().is_finite(), "{p:?}");
+        // H2H prices exactly the latency-bearing rounds
+        let per_round = p.propagation + p.io_latency;
+        assert!((t.h2h - sum.h2h_rounds as f64 * per_round).abs() < 1e-12, "{p:?}");
+    }
+}
