@@ -439,6 +439,92 @@ fn recovery_overhead(json: &mut JsonReporter) {
     );
 }
 
+/// Elastic-reformation section (PR 10): the rank-death failure path —
+/// typed abort → reformation over the survivors → reformed run — and
+/// the steady-state reformed data plane (what every later collective
+/// costs at the shrunken membership). `[elastic]` rows are
+/// informational: `scripts/bench_regression.py` lists them without
+/// gating (reformation is a rare failure-path cost, not steady state).
+fn elastic_reformation(json: &mut JsonReporter) {
+    use ramp::engine::RampEngine;
+    use ramp::estimator::collective_time::RecoveryOverhead;
+    use ramp::fault::elastic::ElasticPolicy;
+    use ramp::fault::recovery::RecoveryPolicy;
+    use ramp::fault::FaultPlan;
+
+    let p = RampParams::new(2, 2, 4, 1);
+    let n = p.n_nodes();
+    let elems = 512 * n;
+    let input = inputs(n, elems);
+    let bytes = (n * elems * 4) as f64;
+    let policy = RecoveryPolicy::default();
+    let plan = FaultPlan {
+        seed: 11,
+        rank_at: vec![(5, 1)],
+        watchdog_ms: 400,
+        ..FaultPlan::default()
+    };
+    let mut arena = BufferArena::for_op(&p, MpiOp::AllReduce, &input).unwrap();
+
+    // a rank death every iteration: typed abort → reformation over the
+    // survivors → reformed run (engine rebuilt per iteration so the
+    // death re-arms; that setup is part of the price)
+    let died = bench(
+        &format!("all-reduce {n} nodes [elastic] rank death + reformation"),
+        400,
+        || {
+            let mut engine = RampEngine::new(p.clone())
+                .with_pipeline(Pipeline::cross(3))
+                .with_faults(plan.clone())
+                .with_elastic(ElasticPolicy::Drop);
+            arena.load(&input).unwrap();
+            engine
+                .execute_arena_with_recovery(MpiOp::AllReduce, &mut arena, &policy)
+                .unwrap()
+        },
+    );
+    json.push(&died, Some(died.throughput(bytes) / 1e9));
+
+    // steady state at the shrunken membership: reform once, then every
+    // collective routes through the elastic data plane without retries
+    let mut reformed = RampEngine::new(p.clone())
+        .with_pipeline(Pipeline::cross(3))
+        .with_faults(plan.clone())
+        .with_elastic(ElasticPolicy::Drop);
+    arena.load(&input).unwrap();
+    let (_, stats) = reformed
+        .execute_arena_with_recovery(MpiOp::AllReduce, &mut arena, &policy)
+        .unwrap();
+    let steady = bench(
+        &format!("all-reduce {n} nodes [elastic] steady-state reformed"),
+        400,
+        || {
+            arena.load(&input).unwrap();
+            reformed
+                .execute_arena_with_recovery(MpiOp::AllReduce, &mut arena, &policy)
+                .unwrap()
+        },
+    );
+    json.push(&steady, Some(steady.throughput(bytes) / 1e9));
+
+    // the analytic mirror: what the estimator prices the episode at
+    let e = CollectiveEstimator::ramp(&p);
+    let m = (elems * 4) as u64;
+    let clean = e.completion_time(MpiOp::AllReduce, m, n);
+    let ov = RecoveryOverhead::from_policy(&policy, 1, 0.0);
+    let episode = e.completion_time_elastic(MpiOp::AllReduce, m, n, 1, &ov);
+    println!(
+        "    -> episode: {} reformation(s), dead {:?}, {} reconciled bytes; \
+         modeled: clean {:.3} ms vs death+reform {:.3} ms ({:.2}x)",
+        stats.reformations,
+        stats.dead_ranks,
+        stats.reconciled_bytes,
+        clean.total() * 1e3,
+        episode.total() * 1e3,
+        episode.total() / clean.total().max(1e-12),
+    );
+}
+
 /// Plan-generation throughput (PR 9): the lazy sharded scale path.
 /// Closed-form `StreamPlan` construction + folded summary at 4,096 /
 /// 16,384 / 65,536 ranks, the shard-streaming transcode fold at the two
@@ -647,6 +733,8 @@ fn main() {
             replay.backoff_virtual_s * 1e3
         );
     }
+    println!("== elastic rank loss: reformation vs clean path ==");
+    elastic_reformation(&mut json);
 
     println!(
         "measured reduce-kernel bandwidth: {:.2} GB/s (SIMD width {} lanes); \

@@ -810,6 +810,13 @@ pub(crate) fn run_event(
                     ctx.fail(RampError::TransceiverDied { trx, step: at });
                     return ItemStep::Done;
                 }
+                // whole-rank death: strictly worse than a transceiver
+                // group — no degraded replan can route around it; only
+                // elastic reformation (fault::elastic) resumes the job
+                if let Some((rank, at)) = inj.rank_death(e.step) {
+                    ctx.fail(RampError::RankDied { rank, step: at });
+                    return ItemStep::Done;
+                }
                 inj.jitter(e.step, e.chunk, e.item.key);
                 inj.straggle(e.step, e.chunk, e.item.key);
             }

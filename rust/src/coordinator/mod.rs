@@ -84,6 +84,15 @@ pub struct TrainConfig {
     /// re-execution instead of failing the step. `None` = no recovery;
     /// typed aborts propagate and the run fails.
     pub retry: Option<crate::fault::recovery::RecoveryPolicy>,
+    /// Elastic rank-loss policy (CLI `--elastic <spec>`): a worker whose
+    /// rank dies mid-collective (`rank-at=R:S`) is dropped from the
+    /// membership, the collective reforms over the survivors and
+    /// training continues at N−1 — gradients averaged over the *live*
+    /// worker count, the dead worker stopped and excluded from every
+    /// subsequent step. `None` = rank death fails the run. Arming this
+    /// implies a recovery loop (a default [`crate::fault::recovery::
+    /// RecoveryPolicy`] when no `--retry` is given).
+    pub elastic: Option<crate::fault::elastic::ElasticPolicy>,
 }
 
 impl TrainConfig {
@@ -117,6 +126,7 @@ impl Default for TrainConfig {
             max_tenants: 0,
             faults: None,
             retry: None,
+            elastic: None,
         }
     }
 }
@@ -134,6 +144,9 @@ pub struct StepStat {
     /// Recovery retries this iteration absorbed (0 on fault-free steps
     /// or when no `--retry` policy is armed).
     pub retries: u64,
+    /// Workers still in the membership when this step's gradients were
+    /// averaged (== `n_workers` until a rank dies under `--elastic`).
+    pub live_workers: usize,
 }
 
 /// Full training run result.
@@ -151,6 +164,12 @@ pub struct TrainReport {
     /// Aggregate recovery accounting across every training iteration
     /// (all-zero unless a `--retry` policy was armed and faults fired).
     pub recovery: crate::fault::recovery::RecoveryStats,
+    /// Final membership epoch: 0 = the full-N membership survived the
+    /// whole run, +1 per rank lost to an elastic reformation.
+    pub membership_epoch: u64,
+    /// Workers lost to rank death, in death order (empty without
+    /// `--elastic` faults).
+    pub dead_workers: Vec<usize>,
 }
 
 impl TrainReport {
@@ -295,6 +314,9 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     if let Some(plan) = &cfg.faults {
         engine = engine.with_faults(plan.clone());
     }
+    if let Some(policy) = cfg.elastic {
+        engine = engine.with_elastic(policy);
+    }
     // flag wins over env so a test harness can pin the policy; unset
     // both and the loop below is the plain (non-recovering) path
     let retry_policy = match &cfg.retry {
@@ -306,6 +328,12 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             ),
             None => None,
         },
+    };
+    // an elastic policy needs the supervisory loop to absorb the death —
+    // arm the default recovery policy when no --retry was given
+    let retry_policy = match (retry_policy, cfg.elastic) {
+        (None, Some(_)) => Some(Default::default()),
+        (p, _) => p,
     };
     let rt = Runtime::open(&cfg.artifacts)?;
     let n_params = rt.manifest.get_usize(&format!("model.{}.n_params", cfg.model))?;
@@ -333,7 +361,11 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     let mut total_compute = 0.0;
     let mut total_comm = 0.0;
     let mut recovery = crate::fault::recovery::RecoveryStats::default();
-    let inv_n = 1.0 / cfg.n_workers as f32;
+    // elastic membership: a worker whose rank dies is stopped and
+    // excluded from every subsequent scatter/gather/update/checksum;
+    // gradient averages are taken over the live count (drop semantics)
+    let mut live = vec![true; cfg.n_workers];
+    let mut dead_workers: Vec<usize> = Vec::new();
 
     // one arena for the whole run: the gradient all-reduce reads/writes
     // the same double-buffered slab every iteration instead of rebuilding
@@ -342,31 +374,38 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     let mut arena = engine.gradient_arena(n_params);
 
     for step in 0..cfg.steps {
-        // scatter distinct data shards
-        for w in &workers {
+        // scatter distinct data shards to the live membership
+        for (r, w) in workers.iter().enumerate() {
+            if !live[r] {
+                continue;
+            }
             let (x, y) = corpus.next_batch();
             w.cmd.send(Cmd::Step { x, y }).map_err(|_| anyhow!("worker died"))?;
         }
         // gather gradients straight into the arena's rank regions; keep
         // the worker-owned vectors to carry the averaged result back
         // without any leader-side allocation
-        let mut grad_store: Vec<Vec<f32>> = Vec::with_capacity(cfg.n_workers);
+        let mut grad_store: Vec<(usize, Vec<f32>)> = Vec::with_capacity(cfg.n_workers);
         let mut loss_sum = 0.0f32;
         let mut compute_s: f64 = 0.0;
         for (r, w) in workers.iter().enumerate() {
+            if !live[r] {
+                continue;
+            }
             match w.resp.recv() {
                 Ok(Resp::Grads { grads, loss, elapsed }) => {
                     if grads.len() != n_params {
                         bail!("gradient length {} != {}", grads.len(), n_params);
                     }
                     arena.load_padded(r, &grads, grad_target)?;
-                    grad_store.push(grads);
+                    grad_store.push((r, grads));
                     loss_sum += loss;
                     compute_s = compute_s.max(elapsed);
                 }
                 _ => bail!("unexpected worker response"),
             }
         }
+        let pre_reduce_live = grad_store.len();
 
         // the paper's system contribution: gradient all-reduce over the
         // optical fabric — real bytes, transcoded, contention-verified;
@@ -392,14 +431,47 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         // network side of the compute/network decomposition
         total_comm += run.completion_time() + step_backoff_s;
 
-        // distribute reduced (averaged) gradients; every worker updates
-        for (r, (w, mut grads)) in workers.iter().zip(grad_store).enumerate() {
-            for (g, &v) in grads.iter_mut().zip(arena.front(r)) {
-                *g = v * inv_n;
+        // elastic membership change: a rank that died during the reduce
+        // is stopped and leaves the job; the reformed result already
+        // covers the survivors (its arena region is emptied)
+        let mut new_deaths = 0usize;
+        for &d in engine.dead_ranks() {
+            if live[d] {
+                live[d] = false;
+                new_deaths += 1;
+                dead_workers.push(d);
+                let _ = workers[d].cmd.send(Cmd::Stop);
             }
-            w.cmd.send(Cmd::Update { grads }).map_err(|_| anyhow!("worker died"))?;
         }
-        for w in &workers {
+        let live_count = pre_reduce_live - new_deaths;
+        // drop semantics exclude the dying rank's fresh gradient from
+        // the sum; restore-from re-contributed it, so it still counts
+        // toward this step's average
+        let contributors = if new_deaths > 0
+            && cfg
+                .elastic
+                .map_or(false, |p| p.restores_for(crate::collectives::MpiOp::AllReduce))
+        {
+            pre_reduce_live
+        } else {
+            live_count
+        };
+        let inv_live = 1.0 / contributors.max(1) as f32;
+
+        // distribute reduced (averaged) gradients; every survivor updates
+        for (r, mut grads) in grad_store {
+            if !live[r] {
+                continue; // died during the reduce
+            }
+            for (g, &v) in grads.iter_mut().zip(arena.front(r)) {
+                *g = v * inv_live;
+            }
+            workers[r].cmd.send(Cmd::Update { grads }).map_err(|_| anyhow!("worker died"))?;
+        }
+        for (r, w) in workers.iter().enumerate() {
+            if !live[r] {
+                continue;
+            }
             match w.resp.recv() {
                 Ok(Resp::Updated) => {}
                 _ => bail!("update failed"),
@@ -410,18 +482,23 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         if step % cfg.log_every == 0 || step + 1 == cfg.steps {
             stats.push(StepStat {
                 step,
-                loss: loss_sum * inv_n,
+                loss: loss_sum / pre_reduce_live.max(1) as f32,
                 compute_s,
                 comm_virtual_s: run.completion_time() + step_backoff_s,
                 wire_bytes: run.report.wire_bytes,
                 retries: step_retries,
+                live_workers: live_count,
             });
         }
     }
 
     // DP invariant: replicated parameters must agree bit-for-bit-ish
+    // across the surviving membership (dead workers left the job)
     let mut checksums = Vec::new();
-    for w in &workers {
+    for (r, w) in workers.iter().enumerate() {
+        if !live[r] {
+            continue;
+        }
         w.cmd.send(Cmd::Checksum).map_err(|_| anyhow!("worker died"))?;
         match w.resp.recv() {
             Ok(Resp::Checksum(c)) => checksums.push(c),
@@ -435,8 +512,10 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         }
     }
 
-    for w in &workers {
-        let _ = w.cmd.send(Cmd::Stop);
+    for (r, w) in workers.iter().enumerate() {
+        if live[r] {
+            let _ = w.cmd.send(Cmd::Stop);
+        }
     }
     for w in workers {
         w.join.join().map_err(|_| anyhow!("worker panicked"))??;
@@ -451,6 +530,8 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         total_comm_virtual_s: total_comm,
         baseline_comm_virtual_s: baseline_per_step * cfg.steps as f64,
         recovery,
+        membership_epoch: engine.membership_epoch(),
+        dead_workers,
     })
 }
 

@@ -16,6 +16,7 @@ use crate::collectives::plan::CollectivePlan;
 use crate::collectives::pool::{PoolSel, WorkerPool};
 use crate::collectives::ramp_x::{padded_len, RampX};
 use crate::collectives::MpiOp;
+use crate::fault::elastic::{ElasticExec, ElasticPolicy, Reformation};
 use crate::fault::recovery::{
     chunk_step_bytes, AbortSnapshot, ErrorClass, RecoveryPolicy, RecoveryProbe, RecoveryStats,
 };
@@ -77,6 +78,18 @@ pub struct RampEngine {
     /// groups mark the fabric degraded, and every schedule is replanned
     /// onto the surviving groups before the referee executes it.
     faults: Option<(FaultPlan, Arc<FaultInjector>)>,
+    /// Elastic rank-loss policy (`--elastic <spec>`): when armed, a
+    /// mid-collective [`RampError::RankDied`] triggers subgroup
+    /// reformation over the survivors (remap → reconcile → replan →
+    /// resume) instead of failing the run. `None` = rank death is fatal.
+    elastic: Option<ElasticPolicy>,
+    /// Ranks lost so far, in death order (original indexing). Non-empty
+    /// means the engine is running reformed: every collective routes
+    /// through the elastic data plane at the surviving membership.
+    dead_ranks: Vec<usize>,
+    /// Membership epoch: 0 until the first reformation, +1 per rank
+    /// lost. Recorded by the coordinator's `TrainReport`.
+    membership_epoch: u64,
 }
 
 impl RampEngine {
@@ -90,7 +103,34 @@ impl RampEngine {
             pool: PoolSel::default(),
             lane_driver: LaneDriver::default(),
             faults: None,
+            elastic: None,
+            dead_ranks: Vec::new(),
+            membership_epoch: 0,
         }
+    }
+
+    /// Engine with an elastic rank-loss policy: `RankDied` aborts become
+    /// retryable-with-reformation under the recovery loop, and once a
+    /// rank is lost the engine keeps executing at the reformed
+    /// membership. See [`crate::fault::elastic`] for the protocol.
+    pub fn with_elastic(mut self, policy: ElasticPolicy) -> Self {
+        self.elastic = Some(policy);
+        self
+    }
+
+    /// The armed elastic policy, if any.
+    pub fn elastic_policy(&self) -> Option<ElasticPolicy> {
+        self.elastic
+    }
+
+    /// Ranks lost so far (original indexing, death order).
+    pub fn dead_ranks(&self) -> &[usize] {
+        &self.dead_ranks
+    }
+
+    /// Current membership epoch (0 = the original full-N membership).
+    pub fn membership_epoch(&self) -> u64 {
+        self.membership_epoch
     }
 
     /// Engine under a seeded fault plan: execution-layer faults
@@ -281,6 +321,92 @@ impl RampEngine {
         }
     }
 
+    /// One reformed collective over the survivors: the elastic
+    /// remap → reconcile → replan → resume pass (see
+    /// [`crate::fault::elastic`]). Called by the supervisory loop both
+    /// to absorb a fresh [`RampError::RankDied`] abort
+    /// (`aborted = Some(backoff)`, where the armed redundancy policy may
+    /// re-contribute the dead rank's input from the pre-attempt backup)
+    /// and in steady state once the membership has shrunk
+    /// (`aborted = None`, where the dead rank produces no fresh input so
+    /// reconciliation is always `drop`).
+    ///
+    /// Results are written back under the **original** rank indexing —
+    /// dead regions emptied, survivor regions holding the reformed
+    /// output — so callers (coordinator, CLI) keep addressing workers by
+    /// their stable identities. The reformed plan carries the survivors'
+    /// physical [`crate::topology::ramp::NodeCoord`]s but is not pushed
+    /// through the N-node transcoder/fabric referee (the subnet formulas
+    /// assume the full decomposition); it is accounted at plan level and
+    /// priced by `CollectiveEstimator::completion_time_elastic`.
+    fn execute_elastic(
+        &mut self,
+        op: MpiOp,
+        arena: &mut BufferArena,
+        backup: &[Vec<f32>],
+        aborted: Option<f64>,
+        stats: &mut RecoveryStats,
+    ) -> Result<CollectiveRun> {
+        // Drain any further armed deaths first: the reformed group runs
+        // the analytic data plane (no lane executor ticks steps), so a
+        // pending `rank-at=R:S` collapses to "R is dead before the
+        // collective starts" and joins this reformation.
+        let inj = self.faults.as_ref().map(|(_, i)| Arc::clone(i));
+        if let Some(inj) = inj {
+            while let Some((rank, _)) = inj.rank_death(usize::MAX) {
+                if rank < self.n_ranks() && !self.dead_ranks.contains(&rank) {
+                    self.dead_ranks.push(rank);
+                    self.membership_epoch += 1;
+                    stats.reformations += 1;
+                    stats.dead_ranks.push(rank);
+                }
+            }
+        }
+        // The redundancy policy only applies while absorbing the abort
+        // whose death it covers: the pre-attempt backup still holds the
+        // dead rank's fresh input. Steady-state reformed collectives
+        // have no dead input to re-contribute.
+        let policy = if aborted.is_some() {
+            self.elastic.unwrap_or_default()
+        } else {
+            ElasticPolicy::Drop
+        };
+        let reform = Reformation::new(self.n_ranks(), &self.dead_ranks, policy)?;
+        let op2 = reform.group.remap_op(op)?;
+        let (mut bufs, reconciled) = reform.rebased_inputs(op, backup)?;
+        stats.reconciled_bytes += reconciled;
+        let plan = ElasticExec::new(&self.p, &reform.group).run(op2, &mut bufs)?;
+        for &d in &reform.group.dead {
+            arena.set_len(d, 0);
+        }
+        for (i, &old) in reform.group.survivors.iter().enumerate() {
+            arena.set_len(old, bufs[i].len());
+            arena.front_mut(old)[..bufs[i].len()].copy_from_slice(&bufs[i]);
+        }
+        let m_bytes = backup.iter().map(|b| (b.len() * 4) as u64).max().unwrap_or(0);
+        let overhead = crate::estimator::collective_time::RecoveryOverhead {
+            retries: aborted.is_some() as u32,
+            resume_fraction: 0.0,
+            backoff_virtual_s: aborted.unwrap_or(0.0),
+        };
+        let time = crate::estimator::collective_time::CollectiveEstimator::ramp(&self.p)
+            .completion_time_elastic(
+                op2,
+                m_bytes,
+                self.n_ranks(),
+                reform.group.dead.len(),
+                &overhead,
+            )
+            .total();
+        let report = FabricReport {
+            wire_bytes: plan.total_wire_bytes(),
+            transmissions: plan.n_transfers() as u64,
+            completion_time: time,
+            ..FabricReport::default()
+        };
+        Ok(CollectiveRun { plan, schedule: Schedule::default(), report })
+    }
+
     /// Supervised execution: [`Self::execute_arena`] wrapped in the
     /// recovery loop of `policy`. A retryable typed abort ([`RampError::
     /// StalledEpoch`], contained [`RampError::WorkerPanic`], mid-flight
@@ -303,6 +429,15 @@ impl RampEngine {
     ) -> Result<(CollectiveRun, RecoveryStats)> {
         let backup = arena.copy_out();
         let mut stats = RecoveryStats::default();
+        // Reformed steady state: once a rank has died, every subsequent
+        // collective routes through the elastic data plane at the
+        // surviving membership (no lane executor to abort, no retry
+        // loop needed — errors out of the reformed plan are structural
+        // and typed, e.g. all further ranks armed dead → exhaustion).
+        if !self.dead_ranks.is_empty() {
+            let run = self.execute_elastic(op, arena, &backup, None, &mut stats)?;
+            return Ok((run, stats));
+        }
         let mut resume: Option<Vec<bool>> = None;
         // aborted attempts' snapshots: their wasted (sent-then-re-sent)
         // bytes are priced against the successful attempt's plan, which
@@ -344,6 +479,31 @@ impl RampEngine {
                     return Ok((run, stats));
                 }
                 Err(err) => {
+                    // A whole-rank death cannot be retried in place —
+                    // the membership itself is wrong. With an elastic
+                    // policy armed (and budget left) the group reforms
+                    // over the survivors; otherwise the typed death
+                    // surfaces unchanged.
+                    if let Some(RampError::RankDied { rank, .. }) =
+                        err.downcast_ref::<RampError>()
+                    {
+                        let rank = *rank;
+                        if self.elastic.is_none() || attempt >= policy.max_retries {
+                            return Err(err);
+                        }
+                        stats.retries += 1;
+                        let backoff = policy.backoff_s(attempt);
+                        stats.backoff_virtual_s += backoff;
+                        if !self.dead_ranks.contains(&rank) {
+                            self.dead_ranks.push(rank);
+                            self.membership_epoch += 1;
+                            stats.reformations += 1;
+                            stats.dead_ranks.push(rank);
+                        }
+                        let run =
+                            self.execute_elastic(op, arena, &backup, Some(backoff), &mut stats)?;
+                        return Ok((run, stats));
+                    }
                     let fatal = RecoveryPolicy::classify(&err) == ErrorClass::Fatal;
                     if fatal || attempt >= policy.max_retries {
                         return Err(err);
@@ -816,6 +976,211 @@ mod tests {
             assert_eq!(fabric_for_workers(n).unwrap().n_nodes(), n);
         }
         assert!(fabric_for_workers(5).is_err());
+    }
+
+    /// Integer-valued inputs keep every reduction exact in f32, so the
+    /// engine's reformed results compare bitwise against the anchors.
+    fn int_inputs(n: usize, elems: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut r = Xoshiro256::seed_from(seed);
+        (0..n)
+            .map(|_| (0..elems).map(|_| (r.next_below(100) as f32) + 1.0).collect())
+            .collect()
+    }
+
+    /// Direct elastic anchor: the same reformation pass the engine runs
+    /// (remap → reconcile → replan), mapped back to the original rank
+    /// indexing with the dead regions empty.
+    fn elastic_anchor(
+        p: &RampParams,
+        n: usize,
+        dead: &[usize],
+        policy: ElasticPolicy,
+        op: MpiOp,
+        inputs: &[Vec<f32>],
+    ) -> Vec<Vec<f32>> {
+        let reform = Reformation::new(n, dead, policy).unwrap();
+        let op2 = reform.group.remap_op(op).unwrap();
+        let (mut bufs, _) = reform.rebased_inputs(op, inputs).unwrap();
+        ElasticExec::new(p, &reform.group).run(op2, &mut bufs).unwrap();
+        let mut out = vec![Vec::new(); n];
+        for (i, &old) in reform.group.survivors.iter().enumerate() {
+            out[old] = std::mem::take(&mut bufs[i]);
+        }
+        out
+    }
+
+    fn elastic_engine(p: &RampParams, rank_at: Vec<(usize, usize)>) -> RampEngine {
+        let mut engine = RampEngine::new(p.clone())
+            .with_pipeline(Pipeline::cross(2))
+            .with_faults(FaultPlan {
+                seed: 13,
+                rank_at,
+                watchdog_ms: 400,
+                ..FaultPlan::default()
+            })
+            .with_elastic(ElasticPolicy::Drop);
+        engine.pool = PoolSel::Forced(Arc::new(WorkerPool::new(2)));
+        engine
+    }
+
+    /// Tentpole: a rank armed to die mid-schedule aborts the attempt
+    /// typed, the supervisory loop reforms the group over the 15
+    /// survivors and the reformed results match the direct elastic
+    /// anchor bitwise, with wire bytes on the reformed closed forms.
+    #[test]
+    fn rank_death_reforms_lane_ops_to_the_reformed_oracle() {
+        let p = fabric_for_workers(16).unwrap();
+        let dead = 5usize;
+        for op in [
+            MpiOp::ReduceScatter,
+            MpiOp::AllGather,
+            MpiOp::AllReduce,
+            MpiOp::AllToAll,
+            MpiOp::Scatter { root: 3 },
+            MpiOp::Gather { root: 3 },
+            MpiOp::Reduce { root: 3 },
+        ] {
+            let elems = match op {
+                MpiOp::AllGather | MpiOp::Gather { .. } => 4,
+                _ => 240, // divisible by both N=16 and the reformed 15
+            };
+            let inputs = int_inputs(16, elems, 61);
+            let mut engine = elastic_engine(&p, vec![(dead, 0)]);
+            let mut bufs = inputs.clone();
+            let (run, stats) =
+                engine.execute_with_recovery(op, &mut bufs, &Default::default()).unwrap();
+            assert_eq!(stats.dead_ranks, vec![dead], "{}", op.name());
+            assert_eq!(stats.reformations, 1, "{}", op.name());
+            assert_eq!(stats.retries, 1, "{}", op.name());
+            assert_eq!(engine.dead_ranks(), &[dead], "{}", op.name());
+            assert_eq!(engine.membership_epoch(), 1, "{}", op.name());
+            let anchor = elastic_anchor(&p, 16, &[dead], ElasticPolicy::Drop, op, &inputs);
+            assert_eq!(bufs, anchor, "{} diverged from the reformed oracle", op.name());
+            // executed wire bytes sit exactly on the closed forms at 15
+            let m_bytes = (elems * 4) as u64;
+            assert_eq!(
+                run.report.wire_bytes,
+                crate::fault::elastic::elastic_wire_bytes(&p, op, m_bytes, 15),
+                "{} off the reformed closed form",
+                op.name()
+            );
+            assert!(run.completion_time() > 0.0, "{}", op.name());
+        }
+    }
+
+    /// Once reformed, every subsequent collective — including broadcast
+    /// and barrier, which never tick the lane executor — routes through
+    /// the elastic data plane at the surviving membership, without
+    /// counting new reformations.
+    #[test]
+    fn reformed_steady_state_routes_every_op_elastically() {
+        let p = fabric_for_workers(16).unwrap();
+        let dead = 11usize;
+        let mut engine = elastic_engine(&p, vec![(dead, 0)]);
+        let mut first = int_inputs(16, 240, 67);
+        engine
+            .execute_with_recovery(MpiOp::AllReduce, &mut first, &Default::default())
+            .unwrap();
+        assert_eq!(engine.dead_ranks(), &[dead]);
+        for op in MpiOp::all() {
+            let elems = match op {
+                MpiOp::AllGather | MpiOp::Gather { .. } => 4,
+                MpiOp::Broadcast { .. } => 17,
+                _ => 240,
+            };
+            let inputs = int_inputs(16, elems, 71);
+            let mut bufs = inputs.clone();
+            let (run, stats) =
+                engine.execute_with_recovery(op, &mut bufs, &Default::default()).unwrap();
+            assert_eq!(stats.reformations, 0, "{}: steady state reforms nothing", op.name());
+            assert_eq!(stats.retries, 0, "{}", op.name());
+            let anchor = elastic_anchor(&p, 16, &[dead], ElasticPolicy::Drop, op, &inputs);
+            assert_eq!(bufs, anchor, "{} diverged at steady state", op.name());
+            assert!(run.report.wire_bytes > 0, "{}", op.name());
+            assert!(run.completion_time() > 0.0, "{}", op.name());
+        }
+        assert_eq!(engine.membership_epoch(), 1, "steady state must not advance the epoch");
+    }
+
+    /// Without `--elastic` a rank death is final: the typed error
+    /// surfaces unchanged even with retry budget left.
+    #[test]
+    fn rank_death_without_elastic_policy_surfaces_typed() {
+        let p = fabric_for_workers(16).unwrap();
+        let mut engine = RampEngine::new(p)
+            .with_pipeline(Pipeline::cross(2))
+            .with_faults(FaultPlan {
+                seed: 17,
+                rank_at: vec![(2, 0)],
+                watchdog_ms: 400,
+                ..FaultPlan::default()
+            });
+        engine.pool = PoolSel::Forced(Arc::new(WorkerPool::new(2)));
+        let mut bufs = int_inputs(16, 240, 79);
+        let err = engine
+            .execute_with_recovery(MpiOp::AllReduce, &mut bufs, &Default::default())
+            .unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<RampError>(),
+                Some(RampError::RankDied { rank: 2, .. })
+            ),
+            "expected a typed rank death, got {err:#}"
+        );
+    }
+
+    /// `restore-from`: the dead rank's input is re-contributed from the
+    /// peer-held replica, so the reformed all-reduce equals the
+    /// fault-free full-N run bitwise on the survivors.
+    #[test]
+    fn restore_from_engine_reduction_matches_the_full_n_run() {
+        let p = fabric_for_workers(16).unwrap();
+        let dead = 5usize;
+        let inputs = int_inputs(16, 240, 73);
+        let full = oracle::all_reduce(&inputs);
+        let mut engine =
+            elastic_engine(&p, vec![(dead, 0)]).with_elastic(ElasticPolicy::RestoreFrom);
+        let mut bufs = inputs.clone();
+        let (_, stats) =
+            engine.execute_with_recovery(MpiOp::AllReduce, &mut bufs, &Default::default()).unwrap();
+        assert_eq!(stats.reconciled_bytes, 240 * 4, "one replica shard re-contributed");
+        for (r, b) in bufs.iter().enumerate() {
+            if r == dead {
+                assert!(b.is_empty(), "the dead region must be emptied");
+            } else {
+                assert_eq!(b, &full[r], "survivor {r} must hold the full-N sum");
+            }
+        }
+    }
+
+    /// A dead root is unrecoverable under every policy, and losing all
+    /// but one rank exhausts the elastic budget — both surface typed.
+    #[test]
+    fn dead_root_and_rank_exhaustion_surface_typed() {
+        let p = fabric_for_workers(16).unwrap();
+        let mut engine = elastic_engine(&p, vec![(3, 0)]);
+        let mut bufs = int_inputs(16, 4, 83);
+        let err = engine
+            .execute_with_recovery(MpiOp::Gather { root: 3 }, &mut bufs, &Default::default())
+            .unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<RampError>(), Some(RampError::RankDied { rank: 3, .. })),
+            "a dead root cannot be re-rooted, got {err:#}"
+        );
+        // 15 of 16 ranks armed dead: the first death reforms, the drain
+        // absorbs the rest, and one survivor is no collective
+        let mut engine = elastic_engine(&p, (0..15).map(|r| (r, 0)).collect());
+        let mut bufs = int_inputs(16, 240, 89);
+        let err = engine
+            .execute_with_recovery(MpiOp::AllReduce, &mut bufs, &Default::default())
+            .unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<RampError>(),
+                Some(RampError::NoSurvivingRanks { survivors: 1 })
+            ),
+            "expected typed elastic exhaustion, got {err:#}"
+        );
     }
 
     #[test]

@@ -434,6 +434,38 @@ impl CollectiveEstimator {
         }
     }
 
+    /// Completion time of an **elastically reformed** collective — the
+    /// analytic mirror of the engine's rank-death path
+    /// (`RampEngine::execute_arena_with_recovery` with an elastic policy
+    /// armed). `dead` ranks were lost, so the collective that actually
+    /// completes runs over `n − dead` survivors; each of the
+    /// `overhead.retries` attempts aborted by a mid-collective death
+    /// replays `1 − resume_fraction` of the **full-N anchor** (the
+    /// aborted attempt was still running at the original membership),
+    /// and the policy's virtual backoff lands on the latency side. With
+    /// `dead = 0` and an all-zero overhead this reproduces
+    /// [`Self::completion_time`] exactly; `dead` is clamped so at least
+    /// 2 survivors remain (fewer ranks is no collective — the engine
+    /// surfaces a typed error there instead of pricing).
+    pub fn completion_time_elastic(
+        &self,
+        op: MpiOp,
+        m: u64,
+        n: usize,
+        dead: usize,
+        overhead: &RecoveryOverhead,
+    ) -> CollectiveTime {
+        let dead = dead.min(n.saturating_sub(2));
+        let reformed = self.completion_time(op, m, n - dead);
+        let anchor = self.completion_time(op, m, n);
+        let replay = overhead.replay_factor();
+        CollectiveTime {
+            h2h: reformed.h2h + anchor.h2h * replay + overhead.backoff_virtual_s,
+            h2t: reformed.h2t + anchor.h2t * replay,
+            compute: reformed.compute + anchor.compute * replay,
+        }
+    }
+
     /// Completion time with **cross-step chunk lanes**: the whole
     /// lane-aligned phase sequence runs as one software pipeline over
     /// `K` fraction chunks, so the per-step chunk drain of intra-step
@@ -1019,6 +1051,49 @@ mod tests {
         let ov2 = RecoveryOverhead::from_policy(&policy, 2, 0.0);
         assert_eq!(ov1.backoff_virtual_s, policy.backoff_s(0));
         assert_eq!(ov2.backoff_virtual_s, policy.backoff_s(0) + policy.backoff_s(1));
+    }
+
+    #[test]
+    fn elastic_pricing_is_anchored_and_accounts_the_aborted_attempt() {
+        use crate::fault::recovery::RecoveryPolicy;
+        let p = RampParams::fig8_example();
+        let est = CollectiveEstimator::ramp(&p);
+        let n = p.n_nodes();
+        for op in MpiOp::all() {
+            // no death, no overhead: exactly the fault-free figure
+            let zero = RecoveryOverhead::default();
+            assert_eq!(
+                est.completion_time_elastic(op, GB, n, 0, &zero),
+                est.completion_time(op, GB, n),
+                "{}",
+                op.name()
+            );
+            // one dead rank, no overhead: exactly the (N−1)-rank figure
+            // (the reformed collective is all that runs)
+            assert_eq!(
+                est.completion_time_elastic(op, GB, n, 1, &zero),
+                est.completion_time(op, GB, n - 1),
+                "{}",
+                op.name()
+            );
+            // the aborted full-N attempt is priced on top of the
+            // reformed run, never below it, and the backoff is latency
+            let policy = RecoveryPolicy::default();
+            let ov = RecoveryOverhead::from_policy(&policy, 1, 0.0);
+            let t = est.completion_time_elastic(op, GB, n, 1, &ov);
+            let reformed = est.completion_time(op, GB, n - 1);
+            let anchor = est.completion_time(op, GB, n);
+            assert!(
+                (t.h2t - reformed.h2t - anchor.h2t).abs() < 1e-12,
+                "{}: one aborted attempt replays the full-N wire",
+                op.name()
+            );
+            assert!(t.h2h >= reformed.h2h + ov.backoff_virtual_s - 1e-12);
+        }
+        // the clamp: pricing never divides below 2 survivors
+        let a = est.completion_time_elastic(MpiOp::AllReduce, GB, 8, 7, &RecoveryOverhead::default());
+        let b = est.completion_time_elastic(MpiOp::AllReduce, GB, 8, 6, &RecoveryOverhead::default());
+        assert_eq!(a, b);
     }
 
     #[test]

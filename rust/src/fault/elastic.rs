@@ -1,0 +1,965 @@
+//! Elastic rank loss: subgroup reformation over the N−1 survivors.
+//!
+//! The fault layer through PR 8 survives *component* faults on a fixed
+//! rank set — stragglers, lost publishes, panicking lanes, dead
+//! transceiver groups — by repairing or replanning around them. This
+//! module handles the next tier, the dominant fault mode at the paper's
+//! 65,536-node scale: a whole rank dies mid-collective
+//! ([`super::RampError::RankDied`], armed by the injector spec
+//! `rank-at=R:S`) and the job keeps going at N−1.
+//!
+//! The reformation protocol is **remap → reconcile → replan → resume**:
+//!
+//! 1. **Remap** — [`ElasticGroup`] renumbers the survivors densely
+//!    (`0..N−1`, original ascending order) and recomputes the subgroup
+//!    decomposition for the new size: an *exact* ≤ 4-factor balanced
+//!    factorization ([`elastic_step_sizes`]). The RAMP fabric's own
+//!    decomposition requires `N = x²·J·(Λ/x)` exactly, which N−1 never
+//!    satisfies, so the reformed group runs as a *job* placed on the
+//!    same physical fabric: every transfer in the reformed plan carries
+//!    the survivor's original [`NodeCoord`].
+//! 2. **Reconcile** — [`Reformation::rebased_inputs`] rebases the
+//!    survivors' arena regions onto the new indexing from the
+//!    supervisory loop's pre-attempt backup (mid-collective partial
+//!    aggregation on the dead rank is unrecoverable, so the attempt
+//!    restarts from inputs — the same backup-restore discipline every
+//!    other retry uses). The dead rank's *input* shard is handled by the
+//!    redundancy policy: [`ElasticPolicy::Drop`] excludes it (the
+//!    DDL-correct default — the gradient average is taken over the
+//!    survivors), [`ElasticPolicy::RestoreFrom`] re-contributes it from
+//!    a peer-held replica (modeled as the backup copy held by the next
+//!    surviving rank) by pre-merging it into that peer's input, so
+//!    reduction results equal the full-N run.
+//! 3. **Replan** — [`ElasticExec`] regenerates the collective plan for
+//!    the reformed group and executes it: a generic mixed-radix
+//!    subgroup executor covering all nine MPI ops, emitting a
+//!    [`CollectivePlan`] whose executed wire bytes match the closed
+//!    forms at N−1 ([`elastic_phases`] — the Table-8 shape family
+//!    evaluated on the exact reformed factorization).
+//! 4. **Resume** — the engine's supervisory loop
+//!    (`RampEngine::execute_arena_with_recovery`) classifies `RankDied`
+//!    retryable-with-reformation, runs steps 1–3, writes the survivors'
+//!    results back under the *original* rank indexing (dead regions
+//!    emptied) and the training loop continues at N−1, recording the
+//!    membership epoch.
+//!
+//! Reformed plans are not pushed through the N-node transcoder/fabric
+//! referee (the `NodeCoord → subnet` formulas assume the full
+//! decomposition); they are priced analytically by
+//! `CollectiveEstimator::completion_time_elastic` and accounted at plan
+//! level, where the conservation tests hold them to the closed forms.
+
+use crate::collectives::plan::{CollectivePlan, PlanStep, Round, Transfer};
+use crate::collectives::subgroups::node_of_rank;
+use crate::collectives::MpiOp;
+use crate::topology::ramp::{NodeCoord, RampParams};
+use anyhow::{ensure, Result};
+
+/// Redundancy policy of the reconciliation pass: what happens to the
+/// dead rank's *input* shard when the group reforms.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ElasticPolicy {
+    /// The dead rank's contribution is dropped; results are the
+    /// (N−1)-rank collective over the survivors' inputs. For gradient
+    /// all-reduce this is the DDL-correct default — the training loop
+    /// averages over the *live* worker count.
+    #[default]
+    Drop,
+    /// The dead rank's input shard is re-contributed from a peer-held
+    /// replica (modeled as the pre-attempt backup held by the next
+    /// surviving rank): for the reduction family (reduce-scatter,
+    /// all-reduce, reduce, barrier) the replica is pre-merged into that
+    /// peer's input, so reduced results equal the fault-free full-N
+    /// run. Pure-movement ops (gather/scatter/all-to-all/…) have no
+    /// aggregation for a ghost member to rejoin — a dead rank cannot
+    /// occupy an output slot — so they degrade to `Drop` semantics.
+    RestoreFrom,
+}
+
+impl ElasticPolicy {
+    /// Parse the CLI `--elastic` spec. Bare `on` / `default` (and the
+    /// empty string) select `drop`. Unknown tokens are a typed
+    /// [`super::RampError::BadFaultSpec`].
+    pub fn from_spec(spec: &str) -> Result<Self> {
+        match spec.trim() {
+            "drop" | "on" | "default" | "" => Ok(Self::Drop),
+            "restore-from" => Ok(Self::RestoreFrom),
+            other => Err(super::bad_spec(
+                other,
+                "unknown elastic policy (expected `drop` or `restore-from`)",
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Drop => "drop",
+            Self::RestoreFrom => "restore-from",
+        }
+    }
+
+    /// Does this policy re-contribute the dead input for `op`? Only the
+    /// reduction family has an aggregate the replica can rejoin.
+    pub fn restores_for(&self, op: MpiOp) -> bool {
+        matches!(self, Self::RestoreFrom)
+            && matches!(
+                op,
+                MpiOp::ReduceScatter | MpiOp::AllReduce | MpiOp::Reduce { .. } | MpiOp::Barrier
+            )
+    }
+}
+
+/// Exact ≤ 4-factor balanced factorization of the reformed group size:
+/// the elastic analogue of the RAMP 4-step decomposition. Unlike
+/// `ops::job_step_sizes` (a *covering* factorization whose product may
+/// exceed `n` — fine for closed-form estimates, fatal for a data
+/// plane), the product here equals `n` exactly, so the executor moves
+/// real elements with no ghost slots. Primes are combined
+/// largest-into-smallest-bucket; a prime `n` yields one serialized
+/// step of size `n`.
+pub fn elastic_step_sizes(n: usize) -> Vec<usize> {
+    assert!(n >= 2, "a reformed group needs at least 2 ranks");
+    let mut rem = n;
+    let mut primes = Vec::new();
+    let mut d = 2usize;
+    while d * d <= rem {
+        while rem % d == 0 {
+            primes.push(d);
+            rem /= d;
+        }
+        d += 1;
+    }
+    if rem > 1 {
+        primes.push(rem);
+    }
+    primes.sort_unstable_by(|a, b| b.cmp(a));
+    let mut buckets = [1usize; 4];
+    for f in primes {
+        let i = (0..4).min_by_key(|&i| buckets[i]).unwrap();
+        buckets[i] *= f;
+    }
+    let mut sizes: Vec<usize> = buckets.into_iter().filter(|&b| b > 1).collect();
+    sizes.sort_unstable_by(|a, b| b.cmp(a));
+    sizes
+}
+
+/// The reformed membership: survivors renumbered densely, with the
+/// exact subgroup decomposition for the new size.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ElasticGroup {
+    /// Rank count before any death.
+    pub n_before: usize,
+    /// Original ranks lost, in death order.
+    pub dead: Vec<usize>,
+    /// Surviving original ranks, ascending — `survivors[i]` is new rank
+    /// `i`'s original identity (and physical fabric placement).
+    pub survivors: Vec<usize>,
+    /// Exact step sizes of the reformed decomposition
+    /// ([`elastic_step_sizes`] of `survivors.len()`).
+    pub sizes: Vec<usize>,
+}
+
+impl ElasticGroup {
+    /// Reform over `n_before` ranks minus `dead`. Errors when fewer
+    /// than 2 ranks survive (no collective exists to reform).
+    pub fn reform(n_before: usize, dead: &[usize]) -> Result<Self> {
+        let mut lost: Vec<usize> = dead.to_vec();
+        lost.sort_unstable();
+        lost.dedup();
+        ensure!(
+            lost.iter().all(|&r| r < n_before),
+            "dead rank out of range: {lost:?} on {n_before} ranks"
+        );
+        let survivors: Vec<usize> = (0..n_before).filter(|r| !lost.contains(r)).collect();
+        if survivors.len() < 2 {
+            return Err(super::RampError::NoSurvivingRanks { survivors: survivors.len() }.into());
+        }
+        let sizes = elastic_step_sizes(survivors.len());
+        Ok(Self { n_before, dead: dead.to_vec(), survivors, sizes })
+    }
+
+    /// Reformed rank count.
+    pub fn n(&self) -> usize {
+        self.survivors.len()
+    }
+
+    /// New (dense) rank of an original rank, `None` if it died.
+    pub fn new_rank_of(&self, old: usize) -> Option<usize> {
+        self.survivors.binary_search(&old).ok()
+    }
+
+    /// Remap a rooted op onto the new indexing. A dead root is
+    /// unrecoverable under every policy — the root's role (source of a
+    /// broadcast/scatter, destination of a gather/reduce) cannot be
+    /// filled by a replica of its *input* — so this surfaces the typed
+    /// death instead.
+    pub fn remap_op(&self, op: MpiOp) -> Result<MpiOp> {
+        let remap = |root: usize| -> Result<usize> {
+            self.new_rank_of(root).ok_or_else(|| {
+                anyhow::Error::new(super::RampError::RankDied { rank: root, step: 0 })
+                    .context("the root rank died; no reformation can re-root the collective")
+            })
+        };
+        Ok(match op {
+            MpiOp::Scatter { root } => MpiOp::Scatter { root: remap(root)? },
+            MpiOp::Gather { root } => MpiOp::Gather { root: remap(root)? },
+            MpiOp::Reduce { root } => MpiOp::Reduce { root: remap(root)? },
+            MpiOp::Broadcast { root } => MpiOp::Broadcast { root: remap(root)? },
+            other => other,
+        })
+    }
+
+    /// The replica holder for a dead rank under `restore-from`: the
+    /// next surviving rank (wrapping), in new-rank indexing.
+    pub fn replica_holder(&self, dead: usize) -> usize {
+        self.survivors
+            .iter()
+            .position(|&s| s > dead)
+            .unwrap_or(0)
+    }
+}
+
+/// One reformation episode: membership + redundancy policy. Produced by
+/// the engine's supervisory loop when a [`super::RampError::RankDied`]
+/// surfaces with an elastic policy armed.
+#[derive(Clone, Debug)]
+pub struct Reformation {
+    pub group: ElasticGroup,
+    pub policy: ElasticPolicy,
+}
+
+impl Reformation {
+    pub fn new(n_before: usize, dead: &[usize], policy: ElasticPolicy) -> Result<Self> {
+        Ok(Self { group: ElasticGroup::reform(n_before, dead)?, policy })
+    }
+
+    /// The reconciliation pass: rebase the N pre-attempt input regions
+    /// onto the reformed indexing. Returns the survivor-ordered inputs
+    /// and the bytes re-contributed from replicas (0 under `drop`).
+    pub fn rebased_inputs(&self, op: MpiOp, backup: &[Vec<f32>]) -> Result<(Vec<Vec<f32>>, u64)> {
+        ensure!(
+            backup.len() == self.group.n_before,
+            "backup holds {} regions, membership expects {}",
+            backup.len(),
+            self.group.n_before
+        );
+        let mut inputs: Vec<Vec<f32>> =
+            self.group.survivors.iter().map(|&r| backup[r].clone()).collect();
+        let mut reconciled = 0u64;
+        if self.policy.restores_for(op) {
+            for &d in &self.group.dead {
+                let holder = self.group.replica_holder(d);
+                let replica = &backup[d];
+                ensure!(
+                    inputs[holder].len() == replica.len(),
+                    "replica shard length {} does not match holder input {}",
+                    replica.len(),
+                    inputs[holder].len()
+                );
+                for (h, &v) in inputs[holder].iter_mut().zip(replica) {
+                    *h += v;
+                }
+                reconciled += (replica.len() * 4) as u64;
+            }
+        }
+        Ok((inputs, reconciled))
+    }
+}
+
+// ---- the reformed data plane ---------------------------------------------
+
+/// Generic mixed-radix subgroup executor for the reformed group: all
+/// nine MPI ops over an arbitrary rank count, on the exact
+/// [`elastic_step_sizes`] decomposition. Ranks are digit-major
+/// (most-significant digit first), so reduce-scatter leaves new rank
+/// `r` holding slice `r` of the global sum and all-gather produces the
+/// rank-ordered concatenation — matching `collectives::reference`
+/// element-for-element (bitwise on integer-valued inputs).
+pub struct ElasticExec<'a> {
+    p: &'a RampParams,
+    group: &'a ElasticGroup,
+}
+
+impl<'a> ElasticExec<'a> {
+    pub fn new(p: &'a RampParams, group: &'a ElasticGroup) -> Self {
+        Self { p, group }
+    }
+
+    fn n(&self) -> usize {
+        self.group.n()
+    }
+
+    /// Digit stride of step `i`: the rank distance between subgroup
+    /// neighbors along that digit.
+    fn stride(&self, i: usize) -> usize {
+        self.group.sizes[i + 1..].iter().product()
+    }
+
+    fn digit(&self, r: usize, i: usize) -> usize {
+        (r / self.stride(i)) % self.group.sizes[i]
+    }
+
+    /// Members of rank `r`'s step-`i` subgroup, in digit order.
+    fn members(&self, r: usize, i: usize) -> Vec<usize> {
+        let stride = self.stride(i);
+        let base = r - self.digit(r, i) * stride;
+        (0..self.group.sizes[i]).map(|d| base + d * stride).collect()
+    }
+
+    /// Physical fabric coordinate of a reformed rank.
+    fn coord(&self, new_rank: usize) -> NodeCoord {
+        node_of_rank(self.p, self.group.survivors[new_rank])
+    }
+
+    /// Wire-serialization rule for a subgroup of size `s`: the x
+    /// transceiver groups bound peer parallelism, exactly as in
+    /// `ops::phase_for_size` (pairwise is always one round).
+    fn serialized(&self, s: usize) -> bool {
+        s > 2 && s - 1 > self.p.x
+    }
+
+    /// Rounds of a step of size `s`.
+    fn step_rounds(&self, s: usize) -> usize {
+        if self.serialized(s) {
+            s - 1
+        } else {
+            1
+        }
+    }
+
+    /// Assemble a [`PlanStep`] from `(src, dst, bytes)` transfers at
+    /// step `i`, honoring the serialization rule: serialized subgroups
+    /// spread their pairwise exchanges over `s−1` offset rounds.
+    fn plan_step(
+        &self,
+        label: &str,
+        i: usize,
+        sends: &[(usize, usize, u64)],
+        reduce_sources: usize,
+        reduce_bytes: u64,
+    ) -> PlanStep {
+        let s = self.group.sizes[i];
+        let n_rounds = self.step_rounds(s);
+        let mut rounds = vec![Round::default(); n_rounds];
+        for &(src, dst, bytes) in sends {
+            let o = (self.digit(dst, i) + s - self.digit(src, i)) % s;
+            debug_assert!(o > 0, "self-send in the reformed plan");
+            let ri = if n_rounds > 1 { o - 1 } else { 0 };
+            rounds[ri].transfers.push(Transfer::unicast(self.coord(src), self.coord(dst), bytes));
+        }
+        PlanStep {
+            label: format!("elastic-{label} s{i} (size {s})"),
+            rounds,
+            reduce_sources,
+            reduce_bytes,
+            ..PlanStep::default()
+        }
+    }
+
+    /// Run `op` over the reformed group. `bufs` is new-rank indexed
+    /// (`n()` buffers); results land in place with per-op output shapes
+    /// matching `collectives::reference` at the reformed size.
+    pub fn run(&self, op: MpiOp, bufs: &mut Vec<Vec<f32>>) -> Result<CollectivePlan> {
+        let n = self.n();
+        ensure!(bufs.len() == n, "need {n} reformed buffers, got {}", bufs.len());
+        let mut plan = CollectivePlan::default();
+        match op {
+            MpiOp::ReduceScatter => {
+                let m = uniform_len(bufs)?;
+                ensure!(m % n == 0, "reformed reduce-scatter needs {n} | m, got m={m}");
+                self.rs_steps(bufs, &mut plan);
+            }
+            MpiOp::AllGather => {
+                uniform_len(bufs)?;
+                self.ag_steps(bufs, &mut plan);
+            }
+            MpiOp::AllReduce => {
+                let m = uniform_len(bufs)?;
+                let pad = m.div_ceil(n) * n;
+                for b in bufs.iter_mut() {
+                    b.resize(pad, 0.0);
+                }
+                self.rs_steps(bufs, &mut plan);
+                self.ag_steps(bufs, &mut plan);
+                for b in bufs.iter_mut() {
+                    b.truncate(m);
+                }
+            }
+            MpiOp::AllToAll => {
+                let m = uniform_len(bufs)?;
+                ensure!(m % n == 0, "reformed all-to-all needs {n} | m, got m={m}");
+                self.a2a_steps(bufs, &mut plan);
+            }
+            MpiOp::Scatter { root } => {
+                ensure!(root < n, "reformed root {root} out of range {n}");
+                let m = bufs[root].len();
+                ensure!(m % n == 0, "reformed scatter needs {n} | m, got m={m}");
+                self.scatter_steps(bufs, root, &mut plan);
+            }
+            MpiOp::Gather { root } => {
+                ensure!(root < n, "reformed root {root} out of range {n}");
+                uniform_len(bufs)?;
+                self.gather_steps(bufs, root, &mut plan);
+            }
+            MpiOp::Reduce { root } => {
+                ensure!(root < n, "reformed root {root} out of range {n}");
+                let m = uniform_len(bufs)?;
+                let pad = m.div_ceil(n) * n;
+                for b in bufs.iter_mut() {
+                    b.resize(pad, 0.0);
+                }
+                self.rs_steps(bufs, &mut plan);
+                self.gather_steps(bufs, root, &mut plan);
+                bufs[root].truncate(m);
+            }
+            MpiOp::Broadcast { root } => {
+                ensure!(root < n, "reformed root {root} out of range {n}");
+                let data = bufs[root].clone();
+                let bytes = (data.len() * 4) as u64;
+                let dsts: Vec<NodeCoord> =
+                    (0..n).filter(|&r| r != root).map(|r| self.coord(r)).collect();
+                for (r, b) in bufs.iter_mut().enumerate() {
+                    if r != root {
+                        *b = data.clone();
+                    }
+                }
+                // one SOA-gated multicast: a single optical transmission
+                // reaches every survivor (§6.1.5); the reformed group
+                // skips the Eq-1 pipelined tree — a latency refinement
+                // the elastic path does not need
+                let mut round = Round::default();
+                round.transfers.push(Transfer { src: self.coord(root), dsts, bytes });
+                plan.steps.push(PlanStep {
+                    label: "elastic-broadcast multicast".into(),
+                    rounds: vec![round],
+                    ..PlanStep::default()
+                });
+            }
+            MpiOp::Barrier => {
+                // 1-per-rank flag all-reduce over n elements: afterwards
+                // every survivor's buf[0] counts the reformed membership
+                let mut flags: Vec<Vec<f32>> = (0..n)
+                    .map(|_| {
+                        let mut v = vec![0.0f32; n];
+                        v[0] = 1.0;
+                        v
+                    })
+                    .collect();
+                self.rs_steps(&mut flags, &mut plan);
+                self.ag_steps(&mut flags, &mut plan);
+                for (r, b) in bufs.iter_mut().enumerate() {
+                    if !b.is_empty() {
+                        b[0] = flags[r][0];
+                    }
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Reduce-scatter steps, most-significant digit first: after step
+    /// `i` every rank keeps the 1/sᵢ part selected by its digit, summed
+    /// over its subgroup. Final state: rank `r` holds slice `r`.
+    fn rs_steps(&self, bufs: &mut [Vec<f32>], plan: &mut CollectivePlan) {
+        let n = self.n();
+        for i in 0..self.group.sizes.len() {
+            let s = self.group.sizes[i];
+            let cur = bufs[0].len();
+            let part = cur / s;
+            let mut next: Vec<Vec<f32>> = Vec::with_capacity(n);
+            let mut sends: Vec<(usize, usize, u64)> = Vec::new();
+            for r in 0..n {
+                let d = self.digit(r, i);
+                let lo = d * part;
+                let mut acc = vec![0.0f32; part];
+                for q in self.members(r, i) {
+                    for (a, &v) in acc.iter_mut().zip(&bufs[q][lo..lo + part]) {
+                        *a += v;
+                    }
+                    if q != r {
+                        sends.push((q, r, (part * 4) as u64));
+                    }
+                }
+                next.push(acc);
+            }
+            for (b, nb) in bufs.iter_mut().zip(next) {
+                *b = nb;
+            }
+            plan.steps.push(self.plan_step("rs", i, &sends, s, (part * 4) as u64));
+        }
+    }
+
+    /// All-gather steps, least-significant digit first: each step
+    /// concatenates subgroup buffers in digit order, growing contiguous
+    /// rank-ordered blocks until every rank holds the full concat.
+    fn ag_steps(&self, bufs: &mut [Vec<f32>], plan: &mut CollectivePlan) {
+        let n = self.n();
+        for i in (0..self.group.sizes.len()).rev() {
+            let cur = bufs[0].len();
+            let mut next: Vec<Vec<f32>> = Vec::with_capacity(n);
+            let mut sends: Vec<(usize, usize, u64)> = Vec::new();
+            for r in 0..n {
+                let mut out = Vec::with_capacity(cur * self.group.sizes[i]);
+                for q in self.members(r, i) {
+                    out.extend_from_slice(&bufs[q]);
+                    if q != r {
+                        sends.push((q, r, (cur * 4) as u64));
+                    }
+                }
+                next.push(out);
+            }
+            for (b, nb) in bufs.iter_mut().zip(next) {
+                *b = nb;
+            }
+            plan.steps.push(self.plan_step("ag", i, &sends, 0, 0));
+        }
+    }
+
+    /// All-to-all steps: destination-digit routing. At step `i` every
+    /// rank forwards the blocks whose destination digit `i` differs
+    /// from its own to the matching subgroup member; after all steps
+    /// each block sits on its destination, and rank `r`'s output is the
+    /// source-ordered concatenation.
+    fn a2a_steps(&self, bufs: &mut [Vec<f32>], plan: &mut CollectivePlan) {
+        let n = self.n();
+        let c = bufs[0].len() / n;
+        // (source, destination, payload) blocks held per rank
+        let mut held: Vec<Vec<(usize, usize, Vec<f32>)>> = bufs
+            .iter()
+            .enumerate()
+            .map(|(r, b)| (0..n).map(|d| (r, d, b[d * c..(d + 1) * c].to_vec())).collect())
+            .collect();
+        for i in 0..self.group.sizes.len() {
+            let mut next: Vec<Vec<(usize, usize, Vec<f32>)>> = vec![Vec::new(); n];
+            let mut sends: Vec<(usize, usize, u64)> = Vec::new();
+            let mut moved = vec![vec![0u64; n]; n];
+            for r in 0..n {
+                let stride = self.stride(i);
+                let base = r - self.digit(r, i) * stride;
+                for (src, dst, payload) in held[r].drain(..) {
+                    let target = base + self.digit(dst, i) * stride;
+                    if target != r {
+                        moved[r][target] += (payload.len() * 4) as u64;
+                    }
+                    next[target].push((src, dst, payload));
+                }
+            }
+            for (r, row) in moved.iter().enumerate() {
+                for (q, &bytes) in row.iter().enumerate() {
+                    if bytes > 0 {
+                        sends.push((r, q, bytes));
+                    }
+                }
+            }
+            held = next;
+            plan.steps.push(self.plan_step("a2a", i, &sends, 0, 0));
+        }
+        for (r, blocks) in held.iter_mut().enumerate() {
+            blocks.sort_unstable_by_key(|&(src, _, _)| src);
+            let mut out = Vec::with_capacity(n * c);
+            for (_, dst, payload) in blocks.iter() {
+                debug_assert_eq!(*dst, r, "a2a block landed on the wrong rank");
+                out.extend_from_slice(payload);
+            }
+            bufs[r] = out;
+        }
+    }
+
+    /// Scatter steps, most-significant digit first: the root's buffer
+    /// flows down the digit tree, each holder splitting its range among
+    /// its step-`i` subgroup. Every rank ends with its `m/n` slice.
+    fn scatter_steps(&self, bufs: &mut [Vec<f32>], root: usize, plan: &mut CollectivePlan) {
+        let n = self.n();
+        let data = bufs[root].clone();
+        let m = data.len();
+        let c = m / n;
+        // element range of `data` each holder is responsible for
+        let mut held: Vec<Option<(usize, usize)>> = vec![None; n];
+        held[root] = Some((0, m));
+        for i in 0..self.group.sizes.len() {
+            let stride = self.stride(i);
+            let sub = c * stride; // slice length after this step
+            let mut next: Vec<Option<(usize, usize)>> = vec![None; n];
+            let mut sends: Vec<(usize, usize, u64)> = Vec::new();
+            for h in 0..n {
+                let Some((lo, _hi)) = held[h] else { continue };
+                for (e, q) in self.members(h, i).into_iter().enumerate() {
+                    let qlo = lo + e * sub;
+                    next[q] = Some((qlo, qlo + sub));
+                    if q != h {
+                        sends.push((h, q, (sub * 4) as u64));
+                    }
+                }
+            }
+            held = next;
+            plan.steps.push(self.plan_step("scatter", i, &sends, 0, 0));
+        }
+        for (r, b) in bufs.iter_mut().enumerate() {
+            let (lo, hi) = held[r].expect("scatter tree must cover every rank");
+            debug_assert_eq!((lo, hi), (r * c, (r + 1) * c));
+            *b = data[lo..hi].to_vec();
+        }
+    }
+
+    /// Gather steps, least-significant digit first: contributions climb
+    /// the digit tree toward the root's digits; the root ends with the
+    /// rank-ordered concatenation, every other rank with an empty
+    /// buffer (mirroring `reference::gather`).
+    fn gather_steps(&self, bufs: &mut [Vec<f32>], root: usize, plan: &mut CollectivePlan) {
+        let n = self.n();
+        let mut cur: Vec<Vec<f32>> = bufs.to_vec();
+        let mut active = vec![true; n];
+        for i in (0..self.group.sizes.len()).rev() {
+            let mut sends: Vec<(usize, usize, u64)> = Vec::new();
+            let mut next: Vec<Vec<f32>> = vec![Vec::new(); n];
+            let mut still = vec![false; n];
+            for r in 0..n {
+                if !active[r] || self.digit(r, i) != self.digit(root, i) {
+                    continue;
+                }
+                // r collects for its step-i subgroup
+                let mut out = Vec::new();
+                for q in self.members(r, i) {
+                    out.extend_from_slice(&cur[q]);
+                    if q != r {
+                        sends.push((q, r, (cur[q].len() * 4) as u64));
+                    }
+                }
+                next[r] = out;
+                still[r] = true;
+            }
+            cur = next;
+            active = still;
+            plan.steps.push(self.plan_step("gather", i, &sends, 0, 0));
+        }
+        for (r, b) in bufs.iter_mut().enumerate() {
+            *b = if r == root { std::mem::take(&mut cur[root]) } else { Vec::new() };
+        }
+    }
+}
+
+fn uniform_len(bufs: &[Vec<f32>]) -> Result<usize> {
+    let m = bufs.first().map(|b| b.len()).unwrap_or(0);
+    ensure!(bufs.iter().all(|b| b.len() == m), "reformed buffers must be uniform length");
+    Ok(m)
+}
+
+// ---- closed forms at the reformed size -----------------------------------
+
+/// One phase of the reformed closed form: the Table-8 shape family
+/// (`ops::phase_for_size`'s (rounds, peers) rule) evaluated on the
+/// exact reformed factorization. `wire_bytes` is what the phase puts on
+/// the wire; the conservation tests hold the executed plan to the sum.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ElasticPhase {
+    /// Subgroup size of this phase.
+    pub size: usize,
+    /// Latency-bearing rounds (`s−1` when serialized by the x-bound,
+    /// else 1).
+    pub rounds: usize,
+    /// Point-to-point transfers in the phase (a multicast counts once).
+    pub transfers: u64,
+    /// Payload bytes per transfer.
+    pub bytes_per_transfer: u64,
+}
+
+impl ElasticPhase {
+    pub fn wire_bytes(&self) -> u64 {
+        self.transfers * self.bytes_per_transfer
+    }
+}
+
+/// Closed forms for all nine ops at an arbitrary reformed size `n`:
+/// phase lists whose wire totals the executed reformed plans must match
+/// exactly. `m_bytes` follows the per-op input convention (per-rank
+/// message for the exchange family, per-rank contribution for
+/// all-gather/gather, root buffer for scatter/broadcast).
+pub fn elastic_phases(p: &RampParams, op: MpiOp, m_bytes: u64, n: usize) -> Vec<ElasticPhase> {
+    let sizes = elastic_step_sizes(n);
+    let nn = n as u64;
+    let rounds = |s: usize| if s > 2 && s - 1 > p.x { s - 1 } else { 1 };
+    let phase = |s: usize, transfers: u64, bpt: u64| ElasticPhase {
+        size: s,
+        rounds: rounds(s),
+        transfers,
+        bytes_per_transfer: bpt,
+    };
+    let pad = |m: u64| m.div_ceil(4 * nn) * 4 * nn; // element-padded to n | m
+    let rs = |m: u64| {
+        let mut cur = m;
+        sizes
+            .iter()
+            .map(|&s| {
+                cur /= s as u64;
+                phase(s, nn * (s as u64 - 1), cur)
+            })
+            .collect::<Vec<_>>()
+    };
+    let ag = |m: u64| {
+        let mut cur = m;
+        sizes
+            .iter()
+            .rev()
+            .map(|&s| {
+                let ph = phase(s, nn * (s as u64 - 1), cur);
+                cur *= s as u64;
+                ph
+            })
+            .collect::<Vec<_>>()
+    };
+    let gather = |m: u64| {
+        let mut cur = m;
+        sizes
+            .iter()
+            .enumerate()
+            .rev()
+            .map(|(i, &s)| {
+                let senders: u64 = sizes[..i].iter().map(|&t| t as u64).product();
+                let ph = phase(s, senders * (s as u64 - 1), cur);
+                cur *= s as u64;
+                ph
+            })
+            .collect::<Vec<_>>()
+    };
+    match op {
+        MpiOp::ReduceScatter => rs(m_bytes),
+        MpiOp::AllGather => ag(m_bytes),
+        MpiOp::AllReduce => {
+            let mp = pad(m_bytes);
+            let mut v = rs(mp);
+            v.extend(ag(mp / nn));
+            v
+        }
+        MpiOp::AllToAll => {
+            sizes.iter().map(|&s| phase(s, nn * (s as u64 - 1), m_bytes / s as u64)).collect()
+        }
+        MpiOp::Scatter { .. } => {
+            let mut cur = m_bytes;
+            sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| {
+                    cur /= s as u64;
+                    let holders: u64 = sizes[..i].iter().map(|&t| t as u64).product();
+                    phase(s, holders * (s as u64 - 1), cur)
+                })
+                .collect()
+        }
+        MpiOp::Gather { .. } => gather(m_bytes),
+        MpiOp::Reduce { .. } => {
+            let mp = pad(m_bytes);
+            let mut v = rs(mp);
+            v.extend(gather(mp / nn));
+            v
+        }
+        MpiOp::Broadcast { .. } => vec![phase(2, 1, m_bytes)],
+        MpiOp::Barrier => {
+            let m = 4 * nn;
+            let mut v = rs(m);
+            v.extend(ag(m / nn));
+            v
+        }
+    }
+}
+
+/// Total reformed wire bytes — the Table-8 total at the reformed size.
+pub fn elastic_wire_bytes(p: &RampParams, op: MpiOp, m_bytes: u64, n: usize) -> u64 {
+    elastic_phases(p, op, m_bytes, n).iter().map(|ph| ph.wire_bytes()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::reference;
+    use crate::rng::Xoshiro256;
+
+    /// Integer-valued inputs: every reduction is exact in f32, so
+    /// tree-order sums match the oracle's rank-order sums bitwise.
+    fn int_inputs(n: usize, elems: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut r = Xoshiro256::seed_from(seed);
+        (0..n)
+            .map(|_| (0..elems).map(|_| (r.next_below(100) as f32) + 1.0).collect())
+            .collect()
+    }
+
+    #[test]
+    fn step_sizes_are_exact_balanced_and_at_most_four() {
+        for n in 2..=600usize {
+            let sizes = elastic_step_sizes(n);
+            assert!(sizes.len() <= 4, "n={n}: {sizes:?}");
+            assert!(sizes.iter().all(|&s| s >= 2), "n={n}: {sizes:?}");
+            assert_eq!(sizes.iter().product::<usize>(), n, "n={n}: {sizes:?} must be exact");
+        }
+        // primes stay a single serialized step; composites balance
+        assert_eq!(elastic_step_sizes(53), vec![53]);
+        assert_eq!(elastic_step_sizes(15), vec![5, 3]);
+        assert_eq!(elastic_step_sizes(16), vec![2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn reform_renumbers_survivors_and_rejects_degenerate_groups() {
+        let g = ElasticGroup::reform(8, &[3]).unwrap();
+        assert_eq!(g.n(), 7);
+        assert_eq!(g.survivors, vec![0, 1, 2, 4, 5, 6, 7]);
+        assert_eq!(g.new_rank_of(4), Some(3));
+        assert_eq!(g.new_rank_of(3), None);
+        assert_eq!(g.replica_holder(3), 3, "replica sits on the next survivor (old 4)");
+        // dead root is unrecoverable
+        let err = g.remap_op(MpiOp::Broadcast { root: 3 }).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<super::super::RampError>(),
+            Some(super::super::RampError::RankDied { rank: 3, .. })
+        ));
+        assert_eq!(g.remap_op(MpiOp::Gather { root: 7 }).unwrap(), MpiOp::Gather { root: 6 });
+        let exhausted = ElasticGroup::reform(2, &[0]).unwrap_err();
+        assert!(
+            matches!(
+                exhausted.downcast_ref::<super::super::RampError>(),
+                Some(super::super::RampError::NoSurvivingRanks { survivors: 1 })
+            ),
+            "one survivor must be a typed exhaustion, got {exhausted:#}"
+        );
+        assert!(ElasticGroup::reform(4, &[9]).is_err(), "dead rank out of range");
+    }
+
+    /// The reformed executor vs the reference oracles at N−1-style
+    /// sizes, and the executed plan vs the closed forms — for every op.
+    #[test]
+    fn all_nine_ops_match_oracle_and_closed_forms_at_reformed_sizes() {
+        // fig8 (N=54) keeps every survivor's physical coordinate valid
+        // for the largest reformed size exercised here (53 = 54 − 1)
+        let p = crate::topology::ramp::RampParams::fig8_example();
+        for n in [8usize, 15, 26, 31, 53] {
+            let group = ElasticGroup { n_before: n + 1, dead: vec![n], survivors: (0..n).collect(), sizes: elastic_step_sizes(n) };
+            let ex = ElasticExec::new(&p, &group);
+            let root = n / 2;
+            let ops = [
+                MpiOp::ReduceScatter,
+                MpiOp::AllGather,
+                MpiOp::AllReduce,
+                MpiOp::AllToAll,
+                MpiOp::Scatter { root },
+                MpiOp::Gather { root },
+                MpiOp::Reduce { root },
+                MpiOp::Broadcast { root },
+                MpiOp::Barrier,
+            ];
+            for op in ops {
+                let elems = match op {
+                    MpiOp::AllGather | MpiOp::Gather { .. } => 3,
+                    MpiOp::Broadcast { .. } => 17,
+                    MpiOp::Barrier => 1,
+                    _ => 2 * n,
+                };
+                let inputs = int_inputs(n, elems, 7 + n as u64);
+                let mut got = inputs.clone();
+                let plan = ex.run(op, &mut got).unwrap();
+                // 1) results vs the oracle at the reformed size
+                match op {
+                    MpiOp::ReduceScatter => {
+                        assert_eq!(got, reference::reduce_scatter(&inputs), "rs n={n}")
+                    }
+                    MpiOp::AllGather => {
+                        assert_eq!(got, reference::all_gather(&inputs), "ag n={n}")
+                    }
+                    MpiOp::AllReduce => {
+                        assert_eq!(got, reference::all_reduce(&inputs), "ar n={n}")
+                    }
+                    MpiOp::AllToAll => {
+                        assert_eq!(got, reference::all_to_all(&inputs), "a2a n={n}")
+                    }
+                    MpiOp::Scatter { root } => {
+                        assert_eq!(got, reference::scatter(&inputs, root), "scatter n={n}")
+                    }
+                    MpiOp::Gather { root } => {
+                        assert_eq!(got, reference::gather(&inputs, root), "gather n={n}")
+                    }
+                    MpiOp::Reduce { root } => {
+                        assert_eq!(got, reference::reduce(&inputs, root), "reduce n={n}")
+                    }
+                    MpiOp::Broadcast { root } => {
+                        assert_eq!(got, reference::broadcast(&inputs, root), "bcast n={n}")
+                    }
+                    MpiOp::Barrier => {
+                        assert!(
+                            got.iter().all(|b| b[0] as usize == n),
+                            "barrier must count the reformed membership at n={n}"
+                        );
+                    }
+                }
+                // 2) executed wire bytes vs the closed forms at n
+                let m_bytes = (elems * 4) as u64;
+                let phases = elastic_phases(&p, op, m_bytes, n);
+                assert_eq!(
+                    plan.total_wire_bytes(),
+                    phases.iter().map(|ph| ph.wire_bytes()).sum::<u64>(),
+                    "{} wire bytes vs closed form at n={n}",
+                    op.name()
+                );
+                assert_eq!(
+                    plan.n_rounds(),
+                    phases.iter().map(|ph| ph.rounds).sum::<usize>(),
+                    "{} rounds vs closed form at n={n}",
+                    op.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn drop_policy_excludes_and_restore_from_premerges_the_dead_input() {
+        let backup = int_inputs(6, 12, 3);
+        let dead = 2usize;
+        let drop = Reformation::new(6, &[dead], ElasticPolicy::Drop).unwrap();
+        let (inputs, reconciled) = drop.rebased_inputs(MpiOp::AllReduce, &backup).unwrap();
+        assert_eq!(reconciled, 0);
+        assert_eq!(inputs.len(), 5);
+        assert_eq!(inputs[2], backup[3], "regions rebased onto the new indexing");
+        let restore = Reformation::new(6, &[dead], ElasticPolicy::RestoreFrom).unwrap();
+        let (inputs, reconciled) = restore.rebased_inputs(MpiOp::AllReduce, &backup).unwrap();
+        assert_eq!(reconciled, 12 * 4);
+        // the replica holder (old rank 3 → new rank 2) carries its own
+        // input plus the dead rank's shard
+        let want: Vec<f32> = backup[3].iter().zip(&backup[dead]).map(|(a, b)| a + b).collect();
+        assert_eq!(inputs[2], want);
+        // movement ops have no aggregate to rejoin: restore degrades to
+        // drop and reconciles nothing
+        let (inputs, reconciled) = restore.rebased_inputs(MpiOp::AllToAll, &backup).unwrap();
+        assert_eq!(reconciled, 0);
+        assert_eq!(inputs[2], backup[3]);
+    }
+
+    /// End-to-end restore-from equivalence: a reformed reduction with
+    /// the dead input re-contributed equals the fault-free full-N sum.
+    #[test]
+    fn restore_from_reduction_equals_the_full_n_sum() {
+        let p = crate::topology::ramp::RampParams::new(2, 2, 4, 1);
+        let n0 = 9usize;
+        let backup = int_inputs(n0, 8 * 9, 11);
+        let full = reference::all_reduce(&backup);
+        let reform = Reformation::new(n0, &[4], ElasticPolicy::RestoreFrom).unwrap();
+        let (mut bufs, _) = reform.rebased_inputs(MpiOp::AllReduce, &backup).unwrap();
+        ElasticExec::new(&p, &reform.group).run(MpiOp::AllReduce, &mut bufs).unwrap();
+        for (i, &old) in reform.group.survivors.iter().enumerate() {
+            assert_eq!(bufs[i], full[old], "survivor {old} must hold the full-N sum");
+        }
+    }
+
+    #[test]
+    fn elastic_policy_spec_grammar() {
+        assert_eq!(ElasticPolicy::from_spec("drop").unwrap(), ElasticPolicy::Drop);
+        assert_eq!(ElasticPolicy::from_spec("on").unwrap(), ElasticPolicy::Drop);
+        assert_eq!(ElasticPolicy::from_spec("").unwrap(), ElasticPolicy::Drop);
+        assert_eq!(
+            ElasticPolicy::from_spec("restore-from").unwrap(),
+            ElasticPolicy::RestoreFrom
+        );
+        let err = ElasticPolicy::from_spec("replicate=2").unwrap_err();
+        match err.downcast_ref::<super::super::RampError>() {
+            Some(super::super::RampError::BadFaultSpec { token, .. }) => {
+                assert_eq!(token, "replicate=2")
+            }
+            other => panic!("elastic spec errors must be typed, got {other:?}"),
+        }
+    }
+}

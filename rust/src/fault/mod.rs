@@ -44,6 +44,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+pub mod elastic;
 pub mod recovery;
 
 /// Typed failure taxonomy of the execution stack. Engine and executor
@@ -70,6 +71,21 @@ pub enum RampError {
     /// deterministic under any lane interleaving. Retryable: the
     /// recovery layer quarantines the group and replans onto survivors.
     TransceiverDied { trx: usize, step: usize },
+    /// A whole rank (node) died **mid-collective** (injector spec
+    /// `rank-at=R:S`): every transceiver, buffer and lane of rank `R` is
+    /// gone before step `S`. `step` is the armed step, so the error is
+    /// deterministic under any lane interleaving. Retryable **with
+    /// reformation only**: the group must be reformed over the N−1
+    /// survivors ([`elastic`]) — a plain retry cannot bring the rank
+    /// back, so without an elastic policy this is fatal.
+    RankDied { rank: usize, step: usize },
+    /// Rank deaths left fewer than 2 survivors — no collective exists
+    /// to reform. The elastic budget is exhausted; fatal.
+    NoSurvivingRanks { survivors: usize },
+    /// A `--faults` / `--retry` / `--elastic` spec contained an
+    /// unrecognized or malformed token. Carries the offending token
+    /// verbatim so the CLI error names exactly what to fix.
+    BadFaultSpec { token: String, reason: String },
 }
 
 impl std::fmt::Display for RampError {
@@ -93,8 +109,26 @@ impl std::fmt::Display for RampError {
                 "transceiver group {trx} died mid-flight at step {step}; \
                  quarantine + replan required"
             ),
+            RampError::RankDied { rank, step } => write!(
+                f,
+                "rank {rank} died mid-collective at step {step}; \
+                 subgroup reformation over the survivors required"
+            ),
+            RampError::NoSurvivingRanks { survivors } => write!(
+                f,
+                "elastic reformation impossible: {survivors} rank(s) survive, need at least 2"
+            ),
+            RampError::BadFaultSpec { token, reason } => {
+                write!(f, "bad fault spec token `{token}`: {reason}")
+            }
         }
     }
+}
+
+/// Build a typed [`RampError::BadFaultSpec`] (wrapped for `?` in the
+/// `anyhow`-typed spec parsers) naming the offending token verbatim.
+pub(crate) fn bad_spec(token: &str, reason: impl Into<String>) -> anyhow::Error {
+    RampError::BadFaultSpec { token: token.to_string(), reason: reason.into() }.into()
 }
 
 impl std::error::Error for RampError {}
@@ -151,6 +185,12 @@ pub struct FaultPlan {
     /// [`RampError::TransceiverDied`] and the recovery layer is expected
     /// to quarantine the group (moving it into `failed_trx`) and retry.
     pub trx_at: Vec<(usize, usize)>,
+    /// Mid-collective whole-rank deaths: `(rank, step)` pairs armed by
+    /// the spec key `rank-at=R:S` (repeatable). When execution reaches
+    /// step `S`, rank `R` dies: the run aborts with
+    /// [`RampError::RankDied`] and the elastic layer ([`elastic`]) is
+    /// expected to reform the collective over the N−1 survivors.
+    pub rank_at: Vec<(usize, usize)>,
     /// Retry-attempt salt (`0` = first attempt, bit-for-bit historical).
     /// Set by the recovery layer — not a spec key — so a retried run
     /// does not deterministically re-hit the identical panic/loss sites
@@ -168,22 +208,34 @@ impl FaultPlan {
     /// ```
     ///
     /// `trx` is a colon-separated list of failed transceiver groups;
-    /// probabilities are permille. Unknown keys are an error.
+    /// probabilities are permille. Unknown or malformed tokens are a
+    /// typed [`RampError::BadFaultSpec`] naming the offending token.
     pub fn from_spec(spec: &str) -> anyhow::Result<Self> {
         let mut plan = FaultPlan::default();
         for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
             let (key, val) = part
                 .split_once('=')
-                .ok_or_else(|| anyhow::anyhow!("fault spec entry `{part}` is not key=value"))?;
+                .ok_or_else(|| bad_spec(part, "fault spec entries are key=value"))?;
             let num = || -> anyhow::Result<u64> {
-                val.parse().map_err(|_| anyhow::anyhow!("fault spec `{key}` expects a number, got {val}"))
+                val.parse().map_err(|_| bad_spec(part, format!("`{key}` expects a number")))
+            };
+            // a death site `R:S` / `G:S` — two colon-separated integers
+            let at = |what: &str| -> anyhow::Result<(usize, usize)> {
+                let (a, b) = val
+                    .split_once(':')
+                    .ok_or_else(|| bad_spec(part, format!("`{key}` expects {what}")))?;
+                let parse = |t: &str| -> anyhow::Result<usize> {
+                    t.parse()
+                        .map_err(|_| bad_spec(part, format!("`{key}` expects integer {what}")))
+                };
+                Ok((parse(a)?, parse(b)?))
             };
             match key {
                 "seed" => plan.seed = num()?,
                 "trx" => {
                     for t in val.split(':') {
                         plan.failed_trx.push(t.parse().map_err(|_| {
-                            anyhow::anyhow!("fault spec trx list expects integers, got {t}")
+                            bad_spec(part, "`trx` expects a colon-separated integer list")
                         })?);
                     }
                 }
@@ -195,18 +247,9 @@ impl FaultPlan {
                 "panic" => plan.panic_permille = num()? as u32,
                 "watchdog" => plan.watchdog_ms = num()?,
                 "tenant" => plan.tenant = num()?,
-                "trx-at" => {
-                    let (g, s) = val.split_once(':').ok_or_else(|| {
-                        anyhow::anyhow!("fault spec trx-at expects G:S, got {val}")
-                    })?;
-                    let parse = |t: &str| -> anyhow::Result<usize> {
-                        t.parse().map_err(|_| {
-                            anyhow::anyhow!("fault spec trx-at expects integers, got {t}")
-                        })
-                    };
-                    plan.trx_at.push((parse(g)?, parse(s)?));
-                }
-                _ => anyhow::bail!("unknown fault spec key `{key}`"),
+                "trx-at" => plan.trx_at.push(at("G:S")?),
+                "rank-at" => plan.rank_at.push(at("R:S")?),
+                _ => return Err(bad_spec(part, "unknown fault spec key")),
             }
         }
         if let Some(seed) = crate::config::fault_seed_override() {
@@ -240,6 +283,7 @@ impl FaultPlan {
             && self.panic_permille == 0
             && self.failed_trx.is_empty()
             && self.trx_at.is_empty()
+            && self.rank_at.is_empty()
     }
 
     /// Salt this plan for one tenant (program) of a multi-tenant pool:
@@ -293,6 +337,9 @@ pub struct FaultInjector {
     /// Checked by the event driver at every item start; firing removes
     /// the entry, so each armed death aborts exactly one attempt.
     armed: Mutex<Vec<(usize, usize)>>,
+    /// Mid-collective whole-rank deaths still armed (from
+    /// `plan.rank_at`). Same fire-once discipline as `armed`.
+    armed_ranks: Mutex<Vec<(usize, usize)>>,
     straggles: AtomicU64,
     jitters: AtomicU64,
     drops: AtomicU64,
@@ -300,15 +347,18 @@ pub struct FaultInjector {
     panics: AtomicU64,
     repairs: AtomicU64,
     trx_deaths: AtomicU64,
+    rank_deaths: AtomicU64,
 }
 
 impl FaultInjector {
     pub fn new(plan: FaultPlan) -> Arc<Self> {
         let armed = plan.trx_at.clone();
+        let armed_ranks = plan.rank_at.clone();
         Arc::new(Self {
             plan,
             dropped: Mutex::new(BTreeSet::new()),
             armed: Mutex::new(armed),
+            armed_ranks: Mutex::new(armed_ranks),
             straggles: AtomicU64::new(0),
             jitters: AtomicU64::new(0),
             drops: AtomicU64::new(0),
@@ -316,6 +366,7 @@ impl FaultInjector {
             panics: AtomicU64::new(0),
             repairs: AtomicU64::new(0),
             trx_deaths: AtomicU64::new(0),
+            rank_deaths: AtomicU64::new(0),
         })
     }
 
@@ -419,6 +470,19 @@ impl FaultInjector {
         Some((group, at))
     }
 
+    /// Whole-rank death hook: has a rank death armed at or before `step`
+    /// fired? Same fire-once discipline as [`Self::trx_death`], same
+    /// determinism contract: returns `(rank, armed_step)` — the
+    /// **armed** step, not the observing site's — so the resulting
+    /// [`RampError::RankDied`] is identical under any interleaving.
+    pub fn rank_death(&self, step: usize) -> Option<(usize, usize)> {
+        let mut armed = self.armed_ranks.lock().unwrap_or_else(|e| e.into_inner());
+        let i = armed.iter().position(|&(_, s)| s <= step)?;
+        let (rank, at) = armed.remove(i);
+        self.rank_deaths.fetch_add(1, Ordering::Relaxed);
+        Some((rank, at))
+    }
+
     pub fn straggles(&self) -> u64 {
         self.straggles.load(Ordering::Relaxed)
     }
@@ -445,6 +509,10 @@ impl FaultInjector {
 
     pub fn trx_deaths(&self) -> u64 {
         self.trx_deaths.load(Ordering::Relaxed)
+    }
+
+    pub fn rank_deaths(&self) -> u64 {
+        self.rank_deaths.load(Ordering::Relaxed)
     }
 }
 
@@ -568,6 +636,70 @@ mod tests {
         assert!(!plan.is_recoverable(), "an armed death needs the recovery layer");
         assert!(FaultPlan::from_spec("trx-at=5").is_err());
         assert!(FaultPlan::from_spec("trx-at=a:b").is_err());
+    }
+
+    #[test]
+    fn rank_at_parses_and_marks_the_plan_unrecoverable() {
+        let plan = FaultPlan::from_spec("rank-at=3:1,rank-at=0:2").unwrap();
+        assert_eq!(plan.rank_at, vec![(3, 1), (0, 2)]);
+        assert!(!plan.is_recoverable(), "an armed rank death needs reformation");
+        assert!(FaultPlan::from_spec("rank-at=5").is_err());
+        assert!(FaultPlan::from_spec("rank-at=a:b").is_err());
+    }
+
+    /// Satellite: one rejection test per grammar entry — every malformed
+    /// token surfaces as a typed `BadFaultSpec` carrying the token
+    /// verbatim, never a silent skip and never an untyped error.
+    #[test]
+    fn malformed_tokens_are_typed_bad_fault_spec_per_grammar_entry() {
+        let bad = |spec: &str, token: &str| {
+            let err = FaultPlan::from_spec(spec).expect_err(spec);
+            match err.downcast_ref::<RampError>() {
+                Some(RampError::BadFaultSpec { token: t, .. }) => {
+                    assert_eq!(t, token, "wrong offending token for spec `{spec}`")
+                }
+                other => panic!("spec `{spec}` must be typed BadFaultSpec, got {other:?}"),
+            }
+        };
+        bad("seed", "seed"); // no '='
+        bad("seed=x", "seed=x");
+        bad("trx=0:b", "trx=0:b");
+        bad("straggle=no", "straggle=no");
+        bad("straggle-us=-1", "straggle-us=-1");
+        bad("jitter=ns", "jitter=ns");
+        bad("drop=many", "drop=many");
+        bad("lose=?", "lose=?");
+        bad("panic=!", "panic=!");
+        bad("watchdog=soon", "watchdog=soon");
+        bad("tenant=t", "tenant=t");
+        bad("trx-at=1", "trx-at=1");
+        bad("trx-at=1:x", "trx-at=1:x");
+        bad("rank-at=7", "rank-at=7");
+        bad("rank-at=r:0", "rank-at=r:0");
+        bad("bogus=1", "bogus=1");
+        // a bad token mid-spec still names itself, not its neighbors
+        bad("seed=7,blorp=2,drop=50", "blorp=2");
+    }
+
+    #[test]
+    fn armed_rank_death_fires_exactly_once_at_its_step() {
+        let plan = FaultPlan { rank_at: vec![(5, 2)], ..FaultPlan::default() };
+        let inj = FaultInjector::new(plan);
+        assert_eq!(inj.rank_death(0), None, "step below the armed step must not fire");
+        assert_eq!(inj.rank_death(1), None);
+        // fires at (or past) the armed step, reporting the ARMED step
+        assert_eq!(inj.rank_death(3), Some((5, 2)));
+        assert_eq!(inj.rank_death(3), None, "each armed rank death fires once");
+        assert_eq!(inj.rank_deaths(), 1);
+        // trx and rank arming are independent namespaces
+        let plan = FaultPlan {
+            trx_at: vec![(1, 0)],
+            rank_at: vec![(2, 0)],
+            ..FaultPlan::default()
+        };
+        let inj = FaultInjector::new(plan);
+        assert_eq!(inj.trx_death(0), Some((1, 0)));
+        assert_eq!(inj.rank_death(0), Some((2, 0)));
     }
 
     #[test]

@@ -63,6 +63,8 @@ impl RecoveryPolicy {
     /// `key=value` with keys `retries`, `backoff-ms`, `seed` — or one of
     /// the bare literals `on` / `1` / `default` selecting the default
     /// policy (the CI chaos matrix toggles recovery with `RAMP_RETRY=on`).
+    /// Unknown or malformed tokens are a typed
+    /// [`RampError::BadFaultSpec`] naming the offending token.
     pub fn from_spec(spec: &str) -> anyhow::Result<Self> {
         let mut policy = Self::default();
         let spec = spec.trim();
@@ -72,37 +74,51 @@ impl RecoveryPolicy {
         for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
             let (key, val) = part
                 .split_once('=')
-                .ok_or_else(|| anyhow::anyhow!("retry spec entry `{part}` is not key=value"))?;
+                .ok_or_else(|| super::bad_spec(part, "retry spec entries are key=value"))?;
             match key {
                 "retries" => {
-                    policy.max_retries = val
-                        .parse()
-                        .map_err(|_| anyhow::anyhow!("retry spec retries expects a number"))?
+                    policy.max_retries = val.parse().map_err(|_| {
+                        super::bad_spec(part, "`retries` expects a number")
+                    })?
                 }
                 "backoff-ms" => {
-                    let ms: f64 = val
-                        .parse()
-                        .map_err(|_| anyhow::anyhow!("retry spec backoff-ms expects a number"))?;
-                    anyhow::ensure!(ms >= 0.0, "retry spec backoff-ms must be >= 0");
+                    let ms: f64 = val.parse().map_err(|_| {
+                        super::bad_spec(part, "`backoff-ms` expects a number")
+                    })?;
+                    if !(ms >= 0.0 && ms.is_finite()) {
+                        return Err(super::bad_spec(part, "`backoff-ms` must be finite and >= 0"));
+                    }
                     policy.backoff_base_s = ms / 1e3;
                 }
                 "seed" => {
                     policy.seed = val
                         .parse()
-                        .map_err(|_| anyhow::anyhow!("retry spec seed expects a number"))?
+                        .map_err(|_| super::bad_spec(part, "`seed` expects a number"))?
                 }
-                _ => anyhow::bail!("unknown retry spec key `{key}`"),
+                _ => return Err(super::bad_spec(part, "unknown retry spec key")),
             }
         }
         Ok(policy)
     }
 
+    /// Exponent ceiling of the backoff curve: `2^32` base units (~50
+    /// virtual days at the default 5 ms base) is already far beyond any
+    /// meaningful retry budget, and clamping here keeps `backoff_s`
+    /// finite for **every** `u32` attempt — `base · 2^attempt` at
+    /// attempt ≥ 1024 would overflow `f64` to `inf` and poison every
+    /// virtual-time aggregate it feeds (completion estimates, metrics,
+    /// train reports).
+    pub const MAX_BACKOFF_EXP: u32 = 32;
+
     /// Virtual backoff before retry `attempt` (0-based): seeded
-    /// exponential with deterministic full jitter. Pure function of
-    /// `(seed, attempt)` — replays exactly.
+    /// exponential with deterministic full jitter, exponent clamped at
+    /// [`Self::MAX_BACKOFF_EXP`] so arbitrarily large attempt counts
+    /// saturate instead of overflowing to non-finite time. Pure function
+    /// of `(seed, attempt)` — replays exactly.
     pub fn backoff_s(&self, attempt: u32) -> f64 {
         let jitter = super::mix64(self.seed ^ ((attempt as u64) << 17) ^ 0xB0FF) % 1000;
-        self.backoff_base_s * (1u64 << attempt.min(32)) as f64 * (1.0 + jitter as f64 / 1e3)
+        let scale = (1u64 << attempt.min(Self::MAX_BACKOFF_EXP)) as f64;
+        self.backoff_base_s * scale * (1.0 + jitter as f64 / 1e3)
     }
 
     /// Classify a failed attempt: retry, or surface typed.
@@ -113,10 +129,21 @@ impl RecoveryPolicy {
                 | RampError::WorkerPanic { .. }
                 | RampError::TransceiverDied { .. },
             ) => ErrorClass::Retryable,
+            // retryable **with reformation**: a plain re-execution can
+            // never bring the rank back, so the engine only honors this
+            // when an elastic policy is armed (`fault::elastic`) and the
+            // group reforms over the survivors; without one it surfaces
+            Some(RampError::RankDied { .. }) => ErrorClass::Retryable,
             // an unplannable fabric cannot improve by retrying; anything
             // untyped (validation errors, schedule bugs, strict-mode
-            // fabric violations) is a programming error, not a fault
-            Some(RampError::NoSurvivingTransceivers { .. }) | None => ErrorClass::Fatal,
+            // fabric violations) is a programming error, not a fault —
+            // and a malformed spec never reaches execution at all
+            Some(
+                RampError::NoSurvivingTransceivers { .. }
+                | RampError::NoSurvivingRanks { .. }
+                | RampError::BadFaultSpec { .. },
+            )
+            | None => ErrorClass::Fatal,
         }
     }
 }
@@ -157,6 +184,15 @@ pub struct RecoveryStats {
     /// Transceiver groups quarantined by mid-flight deaths, in
     /// quarantine order.
     pub quarantined_trx: Vec<usize>,
+    /// Subgroup reformations performed (one per rank death survived —
+    /// the elastic layer's remap → reconcile → replan → resume cycle).
+    pub reformations: u64,
+    /// Ranks lost to mid-collective deaths, in death order (original
+    /// rank indices — the pre-reformation numbering).
+    pub dead_ranks: Vec<usize>,
+    /// Input bytes re-contributed by the reconciliation pass under the
+    /// `restore-from` redundancy policy (0 under `drop`).
+    pub reconciled_bytes: u64,
 }
 
 impl RecoveryStats {
@@ -175,6 +211,9 @@ impl RecoveryStats {
         self.wasted_bytes += other.wasted_bytes;
         self.backoff_virtual_s += other.backoff_virtual_s;
         self.quarantined_trx.extend(other.quarantined_trx.iter().copied());
+        self.reformations += other.reformations;
+        self.dead_ranks.extend(other.dead_ranks.iter().copied());
+        self.reconciled_bytes += other.reconciled_bytes;
     }
 }
 
@@ -285,6 +324,32 @@ mod tests {
         assert!(RecoveryPolicy::from_spec("retries").is_err());
     }
 
+    /// Satellite: one rejection per grammar entry, each a typed
+    /// `BadFaultSpec` naming the offending token.
+    #[test]
+    fn malformed_retry_tokens_are_typed_bad_fault_spec() {
+        let bad = |spec: &str, token: &str| {
+            let err = RecoveryPolicy::from_spec(spec).expect_err(spec);
+            match err.downcast_ref::<RampError>() {
+                Some(RampError::BadFaultSpec { token: t, .. }) => {
+                    assert_eq!(t, token, "wrong offending token for spec `{spec}`")
+                }
+                other => panic!("spec `{spec}` must be typed BadFaultSpec, got {other:?}"),
+            }
+        };
+        bad("retries", "retries"); // no '='
+        bad("retries=many", "retries=many");
+        bad("backoff-ms=soon", "backoff-ms=soon");
+        bad("backoff-ms=-1", "backoff-ms=-1");
+        bad("backoff-ms=inf", "backoff-ms=inf");
+        bad("seed=s", "seed=s");
+        bad("bogus=1", "bogus=1");
+        bad("retries=2,blorp=3", "blorp=3");
+        // every BadFaultSpec is Fatal before execution even starts
+        let err = RecoveryPolicy::from_spec("bogus=1").unwrap_err();
+        assert_eq!(RecoveryPolicy::classify(&err), ErrorClass::Fatal);
+    }
+
     #[test]
     fn backoff_is_deterministic_exponential_with_jitter() {
         let p = RecoveryPolicy::default();
@@ -299,12 +364,42 @@ mod tests {
         assert!(p.backoff_s(3) > p.backoff_s(0), "later retries wait longer");
     }
 
+    /// Satellite regression: the exponent clamp. `base · 2^attempt` at
+    /// attempt ≥ 63 would overflow the shift (and ≥ 1024 the f64) — the
+    /// clamp must keep every u32 attempt finite and saturated at the
+    /// `MAX_BACKOFF_EXP` envelope.
+    #[test]
+    fn backoff_saturates_finite_at_large_attempts() {
+        let p = RecoveryPolicy::default();
+        let cap_hi = p.backoff_base_s * 2.0 * (1u64 << RecoveryPolicy::MAX_BACKOFF_EXP) as f64;
+        for attempt in [63, 64, 255, 1024, 100_000, u32::MAX] {
+            let b = p.backoff_s(attempt);
+            assert!(b.is_finite(), "backoff at attempt {attempt} must stay finite, got {b}");
+            assert!(b > 0.0, "backoff at attempt {attempt} must stay positive");
+            assert!(
+                b < cap_hi,
+                "backoff at attempt {attempt} escaped the clamp envelope: {b} >= {cap_hi}"
+            );
+        }
+        // the clamp changes nothing below the ceiling
+        for attempt in 0..=RecoveryPolicy::MAX_BACKOFF_EXP {
+            assert!(p.backoff_s(attempt).is_finite());
+        }
+        // a pathological base also stays non-NaN (inf base is rejected by
+        // from_spec; a hand-built policy saturates to inf, never NaN)
+        let huge = RecoveryPolicy { backoff_base_s: f64::MAX, ..RecoveryPolicy::default() };
+        assert!(!huge.backoff_s(u32::MAX).is_nan());
+    }
+
     #[test]
     fn classification_is_retryable_vs_fatal() {
         let retryable = [
             RampError::StalledEpoch { rank: 0, chunk: 0, epoch: 1, waited_ms: 10 },
             RampError::WorkerPanic { step: 0, chunk: 0, key: 0, detail: "boom".into() },
             RampError::TransceiverDied { trx: 1, step: 2 },
+            // retryable-with-reformation: the engine demands an elastic
+            // policy before honoring the retry (tested engine-side)
+            RampError::RankDied { rank: 3, step: 1 },
         ];
         for e in retryable {
             assert_eq!(

@@ -6,6 +6,7 @@
 //! ramp train [--workers N] [--steps N] [--model tiny] [--lr X]
 //!            [--pipeline P] [--pool-threads T] [--lane-driver D]
 //!            [--max-tenants N] [--faults SPEC] [--retry RSPEC]
+//!            [--elastic POLICY]
 //!                                    real DDP training through the fabric
 //!                                    (P: 0/auto = auto chunk pipelining,
 //!                                     1/off = off, K = fixed chunk count
@@ -21,22 +22,32 @@
 //!                                     sharing the pool, 0 = unbounded;
 //!                                     SPEC: a seeded
 //!                                     fault plan, e.g.
-//!                                     `seed=7,trx=0,straggle=100,drop=50`
-//!                                     or `trx-at=1:2` for a mid-flight
-//!                                     transceiver death at step 2 — see
+//!                                     `seed=7,trx=0,straggle=100,drop=50`,
+//!                                     `trx-at=1:2` for a mid-flight
+//!                                     transceiver death at step 2, or
+//!                                     `rank-at=R:S` for a whole-rank
+//!                                     death before step S — see
 //!                                     [`ramp::fault::FaultPlan`];
 //!                                     RSPEC: the supervisory recovery
 //!                                     policy, `on` or
 //!                                     `retries=N,backoff-ms=M,seed=S` —
-//!                                     see [`ramp::fault::recovery::RecoveryPolicy`])
+//!                                     see [`ramp::fault::recovery::RecoveryPolicy`];
+//!                                     POLICY: the elastic rank-loss
+//!                                     policy, `drop` (continue at N−1,
+//!                                     average over the survivors) or
+//!                                     `restore-from` (re-contribute the
+//!                                     dead input from a peer replica) —
+//!                                     see [`ramp::fault::elastic`])
 //! ramp collective <op> [--nodes N] [--mb M] [--oversub S] [--pipeline P]
-//!                      [--faults SPEC] [--retry RSPEC]
+//!                      [--faults SPEC] [--retry RSPEC] [--elastic POLICY]
 //!                                   completion-time comparison for one op,
 //!                                   with a serial vs intra-step vs
 //!                                   cross-step pipelining readout, plus a
 //!                                   degraded-fabric price when SPEC fails
-//!                                   transceiver groups and a recovery-
+//!                                   transceiver groups, a recovery-
 //!                                   overhead price when RSPEC arms retries
+//!                                   and an elastic-reformation price when
+//!                                   SPEC kills ranks under POLICY
 //! ```
 
 use anyhow::{anyhow, bail, Result};
@@ -75,10 +86,11 @@ fn run() -> Result<()> {
             println!(
                 "RAMP — flat nanosecond optical network + MPI operations for DDL\n\n\
                  usage:\n  ramp info\n  ramp repro <fig6|fig7|table3|table4|fig15..fig23|all>\n  \
-                 ramp train [--workers N] [--steps N] [--model tiny] [--lr X] [--momentum X] [--pipeline off|auto|cross|K] [--pool-threads T] [--lane-driver event|inorder] [--max-tenants N] [--faults SPEC] [--retry RSPEC]\n  \
-                 ramp collective <op> [--nodes N] [--mb M] [--oversub S] [--pipeline off|auto|cross|K] [--faults SPEC] [--retry RSPEC]\n\n\
-                 fault SPEC: seed=S,trx=A:B,trx-at=G:S,straggle=P,straggle-us=U,jitter=NS,drop=P,lose=P,panic=P,watchdog=MS (permille probabilities; trx-at=G:S kills group G mid-flight at step S)\n\
-                 retry RSPEC: on | retries=N,backoff-ms=M,seed=S (supervisory recovery: quarantine, degraded replan, partial-progress resume; RAMP_RETRY env equivalent)\n\n\
+                 ramp train [--workers N] [--steps N] [--model tiny] [--lr X] [--momentum X] [--pipeline off|auto|cross|K] [--pool-threads T] [--lane-driver event|inorder] [--max-tenants N] [--faults SPEC] [--retry RSPEC] [--elastic POLICY]\n  \
+                 ramp collective <op> [--nodes N] [--mb M] [--oversub S] [--pipeline off|auto|cross|K] [--faults SPEC] [--retry RSPEC] [--elastic POLICY]\n\n\
+                 fault SPEC: seed=S,trx=A:B,trx-at=G:S,rank-at=R:S,straggle=P,straggle-us=U,jitter=NS,drop=P,lose=P,panic=P,watchdog=MS (permille probabilities; trx-at=G:S kills group G mid-flight at step S; rank-at=R:S kills rank R before step S)\n\
+                 retry RSPEC: on | retries=N,backoff-ms=M,seed=S (supervisory recovery: quarantine, degraded replan, partial-progress resume; RAMP_RETRY env equivalent)\n\
+                 elastic POLICY: drop | restore-from (rank death → subgroup reformation over the N−1 survivors; training continues at the reduced membership)\n\n\
                  ops: reduce-scatter all-gather all-reduce all-to-all scatter gather reduce broadcast"
             );
             Ok(())
@@ -118,6 +130,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         .get("retry")
         .map(|s| ramp::fault::recovery::RecoveryPolicy::from_spec(s))
         .transpose()?;
+    let elastic = args
+        .get("elastic")
+        .map(|s| ramp::fault::elastic::ElasticPolicy::from_spec(s))
+        .transpose()?;
     let cfg = TrainConfig {
         model: args.get_or("model", "tiny"),
         n_workers: args.get_usize("workers", 4)?,
@@ -136,6 +152,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         max_tenants: args.get_usize("max-tenants", 0)?,
         faults,
         retry,
+        elastic,
     };
     println!(
         "training {} with {} workers for {} steps (lr {}, momentum {})",
@@ -157,8 +174,16 @@ fn cmd_train(args: &Args) -> Result<()> {
             policy.seed
         );
     }
+    if let Some(policy) = &cfg.elastic {
+        println!(
+            "elastic rank loss armed (policy {}): a dead rank reforms the group over \
+             the survivors and training continues at N\u{2212}1",
+            policy.name()
+        );
+    }
     let rep = train(&cfg)?;
-    let mut t = Table::new(vec!["step", "loss", "compute", "network (virtual)", "retries"]);
+    let mut t =
+        Table::new(vec!["step", "loss", "compute", "network (virtual)", "retries", "live"]);
     for s in &rep.stats {
         t.row(vec![
             s.step.to_string(),
@@ -166,6 +191,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             fmt_time(s.compute_s),
             fmt_time(s.comm_virtual_s),
             s.retries.to_string(),
+            s.live_workers.to_string(),
         ]);
     }
     println!("{t}");
@@ -182,6 +208,17 @@ fn cmd_train(args: &Args) -> Result<()> {
             ramp::units::fmt_bytes(rec.wasted_bytes),
             fmt_time(rec.backoff_virtual_s),
             rec.quarantined_trx,
+        );
+    }
+    if !rep.dead_workers.is_empty() {
+        println!(
+            "elastic: rank(s) {:?} lost — {} reformation(s) to membership epoch {}, \
+             {} re-contributed from replicas, finished with {} live workers",
+            rep.dead_workers,
+            rec.reformations,
+            rep.membership_epoch,
+            ramp::units::fmt_bytes(rec.reconciled_bytes),
+            cfg.n_workers - rep.dead_workers.len(),
         );
     }
     println!(
@@ -264,6 +301,10 @@ fn cmd_collective(args: &Args) -> Result<()> {
         .get("retry")
         .map(|s| ramp::fault::recovery::RecoveryPolicy::from_spec(s))
         .transpose()?;
+    let elastic = args
+        .get("elastic")
+        .map(|s| ramp::fault::elastic::ElasticPolicy::from_spec(s))
+        .transpose()?;
     if let Some(spec) = args.get("faults") {
         let plan = ramp::fault::FaultPlan::from_spec(spec)?;
         let p = RampParams::max_scale();
@@ -327,10 +368,44 @@ fn cmd_collective(args: &Args) -> Result<()> {
                 );
             }
         }
-    } else if retry.is_some() {
+        // whole-rank deaths (`rank-at=R:S`): without an elastic policy
+        // the run fails typed (RankDied); with one, the group reforms
+        // over the survivors and the reformed run is priced analytically
+        // (reformed completion at N−dead + the aborted attempt's replay)
+        let mut dead_ranks: Vec<usize> = plan.rank_at.iter().map(|&(rk, _)| rk).collect();
+        dead_ranks.sort_unstable();
+        dead_ranks.dedup();
+        if !dead_ranks.is_empty() {
+            match elastic {
+                None => println!(
+                    "{} rank death(s) armed with no --elastic policy: the run fails \
+                     typed (RankDied) — arm `--elastic drop` to reform over the survivors",
+                    dead_ranks.len()
+                ),
+                Some(policy) => {
+                    let rp = retry.clone().unwrap_or_default();
+                    let retries = (dead_ranks.len() as u32).min(rp.max_retries.max(1));
+                    let ov = ramp::estimator::collective_time::RecoveryOverhead::from_policy(
+                        &rp, retries, 0.0,
+                    );
+                    let dead = dead_ranks.len().min(n.saturating_sub(2));
+                    let e = ramp.completion_time_elastic(op, m, n, dead, &ov);
+                    println!(
+                        "elastic reformation (policy {}, {} rank(s) dead → {} survivors): \
+                         {} — {:.2}x the fault-free completion",
+                        policy.name(),
+                        dead,
+                        fmt_count((n - dead) as u64),
+                        fmt_time(e.total()),
+                        e.total() / r.total()
+                    );
+                }
+            }
+        }
+    } else if retry.is_some() || elastic.is_some() {
         println!(
-            "recovery armed with no fault plan: nothing to retry — completion \
-             unchanged ({})",
+            "recovery/elastic armed with no fault plan: nothing to retry or reform — \
+             completion unchanged ({})",
             fmt_time(r.total())
         );
     }

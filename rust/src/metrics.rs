@@ -55,6 +55,23 @@ impl Metrics {
         self.record("recovery.backoff_virtual_s", stats.backoff_virtual_s);
     }
 
+    /// Fold the elastic side of a recovery episode under the canonical
+    /// `elastic.*` names: `reformations`, `dead_ranks` and
+    /// `reconciled_bytes` as counters, plus the current membership epoch
+    /// as a gauge-style counter (set to the maximum seen). An episode
+    /// with no reformation records nothing, so the counters read as
+    /// totals over the collectives that actually lost a rank.
+    pub fn record_elastic(&mut self, stats: &crate::fault::recovery::RecoveryStats) {
+        if stats.reformations == 0 {
+            return;
+        }
+        self.inc("elastic.reformations", stats.reformations);
+        self.inc("elastic.dead_ranks", stats.dead_ranks.len() as u64);
+        self.inc("elastic.reconciled_bytes", stats.reconciled_bytes);
+        let epoch = self.counter("elastic.membership_epoch").max(stats.reformations);
+        *self.counters.entry("elastic.membership_epoch".to_string()).or_default() = epoch;
+    }
+
     pub fn mean_seconds(&self, name: &str) -> Option<f64> {
         self.timings.get(name).map(|(t, n)| t / (*n).max(1) as f64)
     }
@@ -105,6 +122,7 @@ mod tests {
             wasted_bytes: 512,
             backoff_virtual_s: 0.02,
             quarantined_trx: vec![1],
+            ..Default::default()
         };
         m.record_recovery(&episode);
         m.record_recovery(&episode);
@@ -115,5 +133,27 @@ mod tests {
         assert_eq!(m.counter("recovery.wasted_bytes"), 1024);
         let mean = m.mean_seconds("recovery.backoff_virtual_s").unwrap();
         assert!((mean - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn elastic_episodes_fold_into_canonical_counters() {
+        use crate::fault::recovery::RecoveryStats;
+        let mut m = Metrics::new();
+        // a membership-preserving episode records nothing
+        m.record_elastic(&RecoveryStats { retries: 1, ..Default::default() });
+        assert_eq!(m.counter("elastic.reformations"), 0);
+        let episode = RecoveryStats {
+            retries: 1,
+            reformations: 1,
+            dead_ranks: vec![5],
+            reconciled_bytes: 2048,
+            ..Default::default()
+        };
+        m.record_elastic(&episode);
+        m.record_elastic(&episode);
+        assert_eq!(m.counter("elastic.reformations"), 2);
+        assert_eq!(m.counter("elastic.dead_ranks"), 2);
+        assert_eq!(m.counter("elastic.reconciled_bytes"), 4096);
+        assert_eq!(m.counter("elastic.membership_epoch"), 1, "gauge keeps the max epoch");
     }
 }

@@ -674,6 +674,159 @@ fn fuzz_recovery_matrix() {
     run_recovery_fuzz(cases);
 }
 
+// ---- elastic rank-death fuzz axis (PR 10) --------------------------------
+
+/// One randomly drawn **elastic** case: a seeded whole-rank death
+/// (`rank-at=R:S`) × op × fabric × chunk count × redundancy policy,
+/// executed under the supervisory loop with `--elastic` armed. The
+/// contract fuzzed: when the death fires the group reforms and the
+/// survivors' results are **bitwise identical** to the direct
+/// reformation anchor (the same remap → reconcile → replan pass run
+/// standalone — itself pinned to the reference oracles by the
+/// `fault::elastic` module tests) with the dead region emptied; when
+/// the armed site is never reached (shallow program — broadcast and
+/// barrier never tick the lane executor) the run must equal the
+/// fault-free full-N anchor with no reformation counted; a dead root
+/// must surface typed. Anything else fails with the case seed.
+fn run_elastic_fuzz_case(seed: u64) {
+    use ramp::engine::RampEngine;
+    use ramp::fault::elastic::{ElasticExec, ElasticPolicy, Reformation};
+    use ramp::fault::recovery::RecoveryPolicy;
+    use ramp::fault::{FaultPlan, RampError};
+
+    let mut rng = Lcg::new(seed ^ 0xe1a5_71c5);
+    let fabric_set = fabrics();
+    let p = rng.pick(&fabric_set).clone();
+    let n = p.n_nodes();
+    let oi = rng.below(op_instances(n).len());
+    let op = op_instances(n)[oi];
+    let sizes = match op {
+        MpiOp::AllGather | MpiOp::Gather { .. } => vec![1, 3, 8, 13],
+        MpiOp::Broadcast { .. } => vec![2, 64, 257],
+        MpiOp::Barrier => vec![1],
+        // the reformed group has n−1 ranks: reduce-scatter and
+        // all-to-all need the payload divisible at both memberships
+        _ => vec![n * (n - 1), 2 * n * (n - 1)],
+    };
+    let elems = *rng.pick(&sizes);
+    let pl = *rng.pick(&[Pipeline::cross(2), Pipeline::cross(3)]);
+    let dead = rng.below(n);
+    let step = rng.below(3);
+    let policy = if rng.below(2) == 1 {
+        ElasticPolicy::RestoreFrom
+    } else {
+        ElasticPolicy::Drop
+    };
+    let inputs = random_inputs(n, elems, seed ^ 0xdead);
+
+    let mut anchor_full = inputs.clone();
+    RampEngine::new(p.clone()).with_pipeline(pl).execute(op, &mut anchor_full).unwrap();
+
+    let mut engine = RampEngine::new(p.clone())
+        .with_pipeline(pl)
+        .with_faults(FaultPlan {
+            seed,
+            rank_at: vec![(dead, step)],
+            watchdog_ms: 400,
+            ..FaultPlan::default()
+        })
+        .with_elastic(policy);
+    engine.pool = PoolSel::Forced(shared_pool());
+    let mut got = inputs.clone();
+    match engine.execute_with_recovery(op, &mut got, &RecoveryPolicy::default()) {
+        Ok((_, stats)) => {
+            if engine.dead_ranks().is_empty() {
+                assert_eq!(stats.reformations, 0, "elastic fuzz seed {seed}: no death, no reform");
+                assert_eq!(
+                    got,
+                    anchor_full,
+                    "elastic fuzz seed {seed}: {} unfired death diverged from the \
+                     fault-free anchor under {pl:?} m={elems} on {p:?}",
+                    op.name()
+                );
+                return;
+            }
+            assert_eq!(stats.dead_ranks, vec![dead], "elastic fuzz seed {seed}");
+            let reform = Reformation::new(n, &[dead], policy).unwrap();
+            let op2 = reform.group.remap_op(op).unwrap();
+            let (mut bufs, _) = reform.rebased_inputs(op, &inputs).unwrap();
+            ElasticExec::new(&p, &reform.group).run(op2, &mut bufs).unwrap();
+            assert!(
+                got[dead].is_empty(),
+                "elastic fuzz seed {seed}: dead region must be emptied"
+            );
+            for (i, &old) in reform.group.survivors.iter().enumerate() {
+                assert_eq!(
+                    got[old],
+                    bufs[i],
+                    "elastic fuzz seed {seed}: {} survivor {old} diverged from the \
+                     reformation anchor ({}) under {pl:?} m={elems} on {p:?}",
+                    op.name(),
+                    policy.name()
+                );
+            }
+        }
+        Err(err) => {
+            // with one armed death the only legitimate failure is an
+            // unrecoverable dead root — and it must stay typed
+            let root_died = matches!(
+                err.downcast_ref::<RampError>(),
+                Some(RampError::RankDied { rank, .. }) if *rank == dead
+            ) && matches!(
+                op,
+                MpiOp::Scatter { root } | MpiOp::Gather { root }
+                | MpiOp::Reduce { root } | MpiOp::Broadcast { root } if root == dead
+            );
+            assert!(
+                root_died,
+                "elastic fuzz seed {seed}: {} must reform or fail typed on a dead \
+                 root, got {err:#}",
+                op.name()
+            );
+        }
+    }
+}
+
+/// Drive `cases` elastic fuzz cases. Mirrors [`run_fuzz`]: a failing
+/// case seed is written to `target/fuzz-elastic-failing-seed.txt` and
+/// replayed exactly with `RAMP_FUZZ_REPLAY=<seed> cargo test -q
+/// fuzz_elastic_matrix`.
+fn run_elastic_fuzz(cases: usize) {
+    if let Some(seed) = ramp::config::fuzz_replay_seed() {
+        run_elastic_fuzz_case(seed);
+        return;
+    }
+    let _ = std::fs::remove_file("target/fuzz-elastic-failing-seed.txt");
+    let mut master = Lcg::new(0x5eed_e1a5);
+    for i in 0..cases {
+        let seed = master.next();
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_elastic_fuzz_case(seed);
+        }));
+        if let Err(payload) = outcome {
+            let _ = std::fs::create_dir_all("target");
+            let _ = std::fs::write(
+                "target/fuzz-elastic-failing-seed.txt",
+                format!("case {i} of {cases}: seed {seed}\n"),
+            );
+            eprintln!(
+                "elastic fuzz case {i} FAILED — replay with: RAMP_FUZZ_REPLAY={seed} \
+                 cargo test -q fuzz_elastic_matrix"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+#[test]
+fn fuzz_elastic_matrix() {
+    // tier-1 profile: each case pays a full attempt plus a reformation,
+    // so the budget matches the recovery axis (scales with
+    // RAMP_FUZZ_CASES, floored so the axis never vanishes)
+    let cases = ramp::config::fuzz_cases_override().map(|c| (c / 8).max(5)).unwrap_or(25);
+    run_elastic_fuzz(cases);
+}
+
 // ---- cross-step lane-schedule validity ----------------------------------
 
 #[test]

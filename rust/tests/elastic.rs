@@ -1,0 +1,342 @@
+//! Elastic rank-loss integration: whole-node death mid-collective under
+//! the supervisory recovery loop, through the **public** engine and
+//! coordinator APIs. The contract under test (ISSUE 10 tentpole):
+//!
+//! 1. a rank armed to die (`rank-at=R:S`) aborts the attempt with a
+//!    typed [`RampError::RankDied`];
+//! 2. with an `--elastic` policy armed the group reforms over the
+//!    survivors (remap → reconcile → replan → resume) and every op —
+//!    all nine — completes with results **bitwise equal** to the
+//!    reformed (N−1)-rank run under `drop` semantics;
+//! 3. executed wire bytes sit exactly on the reformed closed forms;
+//! 4. `restore-from` re-contributes the dead rank's input, so the
+//!    reformed reduction equals the fault-free full-N run bitwise;
+//! 5. exhaustion and unrecoverable cases (no policy, dead root, fewer
+//!    than two survivors) surface typed — never a hang, never a silent
+//!    partial result.
+//!
+//! Every scenario runs under a spawned-thread hang guard (the chaos
+//! suite's discipline): a deadlocked reformation fails loudly instead
+//! of wedging CI.
+
+use ramp::collectives::arena::Pipeline;
+use ramp::collectives::pool::{PoolSel, WorkerPool};
+use ramp::collectives::{reference, MpiOp};
+use ramp::engine::{fabric_for_workers, RampEngine};
+use ramp::fault::elastic::{elastic_wire_bytes, ElasticExec, ElasticPolicy, Reformation};
+use ramp::fault::{FaultPlan, RampError};
+use ramp::rng::Xoshiro256;
+use ramp::topology::ramp::RampParams;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Chaos-style hang guard: run `f` on its own thread, fail the test if
+/// it has not produced a value within `secs`.
+fn with_timeout<T: Send + 'static>(
+    secs: u64,
+    what: &str,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let tag = what.to_string();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(v) => v,
+        Err(_) => panic!("{tag}: hung past the {secs}s elastic guard"),
+    }
+}
+
+/// Integer-valued inputs: float sums of small integers are exact under
+/// any association order, so reformed results can be compared bitwise
+/// across differently-shaped reduction trees.
+fn int_inputs(n: usize, elems: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut r = Xoshiro256::seed_from(seed);
+    (0..n)
+        .map(|_| (0..elems).map(|_| (r.next_below(100) as f32) + 1.0).collect())
+        .collect()
+}
+
+/// Direct reformed anchor through the public `fault::elastic` API: the
+/// same remap → reconcile → replan pass the engine's supervisory loop
+/// runs, mapped back to the original rank indexing with dead regions
+/// empty.
+fn elastic_anchor(
+    p: &RampParams,
+    n: usize,
+    dead: &[usize],
+    policy: ElasticPolicy,
+    op: MpiOp,
+    inputs: &[Vec<f32>],
+) -> Vec<Vec<f32>> {
+    let reform = Reformation::new(n, dead, policy).unwrap();
+    let op2 = reform.group.remap_op(op).unwrap();
+    let (mut bufs, _) = reform.rebased_inputs(op, inputs).unwrap();
+    ElasticExec::new(p, &reform.group).run(op2, &mut bufs).unwrap();
+    let mut out = vec![Vec::new(); n];
+    for (i, &old) in reform.group.survivors.iter().enumerate() {
+        out[old] = std::mem::take(&mut bufs[i]);
+    }
+    out
+}
+
+/// Engine wired the way the chaos suite runs cross-step programs: a
+/// forced pool (so the event-driven lane executor — the only site where
+/// an armed rank death can fire mid-schedule — runs even on tiny test
+/// payloads), a watchdog, and `--elastic drop`.
+fn elastic_engine(p: &RampParams, rank_at: Vec<(usize, usize)>) -> RampEngine {
+    let mut engine = RampEngine::new(p.clone())
+        .with_pipeline(Pipeline::cross(2))
+        .with_faults(FaultPlan { seed: 13, rank_at, watchdog_ms: 400, ..FaultPlan::default() })
+        .with_elastic(ElasticPolicy::Drop);
+    engine.pool = PoolSel::Forced(Arc::new(WorkerPool::new(2)));
+    engine
+}
+
+fn elems_for(op: MpiOp) -> usize {
+    match op {
+        MpiOp::AllGather | MpiOp::Gather { .. } => 4,
+        MpiOp::Broadcast { .. } => 17,
+        // divisible by both the full N=16 and the reformed 15
+        _ => 240,
+    }
+}
+
+/// Tentpole acceptance: every lane op survives a seeded single-rank
+/// death mid-schedule — one typed abort, one reformation, survivors
+/// bitwise on the reformed anchor, wire bytes exactly on the reformed
+/// closed forms. (Broadcast and barrier never tick the lane executor;
+/// their elastic routing is covered by the steady-state test below.)
+#[test]
+fn mid_schedule_rank_death_reforms_every_lane_op() {
+    with_timeout(240, "mid-schedule rank death", || {
+        let p = fabric_for_workers(16).unwrap();
+        let dead = 5usize;
+        for op in [
+            MpiOp::ReduceScatter,
+            MpiOp::AllGather,
+            MpiOp::AllReduce,
+            MpiOp::AllToAll,
+            MpiOp::Scatter { root: 3 },
+            MpiOp::Gather { root: 3 },
+            MpiOp::Reduce { root: 3 },
+        ] {
+            let elems = elems_for(op);
+            let inputs = int_inputs(16, elems, 61);
+            let mut engine = elastic_engine(&p, vec![(dead, 0)]);
+            let mut bufs = inputs.clone();
+            let (run, stats) =
+                engine.execute_with_recovery(op, &mut bufs, &Default::default()).unwrap();
+            assert_eq!(stats.retries, 1, "{}: one absorbed abort", op.name());
+            assert_eq!(stats.reformations, 1, "{}", op.name());
+            assert_eq!(stats.dead_ranks, vec![dead], "{}", op.name());
+            assert_eq!(engine.dead_ranks(), &[dead], "{}", op.name());
+            assert_eq!(engine.membership_epoch(), 1, "{}", op.name());
+            let anchor = elastic_anchor(&p, 16, &[dead], ElasticPolicy::Drop, op, &inputs);
+            assert_eq!(bufs, anchor, "{} diverged from the reformed anchor", op.name());
+            assert_eq!(
+                run.report.wire_bytes,
+                elastic_wire_bytes(&p, op, (elems * 4) as u64, 15),
+                "{} executed wire bytes off the reformed closed form",
+                op.name()
+            );
+            assert!(run.completion_time() > 0.0, "{}", op.name());
+        }
+    });
+}
+
+/// `drop` semantics against an **independent** oracle: the survivors'
+/// reformed results must equal the naive reference collectives computed
+/// over just the survivors' inputs — i.e. a fault-free (N−1)-rank run.
+#[test]
+fn drop_semantics_match_the_reference_oracle_at_n_minus_one() {
+    with_timeout(120, "drop vs (N-1) reference", || {
+        let p = fabric_for_workers(16).unwrap();
+        let dead = 5usize;
+        let survivors: Vec<usize> = (0..16).filter(|&r| r != dead).collect();
+        for op in [MpiOp::AllReduce, MpiOp::ReduceScatter, MpiOp::AllGather] {
+            let elems = elems_for(op);
+            let inputs = int_inputs(16, elems, 43);
+            let shrunk: Vec<Vec<f32>> =
+                survivors.iter().map(|&r| inputs[r].clone()).collect();
+            let expect = match op {
+                MpiOp::AllReduce => reference::all_reduce(&shrunk),
+                MpiOp::ReduceScatter => reference::reduce_scatter(&shrunk),
+                _ => reference::all_gather(&shrunk),
+            };
+            let mut engine = elastic_engine(&p, vec![(dead, 0)]);
+            let mut bufs = inputs.clone();
+            engine.execute_with_recovery(op, &mut bufs, &Default::default()).unwrap();
+            assert!(bufs[dead].is_empty(), "{}: dead region must be emptied", op.name());
+            for (i, &r) in survivors.iter().enumerate() {
+                assert_eq!(
+                    bufs[r],
+                    expect[i],
+                    "{}: survivor {r} diverged from the fault-free 15-rank oracle",
+                    op.name()
+                );
+            }
+        }
+    });
+}
+
+/// Once the membership has shrunk, **all nine ops** — including
+/// broadcast and barrier, whose full-N paths never tick the lane
+/// executor — route through the elastic data plane at the surviving
+/// membership without new reformations or epoch advances.
+#[test]
+fn reformed_membership_routes_all_nine_ops() {
+    with_timeout(240, "steady-state elastic routing", || {
+        let p = fabric_for_workers(16).unwrap();
+        let dead = 11usize;
+        let mut engine = elastic_engine(&p, vec![(dead, 0)]);
+        let mut first = int_inputs(16, 240, 67);
+        engine
+            .execute_with_recovery(MpiOp::AllReduce, &mut first, &Default::default())
+            .unwrap();
+        assert_eq!(engine.dead_ranks(), &[dead]);
+        for op in MpiOp::all() {
+            let elems = elems_for(op);
+            let inputs = int_inputs(16, elems, 71);
+            let mut bufs = inputs.clone();
+            let (run, stats) =
+                engine.execute_with_recovery(op, &mut bufs, &Default::default()).unwrap();
+            assert_eq!(stats.reformations, 0, "{}: steady state reforms nothing", op.name());
+            assert_eq!(stats.retries, 0, "{}", op.name());
+            let anchor = elastic_anchor(&p, 16, &[dead], ElasticPolicy::Drop, op, &inputs);
+            assert_eq!(bufs, anchor, "{} diverged at steady state", op.name());
+            assert!(run.report.wire_bytes > 0, "{}", op.name());
+        }
+        assert_eq!(engine.membership_epoch(), 1, "steady state must not advance the epoch");
+    });
+}
+
+/// `restore-from`: the reformed all-reduce re-contributes the dead
+/// rank's input from the peer-held replica, so every survivor ends with
+/// the fault-free **full-N** sum bitwise.
+#[test]
+fn restore_from_reduction_equals_the_full_group_run() {
+    with_timeout(120, "restore-from reduction", || {
+        let p = fabric_for_workers(16).unwrap();
+        let dead = 5usize;
+        let inputs = int_inputs(16, 240, 73);
+        let full = reference::all_reduce(&inputs);
+        let mut engine =
+            elastic_engine(&p, vec![(dead, 0)]).with_elastic(ElasticPolicy::RestoreFrom);
+        let mut bufs = inputs.clone();
+        let (_, stats) = engine
+            .execute_with_recovery(MpiOp::AllReduce, &mut bufs, &Default::default())
+            .unwrap();
+        assert_eq!(stats.reconciled_bytes, 240 * 4, "one replica shard re-contributed");
+        for (r, b) in bufs.iter().enumerate() {
+            if r == dead {
+                assert!(b.is_empty(), "the dead region must be emptied");
+            } else {
+                assert_eq!(b, &full[r], "survivor {r} must hold the full-N sum");
+            }
+        }
+    });
+}
+
+/// Without an elastic policy a rank death is final even with retry
+/// budget left: the typed error surfaces unchanged.
+#[test]
+fn rank_death_stays_typed_without_an_elastic_policy() {
+    with_timeout(120, "unarmed rank death", || {
+        let p = fabric_for_workers(16).unwrap();
+        let mut engine = RampEngine::new(p)
+            .with_pipeline(Pipeline::cross(2))
+            .with_faults(FaultPlan {
+                seed: 17,
+                rank_at: vec![(2, 0)],
+                watchdog_ms: 400,
+                ..FaultPlan::default()
+            });
+        engine.pool = PoolSel::Forced(Arc::new(WorkerPool::new(2)));
+        let mut bufs = int_inputs(16, 240, 79);
+        let err = engine
+            .execute_with_recovery(MpiOp::AllReduce, &mut bufs, &Default::default())
+            .unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<RampError>(), Some(RampError::RankDied { rank: 2, .. })),
+            "expected a typed rank death, got {err:#}"
+        );
+    });
+}
+
+/// The unrecoverable edges stay typed: a dead root cannot be re-rooted
+/// under any policy, and losing all but one rank exhausts the elastic
+/// budget with [`RampError::NoSurvivingRanks`].
+#[test]
+fn dead_root_and_exhaustion_stay_typed() {
+    with_timeout(120, "typed elastic edges", || {
+        let p = fabric_for_workers(16).unwrap();
+        let mut engine = elastic_engine(&p, vec![(3, 0)]);
+        let mut bufs = int_inputs(16, 4, 83);
+        let err = engine
+            .execute_with_recovery(MpiOp::Gather { root: 3 }, &mut bufs, &Default::default())
+            .unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<RampError>(), Some(RampError::RankDied { rank: 3, .. })),
+            "a dead root cannot be re-rooted, got {err:#}"
+        );
+        let mut engine = elastic_engine(&p, (0..15).map(|r| (r, 0)).collect());
+        let mut bufs = int_inputs(16, 240, 89);
+        let err = engine
+            .execute_with_recovery(MpiOp::AllReduce, &mut bufs, &Default::default())
+            .unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<RampError>(),
+                Some(RampError::NoSurvivingRanks { survivors: 1 })
+            ),
+            "expected typed elastic exhaustion, got {err:#}"
+        );
+    });
+}
+
+/// End-to-end elastic **training** (requires `make artifacts`; skips
+/// with a notice otherwise): a worker dies during the first step's
+/// gradient all-reduce, the job reforms and finishes every remaining
+/// step at the shrunken membership, and the report records the loss.
+#[test]
+fn elastic_training_survives_a_worker_death() {
+    use ramp::coordinator::{train, TrainConfig};
+    if let Err(e) = ramp::runtime::Runtime::open(ramp::config::artifacts_dir()) {
+        eprintln!("skipping (run `make artifacts`): {e:#}");
+        return;
+    }
+    // the tiny model's ~0.6M-element gradient sits far above the
+    // parallel threshold, so the cross-step data plane fans out through
+    // the event-driven lane executor — the only site where an armed
+    // rank death can fire mid-schedule
+    with_timeout(300, "elastic training", || {
+        let dead = 5usize;
+        let cfg = TrainConfig {
+            n_workers: 8,
+            steps: 6,
+            log_every: 2,
+            pipeline_cross: true,
+            pipeline_chunks: 2,
+            pool_threads: 3,
+            faults: Some(FaultPlan {
+                seed: 31,
+                rank_at: vec![(dead, 0)],
+                watchdog_ms: 400,
+                ..FaultPlan::default()
+            }),
+            elastic: Some(ElasticPolicy::Drop),
+            ..Default::default()
+        };
+        let rep = train(&cfg).expect("elastic training failed");
+        assert_eq!(rep.dead_workers, vec![dead], "the armed worker must be lost");
+        assert_eq!(rep.membership_epoch, 1, "one reformation");
+        assert_eq!(rep.recovery.dead_ranks, vec![dead]);
+        assert!(rep.recovery.reformations >= 1);
+        let last = rep.stats.last().expect("stats recorded");
+        assert_eq!(last.live_workers, cfg.n_workers - 1, "training continued at N-1");
+        assert!(rep.last_loss().is_finite());
+        assert!(rep.total_comm_virtual_s > 0.0);
+    });
+}

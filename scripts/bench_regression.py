@@ -20,6 +20,9 @@ both files, and their absence from either file is never an error. The
 `[plan-gen]` rows (PR-9 lazy sharded plan generation + streaming
 transcode throughput at 4k/16k/65k ranks) are likewise informational:
 plan generation is a setup cost, not the defended steady-state path.
+So are the `[elastic]` rows (PR-10 rank-death reformation: the
+remap + reconcile + replan pass over the survivors) — reformation is a
+rare failure-path cost, not steady state.
 
 Exits 0 (with a note) when the baseline is still the placeholder no
 toolchain host has replaced yet, when it contains no guarded rows, or when
@@ -27,7 +30,7 @@ nothing regressed; exits 1 listing every regressed row otherwise.
 """
 
 # unguarded-but-listed sections: shown for the record, never gated
-INFORMATIONAL_SECTIONS = ["[recovery]", "[plan-gen]"]
+INFORMATIONAL_SECTIONS = ["[recovery]", "[plan-gen]", "[elastic]"]
 
 import argparse
 import json
